@@ -1,0 +1,38 @@
+//! Quickstart: boot the server, submit one reasoning prompt, print the
+//! completion. The 60-second tour of the public API.
+//!
+//!   make artifacts && cargo run --release --example quickstart
+
+use lethe::config::ServingConfig;
+use lethe::policy::PolicyKind;
+use lethe::server::{GenerateRequest, Server};
+use lethe::util::prng::Rng;
+use lethe::workload::make_task;
+
+fn main() -> anyhow::Result<()> {
+    // 1. Configuration: paper defaults (sparse_ratio=400, recent_ratio=0.3).
+    let cfg = ServingConfig::default();
+
+    // 2. Boot: loads AOT artifacts, uploads weights to the PJRT CPU
+    //    device, spawns the engine thread. Python is not involved.
+    let server = Server::start(cfg, PolicyKind::Lethe)?;
+
+    // 3. A 2-hop chain-of-thought task: "follow ka -> kb -> value".
+    let task = make_task(&mut Rng::new(7), 8, 2);
+    println!("prompt  : {}", task.prompt);
+    println!("expected: {}", task.answer);
+
+    // 4. Generate.
+    let resp = server.generate(GenerateRequest {
+        prompt: task.prompt.clone(),
+        max_new_tokens: 32,
+        policy: None, // server default (Lethe)
+    })?;
+    println!("output  : {}", resp.text);
+    println!(
+        "{} prompt tokens, {} generated, finish={}, {} prune rounds",
+        resp.prompt_tokens, resp.generated_tokens, resp.finish,
+        resp.prune_rounds
+    );
+    Ok(())
+}

@@ -1,0 +1,103 @@
+//! END-TO-END DRIVER (EXPERIMENTS.md §E2E): serve a batched
+//! chain-of-thought workload through the full production path —
+//! router → admission → continuous-batching scheduler → PJRT decode
+//! engine → Lethe pruning — and report accuracy, latency percentiles and
+//! throughput, comparing Lethe against FullKV on the same trace.
+//!
+//!   make artifacts && cargo run --release --example serve_cot
+//!
+//! Env: SERVE_COT_N (requests, default 24), SERVE_COT_RATE (req/s, 8),
+//!      SERVE_COT_BATCH (max batch, 8).
+
+use std::time::Instant;
+
+use lethe::config::ServingConfig;
+use lethe::eval::judge;
+use lethe::policy::PolicyKind;
+use lethe::server::{GenerateRequest, Server};
+use lethe::util::prng::Rng;
+use lethe::util::stats::Summary;
+use lethe::workload::poisson_trace;
+
+fn env_usize(k: &str, d: usize) -> usize {
+    std::env::var(k).ok().and_then(|v| v.parse().ok()).unwrap_or(d)
+}
+
+fn run(policy: PolicyKind, n: usize, rate: f64, batch: usize)
+    -> anyhow::Result<()>
+{
+    let mut cfg = ServingConfig::default();
+    cfg.scheduler.max_batch = batch;
+    cfg.lethe.evict_threshold = 48;
+    cfg.baseline.budget = 48;
+    let server = Server::start(cfg, policy)?;
+
+    // Identical trace across policies (same seed).
+    let mut rng = Rng::new(0xC07);
+    let trace = poisson_trace(&mut rng, rate, n);
+
+    let t0 = Instant::now();
+    let mut inflight = Vec::new();
+    for item in &trace {
+        let wait = item.arrival_s - t0.elapsed().as_secs_f64();
+        if wait > 0.0 {
+            std::thread::sleep(std::time::Duration::from_secs_f64(wait));
+        }
+        inflight.push((
+            item.task.clone(),
+            server.submit(GenerateRequest {
+                prompt: item.task.prompt.clone(),
+                max_new_tokens: 64,
+                policy: None,
+            })?,
+        ));
+    }
+    let mut correct = 0usize;
+    let mut chain_ok = 0usize;
+    let mut gen_tokens = 0usize;
+    let mut ttft = Vec::new();
+    let mut e2e = Vec::new();
+    let mut prune_rounds = 0usize;
+    for (task, rx) in inflight {
+        let r = rx.recv()??;
+        let (ok, _) = judge(&task, &r.text);
+        correct += ok as usize;
+        chain_ok += lethe::eval::judge_chain(&task, &r.text) as usize;
+        gen_tokens += r.generated_tokens;
+        ttft.push(r.ttft_s);
+        e2e.push(r.total_s);
+        prune_rounds += r.prune_rounds;
+    }
+    let wall = t0.elapsed().as_secs_f64();
+    let ts = Summary::of(&ttft);
+    let te = Summary::of(&e2e);
+    println!("--- {} ---", policy.label());
+    println!(
+        "  {n} reqs in {wall:.2}s -> {:.1} tok/s generated, {:.2} req/s",
+        gen_tokens as f64 / wall,
+        n as f64 / wall
+    );
+    println!(
+        "  accuracy: chain {:.3}  final {:.3}",
+        chain_ok as f64 / n as f64,
+        correct as f64 / n as f64
+    );
+    println!(
+        "  TTFT p50 {:.0}ms p99 {:.0}ms | E2E p50 {:.0}ms p99 {:.0}ms",
+        ts.p50 * 1e3, ts.p99 * 1e3, te.p50 * 1e3, te.p99 * 1e3
+    );
+    println!("  prune rounds: {prune_rounds}");
+    Ok(())
+}
+
+fn main() -> anyhow::Result<()> {
+    let n = env_usize("SERVE_COT_N", 24);
+    let rate = env_usize("SERVE_COT_RATE", 8) as f64;
+    let batch = env_usize("SERVE_COT_BATCH", 8);
+    println!(
+        "serve_cot: {n} CoT requests, Poisson {rate} req/s, max batch {batch}"
+    );
+    run(PolicyKind::Lethe, n, rate, batch)?;
+    run(PolicyKind::FullKv, n, rate, batch)?;
+    Ok(())
+}

@@ -1,0 +1,175 @@
+"""AOT lowering: JAX entry points -> HLO *text* artifacts for the rust
+runtime, plus the weights blob and the model/tokenizer manifest.
+
+HLO text (not `.serialize()`d protos) is the interchange format: jax >= 0.5
+emits HloModuleProto with 64-bit instruction ids that xla_extension 0.5.1
+(what the published `xla` 0.1.6 crate links) rejects; the text parser
+reassigns ids and round-trips cleanly. See /opt/xla-example/README.md.
+
+Artifacts (all under artifacts/):
+    model_meta.json   — config, vocab, weight specs, executable manifest
+    weights.bin       — raw LE f32, WEIGHT_NAMES order (trained if
+                        weights.npz exists from train.py, else seeded init)
+    <name>.hlo.txt    — one per (entry point, shape bucket)
+
+Run via `make artifacts`; python never runs again after this.
+"""
+
+from __future__ import annotations
+
+import argparse
+import hashlib
+import json
+import os
+from typing import Dict, List
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax._src.lib import xla_client as xc
+
+from compile import model as M
+from compile import tasks
+
+# Shape buckets — the wire contract with rust/src/runtime/registry.rs.
+# Decode executables exist per (batch, capacity) pair: the engine picks the
+# smallest compiled C >= the group's max live cache length, so Lethe's
+# pruning translates directly into smaller uploads + shorter attention.
+CACHE_PROFILES = {"std": 512, "long": 2048}
+DECODE_CAPACITIES = {"std": [128, 256, 512], "long": [1024, 2048]}
+DECODE_BATCHES = {"std": [1, 2, 4, 8], "long": [1]}
+PREFILL_TS = [32, 64, 128, 192]
+
+
+def to_hlo_text(lowered) -> str:
+    mlir_mod = lowered.compiler_ir("stablehlo")
+    comp = xc._xla.mlir.mlir_module_to_xla_computation(
+        str(mlir_mod), use_tuple_args=False, return_tuple=True)
+    return comp.as_hlo_text()
+
+
+def _spec(shape, dtype=jnp.float32):
+    return jax.ShapeDtypeStruct(shape, dtype)
+
+
+def build_entry_points(cfg: M.ModelConfig):
+    """(name, fn, example_args, outputs) for every bucket. Argument order
+    convention: weights tuple first (WEIGHT_NAMES order), then state, then
+    step inputs — mirrored in rust/src/runtime/registry.rs."""
+    L, hkv, dh = cfg.n_layers, cfg.n_kv_heads, cfg.d_head
+    hq, V = cfg.n_q_heads, cfg.vocab_size
+    w_specs = [_spec(s) for _, s in M.weight_specs(cfg)]
+    nw = len(w_specs)
+
+    def wdict(args):
+        return dict(zip(M.WEIGHT_NAMES, args[:nw]))
+
+    entries = []
+    for T in PREFILL_TS:
+        def prefill_fn(*args):
+            return M.prefill(cfg, wdict(args), args[nw], args[nw + 1])
+        entries.append((
+            f"prefill_t{T}", prefill_fn,
+            w_specs + [_spec((1, T), jnp.int32), _spec((), jnp.int32)],
+            ["logits", "k_all", "v_all", "scores"]))
+
+    for prof in CACHE_PROFILES:
+        for C in DECODE_CAPACITIES[prof]:
+            for B in DECODE_BATCHES[prof]:
+                kvb = _spec((L, B, hkv, C, dh))
+                lensb = _spec((L, B), jnp.int32)
+
+                def decode_fn(*args):
+                    return M.decode_step(cfg, wdict(args), args[nw],
+                                         args[nw + 1], args[nw + 2],
+                                         args[nw + 3], args[nw + 4])
+                entries.append((
+                    f"decode_b{B}_c{C}", decode_fn,
+                    w_specs + [kvb, kvb, lensb, _spec((B,), jnp.int32),
+                               _spec((B,), jnp.int32)],
+                    ["logits", "k_new", "v_new", "probs"]))
+    return entries
+
+
+def load_or_init_weights(cfg: M.ModelConfig, weights_npz: str):
+    if os.path.exists(weights_npz):
+        data = np.load(weights_npz)
+        ws = {n: jnp.asarray(data[n]) for n in M.WEIGHT_NAMES}
+        src = f"trained ({weights_npz})"
+    else:
+        ws = M.init_weights(cfg, jax.random.PRNGKey(42))
+        src = "seeded-init (run python -m compile.train for a trained model)"
+    return ws, src
+
+
+def write_weights_bin(ws: Dict[str, jax.Array], path: str) -> List[dict]:
+    layout, off = [], 0
+    with open(path, "wb") as f:
+        for n in M.WEIGHT_NAMES:
+            a = np.asarray(ws[n], dtype=np.float32)
+            f.write(a.tobytes())
+            layout.append({"name": n, "shape": list(a.shape),
+                           "offset": off, "bytes": a.nbytes})
+            off += a.nbytes
+    return layout
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--out-dir", default="../artifacts")
+    ap.add_argument("--weights", default="../artifacts/weights.npz")
+    ap.add_argument("--only", default="",
+                    help="comma-separated artifact-name prefixes to emit")
+    args = ap.parse_args()
+    os.makedirs(args.out_dir, exist_ok=True)
+
+    cfg = M.ModelConfig()
+    ws, wsrc = load_or_init_weights(cfg, args.weights)
+    layout = write_weights_bin(ws, os.path.join(args.out_dir, "weights.bin"))
+    print(f"weights.bin: {sum(e['bytes'] for e in layout)} bytes [{wsrc}]")
+
+    manifest = []
+    only = [p for p in args.only.split(",") if p]
+    for name, fn, specs, outs in build_entry_points(cfg):
+        if only and not any(name.startswith(p) for p in only):
+            continue
+        text = to_hlo_text(jax.jit(fn).lower(*specs))
+        path = os.path.join(args.out_dir, f"{name}.hlo.txt")
+        with open(path, "w") as f:
+            f.write(text)
+        manifest.append({
+            "name": name,
+            "file": f"{name}.hlo.txt",
+            "params": [{"shape": list(s.shape), "dtype": s.dtype.name}
+                       for s in specs],
+            "outputs": outs,
+            "sha256": hashlib.sha256(text.encode()).hexdigest()[:16],
+        })
+        print(f"  {name}: {len(text)} chars")
+
+    meta = {
+        "model": {
+            "vocab_size": cfg.vocab_size, "d_model": cfg.d_model,
+            "n_layers": cfg.n_layers, "n_q_heads": cfg.n_q_heads,
+            "n_kv_heads": cfg.n_kv_heads, "d_head": cfg.d_head,
+            "d_ff": cfg.d_ff, "rope_theta": cfg.rope_theta,
+            "norm_eps": cfg.norm_eps,
+            "param_count": cfg.param_count(),
+            "weights_source": wsrc,
+        },
+        "tokenizer": {"specials": tasks.SPECIALS, "chars": tasks.CHARS,
+                      "pad": tasks.PAD, "bos": tasks.BOS, "eos": tasks.EOS},
+        "weights": layout,
+        "cache_profiles": CACHE_PROFILES,
+        "decode_capacities": DECODE_CAPACITIES,
+        "decode_batches": DECODE_BATCHES,
+        "prefill_ts": PREFILL_TS,
+        "executables": manifest,
+    }
+    with open(os.path.join(args.out_dir, "model_meta.json"), "w") as f:
+        json.dump(meta, f, indent=1)
+    print(f"model_meta.json: {len(manifest)} executables")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,131 @@
+"""L1 Pallas kernel: masked GQA decode attention with score side-output.
+
+This is the compute hot-spot of the serving decode step. One grid cell per
+(batch, q-head); the kernel streams the C-capacity KV cache through VMEM in
+`block_k` tiles (the HBM<->VMEM schedule that replaces the paper's CUDA
+threadblock tiling — see DESIGN.md §Hardware-Adaptation), computing a
+two-pass masked softmax:
+
+  pass 1: blocked QK^T into a scores scratch row (C floats, VMEM-resident),
+          tracking the running max for numerical stability;
+  pass 2: blocked exp/normalise + PV accumulation, writing the attention
+          probabilities out as a side output.
+
+The probability side output IS the Lethe signal: the rust coordinator sums
+it over heads (paper Eq. 2) to drive RASR (Eq. 5) and Algorithm 1. Emitting
+it from inside the kernel while the tile is VMEM-resident means the score
+path adds no extra HBM pass.
+
+interpret=True everywhere: real-TPU lowering emits a Mosaic custom-call the
+CPU PJRT plugin cannot execute; structure (BlockSpec tiling, VMEM budget)
+is still authored for TPU and audited in EXPERIMENTS.md §Perf.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+NEG_INF = -1e30
+
+
+def _decode_kernel(q_ref, k_ref, v_ref, lens_ref, o_ref, p_ref, *,
+                   block_k: int, scale: float):
+    """Grid cell = (b, hq). Refs:
+    q_ref [1, 1, D], k_ref/v_ref [1, C, D] (kv head = hq // group),
+    lens_ref [1], o_ref [1, 1, D], p_ref [1, 1, C].
+    """
+    c = k_ref.shape[1]
+    d = q_ref.shape[2]
+    q = q_ref[0, 0, :].astype(jnp.float32)           # [D]
+    n_valid = lens_ref[0]
+    nblk = c // block_k
+
+    # Pass 1: blocked scores + running max. The scores row lives in the
+    # p_ref output block (VMEM) so no extra scratch is needed.
+    def score_blk(i, running_max):
+        ks = k_ref[0, pl.dslice(i * block_k, block_k), :].astype(jnp.float32)
+        s = (ks @ q) * scale                          # [block_k]
+        idx = i * block_k + jax.lax.iota(jnp.int32, block_k)
+        s = jnp.where(idx < n_valid, s, NEG_INF)
+        p_ref[0, 0, pl.dslice(i * block_k, block_k)] = s
+        return jnp.maximum(running_max, jnp.max(s))
+
+    # lens==0 rows leave m == NEG_INF; exp(s - m) is then exp(0) on masked
+    # entries, which pass 2 re-masks to 0, so no special-casing is needed.
+    m = jax.lax.fori_loop(0, nblk, score_blk, NEG_INF)
+
+    # Pass 2: exp/normalise + PV accumulation per block.
+    def pv_blk(i, carry):
+        acc, denom = carry
+        s = p_ref[0, 0, pl.dslice(i * block_k, block_k)]
+        idx = i * block_k + jax.lax.iota(jnp.int32, block_k)
+        e = jnp.where(idx < n_valid, jnp.exp(s - m), 0.0)
+        p_ref[0, 0, pl.dslice(i * block_k, block_k)] = e
+        vs = v_ref[0, pl.dslice(i * block_k, block_k), :].astype(jnp.float32)
+        return acc + e @ vs, denom + jnp.sum(e)
+
+    acc, denom = jax.lax.fori_loop(
+        0, nblk, pv_blk, (jnp.zeros((d,), jnp.float32), 0.0))
+    inv = 1.0 / jnp.maximum(denom, 1e-30)
+    o_ref[0, 0, :] = (acc * inv).astype(o_ref.dtype)
+
+    # Final rescale of the stored exp() row into probabilities.
+    def norm_blk(i, _):
+        sl = pl.dslice(i * block_k, block_k)
+        p_ref[0, 0, sl] = (p_ref[0, 0, sl] * inv).astype(p_ref.dtype)
+        return 0
+
+    jax.lax.fori_loop(0, nblk, norm_blk, 0)
+
+
+def decode_attention(q, k, v, lens, *, scale=None, block_k: int = 128,
+                     interpret: bool = True):
+    """Pallas masked GQA decode attention.
+
+    q:    [B, Hq, D]; k, v: [B, Hkv, C, D]; lens: [B] int32.
+    returns (out [B, Hq, D] same dtype as q, probs [B, Hq, C] f32)
+    """
+    b, hq, d = q.shape
+    _, hkv, c, _ = k.shape
+    assert hq % hkv == 0, (hq, hkv)
+    group = hq // hkv
+    if scale is None:
+        scale = 1.0 / (d ** 0.5)
+    block_k = min(block_k, c)
+    assert c % block_k == 0, (c, block_k)
+
+    kernel = functools.partial(_decode_kernel, block_k=block_k,
+                               scale=float(scale))
+    return pl.pallas_call(
+        kernel,
+        grid=(b, hq),
+        in_specs=[
+            pl.BlockSpec((1, 1, d), lambda i, j: (i, j, 0)),        # q
+            pl.BlockSpec((1, None, c, d),
+                         lambda i, j: (i, j // group, 0, 0)),        # k
+            pl.BlockSpec((1, None, c, d),
+                         lambda i, j: (i, j // group, 0, 0)),        # v
+            pl.BlockSpec((1,), lambda i, j: (i,)),                   # lens
+        ],
+        out_specs=[
+            pl.BlockSpec((1, 1, d), lambda i, j: (i, j, 0)),         # out
+            pl.BlockSpec((1, 1, c), lambda i, j: (i, j, 0)),         # probs
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct((b, hq, d), q.dtype),
+            jax.ShapeDtypeStruct((b, hq, c), jnp.float32),
+        ],
+        interpret=interpret,
+    )(q, k, v, lens)
+
+
+def vmem_bytes(c: int, d: int, block_k: int = 128) -> int:
+    """Static VMEM footprint estimate per grid cell (f32): q + one K tile +
+    one V tile + the C-float score row + accumulator. Used by the §Perf
+    audit in EXPERIMENTS.md."""
+    block_k = min(block_k, c)
+    return 4 * (d + 2 * block_k * d + c + d)

@@ -1,0 +1,115 @@
+"""L1 Pallas kernel: blocked causal GQA prefill attention.
+
+Grid cell = (batch, q-head, q-block). Each cell owns a `block_q`-row slab
+of queries and streams keys/values through VMEM in `block_k` tiles with an
+online (flash-style) softmax; the probability matrix is written as a side
+output so the L2 graph can fold it into the RASR initial score vector
+(paper Eq. 2 summed over queries) without a second attention pass.
+
+VMEM per cell: block_q*D + 2*block_k*D + block_q*block_k (f32) — see
+vmem_bytes(). interpret=True for CPU-PJRT execution (see decode_attention).
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+NEG_INF = -1e30
+
+
+def _prefill_kernel(q_ref, k_ref, v_ref, o_ref, p_ref, *,
+                    block_q: int, block_k: int, scale: float):
+    """Refs: q [1,1,block_q,D], k/v [1,T,D], o [1,1,block_q,D],
+    p [1,1,block_q,T]."""
+    t = k_ref.shape[1]
+    d = q_ref.shape[3]
+    qi = pl.program_id(2)
+    q = q_ref[0, 0, :, :].astype(jnp.float32)                  # [bq, D]
+    row = qi * block_q + jax.lax.iota(jnp.int32, block_q)      # abs q rows
+    nblk = t // block_k
+
+    def score_blk(i, m):
+        ks = k_ref[0, pl.dslice(i * block_k, block_k), :].astype(jnp.float32)
+        s = (q @ ks.T) * scale                                  # [bq, bk]
+        col = i * block_k + jax.lax.iota(jnp.int32, block_k)
+        s = jnp.where(col[None, :] <= row[:, None], s, NEG_INF)
+        p_ref[0, 0, :, pl.dslice(i * block_k, block_k)] = s
+        return jnp.maximum(m, jnp.max(s, axis=1))
+
+    m = jax.lax.fori_loop(0, nblk, score_blk,
+                          jnp.full((block_q,), NEG_INF, jnp.float32))
+
+    def pv_blk(i, carry):
+        acc, denom = carry
+        sl = pl.dslice(i * block_k, block_k)
+        s = p_ref[0, 0, :, sl]
+        col = i * block_k + jax.lax.iota(jnp.int32, block_k)
+        e = jnp.where(col[None, :] <= row[:, None],
+                      jnp.exp(s - m[:, None]), 0.0)
+        p_ref[0, 0, :, sl] = e
+        vs = v_ref[0, sl, :].astype(jnp.float32)
+        return acc + e @ vs, denom + jnp.sum(e, axis=1)
+
+    acc, denom = jax.lax.fori_loop(
+        0, nblk, pv_blk,
+        (jnp.zeros((block_q, d), jnp.float32),
+         jnp.zeros((block_q,), jnp.float32)))
+    inv = 1.0 / jnp.maximum(denom, 1e-30)                      # [bq]
+    o_ref[0, 0, :, :] = (acc * inv[:, None]).astype(o_ref.dtype)
+
+    def norm_blk(i, _):
+        sl = pl.dslice(i * block_k, block_k)
+        p_ref[0, 0, :, sl] = (p_ref[0, 0, :, sl] * inv[:, None]
+                              ).astype(p_ref.dtype)
+        return 0
+
+    jax.lax.fori_loop(0, nblk, norm_blk, 0)
+
+
+def prefill_attention(q, k, v, *, scale=None, block_q: int = 64,
+                      block_k: int = 64, interpret: bool = True):
+    """Pallas causal GQA prefill attention.
+
+    q: [B, Hq, T, D]; k, v: [B, Hkv, T, D].
+    returns (out [B, Hq, T, D], probs [B, Hq, T, T] f32)
+    """
+    b, hq, t, d = q.shape
+    _, hkv, _, _ = k.shape
+    assert hq % hkv == 0
+    group = hq // hkv
+    if scale is None:
+        scale = 1.0 / (d ** 0.5)
+    block_q = min(block_q, t)
+    block_k = min(block_k, t)
+    assert t % block_q == 0 and t % block_k == 0
+
+    kernel = functools.partial(_prefill_kernel, block_q=block_q,
+                               block_k=block_k, scale=float(scale))
+    return pl.pallas_call(
+        kernel,
+        grid=(b, hq, t // block_q),
+        in_specs=[
+            pl.BlockSpec((1, 1, block_q, d), lambda i, j, l: (i, j, l, 0)),
+            pl.BlockSpec((1, None, t, d), lambda i, j, l: (i, j // group, 0, 0)),
+            pl.BlockSpec((1, None, t, d), lambda i, j, l: (i, j // group, 0, 0)),
+        ],
+        out_specs=[
+            pl.BlockSpec((1, 1, block_q, d), lambda i, j, l: (i, j, l, 0)),
+            pl.BlockSpec((1, 1, block_q, t), lambda i, j, l: (i, j, l, 0)),
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct((b, hq, t, d), q.dtype),
+            jax.ShapeDtypeStruct((b, hq, t, t), jnp.float32),
+        ],
+        interpret=interpret,
+    )(q, k, v)
+
+
+def vmem_bytes(t: int, d: int, block_q: int = 64, block_k: int = 64) -> int:
+    """Static per-cell VMEM estimate (f32), for the §Perf audit."""
+    block_q, block_k = min(block_q, t), min(block_k, t)
+    return 4 * (block_q * d + 2 * block_k * d + block_q * t + block_q * d)

@@ -1,0 +1,58 @@
+"""Pure-jnp oracles for the Pallas kernels.
+
+These are the CORE correctness signal: every Pallas kernel in this package
+is pytest/hypothesis-compared against the function of the same name here.
+They are also used directly by the training loop (train.py), so the model
+the rust engine serves was trained against exactly this semantics.
+"""
+
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+NEG_INF = -1e30
+
+
+def decode_attention_ref(q, k, v, lens, scale):
+    """Single-step masked GQA decode attention with score side-output.
+
+    q:    [B, Hq, D]       (one query per sequence — decode step)
+    k, v: [B, Hkv, C, D]   (cache, rotary already applied to k)
+    lens: [B] int32        (valid slots are the prefix 0..lens[b])
+    returns (out [B, Hq, D], probs [B, Hq, C])
+    """
+    b, hq, d = q.shape
+    _, hkv, c, _ = k.shape
+    group = hq // hkv
+    valid = jnp.arange(c)[None, :] < lens[:, None]          # [B, C]
+    # Map q head h -> kv head h // group without materialising repeats
+    # (paper Eq. 3: GQA handled head-invariantly, no key duplication).
+    qg = q.reshape(b, hkv, group, d)
+    scores = jnp.einsum("bkgd,bkcd->bkgc", qg, k) * scale
+    scores = jnp.where(valid[:, None, None, :], scores, NEG_INF)
+    m = jnp.max(scores, axis=-1, keepdims=True)
+    e = jnp.exp(scores - m) * valid[:, None, None, :]
+    p = e / jnp.maximum(jnp.sum(e, axis=-1, keepdims=True), 1e-30)
+    out = jnp.einsum("bkgc,bkcd->bkgd", p, v).reshape(b, hq, d)
+    return out, p.reshape(b, hq, c)
+
+
+def prefill_attention_ref(q, k, v, scale):
+    """Causal GQA attention over a full prompt, probs side-output.
+
+    q:    [B, Hq, T, D]
+    k, v: [B, Hkv, T, D]
+    returns (out [B, Hq, T, D], probs [B, Hq, T, T])
+    """
+    b, hq, t, d = q.shape
+    _, hkv, _, _ = k.shape
+    group = hq // hkv
+    qg = q.reshape(b, hkv, group, t, d)
+    scores = jnp.einsum("bkgtd,bksd->bkgts", qg, k) * scale
+    causal = jnp.tril(jnp.ones((t, t), dtype=bool))
+    scores = jnp.where(causal[None, None, None], scores, NEG_INF)
+    m = jnp.max(scores, axis=-1, keepdims=True)
+    e = jnp.exp(scores - m) * causal[None, None, None]
+    p = e / jnp.maximum(jnp.sum(e, axis=-1, keepdims=True), 1e-30)
+    out = jnp.einsum("bkgts,bksd->bkgtd", p, v)
+    return out.reshape(b, hq, t, d), p.reshape(b, hq, t, t)

@@ -1,0 +1,264 @@
+"""L2: LLaMA-style GQA transformer (RMSNorm + RoPE + SwiGLU), expressed as
+AOT-lowerable entry points over a fixed-capacity, per-layer-length KV cache.
+
+All entry points take the weights as a flat tuple in WEIGHT_NAMES order —
+that order is the wire contract with rust/src/model/weights.rs (parameters
+of the lowered HLO appear in exactly this order, followed by the non-weight
+arguments in each entry point's documented order).
+
+Cache layout — the KV cache is HOST-OWNED by the rust coordinator (the xla
+crate returns executable outputs as one tuple that must round-trip through
+host literals, so device residency buys nothing; rust owning the cache also
+makes eviction a pure-rust gather). Per executable call the cache is
+uploaded as:
+    kv_k, kv_v : [L, B, Hkv, C, D] f32, rotary pre-applied to K
+    lens       : [L, B] int32 — valid slots are the prefix 0..lens[l,b].
+Per-layer lengths are what make Lethe's layerwise budgets expressible: after
+a compaction, layer 3 may hold 96 tokens while layer 11 holds 384. C is a
+*bucket*: the engine picks the smallest compiled C >= max live length, so a
+pruned cache uploads and attends over less — the paper's latency win.
+
+Entry points (static shapes; one HLO artifact per bucket):
+    prefill(T)     — B=1 prompt ingest; returns last-token logits, the
+                     prompt's K/V rows, and the RASR initial scores
+                     (Eq. 2 summed over valid queries).
+    decode(B, C)   — one token for B sequences; the new K/V is inserted
+                     in-graph at slot lens[l,b] *for attention only* and
+                     returned so rust can mirror the insert host-side;
+                     returns logits + per-head attention scores.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import functools
+from typing import Dict, List, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from compile.kernels.decode_attention import decode_attention
+from compile.kernels.prefill_attention import prefill_attention
+
+
+@dataclasses.dataclass(frozen=True)
+class ModelConfig:
+    vocab_size: int = 46
+    d_model: int = 128
+    n_layers: int = 4
+    n_q_heads: int = 4
+    n_kv_heads: int = 2
+    d_head: int = 32
+    d_ff: int = 256
+    rope_theta: float = 10000.0
+    norm_eps: float = 1e-5
+
+    @property
+    def group(self) -> int:
+        return self.n_q_heads // self.n_kv_heads
+
+    def param_count(self) -> int:
+        return sum(int(jnp.prod(jnp.array(s))) for _, s in weight_specs(self))
+
+
+def weight_specs(cfg: ModelConfig) -> List[Tuple[str, Tuple[int, ...]]]:
+    """(name, shape) in wire order. Layer weights are stacked on axis 0 so
+    the forward pass is a single lax.scan (fewer HLO params, XLA-fusable)."""
+    L, d, f = cfg.n_layers, cfg.d_model, cfg.d_ff
+    hq, hkv, dh = cfg.n_q_heads, cfg.n_kv_heads, cfg.d_head
+    return [
+        ("embed", (cfg.vocab_size, d)),
+        ("ln1", (L, d)),
+        ("wq", (L, d, hq * dh)),
+        ("wk", (L, d, hkv * dh)),
+        ("wv", (L, d, hkv * dh)),
+        ("wo", (L, hq * dh, d)),
+        ("ln2", (L, d)),
+        ("w_gate", (L, d, f)),
+        ("w_up", (L, d, f)),
+        ("w_down", (L, f, d)),
+        ("ln_f", (d,)),
+        ("lm_head", (d, cfg.vocab_size)),
+    ]
+
+
+WEIGHT_NAMES = [n for n, _ in weight_specs(ModelConfig())]
+
+
+def init_weights(cfg: ModelConfig, key) -> Dict[str, jax.Array]:
+    ws = {}
+    for name, shape in weight_specs(cfg):
+        key, sub = jax.random.split(key)
+        if name.startswith("ln"):
+            ws[name] = jnp.ones(shape, jnp.float32)
+        else:
+            fan_in = shape[-2] if len(shape) > 1 else shape[-1]
+            ws[name] = (jax.random.normal(sub, shape, jnp.float32)
+                        * (fan_in ** -0.5))
+    return ws
+
+
+def weights_tuple(ws: Dict[str, jax.Array]) -> Tuple[jax.Array, ...]:
+    return tuple(ws[n] for n in WEIGHT_NAMES)
+
+
+# --- building blocks -----------------------------------------------------
+
+def rmsnorm(x, g, eps):
+    return x * jax.lax.rsqrt(jnp.mean(x * x, axis=-1, keepdims=True) + eps) * g
+
+
+def rope_tables(cfg: ModelConfig, positions):
+    """positions [...]-> (cos, sin) each [..., D/2]."""
+    half = cfg.d_head // 2
+    freqs = cfg.rope_theta ** (-jnp.arange(half, dtype=jnp.float32) / half)
+    ang = positions.astype(jnp.float32)[..., None] * freqs
+    return jnp.cos(ang), jnp.sin(ang)
+
+
+def apply_rope(x, cos, sin):
+    """x [..., D]; cos/sin broadcastable [..., D/2]. Rotate-half pairing."""
+    x1, x2 = jnp.split(x, 2, axis=-1)
+    return jnp.concatenate([x1 * cos - x2 * sin, x1 * sin + x2 * cos], -1)
+
+
+def swiglu(x, w_gate, w_up, w_down):
+    return (jax.nn.silu(x @ w_gate) * (x @ w_up)) @ w_down
+
+
+def _split_heads(x, n_heads, d_head):
+    return x.reshape(*x.shape[:-1], n_heads, d_head)
+
+
+# --- decode entry point ---------------------------------------------------
+
+def decode_step(cfg: ModelConfig, ws: Dict[str, jax.Array],
+                kv_k, kv_v, lens, tokens, positions, *,
+                interpret: bool = True):
+    """One decode step for a batch group.
+
+    kv_k, kv_v [L,B,Hkv,C,D]; lens [L,B] i32; tokens [B] i32;
+    positions [B] i32 (absolute positions for RoPE).
+    returns (logits [B,V], k_new [L,B,Hkv,D], v_new [L,B,Hkv,D],
+             probs [L,B,Hq,C] f32 — column j scores cache slot j; the
+             current token sits at slot lens[l,b])
+    """
+    B = tokens.shape[0]
+    C = kv_k.shape[3]
+    hq, hkv, dh = cfg.n_q_heads, cfg.n_kv_heads, cfg.d_head
+    x = ws["embed"][tokens]                                     # [B, d]
+    cos, sin = rope_tables(cfg, positions)                      # [B, D/2]
+
+    def layer(x, packed):
+        (ln1, wq, wk, wv, wo, ln2, wg, wu, wd, k_l, v_l, len_l) = packed
+        h = rmsnorm(x, ln1, cfg.norm_eps)
+        q = apply_rope(_split_heads(h @ wq, hq, dh),
+                       cos[:, None, :], sin[:, None, :])        # [B,Hq,D]
+        k_new = apply_rope(_split_heads(h @ wk, hkv, dh),
+                           cos[:, None, :], sin[:, None, :])    # [B,Hkv,D]
+        v_new = _split_heads(h @ wv, hkv, dh)
+        # In-graph insert at slot len_l[b]. vmapped dynamic_update_slice
+        # touches one [Hkv, 1, D] row per sequence; the previous one-hot
+        # formulation rewrote the entire [B, Hkv, C, D] cache (3 full
+        # passes) and dominated the step at large C — see EXPERIMENTS.md
+        # §Perf (L2).
+        insert = jax.vmap(
+            lambda cache, row, idx: jax.lax.dynamic_update_slice(
+                cache, row[:, None, :], (0, idx, 0)))
+        k_l = insert(k_l, k_new, len_l)
+        v_l = insert(v_l, v_new, len_l)
+        att, probs = decode_attention(q, k_l, v_l, len_l + 1,
+                                      interpret=interpret)
+        x = x + att.reshape(B, hq * dh) @ wo
+        x = x + swiglu(rmsnorm(x, ln2, cfg.norm_eps), wg, wu, wd)
+        return x, (k_new, v_new, probs)
+
+    stacked = tuple(ws[n] for n in
+                    ("ln1", "wq", "wk", "wv", "wo", "ln2",
+                     "w_gate", "w_up", "w_down")) + (kv_k, kv_v, lens)
+    x, (k_new, v_new, probs) = jax.lax.scan(layer, x, stacked)
+    logits = rmsnorm(x, ws["ln_f"], cfg.norm_eps) @ ws["lm_head"]
+    return logits, k_new, v_new, probs
+
+
+# --- prefill entry point ---------------------------------------------------
+
+def prefill(cfg: ModelConfig, ws: Dict[str, jax.Array],
+            tokens, length, *, interpret: bool = True):
+    """Prompt ingest for ONE sequence (B=1), bucketed to T = tokens.shape[1].
+
+    tokens [1,T] i32 (PAD beyond `length`); length [] i32.
+    returns (logits [1,V] at the last real token,
+             k_all, v_all [L,1,Hkv,T,D] (rows >= length are dead),
+             scores [L,1,Hq,T] f32 — per-head attention mass per key,
+             summed over the valid query rows: RASR init, Eq. 2)
+    """
+    B, T = tokens.shape
+    assert B == 1
+    hq, hkv, dh = cfg.n_q_heads, cfg.n_kv_heads, cfg.d_head
+    x = ws["embed"][tokens]                                     # [1,T,d]
+    pos = jnp.arange(T, dtype=jnp.int32)
+    cos, sin = rope_tables(cfg, pos)                            # [T,D/2]
+    qrow_valid = (pos < length).astype(jnp.float32)             # [T]
+
+    def layer(x, packed):
+        (ln1, wq, wk, wv, wo, ln2, wg, wu, wd) = packed
+        h = rmsnorm(x, ln1, cfg.norm_eps)
+        q = _split_heads(h @ wq, hq, dh)                        # [1,T,Hq,D]
+        k = _split_heads(h @ wk, hkv, dh)
+        v = _split_heads(h @ wv, hkv, dh)
+        q = apply_rope(q, cos[None, :, None, :], sin[None, :, None, :])
+        k = apply_rope(k, cos[None, :, None, :], sin[None, :, None, :])
+        qt = q.transpose(0, 2, 1, 3)                            # [1,Hq,T,D]
+        kt = k.transpose(0, 2, 1, 3)
+        vt = v.transpose(0, 2, 1, 3)
+        att, probs = prefill_attention(qt, kt, vt, interpret=interpret)
+        # Collapse the query axis over *valid* rows only (pad rows attend
+        # but must not pollute the RASR init): [1,Hq,T,T] -> [1,Hq,T].
+        score = jnp.einsum("bhqk,q->bhk", probs, qrow_valid)
+        x = x + att.transpose(0, 2, 1, 3).reshape(B, T, hq * dh) @ wo
+        x = x + swiglu(rmsnorm(x, ln2, cfg.norm_eps), wg, wu, wd)
+        return x, (kt, vt, score)
+
+    stacked = tuple(ws[n] for n in
+                    ("ln1", "wq", "wk", "wv", "wo", "ln2",
+                     "w_gate", "w_up", "w_down"))
+    x, (k_all, v_all, scores) = jax.lax.scan(layer, x, stacked)
+    last = jnp.maximum(length - 1, 0)
+    logits = rmsnorm(x[:, last, :], ws["ln_f"], cfg.norm_eps) @ ws["lm_head"]
+    return logits, k_all, v_all, scores
+
+
+# --- training-time forward (shares blocks with the serving path) ----------
+
+def train_forward(cfg: ModelConfig, ws, tokens):
+    """Teacher-forced logits [B,T,V] with the pure-jnp oracle attention
+    (ref.py semantics == kernel semantics, pytest-enforced)."""
+    from compile.kernels.ref import prefill_attention_ref
+
+    B, T = tokens.shape
+    hq, hkv, dh = cfg.n_q_heads, cfg.n_kv_heads, cfg.d_head
+    x = ws["embed"][tokens]
+    pos = jnp.arange(T, dtype=jnp.int32)
+    cos, sin = rope_tables(cfg, pos)
+
+    def layer(x, packed):
+        (ln1, wq, wk, wv, wo, ln2, wg, wu, wd) = packed
+        h = rmsnorm(x, ln1, cfg.norm_eps)
+        q = apply_rope(_split_heads(h @ wq, hq, dh),
+                       cos[None, :, None, :], sin[None, :, None, :])
+        k = apply_rope(_split_heads(h @ wk, hkv, dh),
+                       cos[None, :, None, :], sin[None, :, None, :])
+        v = _split_heads(h @ wv, hkv, dh)
+        att, _ = prefill_attention_ref(
+            q.transpose(0, 2, 1, 3), k.transpose(0, 2, 1, 3),
+            v.transpose(0, 2, 1, 3), 1.0 / (dh ** 0.5))
+        x = x + att.transpose(0, 2, 1, 3).reshape(B, T, hq * dh) @ wo
+        x = x + swiglu(rmsnorm(x, ln2, cfg.norm_eps), wg, wu, wd)
+        return x, ()
+
+    stacked = tuple(ws[n] for n in
+                    ("ln1", "wq", "wk", "wv", "wo", "ln2",
+                     "w_gate", "w_up", "w_down"))
+    x, _ = jax.lax.scan(layer, x, stacked)
+    return rmsnorm(x, ws["ln_f"], cfg.norm_eps) @ ws["lm_head"]

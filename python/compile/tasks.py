@@ -1,0 +1,144 @@
+"""Synthetic reasoning-task generator (Math500 / MMLU proxies).
+
+The paper evaluates KV-eviction policies on Math500 (multi-step CoT
+reasoning) and an 8-subject MMLU slice (factual recall). Neither dataset
+nor the DeepSeek-R1-Distill checkpoints are available offline, so we build
+task families that stress the *same failure modes* Table 1 measures:
+
+  recall    "k1:v1;k2:v2;...;kN:vN?ki>" -> "vi."          (MMLU proxy)
+  multihop  values may themselves be keys; answering "?ka>" requires
+            chasing ka -> kb -> ... -> digits, and the model is trained
+            to EMIT the chase as chain-of-thought:
+            "?ka>" -> "kb>kc>37."                          (Math500 proxy)
+
+Eviction-policy sensitivity: the pair that resolves hop h only becomes
+relevant *after* hop h-1 has been generated — exactly the "temporal
+inconsistency in token relevance" Lethe targets. A sliding window
+(StreamingLLM) loses early pairs; a one-shot heavy-hitter pick (H2O)
+keeps pairs that were hot during prefill, not the ones a later hop needs.
+
+The token vocabulary here MUST match rust/src/model/tokenizer.rs; it is
+exported into artifacts/model_meta.json by aot.py and loaded by rust.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import random
+from typing import List, Tuple
+
+# --- vocabulary ---------------------------------------------------------
+# Order is load-bearing: ids are positions in this string, specials first.
+PAD, BOS, EOS = 0, 1, 2
+SPECIALS = ["<pad>", "<bos>", "<eos>"]
+CHARS = "abcdefghijklmnopqrstuvwxyz0123456789:;>?=. "
+VOCAB = SPECIALS + list(CHARS)
+VOCAB_SIZE = len(VOCAB)  # 3 + 43 = 46
+CHAR_TO_ID = {c: i + len(SPECIALS) for i, c in enumerate(CHARS)}
+ID_TO_CHAR = {i + len(SPECIALS): c for i, c in enumerate(CHARS)}
+
+
+def encode(text: str) -> List[int]:
+    return [CHAR_TO_ID[c] for c in text]
+
+
+def decode_ids(ids) -> str:
+    out = []
+    for i in ids:
+        i = int(i)
+        if i == EOS:
+            break
+        if i >= len(SPECIALS):
+            out.append(ID_TO_CHAR[i])
+    return "".join(out)
+
+
+# --- task generation ----------------------------------------------------
+
+KEY_LETTERS = "abcdefghijklmnopqrstuvwxyz"
+
+
+@dataclasses.dataclass
+class Task:
+    prompt: str        # "ab:17;cd:ab;...?cd>"
+    answer: str        # full expected generation, e.g. "ab>17."
+    final: str         # the 2-digit final value, e.g. "17"
+    hops: int
+    n_pairs: int
+
+
+def _fresh_keys(rng: random.Random, n: int) -> List[str]:
+    keys = set()
+    while len(keys) < n:
+        keys.add(rng.choice(KEY_LETTERS) + rng.choice(KEY_LETTERS))
+    return list(keys)
+
+
+def make_task(rng: random.Random, n_pairs: int, hops: int) -> Task:
+    """Build one task. `hops`=1 is plain recall; hops>=2 chains keys."""
+    assert 1 <= hops <= n_pairs
+    keys = _fresh_keys(rng, n_pairs)
+    # The chain: keys[0] -> keys[1] -> ... -> keys[hops-1] -> value.
+    final_val = f"{rng.randrange(10, 100)}"
+    mapping = {}
+    for i in range(hops - 1):
+        mapping[keys[i]] = keys[i + 1]
+    mapping[keys[hops - 1]] = final_val
+    # Distractor pairs map to plain values.
+    for k in keys[hops:]:
+        mapping[k] = f"{rng.randrange(10, 100)}"
+    # Shuffle presentation order so chain position is random.
+    order = keys[:]
+    rng.shuffle(order)
+    pairs = ";".join(f"{k}:{mapping[k]}" for k in order)
+    prompt = f"{pairs}?{keys[0]}>"
+    # CoT answer: emit each intermediate key then the final value.
+    steps = [f"{keys[i]}>" for i in range(1, hops)]
+    answer = "".join(steps) + final_val + "."
+    return Task(prompt=prompt, answer=answer, final=final_val,
+                hops=hops, n_pairs=n_pairs)
+
+
+# (name, n_pairs, hops): 8 "subjects" mirroring the paper's MMLU slice +
+# math500. recall-N = MMLU-like; multihop = Math500-like CoT.
+SUBJECTS: List[Tuple[str, int, int]] = [
+    ("recall-8", 8, 1),
+    ("recall-16", 16, 1),
+    ("recall-24", 24, 1),
+    ("hop2-8", 8, 2),
+    ("hop2-16", 16, 2),
+    ("hop3-8", 8, 3),
+    ("hop3-16", 16, 3),
+    ("hop4-16", 16, 4),
+]
+
+
+def training_example(rng: random.Random, max_pairs: int = 24,
+                     max_hops: int = 4) -> Task:
+    n_pairs = rng.randrange(4, max_pairs + 1)
+    hops = rng.randrange(1, min(max_hops, n_pairs) + 1)
+    return make_task(rng, n_pairs, hops)
+
+
+def task_tokens(task: Task) -> Tuple[List[int], List[int]]:
+    """(input ids incl BOS+prompt, target ids incl answer+EOS)."""
+    return [BOS] + encode(task.prompt), encode(task.answer) + [EOS]
+
+
+def training_batch_ids(rng: random.Random, batch: int, seqlen: int,
+                       max_pairs: int = 24, max_hops: int = 4):
+    """Token/loss-mask arrays for LM training: loss only on answer span."""
+    import numpy as np
+
+    toks = np.zeros((batch, seqlen), dtype=np.int32)  # PAD = 0
+    mask = np.zeros((batch, seqlen), dtype=np.float32)
+    for b in range(batch):
+        t = training_example(rng, max_pairs, max_hops)
+        inp, tgt = task_tokens(t)
+        ids = (inp + tgt)[:seqlen]
+        toks[b, : len(ids)] = ids
+        lo = min(len(inp), seqlen)
+        hi = min(len(inp) + len(tgt), seqlen)
+        # mask marks positions whose NEXT token is part of the answer
+        mask[b, max(lo - 1, 0) : max(hi - 1, 0)] = 1.0
+    return toks, mask

@@ -1,0 +1,153 @@
+"""Build-time training of the `lethe-tiny` serving model.
+
+The paper serves DeepSeek-R1-Distill checkpoints; none are available
+offline, so we *train* the small GQA transformer that the rust engine
+serves (DESIGN.md §4 substitution). Training on the synthetic recall /
+multihop CoT tasks (tasks.py) gives the model real attention structure —
+induction heads, attention sinks, recency bias — so the eviction-policy
+comparisons in Table 1 are earned rather than simulated.
+
+Loss is next-token cross-entropy masked to the answer span. The forward
+pass is model.train_forward, whose attention semantics are pytest-pinned
+to the Pallas serving kernels.
+
+Usage:  python -m compile.train [--steps N] [--time-budget SECONDS]
+Writes: artifacts/weights.npz, artifacts/train_log.csv
+"""
+
+from __future__ import annotations
+
+import argparse
+import os
+import random
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from compile import model as M
+from compile import tasks
+
+SEQLEN = 192
+BATCH = 16
+LR = 1e-3
+WARMUP = 100
+WEIGHT_DECAY = 0.01
+CLIP = 1.0
+
+
+def loss_fn(cfg, ws, toks, mask):
+    logits = M.train_forward(cfg, ws, toks)                    # [B,T,V]
+    tgt = toks[:, 1:]
+    lp = jax.nn.log_softmax(logits[:, :-1], axis=-1)
+    nll = -jnp.take_along_axis(lp, tgt[..., None], axis=-1)[..., 0]
+    m = mask[:, :-1]
+    return jnp.sum(nll * m) / jnp.maximum(jnp.sum(m), 1.0)
+
+
+def adamw_init(ws):
+    z = {n: jnp.zeros_like(w) for n, w in ws.items()}
+    return {"m": z, "v": {n: jnp.zeros_like(w) for n, w in ws.items()},
+            "t": jnp.zeros((), jnp.float32)}
+
+
+def make_step(cfg):
+    @jax.jit
+    def step(ws, opt, toks, mask):
+        loss, grads = jax.value_and_grad(
+            lambda w: loss_fn(cfg, w, toks, mask))(ws)
+        gnorm = jnp.sqrt(sum(jnp.sum(g * g) for g in grads.values()))
+        scale = jnp.minimum(1.0, CLIP / jnp.maximum(gnorm, 1e-9))
+        t = opt["t"] + 1.0
+        lr = LR * jnp.minimum(1.0, t / WARMUP)
+        b1, b2, eps = 0.9, 0.999, 1e-8
+        new_m, new_v, new_w = {}, {}, {}
+        for n, w in ws.items():
+            g = grads[n] * scale
+            m = b1 * opt["m"][n] + (1 - b1) * g
+            v = b2 * opt["v"][n] + (1 - b2) * g * g
+            mh = m / (1 - b1 ** t)
+            vh = v / (1 - b2 ** t)
+            upd = mh / (jnp.sqrt(vh) + eps)
+            if not n.startswith("ln"):
+                upd = upd + WEIGHT_DECAY * w
+            new_w[n] = w - lr * upd
+            new_m[n], new_v[n] = m, v
+        return new_w, {"m": new_m, "v": new_v, "t": t}, loss, gnorm
+    return step
+
+
+def eval_accuracy(cfg, ws, n_tasks: int = 20, seed: int = 777) -> float:
+    """Greedy teacher-free accuracy on fresh multihop tasks (FullKV —
+    this is the training sanity check, not the Table 1 harness)."""
+    rng = random.Random(seed)
+    fwd = jax.jit(lambda w, t: M.train_forward(cfg, w, t))
+    correct = 0
+    for _ in range(n_tasks):
+        t = tasks.make_task(rng, n_pairs=10, hops=rng.choice([1, 2, 3]))
+        inp, tgt = tasks.task_tokens(t)
+        ids = list(inp)
+        for _ in range(len(tgt) + 4):
+            logits = fwd(ws, jnp.array([ids], jnp.int32))
+            nxt = int(jnp.argmax(logits[0, -1]))
+            ids.append(nxt)
+            if nxt == tasks.EOS:
+                break
+        gen = tasks.decode_ids(ids[len(inp):])
+        correct += int(gen == t.answer)
+    return correct / n_tasks
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--steps", type=int, default=3000)
+    ap.add_argument("--time-budget", type=float, default=900.0,
+                    help="wall-clock cap in seconds")
+    ap.add_argument("--out", default="../artifacts/weights.npz")
+    ap.add_argument("--log", default="../artifacts/train_log.csv")
+    ap.add_argument("--seed", type=int, default=0)
+    ap.add_argument("--resume", action="store_true")
+    args = ap.parse_args()
+    os.makedirs(os.path.dirname(args.out), exist_ok=True)
+
+    cfg = M.ModelConfig()
+    if args.resume and os.path.exists(args.out):
+        data = np.load(args.out)
+        ws = {n: jnp.asarray(data[n]) for n in M.WEIGHT_NAMES}
+        print("resumed from", args.out)
+    else:
+        ws = M.init_weights(cfg, jax.random.PRNGKey(args.seed))
+    opt = adamw_init(ws)
+    step = make_step(cfg)
+    rng = random.Random(args.seed)
+
+    t0 = time.time()
+    log = []
+    for i in range(args.steps):
+        toks, mask = tasks.training_batch_ids(rng, BATCH, SEQLEN)
+        ws, opt, loss, gnorm = step(ws, opt, jnp.asarray(toks),
+                                    jnp.asarray(mask))
+        if i % 25 == 0 or i == args.steps - 1:
+            el = time.time() - t0
+            log.append((i, float(loss), float(gnorm), el))
+            print(f"step {i:5d} loss {float(loss):.4f} "
+                  f"gnorm {float(gnorm):.2f} {el:.0f}s", flush=True)
+            np.savez(args.out, **{n: np.asarray(w) for n, w in ws.items()})
+        if time.time() - t0 > args.time_budget:
+            print(f"time budget hit at step {i}")
+            break
+
+    np.savez(args.out, **{n: np.asarray(w) for n, w in ws.items()})
+    with open(args.log, "w") as f:
+        f.write("step,loss,gnorm,elapsed_s\n")
+        for r in log:
+            f.write(f"{r[0]},{r[1]:.5f},{r[2]:.3f},{r[3]:.1f}\n")
+    acc = eval_accuracy(cfg, ws)
+    print(f"final multihop sanity accuracy (FullKV, greedy): {acc:.2f}")
+    with open(args.log, "a") as f:
+        f.write(f"# final_sanity_accuracy,{acc}\n")
+
+
+if __name__ == "__main__":
+    main()

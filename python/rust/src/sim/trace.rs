@@ -1,0 +1,24 @@
+
+#[cfg(test)]
+mod probe {
+    use super::*;
+
+    #[test]
+    #[ignore] // diagnostic probe, run with --ignored
+    fn probe_20k_retention() {
+        let mut cfg = crate::config::ServingConfig::default();
+        cfg.baseline.budget = 768;
+        cfg.lethe.evict_threshold = 512;
+        cfg.lethe.sink_len = 16;
+        let tc = TraceConfig {
+            n_layers: 80, prompt_len: 512, gen_len: 20_000,
+            ..TraceConfig::default()
+        };
+        let tr = run_trace(crate::policy::PolicyKind::Lethe, &cfg, &tc);
+        println!("lethe: mean {:.0} final {:.0} events {}",
+                 tr.mean_retained(), tr.final_retained(), tr.prune_events);
+        for (i, r) in tr.retained.iter().enumerate() {
+            if i % 4000 == 0 { println!("  t={i} retained={r:.0}"); }
+        }
+    }
+}

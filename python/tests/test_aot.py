@@ -1,0 +1,108 @@
+"""AOT artifact contract tests: the manifest, weight blob and HLO text
+must satisfy exactly what rust/src/{model,runtime} assume. Run after
+`make artifacts`; skipped cleanly when artifacts are absent.
+"""
+
+import json
+import os
+
+import numpy as np
+import pytest
+
+from compile import aot, model as M, tasks
+
+ART = os.path.join(os.path.dirname(__file__), "..", "..", "artifacts")
+META = os.path.join(ART, "model_meta.json")
+
+pytestmark = pytest.mark.skipif(
+    not os.path.exists(META), reason="run `make artifacts` first")
+
+
+@pytest.fixture(scope="module")
+def meta():
+    with open(META) as f:
+        return json.load(f)
+
+
+def test_manifest_model_dims_match_config(meta):
+    cfg = M.ModelConfig()
+    m = meta["model"]
+    assert m["vocab_size"] == cfg.vocab_size == tasks.VOCAB_SIZE
+    assert m["n_layers"] == cfg.n_layers
+    assert m["n_kv_heads"] == cfg.n_kv_heads
+    assert m["param_count"] == cfg.param_count()
+
+
+def test_tokenizer_contract(meta):
+    t = meta["tokenizer"]
+    assert t["specials"] == tasks.SPECIALS
+    assert t["chars"] == tasks.CHARS
+    assert (t["pad"], t["bos"], t["eos"]) == (tasks.PAD, tasks.BOS, tasks.EOS)
+
+
+def test_weights_bin_layout(meta):
+    path = os.path.join(ART, "weights.bin")
+    size = os.path.getsize(path)
+    total = sum(w["bytes"] for w in meta["weights"])
+    assert size == total
+    # Offsets are contiguous and in WEIGHT_NAMES order.
+    names = [w["name"] for w in meta["weights"]]
+    assert names == M.WEIGHT_NAMES
+    off = 0
+    for w in meta["weights"]:
+        assert w["offset"] == off
+        assert w["bytes"] == 4 * int(np.prod(w["shape"]))
+        off += w["bytes"]
+
+
+def test_every_executable_file_exists_and_is_hlo_text(meta):
+    for e in meta["executables"]:
+        path = os.path.join(ART, e["file"])
+        assert os.path.exists(path), e["file"]
+        head = open(path).read(200)
+        assert "HloModule" in head, f"{e['file']} is not HLO text"
+
+
+def test_bucket_grid_is_complete(meta):
+    names = {e["name"] for e in meta["executables"]}
+    for t in meta["prefill_ts"]:
+        assert f"prefill_t{t}" in names
+    for prof, caps in meta["decode_capacities"].items():
+        for c in caps:
+            for b in meta["decode_batches"][prof]:
+                assert f"decode_b{b}_c{c}" in names, (prof, b, c)
+
+
+def test_decode_param_shapes_match_runtime_expectation(meta):
+    cfg = M.ModelConfig()
+    nw = len(M.WEIGHT_NAMES)
+    by_name = {e["name"]: e for e in meta["executables"]}
+    e = by_name["decode_b2_c128"]
+    # weights first, then kv_k, kv_v, lens, tokens, positions.
+    assert len(e["params"]) == nw + 5
+    kv_shape = e["params"][nw]["shape"]
+    assert kv_shape == [cfg.n_layers, 2, cfg.n_kv_heads, 128, cfg.d_head]
+    assert e["params"][nw + 2]["shape"] == [cfg.n_layers, 2]
+    assert e["params"][nw + 2]["dtype"] == "int32"
+    assert e["outputs"] == ["logits", "k_new", "v_new", "probs"]
+
+
+def test_prefill_outputs_contract(meta):
+    by_name = {e["name"]: e for e in meta["executables"]}
+    e = by_name["prefill_t64"]
+    assert e["outputs"] == ["logits", "k_all", "v_all", "scores"]
+
+
+def test_hlo_text_regeneration_is_deterministic():
+    """Lowering the same entry point twice yields identical HLO text —
+    the property that makes artifact hashes meaningful."""
+    cfg = M.ModelConfig()
+    entries = aot.build_entry_points(cfg)
+    name, fn, specs, _ = next(e for e in entries
+                              if e[0] == "decode_b1_c128")
+    import jax
+
+    t1 = aot.to_hlo_text(jax.jit(fn).lower(*specs))
+    t2 = aot.to_hlo_text(jax.jit(fn).lower(*specs))
+    assert t1 == t2
+    assert "HloModule" in t1

@@ -1,0 +1,191 @@
+"""L2 correctness: the serving entry points (prefill + decode over the
+fixed-capacity cache) must agree with the teacher-forced training forward
+— the invariant that lets the rust engine serve the trained weights.
+"""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from compile import model as M
+from compile import tasks
+
+CFG = M.ModelConfig()
+
+
+@pytest.fixture(scope="module")
+def ws():
+    return M.init_weights(CFG, jax.random.PRNGKey(7))
+
+
+def random_tokens(rng, n):
+    return rng.integers(len(tasks.SPECIALS), CFG.vocab_size, size=n,
+                        dtype=np.int32)
+
+
+def test_prefill_matches_train_forward(ws):
+    rng = np.random.default_rng(0)
+    toks = random_tokens(rng, 24)
+    full = M.train_forward(CFG, ws, jnp.asarray(toks)[None, :])
+    T = 32
+    padded = np.zeros((1, T), np.int32)
+    padded[0, :24] = toks
+    logits, k_all, v_all, scores = M.prefill(
+        CFG, ws, jnp.asarray(padded), jnp.int32(24))
+    np.testing.assert_allclose(
+        logits[0], full[0, 23], atol=2e-4, rtol=2e-4)
+    assert k_all.shape == (CFG.n_layers, 1, CFG.n_kv_heads, T, CFG.d_head)
+    assert scores.shape == (CFG.n_layers, 1, CFG.n_q_heads, T)
+    # Pad-query rows contribute nothing to RASR init:
+    # total mass == sum over valid queries only (each row sums to 1).
+    per_layer = np.asarray(scores).sum(axis=(-1))  # [L,1,Hq]
+    np.testing.assert_allclose(per_layer, 24.0, atol=1e-3)
+
+
+def test_decode_chain_matches_train_forward(ws):
+    """prefill(n) + m decode steps == teacher forcing on n+m tokens."""
+    rng = np.random.default_rng(1)
+    n, m, C = 20, 8, 64
+    toks = random_tokens(rng, n + m)
+    full = M.train_forward(CFG, ws, jnp.asarray(toks)[None, :])
+
+    padded = np.zeros((1, 32), np.int32)
+    padded[0, :n] = toks[:n]
+    logits, k_all, v_all, _ = M.prefill(
+        CFG, ws, jnp.asarray(padded), jnp.int32(n))
+    np.testing.assert_allclose(logits[0], full[0, n - 1], atol=2e-4,
+                               rtol=2e-4)
+
+    # Build the capacity-C cache the way the rust engine does.
+    L, Hkv, D = CFG.n_layers, CFG.n_kv_heads, CFG.d_head
+    kv_k = np.zeros((L, 1, Hkv, C, D), np.float32)
+    kv_v = np.zeros((L, 1, Hkv, C, D), np.float32)
+    kv_k[:, :, :, :32] = np.asarray(k_all)
+    kv_v[:, :, :, :32] = np.asarray(v_all)
+    lens = np.full((L, 1), n, np.int32)
+
+    for t in range(m):
+        logits, k_new, v_new, probs = M.decode_step(
+            CFG, ws, jnp.asarray(kv_k), jnp.asarray(kv_v),
+            jnp.asarray(lens), jnp.asarray(toks[n + t : n + t + 1]),
+            jnp.asarray([n + t], jnp.int32))
+        np.testing.assert_allclose(
+            logits[0], full[0, n + t], atol=5e-4, rtol=5e-4,
+            err_msg=f"step {t}")
+        # Host-side mirror of the in-graph insert.
+        kv_k[:, 0, :, n + t] = np.asarray(k_new)[:, 0]
+        kv_v[:, 0, :, n + t] = np.asarray(v_new)[:, 0]
+        lens += 1
+        # probs live on slots [0, n+t]; nothing beyond.
+        p = np.asarray(probs)
+        assert np.all(p[:, :, :, n + t + 1 :] == 0.0)
+        np.testing.assert_allclose(p.sum(-1), 1.0, atol=1e-4)
+
+
+def test_decode_respects_per_layer_lens(ws):
+    """Different lens per layer (post-pruning state) must mask per layer."""
+    rng = np.random.default_rng(2)
+    L, Hkv, D, C = CFG.n_layers, CFG.n_kv_heads, CFG.d_head, 32
+    kv_k = rng.standard_normal((L, 1, Hkv, C, D)).astype(np.float32)
+    kv_v = rng.standard_normal((L, 1, Hkv, C, D)).astype(np.float32)
+    lens = np.asarray(
+        [[4], [8], [12], [16]][: L] if L <= 4 else
+        [[4 + 2 * l] for l in range(L)], np.int32)
+    tok = jnp.asarray([5], jnp.int32)
+    pos = jnp.asarray([20], jnp.int32)
+    _, _, _, probs = M.decode_step(
+        CFG, ws, jnp.asarray(kv_k), jnp.asarray(kv_v), jnp.asarray(lens),
+        tok, pos)
+    p = np.asarray(probs)
+    for l in range(L):
+        live = int(lens[l, 0]) + 1  # incl. the inserted token
+        assert np.all(p[l, :, :, live:] == 0.0), f"layer {l}"
+        np.testing.assert_allclose(p[l].sum(-1), 1.0, atol=1e-4)
+
+
+def test_compacted_cache_changes_little_when_dropping_cold_rows(ws):
+    """Pruning slots that receive ~no attention must barely change the
+    next-token logits (the semantic basis for eviction)."""
+    rng = np.random.default_rng(3)
+    n, C = 24, 64
+    toks = random_tokens(rng, n)
+    padded = np.zeros((1, 32), np.int32)
+    padded[0, :n] = toks
+    _, k_all, v_all, scores = M.prefill(
+        CFG, ws, jnp.asarray(padded), jnp.int32(n))
+
+    L, Hkv, D = CFG.n_layers, CFG.n_kv_heads, CFG.d_head
+    kv_k = np.zeros((L, 1, Hkv, C, D), np.float32)
+    kv_v = np.zeros((L, 1, Hkv, C, D), np.float32)
+    kv_k[:, :, :, :32] = np.asarray(k_all)
+    kv_v[:, :, :, :32] = np.asarray(v_all)
+    lens = np.full((L, 1), n, np.int32)
+    tok = jnp.asarray([toks[-1]], jnp.int32)
+    pos = jnp.asarray([n], jnp.int32)
+    base, _, _, probs = M.decode_step(
+        CFG, ws, jnp.asarray(kv_k), jnp.asarray(kv_v), jnp.asarray(lens),
+        tok, pos)
+
+    # Evict the 4 least- vs the 4 most-attended slots per layer.
+    p = np.asarray(probs)[:, 0].sum(1)  # [L, C]
+
+    def drop(selector):
+        kv_k2, kv_v2 = kv_k.copy(), kv_v.copy()
+        lens2 = lens.copy()
+        for l in range(CFG.n_layers):
+            order = np.argsort(p[l, :n])
+            keep = np.sort(selector(order))
+            kv_k2[l, 0, :, : len(keep)] = kv_k[l, 0][:, keep]
+            kv_v2[l, 0, :, : len(keep)] = kv_v[l, 0][:, keep]
+            kv_k2[l, 0, :, len(keep) : n] = 0
+            kv_v2[l, 0, :, len(keep) : n] = 0
+            lens2[l, 0] = len(keep)
+        out, _, _, _ = M.decode_step(
+            CFG, ws, jnp.asarray(kv_k2), jnp.asarray(kv_v2),
+            jnp.asarray(lens2), tok, pos)
+        return np.abs(np.asarray(out) - np.asarray(base)).max()
+
+    cold_drift = drop(lambda order: order[4:])   # drop 4 coldest
+    hot_drift = drop(lambda order: order[:-4])   # drop 4 hottest
+    # The eviction premise: attention mass predicts importance. Even with
+    # untrained weights, evicting cold rows must hurt far less than
+    # evicting hot rows.
+    assert cold_drift < 0.6 * hot_drift, (cold_drift, hot_drift)
+
+
+def test_weight_specs_order_is_stable():
+    names = [n for n, _ in M.weight_specs(CFG)]
+    assert names == M.WEIGHT_NAMES
+    assert names[0] == "embed" and names[-1] == "lm_head"
+
+
+def test_tasks_encode_decode_roundtrip():
+    import random
+
+    rng = random.Random(0)
+    t = tasks.make_task(rng, 8, 3)
+    ids = tasks.encode(t.prompt)
+    assert tasks.decode_ids(ids) == t.prompt
+    inp, tgt = tasks.task_tokens(t)
+    assert inp[0] == tasks.BOS and tgt[-1] == tasks.EOS
+
+
+def test_training_batch_masks_answers_only():
+    import random
+
+    rng = random.Random(1)
+    toks, mask = tasks.training_batch_ids(rng, 8, 192)
+    assert toks.shape == (8, 192) and mask.shape == (8, 192)
+    nonempty = 0
+    for b in range(8):
+        nz = np.nonzero(mask[b])[0]
+        if len(nz) == 0:
+            continue  # answer fully truncated by seqlen — skipped in loss
+        nonempty += 1
+        # Mask is one contiguous span (the answer region).
+        assert np.all(np.diff(nz) == 1)
+        # The last masked position predicts EOS (unless truncated).
+        if nz[-1] + 1 < 192:
+            assert toks[b, nz[-1] + 1] == tasks.EOS
+    assert nonempty >= 6, "most rows should carry answer supervision"

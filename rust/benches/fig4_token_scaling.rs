@@ -1,0 +1,156 @@
+//! Figure 4: latency, generation memory and throughput versus generated
+//! tokens, FullKV vs Lethe.
+//!
+//!   (a) Real engine, long profile (C up to 2048): a single sequence is
+//!       decoded to ~1.8k tokens; per-step latency and live KV bytes are
+//!       sampled along the way. FullKV grows linearly and eventually
+//!       OOMs at the largest bucket; Lethe plateaus — the paper's
+//!       memory-plateau curve, measured.
+//!   (b) Simulator to 20k tokens on the four A100 archs.
+
+use lethe::bench_support::{print_table, try_engine, write_csv};
+use lethe::config::ServingConfig;
+use lethe::engine::SeqState;
+use lethe::model::DEEPSEEK_R1_DISTILL;
+use lethe::policy::{make_policy, PolicyKind};
+use lethe::sim::{run_trace, Simulator, TraceConfig};
+use lethe::util::prng::Rng;
+use lethe::workload::make_task;
+
+fn env_usize(k: &str, default: usize) -> usize {
+    std::env::var(k).ok().and_then(|v| v.parse().ok()).unwrap_or(default)
+}
+
+fn main() -> anyhow::Result<()> {
+    // 2400 > the long profile's 2048-slot ceiling: FullKV must OOM on the
+    // way (the paper's Fig. 4 cliff) while Lethe completes.
+    let gen_target = env_usize("LETHE_FIG4_TOKENS", 2400);
+
+    // ---- (a) real engine, long profile --------------------------------
+    let mut cfg = ServingConfig::default();
+    cfg.cache_profile = "long".to_string();
+    cfg.lethe.evict_threshold = 256;
+    // τ calibrated to the tiny model's score scale (see Table 6 sweep /
+    // EXPERIMENTS.md): makes multi-round pruning engage so the memory
+    // plateau is visible.
+    cfg.lethe.sparse_ratio = 25.0;
+    let mut csv = Vec::new();
+    if let Some((mut engine, tok)) = try_engine(cfg) {
+        let layers = engine.dims().n_layers;
+        for kind in [PolicyKind::FullKv, PolicyKind::Lethe] {
+            let mut rng = Rng::new(0xF164);
+            let task = make_task(&mut rng, 24, 4);
+            let prompt = tok.encode_prompt(&task.prompt)?;
+            let mut group = engine.new_group(1, kind);
+            // max_new > gen target; EOS is ignored by regenerating: use a
+            // huge max and stop manually at the target.
+            let mut seq = SeqState::new(
+                0,
+                make_policy(kind, &engine.cfg, layers),
+                layers,
+                usize::MAX / 2,
+                -1, // never matches => length-capped manually
+            );
+            seq.max_new = gen_target;
+            engine.prefill(&mut group, 0, seq, &prompt)?;
+            let mut t_last = std::time::Instant::now();
+            let mut steps = 0usize;
+            while group.active() > 0 {
+                if engine.step(&mut group)?.is_empty() {
+                    // OOM: record the wall and stop this policy's curve.
+                    csv.push(format!(
+                        "{},{},OOM,OOM",
+                        kind.label(),
+                        group.seqs.first().map(|s| s.steps).unwrap_or(steps)
+                    ));
+                    eprintln!(
+                        "[fig4] {} OOM at ~{} generated tokens",
+                        kind.label(),
+                        steps
+                    );
+                    break;
+                }
+                steps += 1;
+                if steps % 100 == 0 {
+                    let dt = t_last.elapsed().as_secs_f64() / 100.0;
+                    t_last = std::time::Instant::now();
+                    csv.push(format!(
+                        "{},{},{:.5},{}",
+                        kind.label(),
+                        steps,
+                        dt,
+                        group.cache.live_bytes()
+                    ));
+                    eprintln!(
+                        "[fig4] {} step {steps}: {:.2} ms/step, {} live KB",
+                        kind.label(),
+                        dt * 1e3,
+                        group.cache.live_bytes() / 1000
+                    );
+                }
+                group.reap();
+            }
+        }
+        write_csv(
+            "fig4_token_scaling_real.csv",
+            "policy,generated_tokens,step_latency_s,live_kv_bytes",
+            &csv,
+        )?;
+    }
+
+    // ---- (b) simulator to 20k -----------------------------------------
+    let mut cfg = ServingConfig::default();
+    cfg.baseline.budget = 768;
+    cfg.lethe.evict_threshold = 512;
+    cfg.lethe.sink_len = 16;
+    let mut sim_csv = Vec::new();
+    let mut rows = Vec::new();
+    for arch in &DEEPSEEK_R1_DISTILL {
+        let mut sim = Simulator::new(arch);
+        sim.calibrate(2048.0, 30.0);
+        let tc = TraceConfig {
+            n_layers: arch.n_layers,
+            prompt_len: 512,
+            gen_len: 20_000,
+            ..TraceConfig::default()
+        };
+        let lethe = run_trace(PolicyKind::Lethe, &cfg, &tc);
+        for t in (1000..=20_000).step_by(1000) {
+            let full_ctx = 512.0 + t as f64;
+            let lethe_ctx = lethe.retained[t - 1];
+            for (kind, ctx) in
+                [("FullKV", full_ctx), ("Lethe(ours)", lethe_ctx)]
+            {
+                let lat = sim.step_latency(1, ctx);
+                let mem =
+                    sim.gen_memory_bytes(1, ctx) / 1e6;
+                sim_csv.push(format!(
+                    "{},{},{},{:.5},{:.0},{:.2}",
+                    arch.name, kind, t, lat, mem, 1.0 / lat
+                ));
+            }
+            if t % 5000 == 0 && arch.name.contains("70B") {
+                rows.push(vec![
+                    format!("{t}"),
+                    format!("{:.0}", (512.0 + t as f64)
+                            * arch.kv_bytes_per_token_per_gpu() as f64
+                            * lethe::sim::KV_FRAG / 1e6),
+                    format!("{:.0}", lethe.retained[t - 1]
+                            * arch.kv_bytes_per_token_per_gpu() as f64
+                            * lethe::sim::KV_FRAG / 1e6),
+                ]);
+            }
+        }
+    }
+    print_table(
+        "Fig 4 (sim, Llama-70B) — KV memory (MB) vs generated tokens",
+        &["tokens", "FullKV", "Lethe"],
+        &rows,
+    );
+    write_csv(
+        "fig4_token_scaling_sim.csv",
+        "model,policy,generated_tokens,step_latency_s,gen_memory_mb,tok_s",
+        &sim_csv,
+    )?;
+    Ok(())
+}

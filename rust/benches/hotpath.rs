@@ -1,0 +1,133 @@
+//! Hot-path microbenchmarks (§Perf): the pieces of a decode step, each
+//! measured in isolation so the optimization loop can attribute time.
+//!
+//!   decode exec   — PJRT execute per (B, C) bucket (upload + run + fetch)
+//!   cache pack    — GroupCache::pack into upload scratch
+//!   score accum   — RASR Eq. 5 update over a full group
+//!   hoyer         — Eq. 1 sparsity over a C-vector
+//!   lethe plan    — Algorithm 1 on a worst-case layer
+//!   apply retain  — the eviction gather
+//!   json parse    — manifest-sized document (startup path)
+
+use lethe::bench_support::try_engine;
+use lethe::config::{LetheParams, ServingConfig};
+use lethe::kvcache::{CacheDims, GroupCache};
+use lethe::policy::{EvictionPolicy, LayerState, LethePolicy};
+use lethe::runtime::tensors::{HostTensorF32, HostTensorI32};
+use lethe::util::prng::Rng;
+use lethe::util::stats::{bench, bench_row};
+
+fn main() -> anyhow::Result<()> {
+    println!("=== hotpath microbenches (warmup 3, n=20) ===");
+    let mut rng = Rng::new(0x407);
+
+    // --- pure-rust paths -------------------------------------------------
+    let dims = CacheDims {
+        layers: 4,
+        batch: 8,
+        kv_heads: 2,
+        capacity: 512,
+        d_head: 32,
+    };
+    let mut cache = GroupCache::new(dims.clone());
+    let row: Vec<f32> = (0..64).map(|i| i as f32).collect();
+    for b in 0..8 {
+        for t in 0..400 {
+            for l in 0..4 {
+                cache.insert(l, b, &row, &row, t as i32).unwrap();
+            }
+        }
+    }
+    let mut k_s = HostTensorF32::zeros(&[4, 8, 2, 512, 32]);
+    let mut v_s = HostTensorF32::zeros(&[4, 8, 2, 512, 32]);
+    let mut l_s = HostTensorI32::zeros(&[4, 8]);
+    let s = bench(3, 20, || {
+        cache.pack(8, 512, &mut k_s, &mut v_s, &mut l_s).unwrap();
+    });
+    println!("{}", bench_row("cache pack b8 c512 (16.8MB)", &s));
+
+    let add: Vec<f32> = (0..400).map(|_| rng.f32()).collect();
+    let s = bench(3, 20, || {
+        for b in 0..8 {
+            for l in 0..4 {
+                cache.accumulate_scores(l, b, 0.95, &add);
+            }
+        }
+    });
+    println!("{}", bench_row("score accum (32 rows x 400)", &s));
+
+    let scores: Vec<f32> = (0..400).map(|_| rng.f32() * rng.f32()).collect();
+    let s = bench(3, 20, || {
+        std::hint::black_box(lethe::attn::sparsity::hoyer_sparsity(&scores));
+    });
+    println!("{}", bench_row("hoyer sparsity (400)", &s));
+
+    let pos: Vec<i32> = (0..400).collect();
+    let params = LetheParams {
+        evict_threshold: 64,
+        sparse_ratio: 40.0,
+        ..LetheParams::default()
+    };
+    let s = bench(3, 20, || {
+        // Fresh policy per iteration so the adaptive threshold doesn't
+        // absorb the trigger after the first plan.
+        let mut p2 = LethePolicy::new(params.clone(), 4);
+        let st = LayerState {
+            scores: &scores,
+            pos: &pos,
+            len: 400,
+            step: 100,
+            sparsity: 0.8,
+            capacity: 512,
+        };
+        std::hint::black_box(p2.plan(0, &st));
+    });
+    println!("{}", bench_row("lethe plan (400 slots, incl alloc)", &s));
+
+    let keep: Vec<usize> = (0..400).filter(|i| i % 3 != 0).collect();
+    let s = bench(3, 20, || {
+        let mut c2 = cache.clone();
+        c2.apply_retention(0, 0, &keep).unwrap();
+    });
+    println!("{}", bench_row("apply retention (400→267, incl clone)", &s));
+
+    let manifest = std::fs::read_to_string("artifacts/model_meta.json")
+        .unwrap_or_else(|_| "{}".into());
+    let s = bench(3, 20, || {
+        std::hint::black_box(lethe::util::json::parse(&manifest).unwrap());
+    });
+    println!("{}", bench_row("json parse (manifest)", &s));
+
+    // --- PJRT decode per bucket -------------------------------------------
+    let cfg = ServingConfig::default();
+    let Some((engine, _tok)) = try_engine(cfg) else { return Ok(()) };
+    let meta = &engine.rt.meta;
+    let d = meta.dims.clone();
+    for &(bb, cap) in &[(1usize, 128usize), (1, 512), (4, 128), (8, 128),
+                        (8, 512)] {
+        if !meta
+            .executables
+            .contains_key(&format!("decode_b{bb}_c{cap}"))
+        {
+            continue;
+        }
+        let kv = HostTensorF32::zeros(&[d.n_layers, bb, d.n_kv_heads, cap,
+                                        d.d_head]);
+        let mut lens = HostTensorI32::zeros(&[d.n_layers, bb]);
+        for x in lens.data.iter_mut() {
+            *x = (cap / 2) as i32;
+        }
+        let tokens = vec![5i32; bb];
+        let positions = vec![(cap / 2) as i32; bb];
+        let s = bench(3, 20, || {
+            std::hint::black_box(
+                engine
+                    .rt
+                    .decode(bb, cap, &kv, &kv, &lens, &tokens, &positions)
+                    .unwrap(),
+            );
+        });
+        println!("{}", bench_row(&format!("decode exec b{bb} c{cap}"), &s));
+    }
+    Ok(())
+}

@@ -1,0 +1,113 @@
+//! Table 1: accuracy preservation under cache compression.
+//!
+//! Paper: 5 policies × 4 models × (Math500 + 8 MMLU subjects).
+//! Here:  5 policies × lethe-tiny × 8 synthetic subjects (recall-N =
+//! MMLU proxies, hopK-N = Math500 proxies; DESIGN.md §4). Expected shape:
+//! Lethe ≈ FullKV; StreamingLLM/H2O/PyramidKV degrade on the multihop
+//! subjects. Also prints the Table 4 capability matrix.
+//!
+//! Env knobs: LETHE_BENCH_N (tasks/subject, default 25),
+//!            LETHE_BENCH_BUDGET (baseline token budget, default 96).
+
+use lethe::bench_support::{print_table, try_engine, write_csv};
+use lethe::config::ServingConfig;
+use lethe::eval::eval_policy;
+use lethe::policy::{make_policy, PolicyKind};
+
+fn env_usize(k: &str, default: usize) -> usize {
+    std::env::var(k).ok().and_then(|v| v.parse().ok()).unwrap_or(default)
+}
+
+fn main() -> anyhow::Result<()> {
+    let n = env_usize("LETHE_BENCH_N", 25);
+    // Budget 48 ≈ one third of the longest prompts: the compression
+    // regime where Table 1's policy separation appears.
+    let budget = env_usize("LETHE_BENCH_BUDGET", 48);
+    let mut cfg = ServingConfig::default();
+    // Hold every policy to a comparable budget so Table 1 compares like
+    // for like (paper: all baselines re-implemented in one framework).
+    cfg.baseline.budget = budget;
+    cfg.lethe.evict_threshold = budget;
+    let n_layers;
+    let Some((mut engine, tok)) = try_engine(cfg.clone()) else {
+        return Ok(());
+    };
+    n_layers = engine.dims().n_layers;
+
+    let mut rows: Vec<Vec<String>> = Vec::new();
+    let mut csv = Vec::new();
+    let subjects: Vec<&str> =
+        lethe::workload::SUBJECTS.iter().map(|(s, _, _)| *s).collect();
+
+    for kind in PolicyKind::ALL {
+        let t0 = std::time::Instant::now();
+        let rep = eval_policy(&mut engine, &tok, kind, n, 4, 64, 0xAAA1)?;
+        let mut row = vec![kind.label().to_string()];
+        for s in &rep.subjects {
+            // chain_acc is the retention-sensitive headline (final-value
+            // accuracy alongside in the CSV; see eval::judge_chain docs).
+            row.push(format!("{:.1}", 100.0 * s.chain_acc));
+            csv.push(format!(
+                "{},{},{:.4},{:.4},{:.4},{:.1},{:.1},{}",
+                kind.label(),
+                s.subject,
+                s.chain_acc,
+                s.final_acc,
+                s.strict_acc,
+                s.mean_generated,
+                s.prune_rounds,
+                s.peak_live_bytes
+            ));
+        }
+        row.push(format!("{:.1}", 100.0 * rep.overall_chain_acc()));
+        rows.push(row);
+        eprintln!(
+            "[table1] {} done in {:.1}s",
+            kind.label(),
+            t0.elapsed().as_secs_f64()
+        );
+    }
+
+    let mut header = vec!["Method"];
+    header.extend(subjects.iter().copied());
+    header.push("overall");
+    print_table(
+        &format!(
+            "Table 1 — chain accuracy (%), lethe-tiny, budget={budget}, \
+             n={n}/subject"
+        ),
+        &header,
+        &rows,
+    );
+    write_csv(
+        "table1_accuracy.csv",
+        "policy,subject,chain_acc,final_acc,strict_acc,mean_gen,\
+         prune_rounds,peak_bytes",
+        &csv,
+    )?;
+
+    // Table 4: capability matrix straight from the live policy objects.
+    let cap_rows: Vec<Vec<String>> = PolicyKind::ALL
+        .iter()
+        .map(|&k| {
+            let p = make_policy(k, &cfg, n_layers);
+            let c = p.capabilities();
+            let tick = |b: bool| if b { "yes" } else { "-" }.to_string();
+            vec![
+                k.label().to_string(),
+                tick(c.recency_aware),
+                tick(c.attention_aware),
+                tick(c.layerwise_budget),
+                tick(c.adaptive_budget),
+                tick(c.multi_step_pruning),
+            ]
+        })
+        .collect();
+    print_table(
+        "Table 4 — capability matrix",
+        &["Method", "recency", "attention", "layerwise", "adaptive",
+          "multi-step"],
+        &cap_rows,
+    );
+    Ok(())
+}

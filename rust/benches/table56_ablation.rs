@@ -1,0 +1,103 @@
+//! Tables 5 & 6: ablations of Lethe's two hyperparameters on the real
+//! engine — recent_ratio ∈ {0.1, 0.2, 0.3, 0.4} (Table 5) and
+//! sparse_ratio τ ∈ {20, 100, 400, 1000} (Table 6), against the FullKV
+//! reference row. Metrics mirror the paper: accuracy on the Math500
+//! proxy (hop3-16), wall latency, peak KV memory, decode throughput.
+//!
+//! Expected shape: accuracy plateaus above sparse_ratio≈400 while memory
+//! keeps growing; recent_ratio≈0.3 is the sweet spot.
+
+use lethe::bench_support::{gen_tasks, print_table, run_tasks, try_engine,
+                           write_csv};
+use lethe::config::ServingConfig;
+use lethe::policy::PolicyKind;
+
+fn env_usize(k: &str, default: usize) -> usize {
+    std::env::var(k).ok().and_then(|v| v.parse().ok()).unwrap_or(default)
+}
+
+fn main() -> anyhow::Result<()> {
+    let n = env_usize("LETHE_BENCH_N", 30);
+    let base = ServingConfig::default();
+    let tasks = gen_tasks(0x5E55, n, 16, 3); // the Math500 proxy subject
+
+    let mut rows = Vec::new();
+    let mut csv = Vec::new();
+
+    let mut run_one = |label: String,
+                       cfg: ServingConfig,
+                       kind: PolicyKind,
+                       rows: &mut Vec<Vec<String>>,
+                       csv: &mut Vec<String>|
+     -> anyhow::Result<()> {
+        let Some((mut engine, tok)) = try_engine(cfg) else {
+            anyhow::bail!("no artifacts")
+        };
+        engine.cfg.lethe.evict_threshold = engine.cfg.lethe.evict_threshold.max(1);
+        engine.metrics.reset();
+        let st = run_tasks(&mut engine, &tok, kind, &tasks, 4, 64)?;
+        rows.push(vec![
+            label.clone(),
+            format!("{:.1}", 100.0 * st.chain_acc),
+            format!("{:.2}", st.wall_s),
+            format!("{:.0}", st.peak_live_bytes as f64 / 1e3),
+            format!("{:.0}", engine.metrics.decode_tput()),
+            format!("{}", st.prune_events),
+        ]);
+        csv.push(format!(
+            "{label},{:.4},{:.4},{:.3},{},{:.1},{}",
+            st.chain_acc,
+            st.final_acc,
+            st.wall_s,
+            st.peak_live_bytes,
+            engine.metrics.decode_tput(),
+            st.prune_events
+        ));
+        Ok(())
+    };
+
+    // FullKV reference row (shared by both tables).
+    run_one("FullKV".into(), base.clone(), PolicyKind::FullKv, &mut rows,
+            &mut csv)?;
+
+    // Table 5: recent_ratio sweep.
+    for rr in [0.1, 0.2, 0.3, 0.4] {
+        let mut cfg = base.clone();
+        cfg.lethe.recent_ratio = rr;
+        cfg.lethe.evict_threshold = 48;
+        run_one(format!("rr={rr}"), cfg, PolicyKind::Lethe, &mut rows,
+                &mut csv)?;
+    }
+    print_table(
+        &format!("Table 5 — recent_ratio ablation (hop3-16, n={n})"),
+        &["config", "acc%", "lat_s", "peakKB", "tok/s", "prunes"],
+        &rows,
+    );
+    write_csv(
+        "table5_recent_ratio.csv",
+        "config,chain_acc,final_acc,wall_s,peak_bytes,tok_s,prune_events",
+        &csv,
+    )?;
+
+    // Table 6: sparse_ratio (τ) sweep.
+    let mut rows6 = vec![rows[0].clone()]; // FullKV row again
+    let mut csv6 = vec![csv[0].clone()];
+    for tau in [20.0, 100.0, 400.0, 1000.0] {
+        let mut cfg = base.clone();
+        cfg.lethe.sparse_ratio = tau;
+        cfg.lethe.evict_threshold = 48;
+        run_one(format!("tau={tau}"), cfg, PolicyKind::Lethe, &mut rows6,
+                &mut csv6)?;
+    }
+    print_table(
+        &format!("Table 6 — sparse_ratio (tau) ablation (hop3-16, n={n})"),
+        &["config", "acc%", "lat_s", "peakKB", "tok/s", "prunes"],
+        &rows6,
+    );
+    write_csv(
+        "table6_sparse_ratio.csv",
+        "config,chain_acc,final_acc,wall_s,peak_bytes,tok_s,prune_events",
+        &csv6,
+    )?;
+    Ok(())
+}

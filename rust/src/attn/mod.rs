@@ -1,0 +1,9 @@
+//! Attention-signal analysis: Hoyer sparsity (paper Eq. 1) and the
+//! head-collapsed score utilities (Eq. 2) that feed RASR and the
+//! layerwise budget estimator.
+
+pub mod score;
+pub mod sparsity;
+
+pub use score::{head_sum, ProbsView};
+pub use sparsity::{hoyer_sparsity, SparsityTracker};

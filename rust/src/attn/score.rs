@@ -1,0 +1,113 @@
+//! Head-collapsed attention scoring (paper Eq. 2): the decode executable
+//! returns per-head probabilities `[L, B, Hq, C]`; policies consume the
+//! head-summed view per (layer, slot). Head-invariant treatment is
+//! justified by the paper's Fig. 5 head-similarity observation and keeps
+//! GQA handling trivial (Eq. 3: no key duplication anywhere).
+
+use crate::runtime::tensors::HostTensorF32;
+
+/// Zero-copy view over the decode `probs` output.
+pub struct ProbsView<'a> {
+    t: &'a HostTensorF32,
+}
+
+impl<'a> ProbsView<'a> {
+    pub fn new(t: &'a HostTensorF32) -> Self {
+        assert_eq!(t.shape.len(), 4, "probs must be [L,B,Hq,C]");
+        ProbsView { t }
+    }
+
+    pub fn layers(&self) -> usize {
+        self.t.shape[0]
+    }
+    pub fn batch(&self) -> usize {
+        self.t.shape[1]
+    }
+    pub fn heads(&self) -> usize {
+        self.t.shape[2]
+    }
+    pub fn capacity(&self) -> usize {
+        self.t.shape[3]
+    }
+
+    /// One head's row for (l, b, h).
+    pub fn head_row(&self, l: usize, b: usize, h: usize) -> &[f32] {
+        let c = self.capacity();
+        let off = ((l * self.batch() + b) * self.heads() + h) * c;
+        &self.t.data[off..off + c]
+    }
+
+    /// Head-summed scores for (l, b), truncated to `n` slots (Eq. 2).
+    pub fn head_sum_into(&self, l: usize, b: usize, n: usize, out: &mut Vec<f32>) {
+        let n = n.min(self.capacity());
+        out.clear();
+        out.resize(n, 0.0);
+        for h in 0..self.heads() {
+            let row = self.head_row(l, b, h);
+            for j in 0..n {
+                out[j] += row[j];
+            }
+        }
+    }
+}
+
+/// Convenience allocating variant.
+pub fn head_sum(probs: &HostTensorF32, l: usize, b: usize, n: usize) -> Vec<f32> {
+    let mut out = Vec::new();
+    ProbsView::new(probs).head_sum_into(l, b, n, &mut out);
+    out
+}
+
+/// Cosine similarity between two head rows (Figure 5 reproduction).
+pub fn cosine(a: &[f32], b: &[f32]) -> f64 {
+    let dot: f64 = a.iter().zip(b).map(|(&x, &y)| x as f64 * y as f64).sum();
+    let na: f64 = a.iter().map(|&x| (x as f64).powi(2)).sum::<f64>().sqrt();
+    let nb: f64 = b.iter().map(|&y| (y as f64).powi(2)).sum::<f64>().sqrt();
+    if na == 0.0 || nb == 0.0 {
+        0.0
+    } else {
+        dot / (na * nb)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn probs() -> HostTensorF32 {
+        // [L=1, B=1, Hq=2, C=4]
+        HostTensorF32::from_vec(
+            &[1, 1, 2, 4],
+            vec![0.1, 0.2, 0.3, 0.4, 0.4, 0.3, 0.2, 0.1],
+        )
+        .unwrap()
+    }
+
+    #[test]
+    fn head_sum_collapses_heads() {
+        let p = probs();
+        let s = head_sum(&p, 0, 0, 4);
+        for v in &s {
+            assert!((v - 0.5).abs() < 1e-6);
+        }
+        let s2 = head_sum(&p, 0, 0, 2);
+        assert_eq!(s2.len(), 2);
+    }
+
+    #[test]
+    fn head_rows_are_addressed_correctly() {
+        let p = probs();
+        let v = ProbsView::new(&p);
+        assert_eq!(v.head_row(0, 0, 0), &[0.1, 0.2, 0.3, 0.4]);
+        assert_eq!(v.head_row(0, 0, 1), &[0.4, 0.3, 0.2, 0.1]);
+    }
+
+    #[test]
+    fn cosine_properties() {
+        let a = [1.0f32, 0.0];
+        let b = [0.0f32, 1.0];
+        assert!(cosine(&a, &a) > 0.999);
+        assert!(cosine(&a, &b).abs() < 1e-9);
+        assert_eq!(cosine(&[0.0, 0.0], &a), 0.0);
+    }
+}

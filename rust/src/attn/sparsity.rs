@@ -1,0 +1,134 @@
+//! Hoyer attention sparsity (paper Eq. 1):
+//!
+//!   Sparsity(a) = (sqrt(n) - ||a||_1 / ||a||_2) / (sqrt(n) - 1)
+//!
+//! in [0, 1]; 1 = one-hot (peaked/selective attention), 0 = uniform.
+//! The per-layer EMA tracker drives Lethe's layerwise budget allocation:
+//! dense layers (low sparsity) get larger eviction thresholds, sparse
+//! layers can be pruned harder — replacing PyramidKV's fixed pyramid with
+//! a runtime estimate (the paper's spatial adaptivity).
+
+/// Hoyer sparsity of a non-negative score vector. Returns 0 for n <= 1 or
+/// an all-zero vector (degenerate: no information).
+pub fn hoyer_sparsity(a: &[f32]) -> f64 {
+    let n = a.len();
+    if n <= 1 {
+        return 0.0;
+    }
+    let l1: f64 = a.iter().map(|&x| x.max(0.0) as f64).sum();
+    let l2: f64 = a
+        .iter()
+        .map(|&x| {
+            let x = x.max(0.0) as f64;
+            x * x
+        })
+        .sum::<f64>()
+        .sqrt();
+    if l2 <= 0.0 {
+        return 0.0;
+    }
+    let rn = (n as f64).sqrt();
+    ((rn - l1 / l2) / (rn - 1.0)).clamp(0.0, 1.0)
+}
+
+/// Per-layer EMA of decode-step attention sparsity.
+#[derive(Clone, Debug)]
+pub struct SparsityTracker {
+    ema: Vec<f64>,
+    seen: Vec<bool>,
+    alpha: f64,
+}
+
+impl SparsityTracker {
+    pub fn new(n_layers: usize, alpha: f64) -> Self {
+        SparsityTracker {
+            ema: vec![0.0; n_layers],
+            seen: vec![false; n_layers],
+            alpha,
+        }
+    }
+
+    /// Feed one step's head-summed attention vector for a layer.
+    pub fn observe(&mut self, layer: usize, scores: &[f32]) {
+        let s = hoyer_sparsity(scores);
+        if !self.seen[layer] {
+            self.ema[layer] = s;
+            self.seen[layer] = true;
+        } else {
+            self.ema[layer] = self.alpha * s + (1.0 - self.alpha) * self.ema[layer];
+        }
+    }
+
+    pub fn sparsity(&self, layer: usize) -> f64 {
+        self.ema[layer]
+    }
+
+    pub fn all(&self) -> &[f64] {
+        &self.ema
+    }
+
+    /// Budget multiplier for a layer: dense layers (sparsity -> 0) get up
+    /// to 2x the base eviction threshold, fully sparse layers 1x. This is
+    /// the spatial allocation rule (DESIGN.md §2).
+    pub fn budget_scale(&self, layer: usize) -> f64 {
+        if !self.seen[layer] {
+            return 1.0;
+        }
+        2.0 - self.ema[layer]
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn one_hot_is_max_sparsity() {
+        let mut a = vec![0.0f32; 64];
+        a[7] = 3.0;
+        assert!((hoyer_sparsity(&a) - 1.0).abs() < 1e-9);
+    }
+
+    #[test]
+    fn uniform_is_zero_sparsity() {
+        let a = vec![0.25f32; 64];
+        assert!(hoyer_sparsity(&a).abs() < 1e-9);
+    }
+
+    #[test]
+    fn scale_invariant() {
+        let a: Vec<f32> = (0..32).map(|i| (i as f32 * 0.37).sin().abs()).collect();
+        let b: Vec<f32> = a.iter().map(|&x| 1000.0 * x).collect();
+        assert!((hoyer_sparsity(&a) - hoyer_sparsity(&b)).abs() < 1e-6);
+    }
+
+    #[test]
+    fn monotone_in_concentration() {
+        // Mass concentrating on fewer entries => sparsity increases.
+        let flat = vec![1.0f32; 16];
+        let mut peaked = vec![0.1f32; 16];
+        peaked[0] = 10.0;
+        assert!(hoyer_sparsity(&peaked) > hoyer_sparsity(&flat));
+    }
+
+    #[test]
+    fn degenerate_inputs() {
+        assert_eq!(hoyer_sparsity(&[]), 0.0);
+        assert_eq!(hoyer_sparsity(&[1.0]), 0.0);
+        assert_eq!(hoyer_sparsity(&[0.0; 8]), 0.0);
+    }
+
+    #[test]
+    fn tracker_ema_and_budget_scale() {
+        let mut t = SparsityTracker::new(2, 0.5);
+        let mut onehot = vec![0.0f32; 32];
+        onehot[0] = 1.0;
+        t.observe(0, &onehot); // sparsity 1.0
+        t.observe(1, &vec![1.0f32; 32]); // sparsity 0.0
+        assert!(t.sparsity(0) > 0.99);
+        assert!(t.sparsity(1) < 0.01);
+        // Dense layer gets ~2x budget, sparse layer ~1x.
+        assert!(t.budget_scale(1) > 1.9);
+        assert!(t.budget_scale(0) < 1.1);
+    }
+}

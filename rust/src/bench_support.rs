@@ -1,0 +1,159 @@
+//! Shared plumbing for the bench harness (criterion substitute): engine
+//! bring-up, result-file output, and the closed-loop generation driver
+//! used by the table benches. Each bench binary prints the paper-style
+//! rows AND writes a CSV under `bench_results/`.
+
+use std::io::Write;
+use std::path::Path;
+
+use anyhow::Result;
+
+use crate::config::ServingConfig;
+use crate::engine::{Engine, SeqState};
+use crate::model::Tokenizer;
+use crate::policy::{make_policy, PolicyKind};
+use crate::runtime::Runtime;
+use crate::util::prng::Rng;
+use crate::workload::Task;
+
+pub const RESULTS_DIR: &str = "bench_results";
+
+/// Engine + tokenizer, or None when artifacts are not built (benches
+/// print a skip notice instead of failing).
+pub fn try_engine(cfg: ServingConfig) -> Option<(Engine, Tokenizer)> {
+    let dir = Path::new(&cfg.artifacts_dir);
+    if !dir.join("model_meta.json").exists() {
+        eprintln!(
+            "[skip] artifacts not found in {dir:?} — run `make artifacts`"
+        );
+        return None;
+    }
+    let rt = match Runtime::load(dir) {
+        Ok(rt) => rt,
+        Err(e) => {
+            eprintln!("[skip] runtime failed to load: {e:#}");
+            return None;
+        }
+    };
+    let tok = Tokenizer::from_meta(&rt.meta).ok()?;
+    let engine = Engine::new(rt, cfg).ok()?;
+    Some((engine, tok))
+}
+
+pub fn write_csv(name: &str, header: &str, rows: &[String]) -> Result<()> {
+    std::fs::create_dir_all(RESULTS_DIR)?;
+    let path = format!("{RESULTS_DIR}/{name}");
+    let mut f = std::fs::File::create(&path)?;
+    writeln!(f, "{header}")?;
+    for r in rows {
+        writeln!(f, "{r}")?;
+    }
+    eprintln!("[csv] wrote {path}");
+    Ok(())
+}
+
+/// Closed-loop batch generation of a fixed task set under one policy.
+/// Returns (wall seconds, generated tokens, peak live KV bytes,
+/// final-answer accuracy, OOM count).
+pub struct RunStats {
+    pub wall_s: f64,
+    pub gen_tokens: usize,
+    pub peak_live_bytes: usize,
+    pub final_acc: f64,
+    /// Hop-trace accuracy (see [`crate::eval::judge_chain`]).
+    pub chain_acc: f64,
+    pub ooms: u64,
+    pub prune_events: u64,
+}
+
+pub fn run_tasks(
+    engine: &mut Engine,
+    tok: &Tokenizer,
+    policy: PolicyKind,
+    tasks: &[Task],
+    batch: usize,
+    max_new: usize,
+) -> Result<RunStats> {
+    let n_layers = engine.dims().n_layers;
+    let ooms0 = engine.metrics.ooms;
+    let prunes0 = engine.metrics.prune_events;
+    let t0 = std::time::Instant::now();
+    let mut peak = 0usize;
+    let mut gen_tokens = 0usize;
+    let mut hits = 0usize;
+    let mut chain_hits = 0usize;
+
+    let mut i = 0;
+    while i < tasks.len() {
+        let b = batch.min(tasks.len() - i);
+        let mut group = engine.new_group(batch.max(b), policy);
+        for (j, task) in tasks[i..i + b].iter().enumerate() {
+            let prompt = tok.encode_prompt(&task.prompt)?;
+            let seq = SeqState::new(
+                (i + j) as u64,
+                make_policy(policy, &engine.cfg, n_layers),
+                n_layers,
+                max_new,
+                tok.eos,
+            );
+            let slot = group.free_slot().unwrap();
+            engine.prefill(&mut group, slot, seq, &prompt)?;
+        }
+        while group.active() > 0 {
+            engine.step(&mut group)?;
+            peak = peak.max(group.cache.live_bytes());
+            group.reap();
+        }
+        for seq in &group.done {
+            let task = &tasks[seq.id as usize];
+            let text = tok.decode(&seq.generated);
+            let (ok, _) = crate::eval::judge(task, &text);
+            hits += ok as usize;
+            chain_hits += crate::eval::judge_chain(task, &text) as usize;
+            gen_tokens += seq.generated.len();
+        }
+        i += b;
+    }
+    Ok(RunStats {
+        wall_s: t0.elapsed().as_secs_f64(),
+        gen_tokens,
+        peak_live_bytes: peak,
+        final_acc: hits as f64 / tasks.len() as f64,
+        chain_acc: chain_hits as f64 / tasks.len() as f64,
+        ooms: engine.metrics.ooms - ooms0,
+        prune_events: engine.metrics.prune_events - prunes0,
+    })
+}
+
+/// Tasks for a (pairs, hops) workload.
+pub fn gen_tasks(seed: u64, n: usize, pairs: usize, hops: usize) -> Vec<Task> {
+    let mut rng = Rng::new(seed);
+    (0..n).map(|_| crate::workload::make_task(&mut rng, pairs, hops)).collect()
+}
+
+/// Markdown-ish table printer for paper-style rows.
+pub fn print_table(title: &str, header: &[&str], rows: &[Vec<String>]) {
+    println!("\n=== {title} ===");
+    let widths: Vec<usize> = header
+        .iter()
+        .enumerate()
+        .map(|(i, h)| {
+            rows.iter()
+                .map(|r| r.get(i).map(|c| c.len()).unwrap_or(0))
+                .chain([h.len()])
+                .max()
+                .unwrap_or(8)
+        })
+        .collect();
+    let line = |cells: Vec<String>| {
+        let mut s = String::new();
+        for (i, c) in cells.iter().enumerate() {
+            s.push_str(&format!("{:>width$}  ", c, width = widths[i]));
+        }
+        println!("{s}");
+    };
+    line(header.iter().map(|s| s.to_string()).collect());
+    for r in rows {
+        line(r.clone());
+    }
+}

@@ -1,0 +1,249 @@
+//! Serving configuration: model/cache/scheduler/policy knobs, loadable
+//! from a JSON file (`--config serve.json`) with CLI overrides. The two
+//! paper hyperparameters keep their paper names: `sparse_ratio` (the
+//! breakpoint tolerance τ of Eq. 4 / Algorithm 1 — the ablation of
+//! Table 6) and `recent_ratio` (fraction of the live cache always kept
+//! for recency — Table 5).
+
+use std::path::Path;
+
+use anyhow::{Context, Result};
+
+use crate::util::json::Json;
+
+/// Lethe-specific knobs (paper defaults: sparse_ratio=400, recent_ratio=0.3).
+#[derive(Clone, Debug, PartialEq)]
+pub struct LetheParams {
+    /// τ in Eq. 4: max head/cut attention ratio accepted as a breakpoint.
+    pub sparse_ratio: f64,
+    /// Fraction of live tokens protected as "recent" regardless of score.
+    pub recent_ratio: f64,
+    /// RASR decay γ in Eq. 5.
+    pub gamma: f64,
+    /// Number of segments D the sorted score vector is cut into (Alg. 1).
+    pub segments: usize,
+    /// Attention-sink prefix always retained (StreamingLLM observation).
+    pub sink_len: usize,
+    /// Initial per-layer eviction threshold L_evict (tokens). Doubles when
+    /// Algorithm 1 finds no breakpoint (conservative delay).
+    pub evict_threshold: usize,
+}
+
+impl Default for LetheParams {
+    fn default() -> Self {
+        LetheParams {
+            sparse_ratio: 400.0,
+            recent_ratio: 0.3,
+            gamma: 0.95,
+            segments: 8,
+            sink_len: 4,
+            evict_threshold: 128,
+        }
+    }
+}
+
+/// Budget knobs shared by the baseline policies so Table 1 compares like
+/// for like: every policy is held to roughly the same token budget.
+#[derive(Clone, Debug, PartialEq)]
+pub struct BaselineParams {
+    /// Token budget per layer for H2O / PyramidKV / StreamingLLM.
+    pub budget: usize,
+    /// H2O: fraction of the budget given to recent tokens (rest = heavy
+    /// hitters).
+    pub h2o_recent_frac: f64,
+    /// StreamingLLM: sink prefix length.
+    pub sink_len: usize,
+    /// PyramidKV: budget decay from the bottom layer to the top (the
+    /// pyramidal allocation; 1.0 = uniform).
+    pub pyramid_beta: f64,
+}
+
+impl Default for BaselineParams {
+    fn default() -> Self {
+        BaselineParams {
+            budget: 128,
+            h2o_recent_frac: 0.5,
+            sink_len: 4,
+            pyramid_beta: 2.0,
+        }
+    }
+}
+
+#[derive(Clone, Debug)]
+pub struct SchedulerConfig {
+    /// Max sequences decoded together (bucketed to compiled batch sizes).
+    pub max_batch: usize,
+    /// Queue depth before admission control pushes back.
+    pub max_waiting: usize,
+    /// Max new tokens any request may generate.
+    pub max_new_tokens: usize,
+    /// Prefill bucket sizes available (must match compiled artifacts).
+    pub prefill_buckets: Vec<usize>,
+}
+
+impl Default for SchedulerConfig {
+    fn default() -> Self {
+        SchedulerConfig {
+            max_batch: 8,
+            max_waiting: 256,
+            max_new_tokens: 96,
+            prefill_buckets: vec![32, 64, 128, 192],
+        }
+    }
+}
+
+#[derive(Clone, Debug)]
+pub struct ServingConfig {
+    /// Directory with HLO artifacts + weights + manifest.
+    pub artifacts_dir: String,
+    /// Cache profile to serve with ("std" C=512 or "long" C=2048).
+    pub cache_profile: String,
+    pub lethe: LetheParams,
+    pub baseline: BaselineParams,
+    pub scheduler: SchedulerConfig,
+}
+
+impl Default for ServingConfig {
+    fn default() -> Self {
+        ServingConfig {
+            artifacts_dir: "artifacts".to_string(),
+            cache_profile: "std".to_string(),
+            lethe: LetheParams::default(),
+            baseline: BaselineParams::default(),
+            scheduler: SchedulerConfig::default(),
+        }
+    }
+}
+
+fn get_f64(obj: &Json, key: &str, dst: &mut f64) -> Result<()> {
+    if let Some(v) = obj.opt(key) {
+        *dst = v.as_f64().with_context(|| format!("config key '{key}'"))?;
+    }
+    Ok(())
+}
+
+fn get_usize(obj: &Json, key: &str, dst: &mut usize) -> Result<()> {
+    if let Some(v) = obj.opt(key) {
+        *dst = v.as_usize().with_context(|| format!("config key '{key}'"))?;
+    }
+    Ok(())
+}
+
+impl ServingConfig {
+    /// Load from JSON, overlaying onto defaults. Unknown keys are
+    /// rejected at the section level to catch typos.
+    pub fn from_json(j: &Json) -> Result<ServingConfig> {
+        let mut c = ServingConfig::default();
+        for (k, _) in j.as_obj()? {
+            if !["artifacts_dir", "cache_profile", "lethe", "baseline",
+                 "scheduler"]
+                .contains(&k.as_str())
+            {
+                anyhow::bail!("unknown config section '{k}'");
+            }
+        }
+        if let Some(v) = j.opt("artifacts_dir") {
+            c.artifacts_dir = v.as_str()?.to_string();
+        }
+        if let Some(v) = j.opt("cache_profile") {
+            c.cache_profile = v.as_str()?.to_string();
+        }
+        if let Some(l) = j.opt("lethe") {
+            get_f64(l, "sparse_ratio", &mut c.lethe.sparse_ratio)?;
+            get_f64(l, "recent_ratio", &mut c.lethe.recent_ratio)?;
+            get_f64(l, "gamma", &mut c.lethe.gamma)?;
+            get_usize(l, "segments", &mut c.lethe.segments)?;
+            get_usize(l, "sink_len", &mut c.lethe.sink_len)?;
+            get_usize(l, "evict_threshold", &mut c.lethe.evict_threshold)?;
+        }
+        if let Some(b) = j.opt("baseline") {
+            get_usize(b, "budget", &mut c.baseline.budget)?;
+            get_f64(b, "h2o_recent_frac", &mut c.baseline.h2o_recent_frac)?;
+            get_usize(b, "sink_len", &mut c.baseline.sink_len)?;
+            get_f64(b, "pyramid_beta", &mut c.baseline.pyramid_beta)?;
+        }
+        if let Some(s) = j.opt("scheduler") {
+            get_usize(s, "max_batch", &mut c.scheduler.max_batch)?;
+            get_usize(s, "max_waiting", &mut c.scheduler.max_waiting)?;
+            get_usize(s, "max_new_tokens", &mut c.scheduler.max_new_tokens)?;
+            if let Some(v) = s.opt("prefill_buckets") {
+                c.scheduler.prefill_buckets = v
+                    .as_arr()?
+                    .iter()
+                    .map(|x| x.as_usize())
+                    .collect::<Result<_>>()?;
+            }
+        }
+        c.validate()?;
+        Ok(c)
+    }
+
+    pub fn load(path: &Path) -> Result<ServingConfig> {
+        let src = std::fs::read_to_string(path)
+            .with_context(|| format!("reading config {path:?}"))?;
+        Self::from_json(&crate::util::json::parse(&src)?)
+    }
+
+    pub fn validate(&self) -> Result<()> {
+        anyhow::ensure!(self.lethe.sparse_ratio >= 1.0,
+                        "sparse_ratio (τ) must be >= 1");
+        anyhow::ensure!(
+            (0.0..1.0).contains(&self.lethe.recent_ratio),
+            "recent_ratio must be in [0, 1)"
+        );
+        anyhow::ensure!(
+            self.lethe.gamma > 0.0 && self.lethe.gamma < 1.0,
+            "gamma must be in (0, 1)"
+        );
+        anyhow::ensure!(self.lethe.segments >= 2, "segments must be >= 2");
+        anyhow::ensure!(self.scheduler.max_batch >= 1, "max_batch >= 1");
+        anyhow::ensure!(!self.scheduler.prefill_buckets.is_empty(),
+                        "need at least one prefill bucket");
+        Ok(())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::json::parse;
+
+    #[test]
+    fn defaults_are_paper_defaults() {
+        let p = LetheParams::default();
+        assert_eq!(p.sparse_ratio, 400.0);
+        assert_eq!(p.recent_ratio, 0.3);
+    }
+
+    #[test]
+    fn json_overlay() {
+        let j = parse(
+            r#"{"cache_profile": "long",
+                "lethe": {"sparse_ratio": 100, "recent_ratio": 0.2},
+                "scheduler": {"max_batch": 4}}"#,
+        )
+        .unwrap();
+        let c = ServingConfig::from_json(&j).unwrap();
+        assert_eq!(c.cache_profile, "long");
+        assert_eq!(c.lethe.sparse_ratio, 100.0);
+        assert_eq!(c.lethe.recent_ratio, 0.2);
+        assert_eq!(c.lethe.gamma, 0.95); // untouched default
+        assert_eq!(c.scheduler.max_batch, 4);
+    }
+
+    #[test]
+    fn rejects_unknown_section_and_bad_values() {
+        assert!(ServingConfig::from_json(
+            &parse(r#"{"letthe": {}}"#).unwrap()
+        )
+        .is_err());
+        assert!(ServingConfig::from_json(
+            &parse(r#"{"lethe": {"recent_ratio": 1.5}}"#).unwrap()
+        )
+        .is_err());
+        assert!(ServingConfig::from_json(
+            &parse(r#"{"lethe": {"sparse_ratio": 0.5}}"#).unwrap()
+        )
+        .is_err());
+    }
+}

@@ -1,0 +1,276 @@
+//! Decode groups and per-sequence state. A group co-batches up to
+//! `group_size` sequences over one [`GroupCache`]; active sequences are
+//! kept front-packed (slot swap on completion) so the engine can run the
+//! smallest compiled batch bucket.
+
+use crate::attn::sparsity::SparsityTracker;
+use crate::kvcache::{CacheDims, GroupCache};
+use crate::policy::{EvictionPolicy, PolicyKind};
+
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum FinishReason {
+    Eos,
+    Length,
+    Oom,
+}
+
+/// One pruning round's record (Figure 3 / diagnostics).
+#[derive(Clone, Copy, Debug)]
+pub struct PruneEvent {
+    pub layer: usize,
+    pub step: usize,
+    pub before: usize,
+    pub after: usize,
+}
+
+pub struct SeqState {
+    pub id: u64,
+    pub policy: Box<dyn EvictionPolicy>,
+    pub sparsity: SparsityTracker,
+    /// Generated token ids (not including the prompt).
+    pub generated: Vec<i32>,
+    /// Next absolute position (prompt length + generated count).
+    pub abs_pos: usize,
+    pub last_token: i32,
+    pub prompt_len: usize,
+    pub steps: usize,
+    pub max_new: usize,
+    pub eos: i32,
+    pub finished: Option<FinishReason>,
+    pub prune_log: Vec<PruneEvent>,
+    /// Wall-clock bookkeeping for latency metrics (set by the server).
+    pub submitted_at: Option<std::time::Instant>,
+    pub first_token_at: Option<std::time::Instant>,
+}
+
+impl SeqState {
+    pub fn new(
+        id: u64,
+        policy: Box<dyn EvictionPolicy>,
+        n_layers: usize,
+        max_new: usize,
+        eos: i32,
+    ) -> SeqState {
+        SeqState {
+            id,
+            policy,
+            sparsity: SparsityTracker::new(n_layers, 0.25),
+            generated: Vec::new(),
+            abs_pos: 0,
+            last_token: 0,
+            prompt_len: 0,
+            steps: 0,
+            max_new,
+            eos,
+            finished: None,
+            prune_log: Vec::new(),
+            submitted_at: None,
+            first_token_at: None,
+        }
+    }
+
+    /// Record prefill completion + the first generated token.
+    pub fn note_prefilled(&mut self, prompt_len: usize, first_token: i32) {
+        self.prompt_len = prompt_len;
+        self.abs_pos = prompt_len;
+        self.accept(first_token);
+        if self.first_token_at.is_none() {
+            self.first_token_at = Some(std::time::Instant::now());
+        }
+    }
+
+    /// Record a decode-step token.
+    pub fn note_token(&mut self, token: i32) {
+        self.steps += 1;
+        self.abs_pos += 1;
+        self.accept(token);
+    }
+
+    fn accept(&mut self, token: i32) {
+        self.generated.push(token);
+        self.last_token = token;
+        if token == self.eos {
+            self.finished = Some(FinishReason::Eos);
+        } else if self.generated.len() >= self.max_new {
+            self.finished = Some(FinishReason::Length);
+        }
+    }
+
+    pub fn note_prune(&mut self, layer: usize, before: usize, after: usize) {
+        self.prune_log.push(PruneEvent {
+            layer,
+            step: self.steps,
+            before,
+            after,
+        });
+    }
+
+    pub fn is_done(&self) -> bool {
+        self.finished.is_some()
+    }
+}
+
+pub struct DecodeGroup {
+    pub cache: GroupCache,
+    pub seqs: Vec<SeqState>,
+    /// Finished sequences reaped out of the active set.
+    pub done: Vec<SeqState>,
+    pub default_policy: PolicyKind,
+}
+
+impl DecodeGroup {
+    pub fn new(dims: CacheDims, default_policy: PolicyKind) -> DecodeGroup {
+        let cap = dims.batch;
+        DecodeGroup {
+            cache: GroupCache::new(dims),
+            seqs: Vec::with_capacity(cap),
+            done: Vec::new(),
+            default_policy,
+        }
+    }
+
+    pub fn group_size(&self) -> usize {
+        self.cache.dims.batch
+    }
+
+    pub fn active(&self) -> usize {
+        self.seqs.len()
+    }
+
+    pub fn has_free_slot(&self) -> bool {
+        self.seqs.len() < self.group_size()
+    }
+
+    /// Next free slot index (sequences are front-packed).
+    pub fn free_slot(&self) -> Option<usize> {
+        self.has_free_slot().then_some(self.seqs.len())
+    }
+
+    /// Install a prefilled sequence at `slot` (must be the next free one).
+    pub fn install(&mut self, slot: usize, seq: SeqState) {
+        assert_eq!(slot, self.seqs.len(), "slots must stay front-packed");
+        self.seqs.push(seq);
+    }
+
+    pub fn seq(&self, b: usize) -> &SeqState {
+        &self.seqs[b]
+    }
+
+    pub fn seq_mut(&mut self, b: usize) -> &mut SeqState {
+        &mut self.seqs[b]
+    }
+
+    /// Split borrow helper for the policy step.
+    pub fn split_mut(&mut self) -> (&mut [SeqState], &GroupCache) {
+        (&mut self.seqs, &self.cache)
+    }
+
+    /// Mark the sequence with the longest cache as OOM-failed (FullKV's
+    /// fate at capacity; mirrors the paper's OOM cells).
+    pub fn mark_oom(&mut self) {
+        if let Some((b, _)) = (0..self.seqs.len())
+            .map(|b| (b, self.cache.max_len_slot(b)))
+            .max_by_key(|&(_, l)| l)
+        {
+            self.seqs[b].finished = Some(FinishReason::Oom);
+        }
+    }
+
+    /// Remove finished sequences, keeping slots front-packed; returns how
+    /// many were reaped. Cache rows for removed slots are recycled via
+    /// swap-with-last.
+    pub fn reap(&mut self) -> usize {
+        let mut reaped = 0;
+        let mut b = 0;
+        while b < self.seqs.len() {
+            if self.seqs[b].is_done() {
+                let last = self.seqs.len() - 1;
+                self.cache.swap_slots(b, last);
+                self.seqs.swap(b, last);
+                let seq = self.seqs.pop().unwrap();
+                self.cache.reset_slot(last);
+                self.done.push(seq);
+                reaped += 1;
+            } else {
+                b += 1;
+            }
+        }
+        reaped
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::policy::FullKv;
+
+    fn dims(batch: usize) -> CacheDims {
+        CacheDims { layers: 2, batch, kv_heads: 1, capacity: 16, d_head: 4 }
+    }
+
+    fn seq(id: u64) -> SeqState {
+        SeqState::new(id, Box::new(FullKv), 2, 8, 2)
+    }
+
+    #[test]
+    fn eos_and_length_finish() {
+        let mut s = seq(1);
+        s.note_prefilled(4, 10);
+        assert!(!s.is_done());
+        s.note_token(2); // EOS id
+        assert_eq!(s.finished, Some(FinishReason::Eos));
+
+        let mut s2 = seq(2);
+        s2.note_prefilled(4, 10);
+        for t in 0..8 {
+            if s2.is_done() {
+                break;
+            }
+            s2.note_token(20 + t);
+        }
+        assert_eq!(s2.finished, Some(FinishReason::Length));
+        assert_eq!(s2.generated.len(), 8);
+    }
+
+    #[test]
+    fn reap_front_packs_and_recycles_cache() {
+        let mut g = DecodeGroup::new(dims(3), PolicyKind::FullKv);
+        for i in 0..3 {
+            let slot = g.free_slot().unwrap();
+            g.cache
+                .insert(0, slot, &[i as f32; 4], &[0.0; 4], 0)
+                .unwrap();
+            let mut s = seq(i as u64);
+            s.note_prefilled(1, 10);
+            g.install(slot, s);
+        }
+        assert!(!g.has_free_slot());
+        g.seqs[0].finished = Some(FinishReason::Eos);
+        let n = g.reap();
+        assert_eq!(n, 1);
+        assert_eq!(g.active(), 2);
+        // Old slot 2 (id 2) moved into slot 0; its cache row came along.
+        assert_eq!(g.seqs[0].id, 2);
+        assert_eq!(g.cache.len(0, 0), 1);
+        // Slot 2 was recycled.
+        assert_eq!(g.cache.len(0, 2), 0);
+        assert_eq!(g.done.len(), 1);
+        assert!(g.has_free_slot());
+    }
+
+    #[test]
+    fn mark_oom_hits_longest() {
+        let mut g = DecodeGroup::new(dims(2), PolicyKind::FullKv);
+        for i in 0..2 {
+            let slot = g.free_slot().unwrap();
+            let mut s = seq(i as u64);
+            s.note_prefilled(1, 10);
+            g.install(slot, s);
+        }
+        g.cache.insert(0, 1, &[0.0; 4], &[0.0; 4], 0).unwrap();
+        g.cache.insert(0, 1, &[0.0; 4], &[0.0; 4], 1).unwrap();
+        g.mark_oom();
+        assert_eq!(g.seqs[1].finished, Some(FinishReason::Oom));
+        assert!(g.seqs[0].finished.is_none());
+    }
+}

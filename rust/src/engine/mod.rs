@@ -1,0 +1,303 @@
+//! The decode engine: drives PJRT executables over a [`crate::kvcache::GroupCache`],
+//! applies eviction policies between steps, and exposes the step-level
+//! telemetry every bench consumes.
+//!
+//! One [`Engine`] owns the runtime; one [`DecodeGroup`] is a set of
+//! co-batched sequences (continuous batching keeps slots front-packed).
+//! Per step the engine:
+//!   1. buckets the live batch to the smallest compiled `B` and the live
+//!      cache to the smallest compiled capacity `C` (needs one slot of
+//!      headroom for the in-graph insert),
+//!   2. packs + uploads the cache, runs `decode_b{B}_c{C}`,
+//!   3. mirrors the in-graph K/V insert host-side, greedily samples,
+//!   4. feeds attention probs into the RASR score accumulator (Eq. 5)
+//!      and the layerwise sparsity tracker (Eq. 1),
+//!   5. asks the per-sequence policy for retention plans per layer and
+//!      applies them (multi-round pruning during decoding).
+//!
+//! FullKV never prunes, so step 1 eventually finds no capacity bucket —
+//! that error is surfaced as an OOM on the sequence, mirroring the
+//! paper's Tables 2–3.
+
+pub mod group;
+
+use std::collections::HashMap;
+use std::time::Instant;
+
+use anyhow::{anyhow, Result};
+
+pub use group::{DecodeGroup, FinishReason, PruneEvent, SeqState};
+
+use crate::attn::score::ProbsView;
+use crate::config::ServingConfig;
+use crate::kvcache::CacheDims;
+use crate::metrics::EngineMetrics;
+use crate::policy::{LayerState, PolicyKind};
+use crate::runtime::tensors::{HostTensorF32, HostTensorI32};
+use crate::runtime::Runtime;
+
+pub struct Engine {
+    pub rt: Runtime,
+    pub cfg: ServingConfig,
+    /// Largest compiled capacity for the active profile (the OOM line).
+    pub cmax: usize,
+    batch_buckets: Vec<usize>,
+    /// Scratch upload tensors keyed by (batch, capacity) bucket, reused
+    /// across steps to keep the hot loop allocation-free.
+    scratch: HashMap<(usize, usize), (HostTensorF32, HostTensorF32, HostTensorI32)>,
+    score_buf: Vec<f32>,
+    pub metrics: EngineMetrics,
+    /// When set, [`Engine::step`] keeps a copy of the raw per-head
+    /// attention probs `[L, B, Hq, C]` of the last step — the Figures 1
+    /// and 5 benches read them for sparsity heatmaps / head similarity.
+    pub keep_probs: bool,
+    pub last_probs: Option<HostTensorF32>,
+}
+
+impl Engine {
+    pub fn new(rt: Runtime, cfg: ServingConfig) -> Result<Engine> {
+        let caps = rt
+            .meta
+            .decode_capacities
+            .get(&cfg.cache_profile)
+            .ok_or_else(|| anyhow!("profile '{}' not compiled",
+                                   cfg.cache_profile))?;
+        let cmax = *caps.iter().max().unwrap();
+        let batch_buckets = rt.batch_buckets(&cfg.cache_profile);
+        Ok(Engine {
+            rt,
+            cfg,
+            cmax,
+            batch_buckets,
+            scratch: HashMap::new(),
+            score_buf: Vec::new(),
+            metrics: EngineMetrics::default(),
+            keep_probs: false,
+            last_probs: None,
+        })
+    }
+
+    pub fn dims(&self) -> &crate::model::meta::ModelDims {
+        &self.rt.meta.dims
+    }
+
+    /// Cache dims for a new group of `group_size` slots.
+    pub fn cache_dims(&self, group_size: usize) -> CacheDims {
+        let d = self.dims();
+        CacheDims {
+            layers: d.n_layers,
+            batch: group_size,
+            kv_heads: d.n_kv_heads,
+            capacity: self.cmax,
+            d_head: d.d_head,
+        }
+    }
+
+    pub fn new_group(&self, group_size: usize, policy: PolicyKind) -> DecodeGroup {
+        DecodeGroup::new(self.cache_dims(group_size), policy)
+    }
+
+    /// Smallest compiled batch bucket >= n.
+    fn batch_bucket(&self, n: usize) -> Result<usize> {
+        self.batch_buckets
+            .iter()
+            .copied()
+            .find(|&b| b >= n)
+            .ok_or_else(|| anyhow!(
+                "{n} active sequences exceed largest compiled batch {:?}",
+                self.batch_buckets.last()))
+    }
+
+    /// Prefill a prompt into slot `slot` of the group; returns the first
+    /// generated token.
+    pub fn prefill(
+        &mut self,
+        group: &mut DecodeGroup,
+        slot: usize,
+        seq: SeqState,
+        prompt: &[i32],
+    ) -> Result<i32> {
+        let t0 = Instant::now();
+        let bucket = self.rt.prefill_bucket(prompt.len())?;
+        let out = self.rt.prefill(bucket, prompt)?;
+        let n = prompt.len();
+        group.cache.load_prefill(slot, &out.k_all, &out.v_all, n)?;
+        group.install(slot, seq);
+
+        // RASR init (Eq. 2): head-summed prefill attention mass.
+        let layers = self.rt.meta.dims.n_layers;
+        let sv = ProbsView::new(&out.scores); // [L,1,Hq,T]
+        let mut buf = Vec::new();
+        for l in 0..layers {
+            sv.head_sum_into(l, 0, n, &mut buf);
+            group.cache.accumulate_scores(l, slot, 0.0, &buf);
+            group.seq_mut(slot).sparsity.observe(l, &buf);
+        }
+        // Policies may prune immediately (long prompts).
+        self.apply_policies(group, slot)?;
+
+        let tok = argmax(&out.logits.data);
+        group.seq_mut(slot).note_prefilled(n, tok);
+        self.metrics.prefill_seconds.push(t0.elapsed().as_secs_f64());
+        self.metrics.prefill_tokens += n as u64;
+        Ok(tok)
+    }
+
+    /// One decode step over all active sequences. Returns per-slot newly
+    /// generated tokens (empty when the step OOMed).
+    pub fn step(&mut self, group: &mut DecodeGroup) -> Result<Vec<(usize, i32)>> {
+        let n = group.active();
+        if n == 0 {
+            return Ok(Vec::new());
+        }
+        let t0 = Instant::now();
+        let bb = self.batch_bucket(n)?;
+        // +1 headroom: the in-graph insert writes at slot len.
+        let need = group.cache.max_len() + 1;
+        let cap = match self.rt.capacity_bucket(&self.cfg.cache_profile, need) {
+            Ok(c) => c,
+            Err(e) => {
+                // OOM: mark the longest sequence failed; caller reaps.
+                group.mark_oom();
+                self.metrics.ooms += 1;
+                crate::log_warn!("OOM at live length {need}: {e}");
+                return Ok(Vec::new());
+            }
+        };
+
+        let d = self.rt.meta.dims.clone();
+        let (k_s, v_s, l_s) = self.scratch.entry((bb, cap)).or_insert_with(|| {
+            (
+                HostTensorF32::zeros(&[d.n_layers, bb, d.n_kv_heads, cap, d.d_head]),
+                HostTensorF32::zeros(&[d.n_layers, bb, d.n_kv_heads, cap, d.d_head]),
+                HostTensorI32::zeros(&[d.n_layers, bb]),
+            )
+        });
+        group.cache.pack(bb, cap, k_s, v_s, l_s)?;
+
+        let mut tokens = vec![0i32; bb];
+        let mut positions = vec![0i32; bb];
+        for b in 0..n {
+            tokens[b] = group.seq(b).last_token;
+            positions[b] = group.seq(b).abs_pos as i32;
+        }
+        let t_pack = t0.elapsed().as_secs_f64();
+
+        let t1 = Instant::now();
+        let out = self.rt.decode(bb, cap, k_s, v_s, l_s, &tokens, &positions)?;
+        let t_exec = t1.elapsed().as_secs_f64();
+
+        let t2 = Instant::now();
+        let mut produced = Vec::with_capacity(n);
+        let hkv_d = d.n_kv_heads * d.d_head;
+        let pv = ProbsView::new(&out.probs);
+        for b in 0..n {
+            // Mirror the in-graph insert host-side.
+            let pos = group.seq(b).abs_pos as i32;
+            for l in 0..d.n_layers {
+                let off = (l * bb + b) * hkv_d;
+                group.cache.insert(
+                    l,
+                    b,
+                    &out.k_new.data[off..off + hkv_d],
+                    &out.v_new.data[off..off + hkv_d],
+                    pos,
+                )?;
+            }
+            // Score accumulation (Eq. 5) + sparsity tracking (Eq. 1).
+            let gamma = group.seq(b).policy.gamma();
+            for l in 0..d.n_layers {
+                let live = group.cache.len(l, b);
+                pv.head_sum_into(l, b, live, &mut self.score_buf);
+                group.cache.accumulate_scores(l, b, gamma, &self.score_buf);
+                group.seq_mut(b).sparsity.observe(l, &self.score_buf);
+            }
+            // Sample + bookkeeping.
+            let logits = &out.logits.data[b * d.vocab_size..(b + 1) * d.vocab_size];
+            let tok = argmax(logits);
+            group.seq_mut(b).note_token(tok);
+            produced.push((b, tok));
+            // Multi-round pruning.
+            self.apply_policies(group, b)?;
+        }
+        let t_policy = t2.elapsed().as_secs_f64();
+        if self.keep_probs {
+            self.last_probs = Some(out.probs.clone());
+        }
+
+        self.metrics.decode_steps += 1;
+        self.metrics.decode_tokens += n as u64;
+        self.metrics.pack_seconds.push(t_pack);
+        self.metrics.exec_seconds.push(t_exec);
+        self.metrics.policy_seconds.push(t_policy);
+        self.metrics.live_bytes_last = group.cache.live_bytes();
+        *self.metrics.capacity_hist.entry(cap).or_insert(0) += 1;
+        Ok(produced)
+    }
+
+    /// Run each layer's retention plan for one slot.
+    fn apply_policies(&mut self, group: &mut DecodeGroup, b: usize) -> Result<()> {
+        let layers = group.cache.dims.layers;
+        for l in 0..layers {
+            let len = group.cache.len(l, b);
+            if len == 0 {
+                continue;
+            }
+            // Split borrows: the policy lives in seqs[b], the score/pos
+            // views in the cache.
+            let (seqs, cache) = group.split_mut();
+            let seq = &mut seqs[b];
+            let st = LayerState {
+                scores: cache.scores(l, b),
+                pos: cache.pos(l, b),
+                len,
+                step: seq.steps,
+                sparsity: seq.sparsity.sparsity(l),
+                capacity: self.cmax,
+            };
+            let plan = seq.policy.plan(l, &st);
+            if let Some(keep) = plan {
+                let before = len;
+                let after = group.cache.apply_retention(l, b, &keep)?;
+                group.seq_mut(b).note_prune(l, before, after);
+                self.metrics.prune_events += 1;
+                self.metrics.pruned_tokens += (before - after) as u64;
+            }
+        }
+        Ok(())
+    }
+
+    /// Generate until EOS/limit for every sequence in the group
+    /// (the batch inner loop used by benches and the eval harness).
+    pub fn run_group(&mut self, group: &mut DecodeGroup) -> Result<()> {
+        while group.active() > 0 {
+            self.step(group)?;
+            group.reap();
+        }
+        Ok(())
+    }
+}
+
+/// Greedy sampling.
+pub fn argmax(xs: &[f32]) -> i32 {
+    let mut best = 0;
+    let mut bv = f32::NEG_INFINITY;
+    for (i, &x) in xs.iter().enumerate() {
+        if x > bv {
+            bv = x;
+            best = i;
+        }
+    }
+    best as i32
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn argmax_picks_first_max() {
+        assert_eq!(argmax(&[0.1, 0.9, 0.9, 0.2]), 1);
+        assert_eq!(argmax(&[-1.0, -2.0]), 0);
+    }
+}

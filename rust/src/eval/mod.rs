@@ -1,0 +1,245 @@
+//! Accuracy harness (Table 1): runs task suites through the full serving
+//! path (prefill → batched decode → policy pruning) for each eviction
+//! policy and scores the generations.
+//!
+//! Scoring mirrors the paper's task framing: a completion is correct when
+//! its final value equals the task's ground truth (the model is free to
+//! produce its CoT hop trace first, exactly like Math500 grading on the
+//! final boxed answer). `strict` additionally requires the full CoT
+//! trace to match — reported alongside as a diagnostic.
+
+use anyhow::Result;
+
+use crate::engine::{Engine, SeqState};
+use crate::model::Tokenizer;
+use crate::policy::{make_policy, PolicyKind};
+use crate::util::prng::Rng;
+use crate::workload::{make_task, Task, SUBJECTS};
+
+#[derive(Clone, Debug)]
+pub struct SubjectScore {
+    pub subject: String,
+    pub n: usize,
+    pub final_acc: f64,
+    pub strict_acc: f64,
+    /// Hop-trace accuracy: every intermediate key of the CoT chain is
+    /// correct (digits of the final value ignored). This is the
+    /// retention-sensitive metric — losing the pair a later hop needs
+    /// breaks the chain — and is robust to the tiny model's residual
+    /// digit-copy error.
+    pub chain_acc: f64,
+    pub mean_generated: f64,
+    pub prune_rounds: f64,
+    pub peak_live_bytes: usize,
+}
+
+#[derive(Clone, Debug)]
+pub struct EvalReport {
+    pub policy: PolicyKind,
+    pub subjects: Vec<SubjectScore>,
+}
+
+impl EvalReport {
+    pub fn overall_final_acc(&self) -> f64 {
+        self.overall(|s| s.final_acc)
+    }
+
+    pub fn overall_chain_acc(&self) -> f64 {
+        self.overall(|s| s.chain_acc)
+    }
+
+    fn overall(&self, f: impl Fn(&SubjectScore) -> f64) -> f64 {
+        let n: usize = self.subjects.iter().map(|s| s.n).sum();
+        let hits: f64 =
+            self.subjects.iter().map(|s| f(s) * s.n as f64).sum();
+        if n == 0 {
+            0.0
+        } else {
+            hits / n as f64
+        }
+    }
+}
+
+/// Extract the final 2-digit value from a generation like "cd>ef>42.".
+pub fn extract_final(text: &str) -> Option<&str> {
+    let trimmed = text.trim_end_matches('.');
+    let tail = trimmed.rsplit('>').next()?;
+    let tail = tail.trim();
+    (tail.len() == 2 && tail.bytes().all(|b| b.is_ascii_digit()))
+        .then_some(tail)
+}
+
+/// Judge one generation against its task.
+pub fn judge(task: &Task, generated: &str) -> (bool, bool) {
+    let strict = generated == task.answer;
+    let final_ok = extract_final(generated)
+        .map(|v| v == task.final_value)
+        .unwrap_or(false);
+    (final_ok, strict)
+}
+
+/// Hop-trace correctness: the '>'-separated key prefix of the generation
+/// matches the expected chain, and the tail parses as a 2-digit value
+/// (value itself not checked). For 1-hop (recall) tasks the chain is
+/// empty, so this only checks well-formedness.
+pub fn judge_chain(task: &Task, generated: &str) -> bool {
+    let chain_of = |s: &str| -> Option<Vec<String>> {
+        let t = s.trim_end_matches('.');
+        let parts: Vec<&str> = t.split('>').collect();
+        let (last, keys) = parts.split_last()?;
+        (last.len() == 2 && last.bytes().all(|b| b.is_ascii_digit()))
+            .then(|| keys.iter().map(|k| k.to_string()).collect())
+    };
+    match (chain_of(&task.answer), chain_of(generated)) {
+        (Some(want), Some(got)) => want == got,
+        _ => false,
+    }
+}
+
+/// Evaluate one policy on one subject with `n` tasks, batching
+/// `batch` sequences per group through the engine.
+pub fn eval_subject(
+    engine: &mut Engine,
+    tok: &Tokenizer,
+    policy: PolicyKind,
+    subject: &str,
+    n: usize,
+    batch: usize,
+    max_new: usize,
+    seed: u64,
+) -> Result<SubjectScore> {
+    let &(_, pairs, hops) = SUBJECTS
+        .iter()
+        .find(|(s, _, _)| *s == subject)
+        .ok_or_else(|| anyhow::anyhow!("unknown subject {subject}"))?;
+    let mut rng = Rng::new(seed ^ 0xEE57);
+    let n_layers = engine.dims().n_layers;
+    let mut final_hits = 0usize;
+    let mut strict_hits = 0usize;
+    let mut chain_hits = 0usize;
+    let mut gen_total = 0usize;
+    let mut prune_total = 0usize;
+    let mut peak_bytes = 0usize;
+
+    let mut i = 0;
+    while i < n {
+        let b = batch.min(n - i);
+        let mut group = engine.new_group(batch.max(b), policy);
+        let mut tasks = Vec::with_capacity(b);
+        for _ in 0..b {
+            let task = make_task(&mut rng, pairs, hops);
+            let prompt = tok.encode_prompt(&task.prompt)?;
+            let slot = group.free_slot().unwrap();
+            let seq = SeqState::new(
+                (i + tasks.len()) as u64,
+                make_policy(policy, &engine.cfg, n_layers),
+                n_layers,
+                max_new,
+                tok.eos,
+            );
+            engine.prefill(&mut group, slot, seq, &prompt)?;
+            tasks.push(task);
+        }
+        // Decode to completion, tracking peak live bytes.
+        while group.active() > 0 {
+            engine.step(&mut group)?;
+            peak_bytes = peak_bytes.max(group.cache.live_bytes());
+            group.reap();
+        }
+        // Score: done list order is reap order; match by id.
+        for seq in &group.done {
+            let task = &tasks[seq.id as usize - i];
+            let text = tok.decode(&seq.generated);
+            let (f, s) = judge(task, &text);
+            final_hits += f as usize;
+            strict_hits += s as usize;
+            chain_hits += judge_chain(task, &text) as usize;
+            gen_total += seq.generated.len();
+            prune_total += seq.prune_log.len();
+        }
+        i += b;
+    }
+
+    Ok(SubjectScore {
+        subject: subject.to_string(),
+        n,
+        final_acc: final_hits as f64 / n as f64,
+        strict_acc: strict_hits as f64 / n as f64,
+        chain_acc: chain_hits as f64 / n as f64,
+        mean_generated: gen_total as f64 / n as f64,
+        prune_rounds: prune_total as f64 / n as f64,
+        peak_live_bytes: peak_bytes,
+    })
+}
+
+/// Full Table 1 row set for one policy.
+pub fn eval_policy(
+    engine: &mut Engine,
+    tok: &Tokenizer,
+    policy: PolicyKind,
+    n_per_subject: usize,
+    batch: usize,
+    max_new: usize,
+    seed: u64,
+) -> Result<EvalReport> {
+    let mut subjects = Vec::new();
+    for (name, _, _) in SUBJECTS {
+        subjects.push(eval_subject(
+            engine, tok, policy, name, n_per_subject, batch, max_new, seed,
+        )?);
+        crate::log_info!(
+            "{}: {} final_acc={:.3}",
+            policy.label(),
+            name,
+            subjects.last().unwrap().final_acc
+        );
+    }
+    Ok(EvalReport { policy, subjects })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::prng::Rng;
+
+    #[test]
+    fn extract_final_variants() {
+        assert_eq!(extract_final("42."), Some("42"));
+        assert_eq!(extract_final("cd>ef>42."), Some("42"));
+        assert_eq!(extract_final("cd>ef>42"), Some("42"));
+        assert_eq!(extract_final("cd>"), None);
+        assert_eq!(extract_final(""), None);
+        assert_eq!(extract_final("4."), None);
+    }
+
+    #[test]
+    fn judge_strict_vs_final() {
+        let mut rng = Rng::new(3);
+        let t = make_task(&mut rng, 8, 2);
+        assert_eq!(judge(&t, &t.answer), (true, true));
+        // Wrong CoT but right final value: final-only credit.
+        let sloppy = format!("zz>{}.", t.final_value);
+        assert_eq!(judge(&t, &sloppy), (true, false));
+        assert_eq!(judge(&t, "zz>00."), (false, false));
+    }
+
+    #[test]
+    fn judge_chain_ignores_digits_but_not_hops() {
+        let mut rng = Rng::new(4);
+        let t = make_task(&mut rng, 8, 3); // answer "xx>yy>NN."
+        assert!(judge_chain(&t, &t.answer));
+        // Same chain, wrong digits: chain credit.
+        let hops: Vec<&str> = t.answer.split('>').collect();
+        let wrong_digits = format!("{}>{}>00.", hops[0], hops[1]);
+        assert!(judge_chain(&t, &wrong_digits));
+        // Broken chain: no credit, even with the right value.
+        let wrong_hop = format!("{}>qq>{}.", hops[0], t.final_value);
+        assert!(!judge_chain(&t, &wrong_hop));
+        // Malformed tail: no credit.
+        assert!(!judge_chain(&t, "ab>cd>"));
+        // 1-hop tasks: chain empty, well-formedness only.
+        let t1 = make_task(&mut rng, 8, 1);
+        assert!(judge_chain(&t1, "42."));
+        assert!(!judge_chain(&t1, "4."));
+    }
+}

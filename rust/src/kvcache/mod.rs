@@ -1,0 +1,442 @@
+//! Host-owned KV cache for a decode group (the serving state).
+//!
+//! Layout mirrors the executables' expectation: conceptually
+//! `[L, B, Hkv, Cmax, D]` row-major, with per-(layer, slot) lengths —
+//! per-layer lengths are what make Lethe's layerwise budgets expressible.
+//! Alongside K/V we track, per (layer, slot):
+//!   * `pos`    — each cached row's original absolute position (recency
+//!                signal for RASR / H2O / StreamingLLM),
+//!   * `scores` — the policy's accumulated attention score per row
+//!                (RASR Eq. 5; γ is policy-owned).
+//!
+//! Eviction is [`GroupCache::apply_retention`]: an in-place front-packing
+//! gather by source index, applied identically to K, V, pos and scores so
+//! the four stay aligned. Upload packing ([`GroupCache::pack`]) copies the
+//! C-prefix of each (l, b, h) row into a scratch tensor for the chosen
+//! capacity bucket — the smaller Lethe keeps the cache, the smaller the
+//! bucket and the less is uploaded/attended per step.
+
+pub mod quant;
+
+use anyhow::{ensure, Result};
+
+use crate::runtime::tensors::{HostTensorF32, HostTensorI32};
+
+#[derive(Clone, Debug)]
+pub struct CacheDims {
+    pub layers: usize,
+    pub batch: usize,
+    pub kv_heads: usize,
+    pub capacity: usize, // Cmax
+    pub d_head: usize,
+}
+
+#[derive(Clone)]
+pub struct GroupCache {
+    pub dims: CacheDims,
+    /// [L, B, Hkv, Cmax, D]
+    k: Vec<f32>,
+    v: Vec<f32>,
+    /// [L, B]
+    lens: Vec<usize>,
+    /// [L][B] -> per-slot original absolute position, length = lens[l][b].
+    pos: Vec<Vec<i32>>,
+    /// [L][B] -> accumulated attention score per slot.
+    scores: Vec<Vec<f32>>,
+}
+
+impl GroupCache {
+    pub fn new(dims: CacheDims) -> Self {
+        let CacheDims { layers, batch, kv_heads, capacity, d_head } = dims;
+        let n = layers * batch * kv_heads * capacity * d_head;
+        GroupCache {
+            dims,
+            k: vec![0.0; n],
+            v: vec![0.0; n],
+            lens: vec![0; layers * batch],
+            pos: vec![Vec::new(); layers * batch],
+            scores: vec![Vec::new(); layers * batch],
+        }
+    }
+
+    #[inline]
+    fn lb(&self, l: usize, b: usize) -> usize {
+        l * self.dims.batch + b
+    }
+
+    pub fn len(&self, l: usize, b: usize) -> usize {
+        self.lens[self.lb(l, b)]
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.lens.iter().all(|&l| l == 0)
+    }
+
+    /// Longest live row across layers for one slot.
+    pub fn max_len_slot(&self, b: usize) -> usize {
+        (0..self.dims.layers).map(|l| self.len(l, b)).max().unwrap_or(0)
+    }
+
+    /// Longest live row across the whole group (capacity-bucket driver).
+    pub fn max_len(&self) -> usize {
+        (0..self.dims.batch).map(|b| self.max_len_slot(b)).max().unwrap_or(0)
+    }
+
+    /// Total live KV bytes (f32 K+V) — the Table 2 metric.
+    pub fn live_bytes(&self) -> usize {
+        let row = self.dims.kv_heads * self.dims.d_head * 4 * 2;
+        self.lens.iter().map(|&n| n * row).sum()
+    }
+
+    pub fn pos(&self, l: usize, b: usize) -> &[i32] {
+        &self.pos[self.lb(l, b)]
+    }
+
+    pub fn scores(&self, l: usize, b: usize) -> &[f32] {
+        &self.scores[self.lb(l, b)]
+    }
+
+    fn row_offset(&self, l: usize, b: usize, h: usize, c: usize) -> usize {
+        let CacheDims { batch, kv_heads, capacity, d_head, .. } = self.dims;
+        (((l * batch + b) * kv_heads + h) * capacity + c) * d_head
+    }
+
+    /// Append one token's K/V (layout [Hkv, D]) at the next slot of
+    /// (l, b). `abs_pos` is the token's absolute decode position.
+    pub fn insert(
+        &mut self,
+        l: usize,
+        b: usize,
+        k_row: &[f32],
+        v_row: &[f32],
+        abs_pos: i32,
+    ) -> Result<()> {
+        let d = self.dims.d_head;
+        let hkv = self.dims.kv_heads;
+        ensure!(k_row.len() == hkv * d && v_row.len() == hkv * d,
+                "bad row size");
+        let idx = self.lb(l, b);
+        let c = self.lens[idx];
+        ensure!(c < self.dims.capacity,
+                "cache overflow at layer {l} slot {b} (len {c})");
+        for h in 0..hkv {
+            let off = self.row_offset(l, b, h, c);
+            self.k[off..off + d].copy_from_slice(&k_row[h * d..(h + 1) * d]);
+            self.v[off..off + d].copy_from_slice(&v_row[h * d..(h + 1) * d]);
+        }
+        self.lens[idx] = c + 1;
+        self.pos[idx].push(abs_pos);
+        self.scores[idx].push(0.0);
+        Ok(())
+    }
+
+    /// Bulk-load a prefilled sequence into slot `b` (from prefill k_all
+    /// [L, 1, Hkv, T, D] with `len` valid rows). Resets the slot first.
+    pub fn load_prefill(
+        &mut self,
+        b: usize,
+        k_all: &HostTensorF32,
+        v_all: &HostTensorF32,
+        len: usize,
+    ) -> Result<()> {
+        let CacheDims { layers, kv_heads, d_head, capacity, .. } = self.dims;
+        let t = k_all.shape[3];
+        ensure!(k_all.shape == vec![layers, 1, kv_heads, t, d_head],
+                "bad prefill shape {:?}", k_all.shape);
+        ensure!(len <= t && len <= capacity, "prefill len {len} too long");
+        self.reset_slot(b);
+        for l in 0..layers {
+            let idx = self.lb(l, b);
+            for h in 0..kv_heads {
+                let src = ((l * kv_heads + h) * t) * d_head;
+                let dst = self.row_offset(l, b, h, 0);
+                let n = len * d_head;
+                self.k[dst..dst + n]
+                    .copy_from_slice(&k_all.data[src..src + n]);
+                self.v[dst..dst + n]
+                    .copy_from_slice(&v_all.data[src..src + n]);
+            }
+            self.lens[idx] = len;
+            self.pos[idx] = (0..len as i32).collect();
+            self.scores[idx] = vec![0.0; len];
+        }
+        Ok(())
+    }
+
+    pub fn reset_slot(&mut self, b: usize) {
+        for l in 0..self.dims.layers {
+            let idx = self.lb(l, b);
+            self.lens[idx] = 0;
+            self.pos[idx].clear();
+            self.scores[idx].clear();
+        }
+        // K/V rows beyond lens are dead; zero lazily only where read.
+    }
+
+    /// Swap two slots' contents entirely (scheduler keeps active slots
+    /// front-packed; used when a middle sequence finishes).
+    pub fn swap_slots(&mut self, a: usize, b: usize) {
+        if a == b {
+            return;
+        }
+        let CacheDims { layers, kv_heads, capacity, d_head, .. } = self.dims;
+        let row = capacity * d_head;
+        for l in 0..layers {
+            for h in 0..kv_heads {
+                let oa = self.row_offset(l, a, h, 0);
+                let ob = self.row_offset(l, b, h, 0);
+                for i in 0..row {
+                    self.k.swap(oa + i, ob + i);
+                    self.v.swap(oa + i, ob + i);
+                }
+            }
+            let (ia, ib) = (self.lb(l, a), self.lb(l, b));
+            self.lens.swap(ia, ib);
+            self.pos.swap(ia, ib);
+            self.scores.swap(ia, ib);
+        }
+    }
+
+    /// RASR-style score update for (l, b): `scores = gamma * scores + add`
+    /// where `add[j]` is the head-summed attention mass on slot j this
+    /// step (Eq. 5). `add` may be longer than the live length (bucket
+    /// padding) — extra entries are ignored.
+    pub fn accumulate_scores(
+        &mut self,
+        l: usize,
+        b: usize,
+        gamma: f32,
+        add: &[f32],
+    ) {
+        let idx = self.lb(l, b);
+        let n = self.lens[idx];
+        let s = &mut self.scores[idx];
+        for j in 0..n {
+            s[j] = gamma * s[j] + add.get(j).copied().unwrap_or(0.0);
+        }
+    }
+
+    /// Apply a retention plan to (l, b): keep exactly the rows whose
+    /// current indices are in `keep` (any order; deduplicated + sorted
+    /// ascending so relative order — and thus recency structure — is
+    /// preserved). Returns the new length.
+    pub fn apply_retention(
+        &mut self,
+        l: usize,
+        b: usize,
+        keep: &[usize],
+    ) -> Result<usize> {
+        let idx = self.lb(l, b);
+        let n = self.lens[idx];
+        let mut ks: Vec<usize> = keep.iter().copied().collect();
+        ks.sort_unstable();
+        ks.dedup();
+        ensure!(ks.iter().all(|&i| i < n),
+                "retention index out of range (len {n})");
+        let d = self.dims.d_head;
+        for h in 0..self.dims.kv_heads {
+            let base = self.row_offset(l, b, h, 0);
+            for (dst, &src) in ks.iter().enumerate() {
+                if dst != src {
+                    let (do_, so) = (base + dst * d, base + src * d);
+                    self.k.copy_within(so..so + d, do_);
+                    self.v.copy_within(so..so + d, do_);
+                }
+            }
+        }
+        let pos = &mut self.pos[idx];
+        let sc = &mut self.scores[idx];
+        for (dst, &src) in ks.iter().enumerate() {
+            pos[dst] = pos[src];
+            sc[dst] = sc[src];
+        }
+        pos.truncate(ks.len());
+        sc.truncate(ks.len());
+        self.lens[idx] = ks.len();
+        Ok(ks.len())
+    }
+
+    /// Pack the C-prefix of the first `bb` slots into upload tensors for
+    /// a (batch, capacity) bucket: k/v [L, bb, Hkv, C, D] + lens [L, bb].
+    /// Rows longer than C are a caller bug (the engine prunes or picks a
+    /// bigger bucket first).
+    pub fn pack(
+        &self,
+        bb: usize,
+        c: usize,
+        k_out: &mut HostTensorF32,
+        v_out: &mut HostTensorF32,
+        lens_out: &mut HostTensorI32,
+    ) -> Result<()> {
+        let CacheDims { layers, batch, kv_heads, d_head, .. } = self.dims;
+        ensure!(bb <= batch, "batch bucket {bb} > group size {batch}");
+        ensure!(c <= self.dims.capacity, "bucket {c} > Cmax");
+        let want = vec![layers, bb, kv_heads, c, d_head];
+        ensure!(k_out.shape == want && v_out.shape == want,
+                "scratch shape mismatch: {:?} vs {want:?}", k_out.shape);
+        let n = c * d_head;
+        for l in 0..layers {
+            for b in 0..bb {
+                ensure!(self.len(l, b) <= c,
+                        "live rows exceed bucket {c} at ({l},{b})");
+                for h in 0..kv_heads {
+                    let src = self.row_offset(l, b, h, 0);
+                    let dst = ((l * bb + b) * kv_heads + h) * n;
+                    k_out.data[dst..dst + n]
+                        .copy_from_slice(&self.k[src..src + n]);
+                    v_out.data[dst..dst + n]
+                        .copy_from_slice(&self.v[src..src + n]);
+                }
+                lens_out.data[l * bb + b] = self.lens[self.lb(l, b)] as i32;
+            }
+        }
+        Ok(())
+    }
+
+    /// Retained-slot bitmap for one layer/slot against absolute positions
+    /// 0..=max_pos (Figure 3 visualisation).
+    pub fn retention_bitmap(&self, l: usize, b: usize, max_pos: usize) -> Vec<bool> {
+        let mut bm = vec![false; max_pos + 1];
+        for &p in self.pos(l, b) {
+            if (p as usize) <= max_pos {
+                bm[p as usize] = true;
+            }
+        }
+        bm
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn dims() -> CacheDims {
+        CacheDims { layers: 2, batch: 2, kv_heads: 2, capacity: 8, d_head: 4 }
+    }
+
+    fn row(val: f32, hkv: usize, d: usize) -> Vec<f32> {
+        (0..hkv * d).map(|i| val + i as f32 * 0.01).collect()
+    }
+
+    #[test]
+    fn insert_then_lengths_and_bytes() {
+        let mut c = GroupCache::new(dims());
+        for t in 0..3 {
+            for l in 0..2 {
+                c.insert(l, 0, &row(t as f32, 2, 4), &row(-(t as f32), 2, 4), t)
+                    .unwrap();
+            }
+        }
+        assert_eq!(c.len(0, 0), 3);
+        assert_eq!(c.len(1, 0), 3);
+        assert_eq!(c.len(0, 1), 0);
+        assert_eq!(c.max_len(), 3);
+        // 2 layers * 3 tokens * (2 heads * 4 dim * 4 bytes * 2 tensors)
+        assert_eq!(c.live_bytes(), 2 * 3 * 2 * 4 * 4 * 2);
+    }
+
+    #[test]
+    fn overflow_is_an_error() {
+        let mut c = GroupCache::new(dims());
+        for t in 0..8 {
+            c.insert(0, 0, &row(0.0, 2, 4), &row(0.0, 2, 4), t).unwrap();
+        }
+        assert!(c.insert(0, 0, &row(0.0, 2, 4), &row(0.0, 2, 4), 9).is_err());
+    }
+
+    #[test]
+    fn retention_front_packs_and_keeps_alignment() {
+        let mut c = GroupCache::new(dims());
+        for t in 0..6 {
+            c.insert(0, 0, &row(t as f32, 2, 4), &row(t as f32, 2, 4), t)
+                .unwrap();
+        }
+        c.accumulate_scores(0, 0, 1.0, &[0.1, 0.2, 0.3, 0.4, 0.5, 0.6]);
+        let new_len = c.apply_retention(0, 0, &[5, 0, 3]).unwrap();
+        assert_eq!(new_len, 3);
+        assert_eq!(c.pos(0, 0), &[0, 3, 5]);
+        let s = c.scores(0, 0);
+        assert!((s[0] - 0.1).abs() < 1e-6);
+        assert!((s[1] - 0.4).abs() < 1e-6);
+        assert!((s[2] - 0.6).abs() < 1e-6);
+        // K row 1 must now hold original token 3's data.
+        let off = c.row_offset(0, 0, 0, 1);
+        assert!((c.k[off] - 3.0).abs() < 1e-6);
+    }
+
+    #[test]
+    fn retention_rejects_out_of_range() {
+        let mut c = GroupCache::new(dims());
+        c.insert(0, 0, &row(0.0, 2, 4), &row(0.0, 2, 4), 0).unwrap();
+        assert!(c.apply_retention(0, 0, &[1]).is_err());
+    }
+
+    #[test]
+    fn pack_respects_bucket_and_lens() {
+        let mut c = GroupCache::new(dims());
+        for t in 0..4 {
+            c.insert(0, 0, &row(t as f32, 2, 4), &row(t as f32, 2, 4), t)
+                .unwrap();
+        }
+        let mut k = HostTensorF32::zeros(&[2, 2, 2, 4, 4]);
+        let mut v = HostTensorF32::zeros(&[2, 2, 2, 4, 4]);
+        let mut lens = HostTensorI32::zeros(&[2, 2]);
+        c.pack(2, 4, &mut k, &mut v, &mut lens).unwrap();
+        assert_eq!(lens.data, vec![4, 0, 0, 0]);
+        // First token row of (l=0,b=0,h=0) == inserted value 0.0.
+        assert!((k.data[0] - 0.0).abs() < 1e-6);
+        // Bucket smaller than live rows must fail.
+        let mut k2 = HostTensorF32::zeros(&[2, 2, 2, 2, 4]);
+        let mut v2 = HostTensorF32::zeros(&[2, 2, 2, 2, 4]);
+        let mut l2 = HostTensorI32::zeros(&[2, 2]);
+        assert!(c.pack(2, 2, &mut k2, &mut v2, &mut l2).is_err());
+        // Packing a single-slot bucket works and only covers slot 0.
+        let mut k1 = HostTensorF32::zeros(&[2, 1, 2, 4, 4]);
+        let mut v1 = HostTensorF32::zeros(&[2, 1, 2, 4, 4]);
+        let mut l1 = HostTensorI32::zeros(&[2, 1]);
+        c.pack(1, 4, &mut k1, &mut v1, &mut l1).unwrap();
+        assert_eq!(l1.data, vec![4, 0]);
+    }
+
+    #[test]
+    fn swap_slots_swaps_everything() {
+        let mut c = GroupCache::new(dims());
+        c.insert(0, 0, &row(1.0, 2, 4), &row(1.0, 2, 4), 0).unwrap();
+        c.insert(0, 1, &row(9.0, 2, 4), &row(9.0, 2, 4), 0).unwrap();
+        c.insert(0, 1, &row(8.0, 2, 4), &row(8.0, 2, 4), 1).unwrap();
+        c.swap_slots(0, 1);
+        assert_eq!(c.len(0, 0), 2);
+        assert_eq!(c.len(0, 1), 1);
+        let off = c.row_offset(0, 0, 0, 0);
+        assert!((c.k[off] - 9.0).abs() < 1e-6);
+    }
+
+    #[test]
+    fn load_prefill_resets_and_fills() {
+        let mut c = GroupCache::new(dims());
+        c.insert(0, 0, &row(5.0, 2, 4), &row(5.0, 2, 4), 0).unwrap();
+        let t = 4;
+        let k_all = HostTensorF32::from_vec(
+            &[2, 1, 2, t, 4],
+            (0..2 * 2 * t * 4).map(|i| i as f32).collect(),
+        )
+        .unwrap();
+        let v_all = k_all.clone();
+        c.load_prefill(0, &k_all, &v_all, 3).unwrap();
+        assert_eq!(c.len(0, 0), 3);
+        assert_eq!(c.len(1, 0), 3);
+        assert_eq!(c.pos(0, 0), &[0, 1, 2]);
+        assert_eq!(c.scores(1, 0), &[0.0, 0.0, 0.0]);
+    }
+
+    #[test]
+    fn retention_bitmap_marks_positions() {
+        let mut c = GroupCache::new(dims());
+        for t in 0..5 {
+            c.insert(0, 0, &row(0.0, 2, 4), &row(0.0, 2, 4), t).unwrap();
+        }
+        c.apply_retention(0, 0, &[0, 4]).unwrap();
+        let bm = c.retention_bitmap(0, 0, 4);
+        assert_eq!(bm, vec![true, false, false, false, true]);
+    }
+}

@@ -1,0 +1,32 @@
+//! Lethe: layer- and time-adaptive KV cache pruning for
+//! reasoning-intensive LLM serving (AAAI 2026 reproduction).
+//!
+//! Three-layer architecture (see DESIGN.md):
+//! - L3 (this crate): the serving coordinator — request router, continuous
+//!   batching scheduler, per-layer KV-cache manager, and the paper's
+//!   eviction policies (Lethe + FullKV/H2O/StreamingLLM/PyramidKV).
+//! - L2/L1 (python/, build-time only): JAX GQA transformer + Pallas
+//!   attention kernels, AOT-lowered to the HLO-text artifacts this crate
+//!   loads via PJRT ([`runtime`]).
+//!
+//! Python never runs on the request path: after `make artifacts`, the
+//! `lethe` binary and every example/bench is self-contained.
+
+pub mod attn;
+pub mod bench_support;
+pub mod config;
+pub mod engine;
+pub mod eval;
+pub mod kvcache;
+pub mod metrics;
+pub mod model;
+pub mod policy;
+pub mod runtime;
+pub mod scheduler;
+pub mod server;
+pub mod sim;
+pub mod util;
+pub mod workload;
+
+pub use config::LetheParams;
+pub use policy::PolicyKind;

@@ -1,0 +1,249 @@
+//! `lethe` — the serving-system CLI (leader entrypoint).
+//!
+//! Subcommands:
+//!   info      — print artifact/model/executable info
+//!   generate  — one-shot generation for a prompt
+//!   serve     — run the request server over a generated Poisson trace
+//!   eval      — Table 1 accuracy harness for one policy
+//!   trace     — policy-trace / simulator smoke (big-model numbers)
+
+use std::path::Path;
+
+use anyhow::Result;
+
+use lethe::config::ServingConfig;
+use lethe::engine::Engine;
+use lethe::eval;
+use lethe::model::{ModelMeta, Tokenizer, DEEPSEEK_R1_DISTILL};
+use lethe::policy::PolicyKind;
+use lethe::runtime::Runtime;
+use lethe::server::{GenerateRequest, Server};
+use lethe::sim::{run_trace, Simulator, TraceConfig};
+use lethe::util::argparse::ArgSpec;
+use lethe::util::prng::Rng;
+use lethe::workload;
+
+fn spec() -> ArgSpec {
+    ArgSpec::new(
+        "lethe: layer- and time-adaptive KV cache pruning for \
+         reasoning-intensive LLM serving (AAAI'26 reproduction)",
+    )
+    .positional("cmd", "info|generate|serve|eval|trace")
+    .opt("artifacts", "artifacts", "artifacts directory")
+    .opt("config", "", "optional JSON config file")
+    .opt("policy", "lethe", "fullkv|lethe|h2o|streamingllm|pyramidkv")
+    .opt("prompt", "", "prompt text (generate)")
+    .opt("max-new", "64", "max new tokens")
+    .opt("n", "16", "requests (serve) / tasks per subject (eval)")
+    .opt("batch", "4", "decode batch size")
+    .opt("rate", "4.0", "arrival rate req/s (serve)")
+    .opt("seed", "0", "workload seed")
+    .flag("verbose", "debug logging")
+}
+
+fn load_cfg(args: &lethe::util::argparse::Args) -> Result<ServingConfig> {
+    let mut cfg = if args.get("config").is_empty() {
+        ServingConfig::default()
+    } else {
+        ServingConfig::load(Path::new(args.get("config")))?
+    };
+    cfg.artifacts_dir = args.get("artifacts").to_string();
+    cfg.scheduler.max_batch = args.get_usize("batch")?.max(1);
+    Ok(cfg)
+}
+
+fn main() -> Result<()> {
+    let argv: Vec<String> = std::env::args().skip(1).collect();
+    let args = match spec().parse(&argv) {
+        Ok(a) => a,
+        Err(e) => {
+            eprintln!("{e}");
+            std::process::exit(2);
+        }
+    };
+    if args.has("verbose") {
+        lethe::util::logging::set_level(lethe::util::logging::Level::Debug);
+    }
+    let cmd = args.positional.first().map(|s| s.as_str()).unwrap_or("info");
+    match cmd {
+        "info" => cmd_info(&args),
+        "generate" => cmd_generate(&args),
+        "serve" => cmd_serve(&args),
+        "eval" => cmd_eval(&args),
+        "trace" => cmd_trace(&args),
+        other => {
+            eprintln!("unknown command '{other}'\n{}", spec().usage("lethe"));
+            std::process::exit(2);
+        }
+    }
+}
+
+fn cmd_info(args: &lethe::util::argparse::Args) -> Result<()> {
+    let meta = ModelMeta::load(Path::new(args.get("artifacts")))?;
+    let d = &meta.dims;
+    println!("model: {} params ({})", d.param_count, d.weights_source);
+    println!(
+        "dims: L={} d={} Hq={} Hkv={} Dh={} ff={} V={}",
+        d.n_layers, d.d_model, d.n_q_heads, d.n_kv_heads, d.d_head, d.d_ff,
+        d.vocab_size
+    );
+    println!("kv bytes/token: {}", meta.kv_bytes_per_token());
+    println!("profiles: {:?}", meta.cache_profiles);
+    println!("decode capacities: {:?}", meta.decode_capacities);
+    println!("prefill buckets: {:?}", meta.prefill_ts);
+    println!("executables ({}):", meta.executables.len());
+    for name in meta.executables.keys() {
+        println!("  {name}");
+    }
+    Ok(())
+}
+
+fn cmd_generate(args: &lethe::util::argparse::Args) -> Result<()> {
+    let cfg = load_cfg(args)?;
+    let policy = PolicyKind::parse(args.get("policy"))?;
+    let prompt = if args.get("prompt").is_empty() {
+        // Demo: a 2-hop reasoning task.
+        let mut rng = Rng::new(args.get_usize("seed")? as u64);
+        let t = workload::make_task(&mut rng, 8, 2);
+        println!("task    : {}", t.prompt);
+        println!("expected: {}", t.answer);
+        t.prompt
+    } else {
+        args.get("prompt").to_string()
+    };
+    let server = Server::start(cfg, policy)?;
+    let resp = server.generate(GenerateRequest {
+        prompt,
+        max_new_tokens: args.get_usize("max-new")?,
+        policy: None,
+    })?;
+    println!("output  : {}", resp.text);
+    println!(
+        "finish={} prompt_toks={} gen_toks={} ttft={:.3}s total={:.3}s \
+         prune_rounds={}",
+        resp.finish, resp.prompt_tokens, resp.generated_tokens, resp.ttft_s,
+        resp.total_s, resp.prune_rounds
+    );
+    Ok(())
+}
+
+fn cmd_serve(args: &lethe::util::argparse::Args) -> Result<()> {
+    let cfg = load_cfg(args)?;
+    let policy = PolicyKind::parse(args.get("policy"))?;
+    let n = args.get_usize("n")?;
+    let rate = args.get_f64("rate")?;
+    let max_new = args.get_usize("max-new")?;
+    let mut rng = Rng::new(args.get_usize("seed")? as u64);
+    let trace = workload::poisson_trace(&mut rng, rate, n);
+    let server = Server::start(cfg, policy)?;
+
+    let t0 = std::time::Instant::now();
+    let mut handles = Vec::new();
+    for item in &trace {
+        // Open-loop replay: sleep to the arrival time, then submit.
+        let wait = item.arrival_s - t0.elapsed().as_secs_f64();
+        if wait > 0.0 {
+            std::thread::sleep(std::time::Duration::from_secs_f64(wait));
+        }
+        handles.push((
+            item.task.clone(),
+            server.submit(GenerateRequest {
+                prompt: item.task.prompt.clone(),
+                max_new_tokens: max_new,
+                policy: None,
+            })?,
+        ));
+    }
+    let mut correct = 0usize;
+    let mut chain = 0usize;
+    let mut ttfts = Vec::new();
+    let mut totals = Vec::new();
+    for (task, rx) in handles {
+        let resp = rx.recv()??;
+        let (final_ok, _) = eval::judge(&task, &resp.text);
+        correct += final_ok as usize;
+        chain += eval::judge_chain(&task, &resp.text) as usize;
+        ttfts.push(resp.ttft_s);
+        totals.push(resp.total_s);
+    }
+    let wall = t0.elapsed().as_secs_f64();
+    let ts = lethe::util::stats::Summary::of(&ttfts);
+    let tt = lethe::util::stats::Summary::of(&totals);
+    println!(
+        "served {n} requests in {wall:.2}s (offered rate {rate:.2} req/s)"
+    );
+    println!(
+        "accuracy: chain {:.3}  final {:.3}",
+        chain as f64 / n as f64,
+        correct as f64 / n as f64
+    );
+    println!(
+        "TTFT   p50 {:.3}s p99 {:.3}s | E2E p50 {:.3}s p99 {:.3}s",
+        ts.p50, ts.p99, tt.p50, tt.p99
+    );
+    Ok(())
+}
+
+fn cmd_eval(args: &lethe::util::argparse::Args) -> Result<()> {
+    let cfg = load_cfg(args)?;
+    let policy = PolicyKind::parse(args.get("policy"))?;
+    let rt = Runtime::load(Path::new(&cfg.artifacts_dir))?;
+    let tok = Tokenizer::from_meta(&rt.meta)?;
+    let mut engine = Engine::new(rt, cfg)?;
+    let report = eval::eval_policy(
+        &mut engine,
+        &tok,
+        policy,
+        args.get_usize("n")?,
+        args.get_usize("batch")?,
+        args.get_usize("max-new")?,
+        args.get_usize("seed")? as u64,
+    )?;
+    println!("policy: {}", policy.label());
+    println!(
+        "{:<10} {:>6} {:>10} {:>10} {:>10} {:>10} {:>12}",
+        "subject", "n", "final_acc", "chain_acc", "strict", "gen_toks",
+        "prune_rounds"
+    );
+    for s in &report.subjects {
+        println!(
+            "{:<10} {:>6} {:>10.3} {:>10.3} {:>10.3} {:>10.1} {:>12.1}",
+            s.subject, s.n, s.final_acc, s.chain_acc, s.strict_acc,
+            s.mean_generated, s.prune_rounds
+        );
+    }
+    println!(
+        "overall: final {:.3}  chain {:.3}",
+        report.overall_final_acc(),
+        report.overall_chain_acc()
+    );
+    Ok(())
+}
+
+fn cmd_trace(args: &lethe::util::argparse::Args) -> Result<()> {
+    let cfg = load_cfg(args).unwrap_or_default();
+    println!(
+        "{:<46} {:>14} {:>14} {:>12}",
+        "model/policy", "mean retained", "final retained", "prune events"
+    );
+    for arch in &DEEPSEEK_R1_DISTILL {
+        let mut sim = Simulator::new(arch);
+        sim.calibrate(2048.0, 30.0);
+        for kind in PolicyKind::ALL {
+            let tc = TraceConfig {
+                n_layers: arch.n_layers,
+                gen_len: 2048,
+                ..TraceConfig::default()
+            };
+            let tr = run_trace(kind, &cfg, &tc);
+            println!(
+                "{:<46} {:>14.0} {:>14.0} {:>12}",
+                format!("{}/{}", arch.name, kind.label()),
+                tr.mean_retained(),
+                tr.final_retained(),
+                tr.prune_events
+            );
+        }
+    }
+    Ok(())
+}

@@ -1,0 +1,118 @@
+//! Engine/serving telemetry: step-phase timings, token counters, prune
+//! accounting, capacity-bucket usage. Everything the benches print comes
+//! from here, serialisable to JSON for the experiment logs.
+
+use std::collections::BTreeMap;
+
+use crate::util::json::Json;
+use crate::util::stats::Summary;
+
+#[derive(Default)]
+pub struct EngineMetrics {
+    pub prefill_seconds: Vec<f64>,
+    pub pack_seconds: Vec<f64>,
+    pub exec_seconds: Vec<f64>,
+    pub policy_seconds: Vec<f64>,
+    pub prefill_tokens: u64,
+    pub decode_tokens: u64,
+    pub decode_steps: u64,
+    pub prune_events: u64,
+    pub pruned_tokens: u64,
+    pub ooms: u64,
+    pub live_bytes_last: usize,
+    /// decode capacity bucket -> steps run at that bucket.
+    pub capacity_hist: BTreeMap<usize, u64>,
+}
+
+impl EngineMetrics {
+    pub fn reset(&mut self) {
+        *self = EngineMetrics::default();
+    }
+
+    pub fn step_seconds_mean(&self) -> f64 {
+        if self.exec_seconds.is_empty() {
+            return 0.0;
+        }
+        let total: f64 = self.pack_seconds.iter().sum::<f64>()
+            + self.exec_seconds.iter().sum::<f64>()
+            + self.policy_seconds.iter().sum::<f64>();
+        total / self.exec_seconds.len() as f64
+    }
+
+    /// Decode throughput over the measured window (tokens / second of
+    /// engine step time).
+    pub fn decode_tput(&self) -> f64 {
+        let secs: f64 = self.pack_seconds.iter().sum::<f64>()
+            + self.exec_seconds.iter().sum::<f64>()
+            + self.policy_seconds.iter().sum::<f64>();
+        if secs == 0.0 {
+            0.0
+        } else {
+            self.decode_tokens as f64 / secs
+        }
+    }
+
+    pub fn phase_summaries(&self) -> Option<(Summary, Summary, Summary)> {
+        if self.exec_seconds.is_empty() {
+            return None;
+        }
+        Some((
+            Summary::of(&self.pack_seconds),
+            Summary::of(&self.exec_seconds),
+            Summary::of(&self.policy_seconds),
+        ))
+    }
+
+    pub fn to_json(&self) -> Json {
+        let mut caps = Vec::new();
+        for (c, n) in &self.capacity_hist {
+            caps.push(Json::obj(vec![
+                ("capacity", Json::from(*c)),
+                ("steps", Json::from(*n as usize)),
+            ]));
+        }
+        Json::obj(vec![
+            ("decode_steps", Json::from(self.decode_steps as usize)),
+            ("decode_tokens", Json::from(self.decode_tokens as usize)),
+            ("prefill_tokens", Json::from(self.prefill_tokens as usize)),
+            ("prune_events", Json::from(self.prune_events as usize)),
+            ("pruned_tokens", Json::from(self.pruned_tokens as usize)),
+            ("ooms", Json::from(self.ooms as usize)),
+            ("live_bytes_last", Json::from(self.live_bytes_last)),
+            ("decode_tput_tok_s", Json::num(self.decode_tput())),
+            ("step_seconds_mean", Json::num(self.step_seconds_mean())),
+            ("capacity_hist", Json::Arr(caps)),
+        ])
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn throughput_accounts_all_phases() {
+        let mut m = EngineMetrics::default();
+        m.decode_tokens = 100;
+        m.pack_seconds.push(0.5);
+        m.exec_seconds.push(1.0);
+        m.policy_seconds.push(0.5);
+        assert!((m.decode_tput() - 50.0).abs() < 1e-9);
+        assert!((m.step_seconds_mean() - 2.0).abs() < 1e-9);
+    }
+
+    #[test]
+    fn json_roundtrips() {
+        let mut m = EngineMetrics::default();
+        m.decode_steps = 3;
+        m.capacity_hist.insert(128, 2);
+        m.capacity_hist.insert(256, 1);
+        let j = m.to_json().to_string();
+        let parsed = crate::util::json::parse(&j).unwrap();
+        assert_eq!(parsed.get("decode_steps").unwrap().as_usize().unwrap(), 3);
+        assert_eq!(
+            parsed.get("capacity_hist").unwrap().as_arr().unwrap().len(),
+            2
+        );
+    }
+}

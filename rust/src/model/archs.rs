@@ -1,0 +1,170 @@
+//! Architecture catalogue for the A100 simulator (`sim/`): the real
+//! configs of the four DeepSeek-R1-Distill models the paper evaluates
+//! (Tables 2–3, Figures 4 and 6). Dims are the published Qwen2/LLaMA
+//! configs the distills inherit.
+
+/// Static architecture description of a served model.
+#[derive(Clone, Copy, Debug)]
+pub struct ArchSpec {
+    pub name: &'static str,
+    pub n_layers: usize,
+    pub d_model: usize,
+    pub n_q_heads: usize,
+    pub n_kv_heads: usize,
+    pub d_head: usize,
+    pub d_ff: usize,
+    pub vocab_size: usize,
+    /// Bytes per weight element as served (fp16/bf16 = 2).
+    pub weight_bytes: usize,
+    /// Bytes per KV-cache element (fp16 = 2).
+    pub kv_bytes: usize,
+    /// Tensor-parallel GPU count used in the paper's setup.
+    pub tp: usize,
+}
+
+impl ArchSpec {
+    /// Total parameter count (embeddings + blocks + head), exact enough
+    /// for memory accounting (±1%).
+    pub fn param_count(&self) -> usize {
+        let d = self.d_model;
+        let attn = d * self.n_q_heads * self.d_head      // wq
+            + 2 * d * self.n_kv_heads * self.d_head      // wk, wv
+            + self.n_q_heads * self.d_head * d;          // wo
+        let mlp = 3 * d * self.d_ff;                     // gate, up, down
+        let norms = 2 * d;
+        let blocks = self.n_layers * (attn + mlp + norms);
+        let embed = 2 * self.vocab_size * d;             // embed + lm_head
+        blocks + embed + d
+    }
+
+    /// Model weight bytes per GPU under tensor parallelism.
+    pub fn weight_bytes_per_gpu(&self) -> usize {
+        self.param_count() * self.weight_bytes / self.tp
+    }
+
+    /// KV-cache bytes per cached token per sequence, per GPU.
+    pub fn kv_bytes_per_token_per_gpu(&self) -> usize {
+        self.n_layers * 2 * self.n_kv_heads * self.d_head * self.kv_bytes
+            / self.tp
+    }
+
+    /// FLOPs per generated token (dense decode, 2*params approximation
+    /// plus attention over `ctx` cached tokens).
+    pub fn flops_per_token(&self, ctx: usize) -> f64 {
+        let dense = 2.0 * self.param_count() as f64;
+        let attn = 4.0
+            * self.n_layers as f64
+            * self.n_q_heads as f64
+            * self.d_head as f64
+            * ctx as f64;
+        dense + attn
+    }
+
+    /// HBM bytes read per generated token (weights once + KV over ctx).
+    pub fn hbm_bytes_per_token(&self, ctx: usize, batch: usize) -> f64 {
+        // Weights are read once per step regardless of batch; KV is per
+        // sequence.
+        self.weight_bytes_per_gpu() as f64 / batch as f64
+            + self.kv_bytes_per_token_per_gpu() as f64 * ctx as f64
+    }
+}
+
+/// Qwen-7B, Qwen-32B, LLaMA-8B, LLaMA-70B — the paper's four models.
+pub const DEEPSEEK_R1_DISTILL: [ArchSpec; 4] = [
+    ArchSpec {
+        name: "DeepSeek-R1-Distill-Qwen-7B",
+        n_layers: 28,
+        d_model: 3584,
+        n_q_heads: 28,
+        n_kv_heads: 4,
+        d_head: 128,
+        d_ff: 18944,
+        vocab_size: 152064,
+        weight_bytes: 2,
+        kv_bytes: 2,
+        tp: 1,
+    },
+    ArchSpec {
+        name: "DeepSeek-R1-Distill-Qwen-32B",
+        n_layers: 64,
+        d_model: 5120,
+        n_q_heads: 40,
+        n_kv_heads: 8,
+        d_head: 128,
+        d_ff: 27648,
+        vocab_size: 152064,
+        weight_bytes: 2,
+        kv_bytes: 2,
+        tp: 1,
+    },
+    ArchSpec {
+        name: "DeepSeek-R1-Distill-Llama-8B",
+        n_layers: 32,
+        d_model: 4096,
+        n_q_heads: 32,
+        n_kv_heads: 8,
+        d_head: 128,
+        d_ff: 14336,
+        vocab_size: 128256,
+        weight_bytes: 2,
+        kv_bytes: 2,
+        tp: 1,
+    },
+    ArchSpec {
+        name: "DeepSeek-R1-Distill-Llama-70B",
+        n_layers: 80,
+        d_model: 8192,
+        n_q_heads: 64,
+        n_kv_heads: 8,
+        d_head: 128,
+        d_ff: 28672,
+        vocab_size: 128256,
+        weight_bytes: 2,
+        kv_bytes: 2,
+        tp: 3, // paper: 3-way model parallelism for the 70B
+    },
+];
+
+pub fn arch_by_name(name: &str) -> Option<&'static ArchSpec> {
+    DEEPSEEK_R1_DISTILL.iter().find(|a| a.name.contains(name))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn param_counts_are_plausible() {
+        // Within 15% of the nominal 7B/32B/8B/70B.
+        let nominal = [7.6e9, 32.8e9, 8.0e9, 70.6e9];
+        for (a, n) in DEEPSEEK_R1_DISTILL.iter().zip(nominal) {
+            let p = a.param_count() as f64;
+            assert!(
+                (p / n - 1.0).abs() < 0.15,
+                "{}: {p:.2e} vs nominal {n:.2e}",
+                a.name
+            );
+        }
+    }
+
+    #[test]
+    fn kv_bytes_match_hand_calc() {
+        // LLaMA-8B: 32 layers * 2 * 8 heads * 128 dim * 2 bytes = 131072.
+        let a = arch_by_name("Llama-8B").unwrap();
+        assert_eq!(a.kv_bytes_per_token_per_gpu(), 131072);
+    }
+
+    #[test]
+    fn gqa_reduces_kv_vs_mha() {
+        let a = arch_by_name("Qwen-7B").unwrap();
+        let mha = a.n_layers * 2 * a.n_q_heads * a.d_head * a.kv_bytes;
+        assert!(a.kv_bytes_per_token_per_gpu() * 7 == mha,
+                "Qwen-7B GQA ratio is 7x");
+    }
+
+    #[test]
+    fn flops_grow_with_context() {
+        let a = arch_by_name("Llama-70B").unwrap();
+        assert!(a.flops_per_token(10_000) > a.flops_per_token(100));
+    }
+}

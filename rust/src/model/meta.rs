@@ -1,0 +1,203 @@
+//! Parses `artifacts/model_meta.json` — the wire contract emitted by
+//! `python/compile/aot.py`: model dims, tokenizer vocab, weight layout,
+//! and the manifest of compiled HLO executables with their bucket shapes.
+
+use std::collections::BTreeMap;
+use std::path::{Path, PathBuf};
+
+use anyhow::{Context, Result};
+
+use crate::util::json::{parse, Json};
+
+#[derive(Clone, Debug)]
+pub struct ModelDims {
+    pub vocab_size: usize,
+    pub d_model: usize,
+    pub n_layers: usize,
+    pub n_q_heads: usize,
+    pub n_kv_heads: usize,
+    pub d_head: usize,
+    pub d_ff: usize,
+    pub param_count: usize,
+    pub weights_source: String,
+}
+
+#[derive(Clone, Debug)]
+pub struct WeightSpec {
+    pub name: String,
+    pub shape: Vec<usize>,
+    pub offset: usize,
+    pub bytes: usize,
+}
+
+#[derive(Clone, Debug)]
+pub struct ExecutableSpec {
+    pub name: String,
+    pub file: String,
+    /// (shape, dtype) per parameter, in lowered order (weights first).
+    pub params: Vec<(Vec<usize>, String)>,
+    pub outputs: Vec<String>,
+}
+
+#[derive(Clone, Debug)]
+pub struct ModelMeta {
+    pub dir: PathBuf,
+    pub dims: ModelDims,
+    pub specials: Vec<String>,
+    pub chars: String,
+    pub weights: Vec<WeightSpec>,
+    pub executables: BTreeMap<String, ExecutableSpec>,
+    pub cache_profiles: BTreeMap<String, usize>,
+    /// Per profile: compiled decode cache-capacity buckets (ascending).
+    pub decode_capacities: BTreeMap<String, Vec<usize>>,
+    pub decode_batches: BTreeMap<String, Vec<usize>>,
+    pub prefill_ts: Vec<usize>,
+}
+
+fn usize_arr(j: &Json) -> Result<Vec<usize>> {
+    j.as_arr()?.iter().map(|x| x.as_usize()).collect()
+}
+
+fn usize_map(j: &Json) -> Result<BTreeMap<String, usize>> {
+    j.as_obj()?
+        .iter()
+        .map(|(k, v)| Ok((k.clone(), v.as_usize()?)))
+        .collect()
+}
+
+fn usize_arr_map(j: &Json) -> Result<BTreeMap<String, Vec<usize>>> {
+    j.as_obj()?
+        .iter()
+        .map(|(k, v)| Ok((k.clone(), usize_arr(v)?)))
+        .collect()
+}
+
+impl ModelMeta {
+    pub fn load(artifacts_dir: &Path) -> Result<ModelMeta> {
+        let path = artifacts_dir.join("model_meta.json");
+        let src = std::fs::read_to_string(&path).with_context(|| {
+            format!(
+                "reading {path:?} — run `make artifacts` first"
+            )
+        })?;
+        let j = parse(&src).context("parsing model_meta.json")?;
+
+        let m = j.get("model")?;
+        let dims = ModelDims {
+            vocab_size: m.get("vocab_size")?.as_usize()?,
+            d_model: m.get("d_model")?.as_usize()?,
+            n_layers: m.get("n_layers")?.as_usize()?,
+            n_q_heads: m.get("n_q_heads")?.as_usize()?,
+            n_kv_heads: m.get("n_kv_heads")?.as_usize()?,
+            d_head: m.get("d_head")?.as_usize()?,
+            d_ff: m.get("d_ff")?.as_usize()?,
+            param_count: m.get("param_count")?.as_usize()?,
+            weights_source: m.get("weights_source")?.as_str()?.to_string(),
+        };
+
+        let tok = j.get("tokenizer")?;
+        let specials = tok
+            .get("specials")?
+            .as_arr()?
+            .iter()
+            .map(|s| Ok(s.as_str()?.to_string()))
+            .collect::<Result<Vec<_>>>()?;
+        let chars = tok.get("chars")?.as_str()?.to_string();
+
+        let weights = j
+            .get("weights")?
+            .as_arr()?
+            .iter()
+            .map(|w| {
+                Ok(WeightSpec {
+                    name: w.get("name")?.as_str()?.to_string(),
+                    shape: usize_arr(w.get("shape")?)?,
+                    offset: w.get("offset")?.as_usize()?,
+                    bytes: w.get("bytes")?.as_usize()?,
+                })
+            })
+            .collect::<Result<Vec<_>>>()?;
+
+        let executables = j
+            .get("executables")?
+            .as_arr()?
+            .iter()
+            .map(|e| {
+                let spec = ExecutableSpec {
+                    name: e.get("name")?.as_str()?.to_string(),
+                    file: e.get("file")?.as_str()?.to_string(),
+                    params: e
+                        .get("params")?
+                        .as_arr()?
+                        .iter()
+                        .map(|p| {
+                            Ok((
+                                usize_arr(p.get("shape")?)?,
+                                p.get("dtype")?.as_str()?.to_string(),
+                            ))
+                        })
+                        .collect::<Result<Vec<_>>>()?,
+                    outputs: e
+                        .get("outputs")?
+                        .as_arr()?
+                        .iter()
+                        .map(|o| Ok(o.as_str()?.to_string()))
+                        .collect::<Result<Vec<_>>>()?,
+                };
+                Ok((spec.name.clone(), spec))
+            })
+            .collect::<Result<BTreeMap<_, _>>>()?;
+
+        Ok(ModelMeta {
+            dir: artifacts_dir.to_path_buf(),
+            dims,
+            specials,
+            chars,
+            weights,
+            executables,
+            cache_profiles: usize_map(j.get("cache_profiles")?)?,
+            decode_capacities: usize_arr_map(j.get("decode_capacities")?)?,
+            decode_batches: usize_arr_map(j.get("decode_batches")?)?,
+            prefill_ts: usize_arr(j.get("prefill_ts")?)?,
+        })
+    }
+
+    /// Cache capacity C for a profile name.
+    pub fn capacity(&self, profile: &str) -> Result<usize> {
+        self.cache_profiles
+            .get(profile)
+            .copied()
+            .ok_or_else(|| anyhow::anyhow!("unknown cache profile '{profile}'"))
+    }
+
+    /// KV bytes per cached token per sequence (all layers, K+V, f32).
+    pub fn kv_bytes_per_token(&self) -> usize {
+        self.dims.n_layers * 2 * self.dims.n_kv_heads * self.dims.d_head * 4
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    /// Integration-style: parses the real artifact manifest if present
+    /// (`make artifacts`), otherwise skipped.
+    #[test]
+    fn loads_real_manifest_when_present() {
+        let dir = Path::new(env!("CARGO_MANIFEST_DIR")).join("artifacts");
+        if !dir.join("model_meta.json").exists() {
+            eprintln!("skipping: artifacts not built");
+            return;
+        }
+        let meta = ModelMeta::load(&dir).unwrap();
+        assert!(meta.dims.n_layers >= 1);
+        assert_eq!(
+            meta.dims.vocab_size,
+            meta.specials.len() + meta.chars.chars().count()
+        );
+        assert!(meta.kv_bytes_per_token() > 0);
+        for spec in meta.executables.values() {
+            assert!(dir.join(&spec.file).exists(), "missing {}", spec.file);
+        }
+    }
+}

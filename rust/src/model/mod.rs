@@ -1,0 +1,12 @@
+//! Model metadata, tokenizer, weight loading, and the catalogue of real
+//! model architectures used by the A100 simulator.
+
+pub mod archs;
+pub mod meta;
+pub mod tokenizer;
+pub mod weights;
+
+pub use archs::{arch_by_name, ArchSpec, DEEPSEEK_R1_DISTILL};
+pub use meta::{ExecutableSpec, ModelMeta, WeightSpec};
+pub use tokenizer::Tokenizer;
+pub use weights::Weights;

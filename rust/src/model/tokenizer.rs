@@ -1,0 +1,122 @@
+//! Char-level tokenizer matching `python/compile/tasks.py` exactly: the
+//! vocab (specials + chars) is read from the artifact manifest so the rust
+//! request path and the python training path can never drift.
+
+use std::collections::HashMap;
+
+use anyhow::{bail, Result};
+
+use super::meta::ModelMeta;
+
+#[derive(Clone, Debug)]
+pub struct Tokenizer {
+    id_to_char: Vec<Option<char>>,
+    char_to_id: HashMap<char, i32>,
+    pub pad: i32,
+    pub bos: i32,
+    pub eos: i32,
+}
+
+impl Tokenizer {
+    pub fn from_meta(meta: &ModelMeta) -> Result<Tokenizer> {
+        Self::new(&meta.specials, &meta.chars)
+    }
+
+    pub fn new(specials: &[String], chars: &str) -> Result<Tokenizer> {
+        if specials.len() != 3 {
+            bail!("expected 3 specials (<pad>,<bos>,<eos>)");
+        }
+        let mut id_to_char: Vec<Option<char>> =
+            vec![None; specials.len() + chars.chars().count()];
+        let mut char_to_id = HashMap::new();
+        for (i, c) in chars.chars().enumerate() {
+            let id = (specials.len() + i) as i32;
+            id_to_char[id as usize] = Some(c);
+            char_to_id.insert(c, id);
+        }
+        Ok(Tokenizer { id_to_char, char_to_id, pad: 0, bos: 1, eos: 2 })
+    }
+
+    pub fn vocab_size(&self) -> usize {
+        self.id_to_char.len()
+    }
+
+    /// Encode text; errors on characters outside the vocab (the server
+    /// rejects such requests up front).
+    pub fn encode(&self, text: &str) -> Result<Vec<i32>> {
+        text.chars()
+            .map(|c| {
+                self.char_to_id.get(&c).copied().ok_or_else(|| {
+                    anyhow::anyhow!("character '{c}' not in model vocab")
+                })
+            })
+            .collect()
+    }
+
+    /// BOS + prompt — what prefill consumes.
+    pub fn encode_prompt(&self, text: &str) -> Result<Vec<i32>> {
+        let mut v = vec![self.bos];
+        v.extend(self.encode(text)?);
+        Ok(v)
+    }
+
+    /// Decode generated ids, stopping at EOS, skipping specials.
+    pub fn decode(&self, ids: &[i32]) -> String {
+        let mut s = String::new();
+        for &id in ids {
+            if id == self.eos {
+                break;
+            }
+            if let Some(Some(c)) = self.id_to_char.get(id as usize) {
+                s.push(*c);
+            }
+        }
+        s
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn tok() -> Tokenizer {
+        Tokenizer::new(
+            &["<pad>".into(), "<bos>".into(), "<eos>".into()],
+            "abcdefghijklmnopqrstuvwxyz0123456789:;>?=. ",
+        )
+        .unwrap()
+    }
+
+    #[test]
+    fn roundtrip() {
+        let t = tok();
+        let ids = t.encode("ab:17;cd>99.").unwrap();
+        assert_eq!(t.decode(&ids), "ab:17;cd>99.");
+    }
+
+    #[test]
+    fn ids_match_python_convention() {
+        let t = tok();
+        // python: CHAR_TO_ID['a'] == 3 (after 3 specials)
+        assert_eq!(t.encode("a").unwrap(), vec![3]);
+        assert_eq!(t.encode("b").unwrap(), vec![4]);
+        assert_eq!(t.vocab_size(), 46);
+    }
+
+    #[test]
+    fn prompt_has_bos_and_decode_stops_at_eos() {
+        let t = tok();
+        let p = t.encode_prompt("ab").unwrap();
+        assert_eq!(p[0], t.bos);
+        let mut ids = t.encode("xy").unwrap();
+        ids.push(t.eos);
+        ids.extend(t.encode("zz").unwrap());
+        assert_eq!(t.decode(&ids), "xy");
+    }
+
+    #[test]
+    fn rejects_out_of_vocab() {
+        assert!(tok().encode("ABC").is_err());
+        assert!(tok().encode("日").is_err());
+    }
+}

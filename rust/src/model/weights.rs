@@ -1,0 +1,65 @@
+//! Loads `artifacts/weights.bin` (raw little-endian f32, WEIGHT_NAMES
+//! order) and uploads each tensor once as a persistent PJRT device buffer.
+//! Weights never cross the host/device boundary again — every executable
+//! call passes these buffers via `execute_b`.
+
+use anyhow::{ensure, Context, Result};
+use xla::{PjRtBuffer, PjRtClient};
+
+use super::meta::ModelMeta;
+
+pub struct Weights {
+    /// Device buffers in manifest order (= lowered HLO parameter order).
+    pub buffers: Vec<PjRtBuffer>,
+    /// Host copies kept for inspection/tests (name, shape, data).
+    pub host: Vec<(String, Vec<usize>, Vec<f32>)>,
+}
+
+impl Weights {
+    pub fn load(client: &PjRtClient, meta: &ModelMeta) -> Result<Weights> {
+        let path = meta.dir.join("weights.bin");
+        let bytes = std::fs::read(&path)
+            .with_context(|| format!("reading {path:?}"))?;
+        let total: usize = meta.weights.iter().map(|w| w.bytes).sum();
+        ensure!(
+            bytes.len() == total,
+            "weights.bin is {} bytes, manifest says {total}",
+            bytes.len()
+        );
+        let mut buffers = Vec::with_capacity(meta.weights.len());
+        let mut host = Vec::with_capacity(meta.weights.len());
+        for spec in &meta.weights {
+            let raw = &bytes[spec.offset..spec.offset + spec.bytes];
+            let data: Vec<f32> = raw
+                .chunks_exact(4)
+                .map(|c| f32::from_le_bytes([c[0], c[1], c[2], c[3]]))
+                .collect();
+            let n: usize = spec.shape.iter().product();
+            ensure!(
+                n == data.len(),
+                "weight {}: shape {:?} != {} elements",
+                spec.name,
+                spec.shape,
+                data.len()
+            );
+            let buf = client
+                .buffer_from_host_buffer(&data, &spec.shape, None)
+                .with_context(|| format!("uploading weight {}", spec.name))?;
+            buffers.push(buf);
+            host.push((spec.name.clone(), spec.shape.clone(), data));
+        }
+        Ok(Weights { buffers, host })
+    }
+
+    pub fn by_name(&self, name: &str) -> Option<(&[usize], &[f32])> {
+        self.host
+            .iter()
+            .find(|(n, _, _)| n == name)
+            .map(|(_, s, d)| (s.as_slice(), d.as_slice()))
+    }
+
+    /// Total parameter count (sanity checks / reporting).
+    pub fn param_count(&self) -> usize {
+        self.host.iter().map(|(_, _, d)| d.len()).sum()
+    }
+}

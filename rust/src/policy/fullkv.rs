@@ -1,0 +1,48 @@
+//! FullKV: the no-eviction baseline. Retains every token; OOMs (fails the
+//! request) when a sequence outgrows the largest compiled capacity —
+//! which is precisely the behaviour Tables 2–3 report at batch 32.
+
+use super::{Capabilities, EvictionPolicy, LayerState};
+
+pub struct FullKv;
+
+impl EvictionPolicy for FullKv {
+    fn name(&self) -> &'static str {
+        "FullKV"
+    }
+
+    fn plan(&mut self, _layer: usize, _st: &LayerState<'_>) -> Option<Vec<usize>> {
+        None
+    }
+
+    fn capabilities(&self) -> Capabilities {
+        Capabilities {
+            recency_aware: false,
+            attention_aware: false,
+            layerwise_budget: false,
+            adaptive_budget: false,
+            multi_step_pruning: false,
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn never_prunes() {
+        let mut p = FullKv;
+        let s = vec![0.5f32; 4096];
+        let pos: Vec<i32> = (0..4096).collect();
+        let st = LayerState {
+            scores: &s,
+            pos: &pos,
+            len: 4096,
+            step: 4096,
+            sparsity: 1.0,
+            capacity: 512,
+        };
+        assert!(p.plan(0, &st).is_none());
+    }
+}

@@ -1,0 +1,141 @@
+//! H2O (Heavy-Hitter Oracle, Zhang et al. 2023): keep the top-scoring
+//! "heavy hitter" tokens by *cumulative* attention mass (γ = 1, no decay)
+//! plus a recent window, under a fixed per-layer budget. The paper's
+//! Table 1 shows where this fails on reasoning traces: hitters that were
+//! hot during prefill stay pinned while the tokens a later reasoning hop
+//! needs are evicted.
+
+use crate::config::BaselineParams;
+
+use super::{top_k_indices, Capabilities, EvictionPolicy, LayerState};
+
+pub struct H2o {
+    params: BaselineParams,
+}
+
+impl H2o {
+    pub fn new(params: BaselineParams) -> Self {
+        H2o { params }
+    }
+
+    fn recent_budget(&self) -> usize {
+        ((self.params.budget as f64 * self.params.h2o_recent_frac) as usize)
+            .max(1)
+    }
+}
+
+impl EvictionPolicy for H2o {
+    fn name(&self) -> &'static str {
+        "H2O"
+    }
+
+    fn gamma(&self) -> f32 {
+        1.0 // cumulative attention, the H2O saliency statistic
+    }
+
+    fn plan(&mut self, _layer: usize, st: &LayerState<'_>) -> Option<Vec<usize>> {
+        if st.len <= self.params.budget {
+            return None;
+        }
+        let recent = self.recent_budget();
+        let heavy = self.params.budget - recent;
+        let mut keep: Vec<usize> =
+            (st.len - recent..st.len).collect();
+        // Heavy hitters among the non-recent prefix.
+        let prefix = &st.scores[..st.len - recent];
+        keep.extend(top_k_indices(prefix, heavy));
+        Some(keep)
+    }
+
+    fn capabilities(&self) -> Capabilities {
+        Capabilities {
+            recency_aware: true,
+            attention_aware: true,
+            layerwise_budget: false,
+            adaptive_budget: false,
+            multi_step_pruning: false,
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::prng::Rng;
+    use crate::util::proptest::check;
+
+    fn st<'a>(scores: &'a [f32], pos: &'a [i32]) -> LayerState<'a> {
+        LayerState {
+            scores,
+            pos,
+            len: scores.len(),
+            step: 10,
+            sparsity: 0.5,
+            capacity: 1024,
+        }
+    }
+
+    fn params(budget: usize) -> BaselineParams {
+        BaselineParams { budget, h2o_recent_frac: 0.5, ..Default::default() }
+    }
+
+    #[test]
+    fn under_budget_keeps_all() {
+        let mut p = H2o::new(params(16));
+        let s = vec![0.1f32; 10];
+        let pos: Vec<i32> = (0..10).collect();
+        assert!(p.plan(0, &st(&s, &pos)).is_none());
+    }
+
+    #[test]
+    fn over_budget_keeps_hitters_and_recents() {
+        let mut p = H2o::new(params(8));
+        let mut s = vec![0.01f32; 32];
+        s[3] = 5.0; // heavy hitter in the prefix
+        let pos: Vec<i32> = (0..32).collect();
+        let keep = p.plan(0, &st(&s, &pos)).unwrap();
+        assert!(keep.contains(&3), "heavy hitter evicted");
+        for i in 28..32 {
+            assert!(keep.contains(&i), "recent {i} evicted");
+        }
+        let mut k = keep.clone();
+        k.sort_unstable();
+        k.dedup();
+        assert_eq!(k.len(), 8);
+    }
+
+    #[test]
+    fn property_budget_respected() {
+        check("h2o-budget", 50, |rng: &mut Rng, size| {
+            let n = 4 + size * 3;
+            let budget = 2 + rng.range(1, 16.min(n.max(2)));
+            let scores: Vec<f32> = (0..n).map(|_| rng.f32()).collect();
+            let pos: Vec<i32> = (0..n as i32).collect();
+            let mut p = H2o::new(params(budget));
+            match p.plan(0, &st(&scores, &pos)) {
+                Some(keep) => {
+                    let mut k = keep;
+                    k.sort_unstable();
+                    k.dedup();
+                    if k.len() > budget {
+                        return Err(format!(
+                            "kept {} > budget {budget}",
+                            k.len()
+                        ));
+                    }
+                    if k.iter().any(|&i| i >= n) {
+                        return Err("oob index".into());
+                    }
+                }
+                None => {
+                    if n > budget {
+                        return Err(format!(
+                            "no plan although len {n} > budget {budget}"
+                        ));
+                    }
+                }
+            }
+            Ok(())
+        });
+    }
+}

@@ -1,0 +1,383 @@
+//! Lethe: layer- and time-adaptive KV pruning (the paper's Algorithm 1 +
+//! RASR + layerwise sparsity-aware budgets).
+//!
+//! Per decode step and layer, once the live length exceeds the layer's
+//! adaptive eviction threshold `L_evict[l]` (scaled by the runtime
+//! sparsity estimate — dense layers get more headroom), the RASR score
+//! vector is sorted and cut into `D` segments; the first segment boundary
+//! where attention has dropped by more than `sparse_ratio` (τ) is the
+//! breakpoint — everything scoring below it, except attention sinks and
+//! the recent window, is evicted.
+//!
+//! Inequality note: the paper's Eq. 4 / Algorithm 1 line 7 reads
+//! `v_head / v_cut <= τ  =>  breakpoint`, but since the sorted values make
+//! the ratio monotone *increasing* in the cut index, a literal reading
+//! would make the first cut either always or never fire and would invert
+//! the paper's own ablation (Table 6: *small* τ over-prunes, *large* τ
+//! retains more and uses more memory). We therefore implement the
+//! evidently intended test: the breakpoint is the first cut whose drop
+//! *exceeds* τ (`v_head / v_cut >= τ`); when no cut exceeds τ the
+//! distribution is still flat, no pruning happens, and the threshold
+//! doubles — the "conservative delay" the paper describes.
+
+use crate::config::LetheParams;
+
+use super::{Capabilities, EvictionPolicy, LayerState};
+
+pub struct LethePolicy {
+    params: LetheParams,
+    /// Per-layer adaptive eviction threshold (tokens).
+    l_evict: Vec<usize>,
+    /// Pruning rounds executed per layer (multi-round counter, exposed
+    /// for tests/diagnostics).
+    pub rounds: Vec<usize>,
+}
+
+impl LethePolicy {
+    pub fn new(params: LetheParams, n_layers: usize) -> Self {
+        let init = params.evict_threshold.max(1);
+        LethePolicy {
+            params,
+            l_evict: vec![init; n_layers],
+            rounds: vec![0; n_layers],
+        }
+    }
+
+    pub fn threshold(&self, layer: usize) -> usize {
+        self.l_evict[layer]
+    }
+
+    /// Effective threshold after the layerwise sparsity scaling: a dense
+    /// layer (sparsity→0) gets up to 2x headroom, a maximally sparse
+    /// layer exactly the base threshold (spatial budget allocation).
+    fn effective_threshold(&self, layer: usize, sparsity: f64) -> usize {
+        let scale = (2.0 - sparsity).clamp(1.0, 2.0);
+        (self.l_evict[layer] as f64 * scale).ceil() as usize
+    }
+
+    /// Algorithm 1 over one layer's state; returns retained indices.
+    /// `eff_threshold` is the sparsity-scaled trigger the caller used —
+    /// the recent window is `recent_ratio` OF THAT BUDGET (not of the
+    /// live length: a live-length-relative window makes `L_evict`'s
+    /// ratchet unbounded, which contradicts the paper's reported memory
+    /// plateau, e.g. 70B flat at ~800 MB past 6k tokens in Fig. 4).
+    fn segmented_shrink(
+        &mut self,
+        layer: usize,
+        st: &LayerState<'_>,
+        eff_threshold: usize,
+    ) -> Option<Vec<usize>> {
+        let n = st.len;
+        let d = self.params.segments;
+        // Sort slot indices by score, descending (top_indices / top_values).
+        let mut order: Vec<usize> = (0..n).collect();
+        order.sort_by(|&a, &b| {
+            st.scores[b]
+                .partial_cmp(&st.scores[a])
+                .unwrap_or(std::cmp::Ordering::Equal)
+                .then(a.cmp(&b))
+        });
+        let v_head = st.scores[order[0]].max(f32::MIN_POSITIVE);
+        // Cut points at segment boundaries: floor(n*j/D), j = 1..D-1.
+        let mut breakpoint: Option<usize> = None;
+        for j in 1..d {
+            let c = n * j / d;
+            if c == 0 || c >= n {
+                continue;
+            }
+            let v_cut = st.scores[order[c]];
+            // Drop sharper than τ ⇒ everything past c is noise.
+            if v_cut <= 0.0 || v_head / v_cut.max(f32::MIN_POSITIVE)
+                >= self.params.sparse_ratio as f32
+            {
+                breakpoint = Some(c);
+                break;
+            }
+        }
+
+        let r = ((self.params.recent_ratio * eff_threshold as f64).ceil()
+            as usize)
+            .max(1)
+            .min(n);
+        match breakpoint {
+            Some(c) => {
+                // salient top-c ∪ sinks ∪ recent window.
+                let mut keep: Vec<usize> = order[..c].to_vec();
+                keep.extend(0..self.params.sink_len.min(n));
+                keep.extend(n.saturating_sub(r)..n);
+                // L_evict ← max(L_evict, breakpoint + r): don't re-trigger
+                // until the cache has regrown past what we just kept.
+                self.l_evict[layer] = self.l_evict[layer].max(c + r);
+                self.rounds[layer] += 1;
+                Some(keep)
+            }
+            None => {
+                // Flat distribution — conservatively delay pruning.
+                self.l_evict[layer] =
+                    (self.l_evict[layer] * 2).min(st.capacity);
+                None
+            }
+        }
+    }
+}
+
+impl EvictionPolicy for LethePolicy {
+    fn name(&self) -> &'static str {
+        "Lethe(ours)"
+    }
+
+    fn gamma(&self) -> f32 {
+        self.params.gamma as f32
+    }
+
+    fn plan(&mut self, layer: usize, st: &LayerState<'_>) -> Option<Vec<usize>> {
+        if st.len == 0 {
+            return None;
+        }
+        let eff = self.effective_threshold(layer, st.sparsity);
+        // Memory-pressure backstop (paper §System Overview: "Lethe
+        // monitors cache size and triggers pruning once a configurable
+        // threshold is exceeded"): the conservative no-breakpoint delay
+        // must not double L_evict past physical capacity. Within 1/8 of
+        // capacity, force a shrink to the effective budget: top scorers
+        // + sinks + recent window.
+        let pressure = st.capacity - st.capacity / 8;
+        if st.len >= pressure.max(1) {
+            // Budget from the BASE threshold (not the ratcheted L_evict,
+            // which the no-breakpoint doubling may have pushed to
+            // capacity — the situation this backstop exists for).
+            let scale = (2.0 - st.sparsity).clamp(1.0, 2.0);
+            let base =
+                (self.params.evict_threshold as f64 * scale).ceil() as usize;
+            let n = st.len;
+            let r = ((self.params.recent_ratio * base as f64).ceil()
+                as usize)
+                .max(1)
+                .min(n);
+            let salient = base.min(n);
+            let mut keep = super::top_k_indices(st.scores, salient);
+            keep.extend(0..self.params.sink_len.min(n));
+            keep.extend(n - r..n);
+            self.l_evict[layer] = base.max(1);
+            self.rounds[layer] += 1;
+            return Some(keep);
+        }
+        if st.len <= eff {
+            return None;
+        }
+        self.segmented_shrink(layer, st, eff)
+    }
+
+    fn capabilities(&self) -> Capabilities {
+        Capabilities {
+            recency_aware: true,
+            attention_aware: true,
+            layerwise_budget: true,
+            adaptive_budget: true,
+            multi_step_pruning: true,
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::prng::Rng;
+    use crate::util::proptest::check;
+
+    fn params() -> LetheParams {
+        LetheParams {
+            sparse_ratio: 10.0,
+            recent_ratio: 0.25,
+            gamma: 0.9,
+            segments: 4,
+            sink_len: 2,
+            evict_threshold: 16,
+            ..LetheParams::default()
+        }
+    }
+
+    fn state<'a>(scores: &'a [f32], pos: &'a [i32]) -> LayerState<'a> {
+        LayerState {
+            scores,
+            pos,
+            len: scores.len(),
+            step: 100,
+            sparsity: 1.0, // scale 1.0 => effective threshold == base
+            capacity: 512,
+        }
+    }
+
+    fn peaked_scores(n: usize) -> (Vec<f32>, Vec<i32>) {
+        // A few heavy hitters, everything else tiny => sharp drop.
+        let mut s = vec![1e-4f32; n];
+        for i in 0..4 {
+            s[i * 7 % n] = 1.0;
+        }
+        (s, (0..n as i32).collect())
+    }
+
+    #[test]
+    fn below_threshold_never_prunes() {
+        let mut p = LethePolicy::new(params(), 2);
+        let (s, pos) = peaked_scores(16);
+        assert!(p.plan(0, &state(&s, &pos)).is_none());
+    }
+
+    #[test]
+    fn sharp_drop_triggers_breakpoint_and_keeps_structure() {
+        let mut p = LethePolicy::new(params(), 2);
+        let (s, pos) = peaked_scores(64);
+        let keep = p.plan(0, &state(&s, &pos)).expect("should prune");
+        let n = s.len();
+        // Sinks and recent window retained (window = recent_ratio of the
+        // effective threshold, which is 16 at sparsity 1.0 => r = 4).
+        for sink in 0..2 {
+            assert!(keep.contains(&sink), "sink {sink} evicted");
+        }
+        let r = (0.25f64 * 16.0).ceil() as usize;
+        for recent in n - r..n {
+            assert!(keep.contains(&recent), "recent {recent} evicted");
+        }
+        // Top scorer retained.
+        let top = s
+            .iter()
+            .enumerate()
+            .max_by(|a, b| a.1.partial_cmp(b.1).unwrap())
+            .unwrap()
+            .0;
+        assert!(keep.contains(&top));
+        // Actually pruned something.
+        let mut uniq = keep.clone();
+        uniq.sort_unstable();
+        uniq.dedup();
+        assert!(uniq.len() < n);
+        assert_eq!(p.rounds[0], 1);
+    }
+
+    #[test]
+    fn flat_distribution_delays_and_doubles_threshold() {
+        let mut p = LethePolicy::new(params(), 2);
+        let s = vec![0.5f32; 64];
+        let pos: Vec<i32> = (0..64).collect();
+        let before = p.threshold(0);
+        assert!(p.plan(0, &state(&s, &pos)).is_none());
+        assert_eq!(p.threshold(0), before * 2);
+        // Threshold saturates at capacity.
+        for _ in 0..20 {
+            let _ = p.plan(0, &state(&s, &pos));
+        }
+        assert!(p.threshold(0) <= 512);
+    }
+
+    #[test]
+    fn dense_layers_get_more_headroom() {
+        let mut p = LethePolicy::new(params(), 2);
+        let (s, pos) = peaked_scores(20);
+        // len 20 > base threshold 16, but a dense layer (sparsity 0)
+        // scales the threshold to 32 => no pruning.
+        let mut st = state(&s, &pos);
+        st.sparsity = 0.0;
+        assert!(p.plan(0, &st).is_none());
+        // Same length on a sparse layer prunes.
+        let mut st2 = state(&s, &pos);
+        st2.sparsity = 1.0;
+        assert!(p.plan(1, &st2).is_some());
+    }
+
+    #[test]
+    fn larger_tau_is_more_conservative() {
+        // Table 6 semantics: raising sparse_ratio retains more tokens.
+        let (s, pos) = {
+            // Smoothly decaying scores.
+            let n = 64;
+            let s: Vec<f32> =
+                (0..n).map(|i| 1.0 / (1.0 + i as f32)).collect();
+            (s, (0..n as i32).collect::<Vec<i32>>())
+        };
+        let mut retained = Vec::new();
+        for tau in [2.0, 8.0, 1000.0] {
+            let mut prm = params();
+            prm.sparse_ratio = tau;
+            let mut p = LethePolicy::new(prm, 1);
+            let plan = p.plan(0, &state(&s, &pos));
+            let kept = plan
+                .map(|mut k| {
+                    k.sort_unstable();
+                    k.dedup();
+                    k.len()
+                })
+                .unwrap_or(s.len());
+            retained.push(kept);
+        }
+        assert!(retained[0] <= retained[1] && retained[1] <= retained[2],
+                "retention not monotone in tau: {retained:?}");
+        // τ=1000 on this gentle decay: no breakpoint, keeps all.
+        assert_eq!(retained[2], s.len());
+    }
+
+    #[test]
+    fn memory_pressure_backstop_fires_even_on_flat_scores() {
+        // Flat scores never produce a breakpoint, but near capacity the
+        // backstop must shrink anyway (and reset the ratcheted
+        // threshold), bounding memory as the paper's Fig. 4 plateau
+        // requires.
+        let mut p = LethePolicy::new(params(), 1);
+        let n = 120;
+        let s = vec![0.5f32; n];
+        let pos: Vec<i32> = (0..n as i32).collect();
+        let mut st = state(&s, &pos);
+        st.capacity = 128; // pressure line at 112
+        let keep = p.plan(0, &st).expect("backstop must fire");
+        let mut k = keep;
+        k.sort_unstable();
+        k.dedup();
+        assert!(k.len() < n, "backstop kept everything");
+        assert!(k.len() <= 16 + 2 + 4 + 1, "kept {} > budget-ish", k.len());
+        assert!(p.threshold(0) <= 32, "threshold not reset");
+        // Far from capacity the same flat scores only delay.
+        let mut p2 = LethePolicy::new(params(), 1);
+        let mut st2 = state(&s, &pos);
+        st2.capacity = 4096;
+        assert!(p2.plan(0, &st2).is_none());
+    }
+
+    #[test]
+    fn property_plan_indices_always_valid() {
+        check("lethe-plan-valid", 60, |rng: &mut Rng, size| {
+            let n = 8 + size * 4;
+            let scores: Vec<f32> =
+                (0..n).map(|_| rng.f32() * rng.f32()).collect();
+            let pos: Vec<i32> = (0..n as i32).collect();
+            let mut prm = params();
+            prm.evict_threshold = 4;
+            prm.sparse_ratio = 1.5 + rng.f64() * 20.0;
+            prm.recent_ratio = 0.05 + rng.f64() * 0.4;
+            let mut p = LethePolicy::new(prm.clone(), 1);
+            let st = LayerState {
+                scores: &scores,
+                pos: &pos,
+                len: n,
+                step: 1,
+                sparsity: rng.f64(),
+                capacity: 4 * n,
+            };
+            if let Some(keep) = p.plan(0, &st) {
+                if keep.iter().any(|&i| i >= n) {
+                    return Err(format!("index out of range (n={n})"));
+                }
+                let mut k = keep.clone();
+                k.sort_unstable();
+                k.dedup();
+                if k.is_empty() {
+                    return Err("empty retention".into());
+                }
+                // The current (most recent) token always survives.
+                if !keep.contains(&(n - 1)) {
+                    return Err("current token evicted".into());
+                }
+            }
+            Ok(())
+        });
+    }
+}

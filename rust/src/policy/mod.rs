@@ -1,0 +1,194 @@
+//! Eviction policies: Lethe (the paper's contribution) and the four
+//! baselines it is evaluated against (FullKV, H2O, StreamingLLM,
+//! PyramidKV), all behind one trait so the engine, the accuracy harness
+//! (Table 1) and the simulator (Tables 2–3) compare like for like.
+//!
+//! A policy instance is **per sequence** (it owns per-layer adaptive
+//! state, e.g. Lethe's `L_evict` thresholds). After every decode step the
+//! engine updates the cache's score accumulator with the policy's γ
+//! (RASR Eq. 5) and calls [`EvictionPolicy::plan`] per layer; `Some(keep)`
+//! triggers [`crate::kvcache::GroupCache::apply_retention`].
+
+pub mod fullkv;
+pub mod h2o;
+pub mod lethe;
+pub mod pyramid;
+pub mod streaming;
+
+use crate::config::ServingConfig;
+
+pub use fullkv::FullKv;
+pub use h2o::H2o;
+pub use lethe::LethePolicy;
+pub use pyramid::PyramidKv;
+pub use streaming::StreamingLlm;
+
+/// What the policy sees for one (layer, sequence) after a decode step.
+#[derive(Clone, Copy, Debug)]
+pub struct LayerState<'a> {
+    /// Accumulated attention scores per cache slot (γ pre-applied).
+    pub scores: &'a [f32],
+    /// Original absolute position of each cache slot (recency signal).
+    pub pos: &'a [i32],
+    /// Live slots (== scores.len() == pos.len()).
+    pub len: usize,
+    /// Decode steps completed for this sequence.
+    pub step: usize,
+    /// EMA Hoyer sparsity of this layer's recent attention (Eq. 1).
+    pub sparsity: f64,
+    /// Hard per-sequence capacity (largest compiled bucket).
+    pub capacity: usize,
+}
+
+/// Table 4 capability row.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub struct Capabilities {
+    pub recency_aware: bool,
+    pub attention_aware: bool,
+    pub layerwise_budget: bool,
+    pub adaptive_budget: bool,
+    pub multi_step_pruning: bool,
+}
+
+pub trait EvictionPolicy: Send {
+    fn name(&self) -> &'static str;
+
+    /// Score decay γ the engine applies when accumulating attention mass
+    /// (Eq. 5). 1.0 = plain cumulative sum (H2O-style).
+    fn gamma(&self) -> f32 {
+        1.0
+    }
+
+    /// Retention decision for one layer. `None` = keep everything this
+    /// step; `Some(keep)` = retain exactly these slot indices (any order,
+    /// deduplicated downstream; relative order is preserved by the cache).
+    fn plan(&mut self, layer: usize, st: &LayerState<'_>) -> Option<Vec<usize>>;
+
+    fn capabilities(&self) -> Capabilities;
+}
+
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum PolicyKind {
+    FullKv,
+    Lethe,
+    H2o,
+    StreamingLlm,
+    PyramidKv,
+}
+
+impl PolicyKind {
+    pub fn parse(s: &str) -> anyhow::Result<PolicyKind> {
+        Ok(match s.to_ascii_lowercase().as_str() {
+            "fullkv" | "full" => PolicyKind::FullKv,
+            "lethe" => PolicyKind::Lethe,
+            "h2o" => PolicyKind::H2o,
+            "streamingllm" | "streaming" => PolicyKind::StreamingLlm,
+            "pyramidkv" | "pyramid" => PolicyKind::PyramidKv,
+            _ => anyhow::bail!(
+                "unknown policy '{s}' \
+                 (fullkv|lethe|h2o|streamingllm|pyramidkv)"
+            ),
+        })
+    }
+
+    pub fn label(&self) -> &'static str {
+        match self {
+            PolicyKind::FullKv => "FullKV",
+            PolicyKind::Lethe => "Lethe(ours)",
+            PolicyKind::H2o => "H2O",
+            PolicyKind::StreamingLlm => "StreamingLLM",
+            PolicyKind::PyramidKv => "PyramidKV",
+        }
+    }
+
+    pub const ALL: [PolicyKind; 5] = [
+        PolicyKind::FullKv,
+        PolicyKind::H2o,
+        PolicyKind::StreamingLlm,
+        PolicyKind::PyramidKv,
+        PolicyKind::Lethe,
+    ];
+}
+
+/// Build a fresh per-sequence policy instance.
+pub fn make_policy(
+    kind: PolicyKind,
+    cfg: &ServingConfig,
+    n_layers: usize,
+) -> Box<dyn EvictionPolicy> {
+    match kind {
+        PolicyKind::FullKv => Box::new(FullKv),
+        PolicyKind::Lethe => Box::new(LethePolicy::new(cfg.lethe.clone(), n_layers)),
+        PolicyKind::H2o => Box::new(H2o::new(cfg.baseline.clone())),
+        PolicyKind::StreamingLlm => {
+            Box::new(StreamingLlm::new(cfg.baseline.clone()))
+        }
+        PolicyKind::PyramidKv => {
+            Box::new(PyramidKv::new(cfg.baseline.clone(), n_layers))
+        }
+    }
+}
+
+/// Indices of the `k` largest scores (stable under ties by lower index).
+/// Shared by H2O / PyramidKV / Lethe.
+pub fn top_k_indices(scores: &[f32], k: usize) -> Vec<usize> {
+    let k = k.min(scores.len());
+    let mut idx: Vec<usize> = (0..scores.len()).collect();
+    // Ties broken toward lower index for determinism.
+    idx.sort_by(|&a, &b| {
+        scores[b]
+            .partial_cmp(&scores[a])
+            .unwrap_or(std::cmp::Ordering::Equal)
+            .then(a.cmp(&b))
+    });
+    idx.truncate(k);
+    idx
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn parse_and_labels() {
+        assert_eq!(PolicyKind::parse("Lethe").unwrap(), PolicyKind::Lethe);
+        assert_eq!(PolicyKind::parse("h2o").unwrap(), PolicyKind::H2o);
+        assert_eq!(
+            PolicyKind::parse("streaming").unwrap(),
+            PolicyKind::StreamingLlm
+        );
+        assert!(PolicyKind::parse("nope").is_err());
+        assert_eq!(PolicyKind::Lethe.label(), "Lethe(ours)");
+    }
+
+    #[test]
+    fn top_k_ordering_and_ties() {
+        let s = [0.1f32, 0.9, 0.5, 0.9, 0.0];
+        assert_eq!(top_k_indices(&s, 3), vec![1, 3, 2]);
+        assert_eq!(top_k_indices(&s, 0), Vec::<usize>::new());
+        assert_eq!(top_k_indices(&s, 10).len(), 5);
+    }
+
+    #[test]
+    fn factory_builds_every_kind() {
+        let cfg = ServingConfig::default();
+        for kind in PolicyKind::ALL {
+            let p = make_policy(kind, &cfg, 4);
+            assert_eq!(p.name(), kind.label());
+        }
+    }
+
+    #[test]
+    fn table4_capability_matrix() {
+        let cfg = ServingConfig::default();
+        let lethe = make_policy(PolicyKind::Lethe, &cfg, 4);
+        let caps = lethe.capabilities();
+        assert!(caps.recency_aware && caps.attention_aware);
+        assert!(caps.layerwise_budget && caps.adaptive_budget);
+        assert!(caps.multi_step_pruning);
+        let h2o = make_policy(PolicyKind::H2o, &cfg, 4);
+        assert!(!h2o.capabilities().layerwise_budget);
+        let s = make_policy(PolicyKind::StreamingLlm, &cfg, 4);
+        assert!(!s.capabilities().attention_aware);
+    }
+}

@@ -1,0 +1,120 @@
+//! PyramidKV (Cai et al. 2024): *static* layerwise budget allocation on a
+//! pyramidal schedule — lower layers keep more tokens, upper layers fewer
+//! — with H2O-style selection inside each layer's budget. The paper's
+//! Figure 1 observation (non-monotone sparsity in reasoning models) is
+//! exactly why this static pyramid loses to Lethe's runtime estimate on
+//! CoT workloads.
+
+use crate::config::BaselineParams;
+
+use super::{top_k_indices, Capabilities, EvictionPolicy, LayerState};
+
+pub struct PyramidKv {
+    params: BaselineParams,
+    /// Per-layer budgets, fixed at construction (the "static" in static
+    /// allocation). Mean over layers equals `params.budget`.
+    budgets: Vec<usize>,
+}
+
+impl PyramidKv {
+    pub fn new(params: BaselineParams, n_layers: usize) -> Self {
+        let beta = params.pyramid_beta.max(1.0);
+        // Geometric decay from bottom to top, normalised to mean 1.
+        let ws: Vec<f64> = (0..n_layers)
+            .map(|l| beta.powf(-(l as f64) / (n_layers.max(2) - 1) as f64))
+            .collect();
+        let mean = ws.iter().sum::<f64>() / n_layers as f64;
+        let budgets = ws
+            .iter()
+            .map(|w| ((w / mean) * params.budget as f64).round().max(4.0) as usize)
+            .collect();
+        PyramidKv { params, budgets }
+    }
+
+    pub fn budget(&self, layer: usize) -> usize {
+        self.budgets[layer]
+    }
+}
+
+impl EvictionPolicy for PyramidKv {
+    fn name(&self) -> &'static str {
+        "PyramidKV"
+    }
+
+    fn gamma(&self) -> f32 {
+        1.0
+    }
+
+    fn plan(&mut self, layer: usize, st: &LayerState<'_>) -> Option<Vec<usize>> {
+        let budget = self.budgets[layer];
+        if st.len <= budget {
+            return None;
+        }
+        let recent = (budget / 2).max(1);
+        let heavy = budget - recent;
+        let mut keep: Vec<usize> = (st.len - recent..st.len).collect();
+        keep.extend(top_k_indices(&st.scores[..st.len - recent], heavy));
+        keep.extend(0..self.params.sink_len.min(st.len));
+        Some(keep)
+    }
+
+    fn capabilities(&self) -> Capabilities {
+        Capabilities {
+            recency_aware: true,
+            attention_aware: true,
+            layerwise_budget: true,
+            adaptive_budget: false,
+            multi_step_pruning: false,
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn budgets_decay_with_depth_and_mean_matches() {
+        let params = BaselineParams { budget: 100, pyramid_beta: 3.0, ..Default::default() };
+        let p = PyramidKv::new(params, 8);
+        for l in 1..8 {
+            assert!(p.budget(l) <= p.budget(l - 1),
+                    "budget should not grow with depth");
+        }
+        let mean: f64 =
+            (0..8).map(|l| p.budget(l) as f64).sum::<f64>() / 8.0;
+        assert!((mean - 100.0).abs() < 10.0, "mean budget {mean}");
+    }
+
+    #[test]
+    fn beta_one_is_uniform() {
+        let params = BaselineParams { budget: 64, pyramid_beta: 1.0, ..Default::default() };
+        let p = PyramidKv::new(params, 6);
+        for l in 0..6 {
+            assert_eq!(p.budget(l), 64);
+        }
+    }
+
+    #[test]
+    fn per_layer_trigger_points_differ() {
+        let params = BaselineParams { budget: 32, pyramid_beta: 4.0, ..Default::default() };
+        let mut p = PyramidKv::new(params, 4);
+        let n = 40;
+        let s = vec![0.1f32; n];
+        let pos: Vec<i32> = (0..n as i32).collect();
+        let st = LayerState {
+            scores: &s,
+            pos: &pos,
+            len: n,
+            step: 3,
+            sparsity: 0.5,
+            capacity: 512,
+        };
+        // Bottom layer budget > 40 => no prune; top layer budget < 40 =>
+        // prune. The pyramid is visible through behaviour.
+        assert!(p.budget(0) > n);
+        assert!(p.plan(0, &st).is_none());
+        assert!(p.budget(3) < n);
+        assert!(p.plan(3, &st).is_some());
+    }
+}

@@ -1,0 +1,82 @@
+//! StreamingLLM (Xiao et al. 2023): attention sinks + a fixed sliding
+//! window, no attention statistics at all. The paper's Table 1 shows the
+//! failure mode this repo reproduces: as soon as the token a reasoning
+//! hop needs slides out of the window, the chain breaks.
+
+use crate::config::BaselineParams;
+
+use super::{Capabilities, EvictionPolicy, LayerState};
+
+pub struct StreamingLlm {
+    params: BaselineParams,
+}
+
+impl StreamingLlm {
+    pub fn new(params: BaselineParams) -> Self {
+        StreamingLlm { params }
+    }
+}
+
+impl EvictionPolicy for StreamingLlm {
+    fn name(&self) -> &'static str {
+        "StreamingLLM"
+    }
+
+    fn plan(&mut self, _layer: usize, st: &LayerState<'_>) -> Option<Vec<usize>> {
+        if st.len <= self.params.budget {
+            return None;
+        }
+        let sink = self.params.sink_len.min(st.len);
+        let window = self.params.budget.saturating_sub(sink).max(1);
+        let mut keep: Vec<usize> = (0..sink).collect();
+        keep.extend(st.len - window..st.len);
+        Some(keep)
+    }
+
+    fn capabilities(&self) -> Capabilities {
+        Capabilities {
+            recency_aware: true,
+            attention_aware: false,
+            layerwise_budget: false,
+            adaptive_budget: false,
+            multi_step_pruning: false,
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn st<'a>(scores: &'a [f32], pos: &'a [i32]) -> LayerState<'a> {
+        LayerState {
+            scores,
+            pos,
+            len: scores.len(),
+            step: 5,
+            sparsity: 0.5,
+            capacity: 1024,
+        }
+    }
+
+    #[test]
+    fn window_is_exact() {
+        let params = BaselineParams { budget: 8, sink_len: 2, ..Default::default() };
+        let mut p = StreamingLlm::new(params);
+        let s = vec![9.0f32; 20]; // scores must be ignored
+        let pos: Vec<i32> = (0..20).collect();
+        let keep = p.plan(0, &st(&s, &pos)).unwrap();
+        let mut k = keep;
+        k.sort_unstable();
+        assert_eq!(k, vec![0, 1, 14, 15, 16, 17, 18, 19]);
+    }
+
+    #[test]
+    fn under_budget_noop() {
+        let params = BaselineParams { budget: 32, ..Default::default() };
+        let mut p = StreamingLlm::new(params);
+        let s = vec![0.0f32; 8];
+        let pos: Vec<i32> = (0..8).collect();
+        assert!(p.plan(0, &st(&s, &pos)).is_none());
+    }
+}

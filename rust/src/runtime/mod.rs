@@ -1,0 +1,9 @@
+//! PJRT runtime: loads the AOT HLO-text artifacts, compiles them on the
+//! CPU PJRT client, and exposes typed call wrappers. This is the only
+//! module that touches the `xla` crate directly.
+
+pub mod registry;
+pub mod tensors;
+
+pub use registry::{DecodeOut, PrefillOut, Runtime};
+pub use tensors::{HostTensorF32, HostTensorI32};

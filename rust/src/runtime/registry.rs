@@ -1,0 +1,220 @@
+//! Executable registry: one compiled PJRT executable per AOT shape bucket
+//! (`prefill_t{T}`, `decode_b{B}_c{C}`), loaded lazily from HLO text and
+//! cached. Also owns the typed call wrappers that marshal host tensors to
+//! buffers, run `execute_b` with the persistent weight buffers, and
+//! decompose the output tuple.
+
+use std::cell::RefCell;
+use std::collections::HashMap;
+use std::time::Instant;
+
+use anyhow::{anyhow, Context, Result};
+use xla::{HloModuleProto, PjRtBuffer, PjRtClient, PjRtLoadedExecutable,
+          XlaComputation};
+
+use crate::model::{ModelMeta, Weights};
+use crate::runtime::tensors::{scalar_i32, HostTensorF32, HostTensorI32};
+
+pub struct Runtime {
+    pub client: PjRtClient,
+    pub meta: ModelMeta,
+    pub weights: Weights,
+    exes: RefCell<HashMap<String, PjRtLoadedExecutable>>,
+    /// (name, compile seconds) log for EXPERIMENTS.md.
+    compile_log: RefCell<Vec<(String, f64)>>,
+}
+
+/// Decode-step outputs (host side).
+#[derive(Clone, Debug)]
+pub struct DecodeOut {
+    pub logits: HostTensorF32,  // [B, V]
+    pub k_new: HostTensorF32,   // [L, B, Hkv, D]
+    pub v_new: HostTensorF32,   // [L, B, Hkv, D]
+    pub probs: HostTensorF32,   // [L, B, Hq, C]
+}
+
+/// Prefill outputs (host side).
+#[derive(Clone, Debug)]
+pub struct PrefillOut {
+    pub logits: HostTensorF32,  // [1, V]
+    pub k_all: HostTensorF32,   // [L, 1, Hkv, T, D]
+    pub v_all: HostTensorF32,   // [L, 1, Hkv, T, D]
+    pub scores: HostTensorF32,  // [L, 1, Hq, T]
+}
+
+impl Runtime {
+    /// Create the PJRT CPU client, parse the manifest, upload weights.
+    pub fn load(artifacts_dir: &std::path::Path) -> Result<Runtime> {
+        let client = PjRtClient::cpu().context("creating PJRT CPU client")?;
+        let meta = ModelMeta::load(artifacts_dir)?;
+        let weights = Weights::load(&client, &meta)?;
+        crate::log_info!(
+            "runtime up: platform={} model={} params ({})",
+            client.platform_name(),
+            weights.param_count(),
+            meta.dims.weights_source
+        );
+        Ok(Runtime {
+            client,
+            meta,
+            weights,
+            exes: RefCell::new(HashMap::new()),
+            compile_log: RefCell::new(Vec::new()),
+        })
+    }
+
+    /// Compile (or fetch cached) an executable by manifest name.
+    fn exe_for(&self, name: &str) -> Result<()> {
+        if self.exes.borrow().contains_key(name) {
+            return Ok(());
+        }
+        let spec = self
+            .meta
+            .executables
+            .get(name)
+            .ok_or_else(|| anyhow!(
+                "executable '{name}' not in manifest — rebuild artifacts"))?;
+        let path = self.meta.dir.join(&spec.file);
+        let t0 = Instant::now();
+        let proto = HloModuleProto::from_text_file(
+            path.to_str().ok_or_else(|| anyhow!("bad path"))?,
+        )
+        .with_context(|| format!("parsing HLO text {path:?}"))?;
+        let comp = XlaComputation::from_proto(&proto);
+        let exe = self
+            .client
+            .compile(&comp)
+            .with_context(|| format!("compiling {name}"))?;
+        let dt = t0.elapsed().as_secs_f64();
+        crate::log_info!("compiled {name} in {dt:.2}s");
+        self.compile_log.borrow_mut().push((name.to_string(), dt));
+        self.exes.borrow_mut().insert(name.to_string(), exe);
+        Ok(())
+    }
+
+    /// Eagerly compile every executable needed for a profile (avoids
+    /// first-request latency spikes; called by the server at startup).
+    pub fn warmup(&self, names: &[String]) -> Result<()> {
+        for n in names {
+            self.exe_for(n)?;
+        }
+        Ok(())
+    }
+
+    pub fn compile_log(&self) -> Vec<(String, f64)> {
+        self.compile_log.borrow().clone()
+    }
+
+    fn run(&self, name: &str, extra: &[PjRtBuffer]) -> Result<Vec<xla::Literal>> {
+        self.exe_for(name)?;
+        let exes = self.exes.borrow();
+        let exe = exes.get(name).unwrap();
+        let mut args: Vec<&PjRtBuffer> =
+            self.weights.buffers.iter().collect();
+        args.extend(extra.iter());
+        let out = exe
+            .execute_b(&args)
+            .with_context(|| format!("executing {name}"))?;
+        let lit = out[0][0]
+            .to_literal_sync()
+            .with_context(|| format!("fetching {name} outputs"))?;
+        Ok(lit.to_tuple()?)
+    }
+
+    /// Run `decode_b{B}_c{C}`.
+    ///
+    /// kv_k/kv_v [L,B,Hkv,C,D], lens [L,B], tokens [B], positions [B].
+    pub fn decode(
+        &self,
+        batch: usize,
+        capacity: usize,
+        kv_k: &HostTensorF32,
+        kv_v: &HostTensorF32,
+        lens: &HostTensorI32,
+        tokens: &[i32],
+        positions: &[i32],
+    ) -> Result<DecodeOut> {
+        let name = format!("decode_b{batch}_c{capacity}");
+        let extra = vec![
+            kv_k.upload(&self.client)?,
+            kv_v.upload(&self.client)?,
+            lens.upload(&self.client)?,
+            self.client
+                .buffer_from_host_buffer(tokens, &[batch], None)?,
+            self.client
+                .buffer_from_host_buffer(positions, &[batch], None)?,
+        ];
+        let mut outs = self.run(&name, &extra)?;
+        anyhow::ensure!(outs.len() == 4, "decode returned {}", outs.len());
+        let probs = HostTensorF32::from_literal(&outs.pop().unwrap())?;
+        let v_new = HostTensorF32::from_literal(&outs.pop().unwrap())?;
+        let k_new = HostTensorF32::from_literal(&outs.pop().unwrap())?;
+        let logits = HostTensorF32::from_literal(&outs.pop().unwrap())?;
+        Ok(DecodeOut { logits, k_new, v_new, probs })
+    }
+
+    /// Run `prefill_t{T}`; tokens are padded to the bucket size.
+    pub fn prefill(&self, bucket: usize, tokens: &[i32]) -> Result<PrefillOut> {
+        anyhow::ensure!(
+            tokens.len() <= bucket,
+            "prompt of {} tokens exceeds bucket {bucket}",
+            tokens.len()
+        );
+        let name = format!("prefill_t{bucket}");
+        let mut padded = tokens.to_vec();
+        padded.resize(bucket, 0); // PAD id = 0
+        let extra = vec![
+            self.client
+                .buffer_from_host_buffer(&padded, &[1, bucket], None)?,
+            scalar_i32(&self.client, tokens.len() as i32)?,
+        ];
+        let mut outs = self.run(&name, &extra)?;
+        anyhow::ensure!(outs.len() == 4, "prefill returned {}", outs.len());
+        let scores = HostTensorF32::from_literal(&outs.pop().unwrap())?;
+        let v_all = HostTensorF32::from_literal(&outs.pop().unwrap())?;
+        let k_all = HostTensorF32::from_literal(&outs.pop().unwrap())?;
+        let logits = HostTensorF32::from_literal(&outs.pop().unwrap())?;
+        Ok(PrefillOut { logits, k_all, v_all, scores })
+    }
+
+    /// Smallest compiled prefill bucket that fits `n` tokens.
+    pub fn prefill_bucket(&self, n: usize) -> Result<usize> {
+        self.meta
+            .prefill_ts
+            .iter()
+            .copied()
+            .filter(|&t| t >= n)
+            .min()
+            .ok_or_else(|| anyhow!(
+                "prompt of {n} tokens exceeds largest prefill bucket {:?}",
+                self.meta.prefill_ts.iter().max()))
+    }
+
+    /// Smallest compiled decode capacity >= `need` for a profile.
+    pub fn capacity_bucket(&self, profile: &str, need: usize) -> Result<usize> {
+        let caps = self
+            .meta
+            .decode_capacities
+            .get(profile)
+            .ok_or_else(|| anyhow!("unknown profile '{profile}'"))?;
+        caps.iter()
+            .copied()
+            .filter(|&c| c >= need)
+            .min()
+            .ok_or_else(|| anyhow!(
+                "cache length {need} exceeds max capacity {:?} — OOM",
+                caps.iter().max()))
+    }
+
+    /// Compiled decode batch sizes for a profile (ascending).
+    pub fn batch_buckets(&self, profile: &str) -> Vec<usize> {
+        let mut b = self
+            .meta
+            .decode_batches
+            .get(profile)
+            .cloned()
+            .unwrap_or_default();
+        b.sort_unstable();
+        b
+    }
+}

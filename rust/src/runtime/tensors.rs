@@ -1,0 +1,113 @@
+//! Minimal host tensors (row-major, owned Vec) used on the boundary
+//! between the rust coordinator and PJRT. Deliberately tiny: the engine
+//! only needs shaped f32/i32 carriers with upload/download helpers.
+
+use anyhow::{ensure, Result};
+use xla::{ElementType, Literal, PjRtBuffer, PjRtClient};
+
+#[derive(Clone, Debug, PartialEq)]
+pub struct HostTensorF32 {
+    pub shape: Vec<usize>,
+    pub data: Vec<f32>,
+}
+
+#[derive(Clone, Debug, PartialEq)]
+pub struct HostTensorI32 {
+    pub shape: Vec<usize>,
+    pub data: Vec<i32>,
+}
+
+impl HostTensorF32 {
+    pub fn zeros(shape: &[usize]) -> Self {
+        let n = shape.iter().product();
+        HostTensorF32 { shape: shape.to_vec(), data: vec![0.0; n] }
+    }
+
+    pub fn from_vec(shape: &[usize], data: Vec<f32>) -> Result<Self> {
+        ensure!(
+            shape.iter().product::<usize>() == data.len(),
+            "shape {shape:?} != {} elements",
+            data.len()
+        );
+        Ok(HostTensorF32 { shape: shape.to_vec(), data })
+    }
+
+    pub fn numel(&self) -> usize {
+        self.data.len()
+    }
+
+    pub fn upload(&self, client: &PjRtClient) -> Result<PjRtBuffer> {
+        Ok(client.buffer_from_host_buffer(&self.data, &self.shape, None)?)
+    }
+
+    pub fn from_literal(lit: &Literal) -> Result<Self> {
+        let shape = lit.array_shape()?;
+        let dims: Vec<usize> = shape.dims().iter().map(|&d| d as usize).collect();
+        let data = lit.to_vec::<f32>()?;
+        Self::from_vec(&dims, data)
+    }
+}
+
+impl HostTensorI32 {
+    pub fn zeros(shape: &[usize]) -> Self {
+        let n = shape.iter().product();
+        HostTensorI32 { shape: shape.to_vec(), data: vec![0; n] }
+    }
+
+    pub fn from_vec(shape: &[usize], data: Vec<i32>) -> Result<Self> {
+        ensure!(
+            shape.iter().product::<usize>() == data.len(),
+            "shape {shape:?} != {} elements",
+            data.len()
+        );
+        Ok(HostTensorI32 { shape: shape.to_vec(), data })
+    }
+
+    pub fn upload(&self, client: &PjRtClient) -> Result<PjRtBuffer> {
+        Ok(client.buffer_from_host_buffer(&self.data, &self.shape, None)?)
+    }
+
+    pub fn from_literal(lit: &Literal) -> Result<Self> {
+        let shape = lit.array_shape()?;
+        let dims: Vec<usize> = shape.dims().iter().map(|&d| d as usize).collect();
+        let data = lit.to_vec::<i32>()?;
+        Self::from_vec(&dims, data)
+    }
+}
+
+/// Scalar i32 upload helper.
+pub fn scalar_i32(client: &PjRtClient, v: i32) -> Result<PjRtBuffer> {
+    Ok(client.buffer_from_host_buffer(&[v], &[], None)?)
+}
+
+/// Row-major strides for a shape.
+pub fn strides(shape: &[usize]) -> Vec<usize> {
+    let mut s = vec![1; shape.len()];
+    for i in (0..shape.len().saturating_sub(1)).rev() {
+        s[i] = s[i + 1] * shape[i + 1];
+    }
+    s
+}
+
+#[allow(unused)]
+fn element_type_size(t: ElementType) -> usize {
+    t.element_size_in_bytes()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn strides_row_major() {
+        assert_eq!(strides(&[2, 3, 4]), vec![12, 4, 1]);
+        assert_eq!(strides(&[5]), vec![1]);
+        assert_eq!(strides(&[]), Vec::<usize>::new());
+    }
+
+    #[test]
+    fn from_vec_validates() {
+        assert!(HostTensorF32::from_vec(&[2, 2], vec![0.0; 3]).is_err());
+        assert!(HostTensorI32::from_vec(&[2, 2], vec![0; 4]).is_ok());
+    }
+}

@@ -1,0 +1,241 @@
+//! Request router / front door. Clients submit text prompts and receive
+//! completions over channels; a dedicated engine thread owns the PJRT
+//! runtime (it is not Sync) and runs the scheduler loop. This is the L3
+//! "serving system" shell: validation, routing, per-request policy
+//! override, graceful shutdown, latency accounting.
+
+pub mod tcp;
+
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::mpsc::{self, Receiver, Sender};
+use std::sync::{Arc, Mutex};
+use std::thread::JoinHandle;
+use std::time::Instant;
+
+use anyhow::{Context, Result};
+
+use crate::config::ServingConfig;
+use crate::engine::Engine;
+use crate::model::Tokenizer;
+use crate::policy::PolicyKind;
+use crate::runtime::Runtime;
+use crate::scheduler::{Request, Scheduler};
+
+#[derive(Clone, Debug)]
+pub struct GenerateRequest {
+    pub prompt: String,
+    pub max_new_tokens: usize,
+    /// None = server default policy.
+    pub policy: Option<PolicyKind>,
+}
+
+#[derive(Clone, Debug)]
+pub struct GenerateResponse {
+    pub id: u64,
+    pub text: String,
+    pub finish: String,
+    pub prompt_tokens: usize,
+    pub generated_tokens: usize,
+    pub ttft_s: f64,
+    pub total_s: f64,
+    pub prune_rounds: usize,
+}
+
+enum Msg {
+    Generate(GenerateRequest, Sender<Result<GenerateResponse>>),
+    Shutdown,
+}
+
+/// Handle to the serving thread.
+pub struct Server {
+    tx: Sender<Msg>,
+    handle: Option<JoinHandle<()>>,
+    next_id: AtomicU64,
+    pub tokenizer: Tokenizer,
+}
+
+impl Server {
+    /// Boot the engine thread: loads artifacts, warms the executables for
+    /// the configured profile, then serves until shutdown.
+    pub fn start(cfg: ServingConfig, default_policy: PolicyKind) -> Result<Server> {
+        let rt_probe = crate::model::ModelMeta::load(
+            std::path::Path::new(&cfg.artifacts_dir),
+        )?;
+        let tokenizer = Tokenizer::from_meta(&rt_probe)?;
+        let (tx, rx) = mpsc::channel::<Msg>();
+        let cfg2 = cfg.clone();
+        let (boot_tx, boot_rx) = mpsc::channel::<Result<()>>();
+        let handle = std::thread::Builder::new()
+            .name("lethe-engine".into())
+            .spawn(move || {
+                engine_thread(cfg2, default_policy, rx, boot_tx);
+            })
+            .context("spawning engine thread")?;
+        boot_rx
+            .recv()
+            .context("engine thread died during boot")??;
+        Ok(Server { tx, handle: Some(handle), next_id: AtomicU64::new(1), tokenizer })
+    }
+
+    /// Submit a request; returns a receiver for the completion.
+    pub fn submit(
+        &self,
+        req: GenerateRequest,
+    ) -> Result<Receiver<Result<GenerateResponse>>> {
+        let (tx, rx) = mpsc::channel();
+        self.tx
+            .send(Msg::Generate(req, tx))
+            .map_err(|_| anyhow::anyhow!("server is shut down"))?;
+        Ok(rx)
+    }
+
+    /// Convenience: synchronous request/response.
+    pub fn generate(&self, req: GenerateRequest) -> Result<GenerateResponse> {
+        let rx = self.submit(req)?;
+        rx.recv().context("engine thread dropped the request")?
+    }
+
+    pub fn next_request_id(&self) -> u64 {
+        self.next_id.fetch_add(1, Ordering::Relaxed)
+    }
+
+    pub fn shutdown(mut self) {
+        let _ = self.tx.send(Msg::Shutdown);
+        if let Some(h) = self.handle.take() {
+            let _ = h.join();
+        }
+    }
+}
+
+impl Drop for Server {
+    fn drop(&mut self) {
+        let _ = self.tx.send(Msg::Shutdown);
+        if let Some(h) = self.handle.take() {
+            let _ = h.join();
+        }
+    }
+}
+
+struct Pending {
+    reply: Sender<Result<GenerateResponse>>,
+    prompt_tokens: usize,
+}
+
+fn engine_thread(
+    cfg: ServingConfig,
+    default_policy: PolicyKind,
+    rx: Receiver<Msg>,
+    boot_tx: Sender<Result<()>>,
+) {
+    let boot = (|| -> Result<(Engine, Tokenizer)> {
+        let rt = Runtime::load(std::path::Path::new(&cfg.artifacts_dir))?;
+        let tok = Tokenizer::from_meta(&rt.meta)?;
+        Ok((Engine::new(rt, cfg.clone())?, tok))
+    })();
+    let (mut engine, tok) = match boot {
+        Ok(v) => {
+            let _ = boot_tx.send(Ok(()));
+            v
+        }
+        Err(e) => {
+            let _ = boot_tx.send(Err(e));
+            return;
+        }
+    };
+
+    let mut sched = Scheduler::new(&engine, default_policy);
+    let pending: Arc<Mutex<std::collections::HashMap<u64, Pending>>> =
+        Arc::new(Mutex::new(std::collections::HashMap::new()));
+    let mut next_id = 1u64;
+    let mut shutdown = false;
+
+    while !(shutdown && sched.idle()) {
+        // Drain incoming messages; block only when fully idle.
+        loop {
+            let msg = if sched.idle() && !shutdown {
+                match rx.recv() {
+                    Ok(m) => m,
+                    Err(_) => {
+                        shutdown = true;
+                        break;
+                    }
+                }
+            } else {
+                match rx.try_recv() {
+                    Ok(m) => m,
+                    Err(_) => break,
+                }
+            };
+            match msg {
+                Msg::Shutdown => {
+                    shutdown = true;
+                    break;
+                }
+                Msg::Generate(req, reply) => {
+                    let id = next_id;
+                    next_id += 1;
+                    match tok.encode_prompt(&req.prompt) {
+                        Ok(prompt) => {
+                            let r = Request {
+                                id,
+                                prompt,
+                                max_new_tokens: req
+                                    .max_new_tokens
+                                    .min(engine.cfg.scheduler.max_new_tokens),
+                                policy: req.policy.unwrap_or(default_policy),
+                                submitted_at: Instant::now(),
+                            };
+                            let ptoks = r.prompt.len();
+                            if let Err(e) = sched.submit(r) {
+                                let _ = reply.send(Err(e));
+                            } else {
+                                pending.lock().unwrap().insert(
+                                    id,
+                                    Pending { reply, prompt_tokens: ptoks },
+                                );
+                            }
+                        }
+                        Err(e) => {
+                            let _ = reply.send(Err(e));
+                        }
+                    }
+                }
+            }
+        }
+
+        if sched.idle() {
+            continue;
+        }
+        match sched.tick(&mut engine) {
+            Ok(report) => {
+                let mut p = pending.lock().unwrap();
+                for c in report.completed {
+                    if let Some(entry) = p.remove(&c.id) {
+                        let resp = GenerateResponse {
+                            id: c.id,
+                            text: tok.decode(&c.generated),
+                            finish: format!("{:?}", c.finish),
+                            prompt_tokens: entry.prompt_tokens,
+                            generated_tokens: c.generated.len(),
+                            ttft_s: c.ttft,
+                            total_s: c.total,
+                            prune_rounds: c.prune_rounds,
+                        };
+                        let _ = entry.reply.send(Ok(resp));
+                    }
+                }
+            }
+            Err(e) => {
+                crate::log_error!("scheduler tick failed: {e:#}");
+                // Fail everything in flight; state may be inconsistent.
+                let mut p = pending.lock().unwrap();
+                for (_, entry) in p.drain() {
+                    let _ = entry
+                        .reply
+                        .send(Err(anyhow::anyhow!("engine error: {e}")));
+                }
+                return;
+            }
+        }
+    }
+}

@@ -1,0 +1,150 @@
+//! TCP front-end: a newline-delimited JSON protocol over the in-process
+//! [`super::Server`], so external clients can drive the engine:
+//!
+//!   -> {"prompt": "ab:12;cd:ab?cd>", "max_new_tokens": 32,
+//!       "policy": "lethe"}
+//!   <- {"ok": true, "text": "ab>12.", "finish": "Eos",
+//!       "prompt_tokens": 18, "generated_tokens": 7,
+//!       "ttft_s": 0.01, "total_s": 0.05, "prune_rounds": 0}
+//!
+//! One handler thread per connection (threadpool-bounded); requests on
+//! one connection are pipelined through the engine like any other
+//! client's. Malformed lines get {"ok": false, "error": ...} without
+//! dropping the connection.
+
+use std::io::{BufRead, BufReader, Write};
+use std::net::{TcpListener, TcpStream};
+use std::sync::Arc;
+
+use anyhow::{Context, Result};
+
+use crate::policy::PolicyKind;
+use crate::util::json::{parse, Json};
+use crate::util::threadpool::ThreadPool;
+
+use super::{GenerateRequest, GenerateResponse, Server};
+
+pub struct TcpFrontend {
+    pub addr: std::net::SocketAddr,
+    listener: TcpListener,
+    server: Arc<Server>,
+    pool: ThreadPool,
+}
+
+impl TcpFrontend {
+    /// Bind to `addr` (use "127.0.0.1:0" for an ephemeral test port).
+    pub fn bind(server: Arc<Server>, addr: &str, workers: usize)
+        -> Result<TcpFrontend>
+    {
+        let listener = TcpListener::bind(addr)
+            .with_context(|| format!("binding {addr}"))?;
+        Ok(TcpFrontend {
+            addr: listener.local_addr()?,
+            listener,
+            server,
+            pool: ThreadPool::new(workers.max(1)),
+        })
+    }
+
+    /// Accept loop; returns after serving `max_conns` connections
+    /// (None = forever). Each connection is handled on the pool.
+    pub fn serve(&self, max_conns: Option<usize>) -> Result<()> {
+        let mut served = 0usize;
+        for stream in self.listener.incoming() {
+            let stream = stream?;
+            let server = Arc::clone(&self.server);
+            self.pool.spawn(move || {
+                if let Err(e) = handle_conn(stream, &server) {
+                    crate::log_debug!("connection ended: {e:#}");
+                }
+            });
+            served += 1;
+            if let Some(m) = max_conns {
+                if served >= m {
+                    break;
+                }
+            }
+        }
+        self.pool.wait_idle();
+        Ok(())
+    }
+}
+
+fn handle_conn(stream: TcpStream, server: &Server) -> Result<()> {
+    let peer = stream.peer_addr()?;
+    crate::log_debug!("connection from {peer}");
+    let mut writer = stream.try_clone()?;
+    let reader = BufReader::new(stream);
+    for line in reader.lines() {
+        let line = line?;
+        if line.trim().is_empty() {
+            continue;
+        }
+        let reply = match handle_line(&line, server) {
+            Ok(resp) => response_json(&resp),
+            Err(e) => Json::obj(vec![
+                ("ok", Json::from(false)),
+                ("error", Json::str(&format!("{e:#}"))),
+            ]),
+        };
+        writeln!(writer, "{reply}")?;
+    }
+    Ok(())
+}
+
+fn handle_line(line: &str, server: &Server) -> Result<GenerateResponse> {
+    let j = parse(line).context("request is not valid JSON")?;
+    let prompt = j.get("prompt")?.as_str()?.to_string();
+    let max_new_tokens = j
+        .opt("max_new_tokens")
+        .map(|v| v.as_usize())
+        .transpose()?
+        .unwrap_or(64);
+    let policy = j
+        .opt("policy")
+        .map(|v| PolicyKind::parse(v.as_str()?))
+        .transpose()?;
+    server.generate(GenerateRequest { prompt, max_new_tokens, policy })
+}
+
+fn response_json(r: &GenerateResponse) -> Json {
+    Json::obj(vec![
+        ("ok", Json::from(true)),
+        ("id", Json::from(r.id as usize)),
+        ("text", Json::str(&r.text)),
+        ("finish", Json::str(&r.finish)),
+        ("prompt_tokens", Json::from(r.prompt_tokens)),
+        ("generated_tokens", Json::from(r.generated_tokens)),
+        ("ttft_s", Json::num(r.ttft_s)),
+        ("total_s", Json::num(r.total_s)),
+        ("prune_rounds", Json::from(r.prune_rounds)),
+    ])
+}
+
+/// Minimal blocking client for tests/examples.
+pub struct TcpClient {
+    reader: BufReader<TcpStream>,
+    writer: TcpStream,
+}
+
+impl TcpClient {
+    pub fn connect(addr: std::net::SocketAddr) -> Result<TcpClient> {
+        let stream = TcpStream::connect(addr)?;
+        Ok(TcpClient { writer: stream.try_clone()?, reader: BufReader::new(stream) })
+    }
+
+    pub fn request(&mut self, prompt: &str, max_new: usize,
+                   policy: Option<&str>) -> Result<Json> {
+        let mut obj = vec![
+            ("prompt", Json::str(prompt)),
+            ("max_new_tokens", Json::from(max_new)),
+        ];
+        if let Some(p) = policy {
+            obj.push(("policy", Json::str(p)));
+        }
+        writeln!(self.writer, "{}", Json::obj(obj))?;
+        let mut line = String::new();
+        self.reader.read_line(&mut line)?;
+        parse(&line)
+    }
+}

@@ -1,0 +1,209 @@
+//! Declarative CLI argument parser (clap substitute). Supports
+//! `--flag`, `--key value`, `--key=value`, positionals, per-flag help,
+//! and subcommands (handled by the caller via `ArgSpec::positional`).
+
+use std::collections::BTreeMap;
+
+use anyhow::{bail, Result};
+
+#[derive(Clone, Debug)]
+struct FlagSpec {
+    name: String,
+    help: String,
+    default: Option<String>,
+    takes_value: bool,
+}
+
+#[derive(Default)]
+pub struct ArgSpec {
+    about: String,
+    flags: Vec<FlagSpec>,
+    positionals: Vec<(String, String)>, // (name, help)
+}
+
+#[derive(Debug, Default)]
+pub struct Args {
+    values: BTreeMap<String, String>,
+    present: Vec<String>,
+    pub positional: Vec<String>,
+}
+
+impl ArgSpec {
+    pub fn new(about: &str) -> Self {
+        ArgSpec { about: about.to_string(), ..Default::default() }
+    }
+
+    /// `--name <value>` with a default.
+    pub fn opt(mut self, name: &str, default: &str, help: &str) -> Self {
+        self.flags.push(FlagSpec {
+            name: name.to_string(),
+            help: help.to_string(),
+            default: Some(default.to_string()),
+            takes_value: true,
+        });
+        self
+    }
+
+    /// Boolean `--name`.
+    pub fn flag(mut self, name: &str, help: &str) -> Self {
+        self.flags.push(FlagSpec {
+            name: name.to_string(),
+            help: help.to_string(),
+            default: None,
+            takes_value: false,
+        });
+        self
+    }
+
+    pub fn positional(mut self, name: &str, help: &str) -> Self {
+        self.positionals.push((name.to_string(), help.to_string()));
+        self
+    }
+
+    pub fn usage(&self, prog: &str) -> String {
+        let mut s = format!("{}\n\nUsage: {prog}", self.about);
+        for (p, _) in &self.positionals {
+            s.push_str(&format!(" <{p}>"));
+        }
+        s.push_str(" [options]\n\nOptions:\n");
+        for f in &self.flags {
+            let head = if f.takes_value {
+                format!("--{} <v>", f.name)
+            } else {
+                format!("--{}", f.name)
+            };
+            let def = f
+                .default
+                .as_ref()
+                .map(|d| format!(" [default: {d}]"))
+                .unwrap_or_default();
+            s.push_str(&format!("  {head:<26} {}{def}\n", f.help));
+        }
+        s
+    }
+
+    /// Parse; returns Err with the usage text on `--help` or bad input.
+    pub fn parse(&self, argv: &[String]) -> Result<Args> {
+        let mut out = Args::default();
+        for f in &self.flags {
+            if let Some(d) = &f.default {
+                out.values.insert(f.name.clone(), d.clone());
+            }
+        }
+        let mut i = 0;
+        while i < argv.len() {
+            let a = &argv[i];
+            if a == "--help" || a == "-h" {
+                bail!("{}", self.usage("<prog>"));
+            }
+            if let Some(body) = a.strip_prefix("--") {
+                let (name, inline) = match body.split_once('=') {
+                    Some((n, v)) => (n.to_string(), Some(v.to_string())),
+                    None => (body.to_string(), None),
+                };
+                let spec = self
+                    .flags
+                    .iter()
+                    .find(|f| f.name == name)
+                    .ok_or_else(|| {
+                        anyhow::anyhow!(
+                            "unknown flag --{name}\n\n{}",
+                            self.usage("<prog>")
+                        )
+                    })?;
+                out.present.push(name.clone());
+                if spec.takes_value {
+                    let v = match inline {
+                        Some(v) => v,
+                        None => {
+                            i += 1;
+                            if i >= argv.len() {
+                                bail!("--{name} requires a value");
+                            }
+                            argv[i].clone()
+                        }
+                    };
+                    out.values.insert(name, v);
+                } else if inline.is_some() {
+                    bail!("--{name} does not take a value");
+                }
+            } else {
+                out.positional.push(a.clone());
+            }
+            i += 1;
+        }
+        Ok(out)
+    }
+}
+
+impl Args {
+    pub fn get(&self, name: &str) -> &str {
+        self.values
+            .get(name)
+            .unwrap_or_else(|| panic!("flag --{name} not declared"))
+    }
+
+    pub fn get_usize(&self, name: &str) -> Result<usize> {
+        let v = self.get(name);
+        v.parse().map_err(|_| {
+            anyhow::anyhow!("--{name} expects an integer, got '{v}'")
+        })
+    }
+
+    pub fn get_f64(&self, name: &str) -> Result<f64> {
+        let v = self.get(name);
+        v.parse()
+            .map_err(|_| anyhow::anyhow!("--{name} expects a number, got '{v}'"))
+    }
+
+    pub fn has(&self, name: &str) -> bool {
+        self.present.iter().any(|p| p == name)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn spec() -> ArgSpec {
+        ArgSpec::new("test")
+            .opt("batch", "8", "batch size")
+            .opt("policy", "lethe", "eviction policy")
+            .flag("verbose", "chatty")
+            .positional("cmd", "subcommand")
+    }
+
+    fn sv(xs: &[&str]) -> Vec<String> {
+        xs.iter().map(|s| s.to_string()).collect()
+    }
+
+    #[test]
+    fn defaults_and_overrides() {
+        let a = spec().parse(&sv(&["serve", "--batch", "16"])).unwrap();
+        assert_eq!(a.positional, vec!["serve"]);
+        assert_eq!(a.get_usize("batch").unwrap(), 16);
+        assert_eq!(a.get("policy"), "lethe");
+        assert!(!a.has("verbose"));
+    }
+
+    #[test]
+    fn equals_form_and_flags() {
+        let a = spec().parse(&sv(&["--batch=4", "--verbose"])).unwrap();
+        assert_eq!(a.get_usize("batch").unwrap(), 4);
+        assert!(a.has("verbose"));
+    }
+
+    #[test]
+    fn rejects_unknown_and_missing_value() {
+        assert!(spec().parse(&sv(&["--nope"])).is_err());
+        assert!(spec().parse(&sv(&["--batch"])).is_err());
+        assert!(spec().parse(&sv(&["--verbose=1"])).is_err());
+    }
+
+    #[test]
+    fn help_contains_flags() {
+        let err = spec().parse(&sv(&["--help"])).unwrap_err().to_string();
+        assert!(err.contains("--batch"));
+        assert!(err.contains("default: lethe"));
+    }
+}

@@ -1,0 +1,11 @@
+//! Substrate utilities built from scratch for the offline environment
+//! (DESIGN.md §3): no tokio/clap/serde/criterion/proptest are available,
+//! so the equivalents the serving stack needs live here.
+
+pub mod argparse;
+pub mod json;
+pub mod logging;
+pub mod prng;
+pub mod proptest;
+pub mod stats;
+pub mod threadpool;

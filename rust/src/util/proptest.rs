@@ -1,0 +1,83 @@
+//! Miniature property-testing driver (proptest substitute). A property is
+//! a closure over a seeded [`crate::util::prng::Rng`]; the driver runs N
+//! cases, and on failure re-runs with "shrunk" size hints and reports the
+//! failing seed so the case is reproducible with `check_seed`.
+
+use crate::util::prng::Rng;
+
+/// Run `prop` over `cases` random cases. `prop` returns Err(msg) to fail.
+/// On failure, retries the same seed at smaller sizes to find a minimal
+/// size that still fails, then panics with the seed + message.
+pub fn check<F>(name: &str, cases: usize, mut prop: F)
+where
+    F: FnMut(&mut Rng, usize) -> Result<(), String>,
+{
+    let base = 0x4C45_5448_45u64; // "LETHE"
+    for case in 0..cases {
+        let seed = base.wrapping_add(case as u64 * 0x9E37);
+        let size = 2 + (case * 64 / cases.max(1));
+        let mut rng = Rng::new(seed);
+        if let Err(msg) = prop(&mut rng, size) {
+            // Shrink: find the smallest size (same seed) that still fails.
+            let mut min_size = size;
+            let mut min_msg = msg;
+            for s in (1..size).rev() {
+                let mut r2 = Rng::new(seed);
+                match prop(&mut r2, s) {
+                    Err(m) => {
+                        min_size = s;
+                        min_msg = m;
+                    }
+                    Ok(()) => break,
+                }
+            }
+            panic!(
+                "property '{name}' failed (seed={seed:#x}, size={min_size}): \
+                 {min_msg}"
+            );
+        }
+    }
+}
+
+/// Re-run one exact case (debugging helper).
+pub fn check_seed<F>(seed: u64, size: usize, mut prop: F)
+where
+    F: FnMut(&mut Rng, usize) -> Result<(), String>,
+{
+    let mut rng = Rng::new(seed);
+    prop(&mut rng, size).expect("seeded property case failed");
+}
+
+/// Generator helpers.
+pub fn vec_f32(rng: &mut Rng, len: usize, lo: f32, hi: f32) -> Vec<f32> {
+    (0..len).map(|_| lo + (hi - lo) * rng.f32()).collect()
+}
+
+pub fn vec_usize(rng: &mut Rng, len: usize, lo: usize, hi: usize) -> Vec<usize> {
+    (0..len).map(|_| rng.range(lo, hi)).collect()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn passing_property_passes() {
+        check("sum-commutes", 50, |rng, size| {
+            let a = vec_f32(rng, size, -1.0, 1.0);
+            let fwd: f32 = a.iter().sum();
+            let rev: f32 = a.iter().rev().sum();
+            if (fwd - rev).abs() < 1e-3 {
+                Ok(())
+            } else {
+                Err(format!("{fwd} != {rev}"))
+            }
+        });
+    }
+
+    #[test]
+    #[should_panic(expected = "property 'always-fails' failed")]
+    fn failing_property_reports_seed() {
+        check("always-fails", 5, |_rng, _size| Err("nope".into()));
+    }
+}

@@ -1,0 +1,209 @@
+//! Summary statistics and the measurement core of the bench harness
+//! (criterion substitute): warmup + timed iterations + robust summaries.
+
+use std::time::{Duration, Instant};
+
+/// Streaming mean/variance (Welford). Used by metrics counters.
+#[derive(Clone, Debug, Default)]
+pub struct Welford {
+    n: u64,
+    mean: f64,
+    m2: f64,
+}
+
+impl Welford {
+    pub fn push(&mut self, x: f64) {
+        self.n += 1;
+        let d = x - self.mean;
+        self.mean += d / self.n as f64;
+        self.m2 += d * (x - self.mean);
+    }
+    pub fn count(&self) -> u64 {
+        self.n
+    }
+    pub fn mean(&self) -> f64 {
+        self.mean
+    }
+    pub fn variance(&self) -> f64 {
+        if self.n < 2 {
+            0.0
+        } else {
+            self.m2 / (self.n - 1) as f64
+        }
+    }
+    pub fn std(&self) -> f64 {
+        self.variance().sqrt()
+    }
+}
+
+/// Batch summary with percentiles (nearest-rank on a sorted copy).
+#[derive(Clone, Debug)]
+pub struct Summary {
+    pub n: usize,
+    pub mean: f64,
+    pub std: f64,
+    pub min: f64,
+    pub max: f64,
+    pub p50: f64,
+    pub p90: f64,
+    pub p99: f64,
+}
+
+impl Summary {
+    pub fn of(xs: &[f64]) -> Summary {
+        assert!(!xs.is_empty(), "Summary::of on empty slice");
+        let mut s = xs.to_vec();
+        s.sort_by(|a, b| a.partial_cmp(b).unwrap());
+        let mut w = Welford::default();
+        for &x in xs {
+            w.push(x);
+        }
+        Summary {
+            n: xs.len(),
+            mean: w.mean(),
+            std: w.std(),
+            min: s[0],
+            max: *s.last().unwrap(),
+            p50: percentile_sorted(&s, 50.0),
+            p90: percentile_sorted(&s, 90.0),
+            p99: percentile_sorted(&s, 99.0),
+        }
+    }
+}
+
+/// Nearest-rank percentile over a pre-sorted slice.
+pub fn percentile_sorted(sorted: &[f64], p: f64) -> f64 {
+    assert!(!sorted.is_empty());
+    let rank = ((p / 100.0) * sorted.len() as f64).ceil() as usize;
+    sorted[rank.clamp(1, sorted.len()) - 1]
+}
+
+/// Fixed-boundary latency histogram (log-spaced buckets, microseconds).
+#[derive(Clone, Debug)]
+pub struct LatencyHistogram {
+    bounds_us: Vec<f64>,
+    counts: Vec<u64>,
+    total: u64,
+}
+
+impl Default for LatencyHistogram {
+    fn default() -> Self {
+        // 1us .. ~100s, quarter-decade spacing.
+        let bounds: Vec<f64> =
+            (0..33).map(|i| 10f64.powf(i as f64 / 4.0)).collect();
+        let n = bounds.len();
+        LatencyHistogram { bounds_us: bounds, counts: vec![0; n + 1], total: 0 }
+    }
+}
+
+impl LatencyHistogram {
+    pub fn record(&mut self, d: Duration) {
+        let us = d.as_secs_f64() * 1e6;
+        let idx = self
+            .bounds_us
+            .iter()
+            .position(|&b| us <= b)
+            .unwrap_or(self.bounds_us.len());
+        self.counts[idx] += 1;
+        self.total += 1;
+    }
+
+    pub fn count(&self) -> u64 {
+        self.total
+    }
+
+    /// Approximate quantile from bucket upper bounds.
+    pub fn quantile_us(&self, q: f64) -> f64 {
+        if self.total == 0 {
+            return 0.0;
+        }
+        let target = (q * self.total as f64).ceil() as u64;
+        let mut acc = 0;
+        for (i, &c) in self.counts.iter().enumerate() {
+            acc += c;
+            if acc >= target {
+                return if i < self.bounds_us.len() {
+                    self.bounds_us[i]
+                } else {
+                    *self.bounds_us.last().unwrap()
+                };
+            }
+        }
+        *self.bounds_us.last().unwrap()
+    }
+}
+
+/// Criterion-substitute measurement: `warmup` untimed runs, then time
+/// `iters` runs of `f`, returning per-iteration seconds.
+pub fn bench<F: FnMut()>(warmup: usize, iters: usize, mut f: F) -> Summary {
+    for _ in 0..warmup {
+        f();
+    }
+    let mut samples = Vec::with_capacity(iters);
+    for _ in 0..iters {
+        let t0 = Instant::now();
+        f();
+        samples.push(t0.elapsed().as_secs_f64());
+    }
+    Summary::of(&samples)
+}
+
+/// Render a bench row the way the harness prints everything:
+/// name, mean, p50, p99 (milliseconds).
+pub fn bench_row(name: &str, s: &Summary) -> String {
+    format!(
+        "{:<40} mean {:>9.3} ms   p50 {:>9.3} ms   p99 {:>9.3} ms   (n={})",
+        name,
+        s.mean * 1e3,
+        s.p50 * 1e3,
+        s.p99 * 1e3,
+        s.n
+    )
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn welford_matches_direct() {
+        let xs = [1.0, 2.0, 3.0, 4.0, 10.0];
+        let mut w = Welford::default();
+        for &x in &xs {
+            w.push(x);
+        }
+        assert!((w.mean() - 4.0).abs() < 1e-12);
+        let direct_var =
+            xs.iter().map(|x| (x - 4.0) * (x - 4.0)).sum::<f64>() / 4.0;
+        assert!((w.variance() - direct_var).abs() < 1e-12);
+    }
+
+    #[test]
+    fn summary_percentiles() {
+        let xs: Vec<f64> = (1..=100).map(|i| i as f64).collect();
+        let s = Summary::of(&xs);
+        assert_eq!(s.p50, 50.0);
+        assert_eq!(s.p99, 99.0);
+        assert_eq!(s.min, 1.0);
+        assert_eq!(s.max, 100.0);
+    }
+
+    #[test]
+    fn histogram_quantile_monotone() {
+        let mut h = LatencyHistogram::default();
+        for i in 1..=1000u64 {
+            h.record(Duration::from_micros(i));
+        }
+        assert!(h.quantile_us(0.5) <= h.quantile_us(0.99));
+        assert_eq!(h.count(), 1000);
+    }
+
+    #[test]
+    fn bench_returns_reasonable_samples() {
+        let s = bench(2, 10, || {
+            std::hint::black_box((0..1000).sum::<u64>());
+        });
+        assert_eq!(s.n, 10);
+        assert!(s.min >= 0.0 && s.mean < 1.0);
+    }
+}

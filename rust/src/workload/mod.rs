@@ -1,0 +1,184 @@
+//! Workload generation: the rust twin of `python/compile/tasks.py`
+//! (same grammar, same subjects) plus serving-trace generation (Poisson
+//! arrivals, length distributions) for the throughput/latency benches.
+//!
+//! The task generators here MUST stay semantically aligned with the
+//! python training distribution — the integration test in
+//! `rust/tests/engine_e2e.rs` runs rust-generated tasks through the
+//! python-trained model to assert that alignment.
+
+use crate::util::prng::Rng;
+
+pub const KEY_LETTERS: &[u8] = b"abcdefghijklmnopqrstuvwxyz";
+
+/// One reasoning task (see tasks.py for the grammar).
+#[derive(Clone, Debug)]
+pub struct Task {
+    pub prompt: String,
+    /// Full expected generation, e.g. "cd>ef>42." for a 3-hop chain.
+    pub answer: String,
+    /// The final 2-digit value.
+    pub final_value: String,
+    pub hops: usize,
+    pub n_pairs: usize,
+}
+
+/// Table 1 "subjects": (name, n_pairs, hops). recall-N are the MMLU
+/// proxies, hopK-N the Math500-style CoT proxies.
+pub const SUBJECTS: [(&str, usize, usize); 8] = [
+    ("recall-8", 8, 1),
+    ("recall-16", 16, 1),
+    ("recall-24", 24, 1),
+    ("hop2-8", 8, 2),
+    ("hop2-16", 16, 2),
+    ("hop3-8", 8, 3),
+    ("hop3-16", 16, 3),
+    ("hop4-16", 16, 4),
+];
+
+/// Generate one task, mirroring tasks.make_task.
+pub fn make_task(rng: &mut Rng, n_pairs: usize, hops: usize) -> Task {
+    assert!(hops >= 1 && hops <= n_pairs);
+    // Fresh distinct 2-letter keys.
+    let mut keys: Vec<String> = Vec::with_capacity(n_pairs);
+    while keys.len() < n_pairs {
+        let k = format!(
+            "{}{}",
+            *rng.choose(KEY_LETTERS) as char,
+            *rng.choose(KEY_LETTERS) as char
+        );
+        if !keys.contains(&k) {
+            keys.push(k);
+        }
+    }
+    let final_value = format!("{}", rng.range(10, 99));
+    // Chain keys[0] -> keys[1] -> ... -> keys[hops-1] -> final value.
+    let mut mapping: Vec<(String, String)> = Vec::with_capacity(n_pairs);
+    for i in 0..hops - 1 {
+        mapping.push((keys[i].clone(), keys[i + 1].clone()));
+    }
+    mapping.push((keys[hops - 1].clone(), final_value.clone()));
+    for k in &keys[hops..] {
+        mapping.push((k.clone(), format!("{}", rng.range(10, 99))));
+    }
+    // Shuffle presentation order.
+    let mut order: Vec<usize> = (0..mapping.len()).collect();
+    rng.shuffle(&mut order);
+    let pairs: Vec<String> = order
+        .iter()
+        .map(|&i| format!("{}:{}", mapping[i].0, mapping[i].1))
+        .collect();
+    let prompt = format!("{}?{}>", pairs.join(";"), keys[0]);
+    let mut answer = String::new();
+    for k in keys.iter().take(hops).skip(1) {
+        answer.push_str(k);
+        answer.push('>');
+    }
+    answer.push_str(&final_value);
+    answer.push('.');
+    Task { prompt, answer, final_value, hops, n_pairs }
+}
+
+/// A timed serving trace entry.
+#[derive(Clone, Debug)]
+pub struct TraceItem {
+    pub arrival_s: f64,
+    pub task: Task,
+}
+
+/// Poisson-arrival CoT serving trace at `rate` requests/second, with the
+/// task mix drawn uniformly from SUBJECTS — the workload behind the
+/// batch-scaling tables.
+pub fn poisson_trace(rng: &mut Rng, rate: f64, n: usize) -> Vec<TraceItem> {
+    let mut t = 0.0;
+    (0..n)
+        .map(|_| {
+            t += rng.exponential(rate);
+            let &(_, pairs, hops) = rng.choose(&SUBJECTS);
+            TraceItem { arrival_s: t, task: make_task(rng, pairs, hops) }
+        })
+        .collect()
+}
+
+/// Closed-loop batch workload: `n` tasks of one subject.
+pub fn subject_batch(rng: &mut Rng, subject: &str, n: usize) -> Vec<Task> {
+    let &(_, pairs, hops) = SUBJECTS
+        .iter()
+        .find(|(s, _, _)| *s == subject)
+        .unwrap_or_else(|| panic!("unknown subject '{subject}'"));
+    (0..n).map(|_| make_task(rng, pairs, hops)).collect()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::proptest::check;
+
+    #[test]
+    fn task_grammar_roundtrip() {
+        let mut rng = Rng::new(42);
+        let t = make_task(&mut rng, 8, 3);
+        // prompt: 8 pairs ';'-joined, then ?key>
+        assert_eq!(t.prompt.matches(';').count(), 7);
+        assert!(t.prompt.contains('?') && t.prompt.ends_with('>'));
+        // answer: 2 intermediate hops + value + '.'
+        assert_eq!(t.answer.matches('>').count(), 2);
+        assert!(t.answer.ends_with('.'));
+        assert!(t.answer.contains(&t.final_value));
+    }
+
+    #[test]
+    fn chain_is_resolvable() {
+        // Follow the chain through the prompt text and confirm it reaches
+        // final_value in exactly `hops` lookups.
+        check("workload-chain", 40, |rng, size| {
+            let n_pairs = 4 + size % 20;
+            let hops = 1 + size % 4.min(n_pairs);
+            let t = make_task(rng, n_pairs, hops);
+            let body = &t.prompt[..t.prompt.find('?').unwrap()];
+            let map: std::collections::HashMap<&str, &str> = body
+                .split(';')
+                .map(|p| {
+                    let (k, v) = p.split_once(':').unwrap();
+                    (k, v)
+                })
+                .collect();
+            if map.len() != n_pairs {
+                return Err(format!("{} pairs, want {n_pairs}", map.len()));
+            }
+            let q = &t.prompt[t.prompt.find('?').unwrap() + 1
+                ..t.prompt.len() - 1];
+            let mut cur = q;
+            for _ in 0..hops {
+                cur = map
+                    .get(cur)
+                    .ok_or_else(|| format!("broken chain at {cur}"))?;
+            }
+            if cur != t.final_value {
+                return Err(format!("chain ends at {cur}, want {}",
+                                   t.final_value));
+            }
+            Ok(())
+        });
+    }
+
+    #[test]
+    fn poisson_trace_is_ordered_and_rate_plausible() {
+        let mut rng = Rng::new(7);
+        let tr = poisson_trace(&mut rng, 10.0, 500);
+        assert!(tr.windows(2).all(|w| w[0].arrival_s <= w[1].arrival_s));
+        let span = tr.last().unwrap().arrival_s;
+        // 500 arrivals at 10/s ≈ 50s ± noise.
+        assert!((span - 50.0).abs() < 12.0, "span {span}");
+    }
+
+    #[test]
+    fn subjects_cover_recall_and_multihop() {
+        let mut rng = Rng::new(1);
+        for (name, pairs, hops) in SUBJECTS {
+            let t = make_task(&mut rng, pairs, hops);
+            assert_eq!(t.n_pairs, pairs, "{name}");
+            assert_eq!(t.hops, hops, "{name}");
+        }
+    }
+}

@@ -1,0 +1,216 @@
+//! Integration tests over cache + policies + simulator that do NOT need
+//! artifacts (pure-rust paths across module boundaries). The
+//! artifact-dependent end-to-end path lives in `engine_e2e.rs`.
+
+use lethe::attn::sparsity::hoyer_sparsity;
+use lethe::config::ServingConfig;
+use lethe::kvcache::{CacheDims, GroupCache};
+use lethe::policy::{make_policy, LayerState, PolicyKind};
+use lethe::sim::{run_trace, Simulator, TraceConfig};
+use lethe::util::prng::Rng;
+use lethe::util::proptest::check;
+use lethe::workload::make_task;
+
+fn dims(batch: usize, cap: usize) -> CacheDims {
+    CacheDims { layers: 3, batch, kv_heads: 2, capacity: cap, d_head: 8 }
+}
+
+/// Drive a cache + policy pair the way the engine does, with synthetic
+/// attention, and assert the cross-module invariants hold for every
+/// policy kind.
+#[test]
+fn cache_and_policies_stay_consistent_under_decode_pressure() {
+    let mut cfg = ServingConfig::default();
+    cfg.baseline.budget = 24;
+    cfg.lethe.evict_threshold = 16;
+    cfg.lethe.segments = 4;
+    cfg.lethe.sparse_ratio = 8.0;
+
+    for kind in PolicyKind::ALL {
+        let mut cache = GroupCache::new(dims(1, 512));
+        let mut policy = make_policy(kind, &cfg, 3);
+        let row: Vec<f32> = (0..16).map(|i| i as f32).collect();
+
+        for t in 0..200i32 {
+            for l in 0..3 {
+                cache.insert(l, 0, &row, &row, t).unwrap();
+                let n = cache.len(l, 0);
+                // Synthetic peaked attention over live slots.
+                let mut add = vec![0.001f32; n];
+                add[n - 1] = 0.5;
+                add[n / 2] = 0.3;
+                cache.accumulate_scores(l, 0, policy.gamma(), &add);
+                let st = LayerState {
+                    scores: cache.scores(l, 0),
+                    pos: cache.pos(l, 0),
+                    len: n,
+                    step: t as usize,
+                    sparsity: hoyer_sparsity(&add),
+                    capacity: 512,
+                };
+                let plan = policy.plan(l, &st);
+                if let Some(keep) = plan {
+                    cache.apply_retention(l, 0, &keep).unwrap();
+                }
+                // Invariants after every step:
+                let len = cache.len(l, 0);
+                assert!(len >= 1, "{kind:?} emptied the cache");
+                assert!(len <= 512);
+                assert_eq!(cache.pos(l, 0).len(), len);
+                assert_eq!(cache.scores(l, 0).len(), len);
+                // pos strictly increasing (relative order preserved).
+                assert!(
+                    cache.pos(l, 0).windows(2).all(|w| w[0] < w[1]),
+                    "{kind:?} broke slot ordering at t={t}"
+                );
+                // Most recent token always survives.
+                assert_eq!(*cache.pos(l, 0).last().unwrap(), t,
+                           "{kind:?} evicted the current token");
+            }
+        }
+        // Budgeted policies must actually have bounded the cache.
+        if !matches!(kind, PolicyKind::FullKv) {
+            for l in 0..3 {
+                assert!(
+                    cache.len(l, 0) < 200,
+                    "{kind:?} layer {l} never pruned ({} slots)",
+                    cache.len(l, 0)
+                );
+            }
+        } else {
+            assert_eq!(cache.len(0, 0), 200);
+        }
+    }
+}
+
+#[test]
+fn lethe_budgets_follow_sparsity_across_layers() {
+    // Feed layer 0 peaked attention (sparse) and layer 1 uniform
+    // attention (dense); Lethe should end up retaining more on layer 1.
+    let mut cfg = ServingConfig::default();
+    cfg.lethe.evict_threshold = 24;
+    cfg.lethe.sparse_ratio = 6.0;
+    cfg.lethe.segments = 4;
+    let mut cache = GroupCache::new(dims(1, 1024));
+    let mut policy = make_policy(PolicyKind::Lethe, &cfg, 3);
+    let row = [0f32; 16];
+
+    for t in 0..300i32 {
+        for l in 0..2 {
+            cache.insert(l, 0, &row, &row, t).unwrap();
+            let n = cache.len(l, 0);
+            let add: Vec<f32> = if l == 0 {
+                let mut a = vec![1e-4f32; n];
+                a[0] = 1.0;
+                a[n - 1] = 0.8;
+                a
+            } else {
+                vec![1.0 / n as f32; n]
+            };
+            cache.accumulate_scores(l, 0, policy.gamma(), &add);
+            let st = LayerState {
+                scores: cache.scores(l, 0),
+                pos: cache.pos(l, 0),
+                len: n,
+                step: t as usize,
+                sparsity: hoyer_sparsity(&add),
+                capacity: 1024,
+            };
+            let plan = policy.plan(l, &st);
+            if let Some(keep) = plan {
+                cache.apply_retention(l, 0, &keep).unwrap();
+            }
+        }
+    }
+    assert!(
+        cache.len(1, 0) > cache.len(0, 0),
+        "dense layer should retain more: sparse={} dense={}",
+        cache.len(0, 0),
+        cache.len(1, 0)
+    );
+}
+
+#[test]
+fn property_cache_retention_is_a_projection() {
+    // Retaining, then retaining everything again, changes nothing.
+    check("retention-projection", 40, |rng, size| {
+        let n = 4 + size;
+        let mut cache = GroupCache::new(dims(1, n + 8));
+        let row = [0f32; 16];
+        for t in 0..n {
+            cache
+                .insert(0, 0, &row, &row, t as i32)
+                .map_err(|e| e.to_string())?;
+        }
+        let mut keep: Vec<usize> = (0..n).filter(|_| rng.bool(0.6)).collect();
+        if keep.is_empty() {
+            keep.push(n - 1);
+        }
+        let len1 =
+            cache.apply_retention(0, 0, &keep).map_err(|e| e.to_string())?;
+        let pos1 = cache.pos(0, 0).to_vec();
+        let ident: Vec<usize> = (0..len1).collect();
+        let len2 =
+            cache.apply_retention(0, 0, &ident).map_err(|e| e.to_string())?;
+        if len1 != len2 || cache.pos(0, 0) != &pos1[..] {
+            return Err("retention not a projection".into());
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn simulator_preserves_paper_shape_end_to_end() {
+    // The Table 2/3 shape: Lethe beats FullKV at batch >= 8 on memory and
+    // throughput, and survives batch 32 where FullKV OOMs.
+    let mut cfg = ServingConfig::default();
+    cfg.baseline.budget = 768;
+    cfg.lethe.evict_threshold = 512;
+    cfg.lethe.sink_len = 16;
+    let arch = lethe::model::arch_by_name("Llama-70B").unwrap();
+    let mut sim = Simulator::new(arch);
+    sim.calibrate(10_000.0, 8.3);
+    let tc = TraceConfig {
+        n_layers: arch.n_layers,
+        prompt_len: 512,
+        gen_len: 20_000,
+        ..TraceConfig::default()
+    };
+    let lethe = run_trace(PolicyKind::Lethe, &cfg, &tc);
+    let full_mean = 512.0 + 10_000.0;
+    let full_final = 512.0 + 20_000.0;
+
+    let f32_ = sim.point(32, full_mean, full_final);
+    let l32 = sim.point(32, lethe.mean_retained(), lethe.final_retained());
+    assert!(f32_.oom, "FullKV should OOM at batch 32 / 20k tokens");
+    assert!(!l32.oom, "Lethe must survive batch 32");
+    let f8 = sim.point(8, full_mean, full_final);
+    let l8 = sim.point(8, lethe.mean_retained(), lethe.final_retained());
+    assert!(
+        l8.tok_per_s > 1.3 * f8.tok_per_s,
+        "Lethe speedup at batch 8: {} vs {}",
+        l8.tok_per_s,
+        f8.tok_per_s
+    );
+    assert!(l8.gen_memory_mb < 0.3 * f8.gen_memory_mb);
+}
+
+#[test]
+fn workload_tasks_are_encodable_and_judgeable() {
+    let tok = lethe::model::Tokenizer::new(
+        &["<pad>".into(), "<bos>".into(), "<eos>".into()],
+        "abcdefghijklmnopqrstuvwxyz0123456789:;>?=. ",
+    )
+    .unwrap();
+    let mut rng = Rng::new(11);
+    for (name, pairs, hops) in lethe::workload::SUBJECTS {
+        let t = make_task(&mut rng, pairs, hops);
+        let ids = tok
+            .encode_prompt(&t.prompt)
+            .unwrap_or_else(|e| panic!("{name}: prompt not encodable: {e}"));
+        assert!(ids.len() <= 192, "{name}: prompt too long ({})", ids.len());
+        // Ground truth must judge itself correct.
+        let (f, s) = lethe::eval::judge(&t, &t.answer);
+        assert!(f && s, "{name}: self-judgement failed");
+    }
+}
