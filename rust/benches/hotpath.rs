@@ -11,7 +11,7 @@
 
 use lethe::bench_support::try_engine;
 use lethe::config::{LetheParams, ServingConfig};
-use lethe::kvcache::{CacheDims, GroupCache};
+use lethe::kvcache::{CacheDims, GroupCache, PackScratch};
 use lethe::policy::{EvictionPolicy, LayerState, LethePolicy};
 use lethe::runtime::tensors::{HostTensorF32, HostTensorI32};
 use lethe::util::prng::Rng;
@@ -45,6 +45,34 @@ fn main() -> anyhow::Result<()> {
         cache.pack(8, 512, &mut k_s, &mut v_s, &mut l_s).unwrap();
     });
     println!("{}", bench_row("cache pack b8 c512 (16.8MB)", &s));
+
+    // Steady-state decode step: one appended token per (l, b), then an
+    // incremental pack — the Engine::step path. A separate clone keeps
+    // the benches below at exactly 400 live rows. Acceptance bar: >= 5x
+    // faster than the full "cache pack" row above.
+    let mut dcache = cache.clone();
+    let mut scratch = PackScratch::new(&dims, 8, 512);
+    dcache.pack_delta(&mut scratch).unwrap(); // cold full sync
+    let mut t = 400i32;
+    let s = bench(3, 20, || {
+        for b in 0..8 {
+            for l in 0..4 {
+                dcache.insert(l, b, &row, &row, t).unwrap();
+            }
+        }
+        t += 1;
+        dcache.pack_delta(&mut scratch).unwrap();
+    });
+    println!(
+        "{}",
+        bench_row(
+            &format!(
+                "delta pack (append-only step, {:.1}MB resident)",
+                scratch.k.bytes() as f64 / 1e6
+            ),
+            &s
+        )
+    );
 
     let add: Vec<f32> = (0..400).map(|_| rng.f32()).collect();
     let s = bench(3, 20, || {

@@ -103,10 +103,32 @@ fn main() -> anyhow::Result<()> {
             let tasks = gen_tasks(100 + b as u64, 2 * b, 24, 4);
             let _ = run_tasks(&mut engine, &tok, kind, &tasks, b, 80)?;
             engine.metrics.reset();
-            let _ = run_tasks(&mut engine, &tok, kind, &tasks, b, 80)?;
+            let st = run_tasks(&mut engine, &tok, kind, &tasks, b, 80)?;
             let tput = engine.metrics.decode_tput();
+            let pairs = engine.metrics.delta_pack_hits
+                + engine.metrics.delta_pack_full;
+            let hit_pct = if pairs == 0 {
+                0.0
+            } else {
+                100.0 * engine.metrics.delta_pack_hits as f64 / pairs as f64
+            };
+            eprintln!(
+                "[delta-pack] {} b={}: {:.0}% pair hit rate, \
+                 {:.2}MB copied over the run",
+                kind.label(),
+                b,
+                hit_pct,
+                st.pack_bytes_copied as f64 / 1e6
+            );
             row.push(format!("{tput:.0}"));
-            csv.push(format!("{},{},{:.1}", kind.label(), b, tput));
+            csv.push(format!(
+                "{},{},{:.1},{:.1},{}",
+                kind.label(),
+                b,
+                tput,
+                hit_pct,
+                st.pack_bytes_copied
+            ));
         }
         rows.push(row);
     }
@@ -115,7 +137,11 @@ fn main() -> anyhow::Result<()> {
         &["policy", "b=1", "b=2", "b=4", "b=8"],
         &rows,
     );
-    write_csv("table3_tput_real.csv", "policy,batch,tok_s", &csv)?;
+    write_csv(
+        "table3_tput_real.csv",
+        "policy,batch,tok_s,delta_hit_pct,pack_bytes",
+        &csv,
+    )?;
     Ok(())
 }
 

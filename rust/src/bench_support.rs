@@ -64,6 +64,10 @@ pub struct RunStats {
     pub chain_acc: f64,
     pub ooms: u64,
     pub prune_events: u64,
+    /// Host bytes the delta-packer actually copied over the run.
+    pub pack_bytes_copied: u64,
+    /// (layer, slot) pairs served by the delta path (append/skip).
+    pub delta_pack_hits: u64,
 }
 
 pub fn run_tasks(
@@ -77,6 +81,8 @@ pub fn run_tasks(
     let n_layers = engine.dims().n_layers;
     let ooms0 = engine.metrics.ooms;
     let prunes0 = engine.metrics.prune_events;
+    let pack0 = engine.metrics.pack_bytes_copied;
+    let hits0 = engine.metrics.delta_pack_hits;
     let t0 = std::time::Instant::now();
     let mut peak = 0usize;
     let mut gen_tokens = 0usize;
@@ -122,6 +128,8 @@ pub fn run_tasks(
         chain_acc: chain_hits as f64 / tasks.len() as f64,
         ooms: engine.metrics.ooms - ooms0,
         prune_events: engine.metrics.prune_events - prunes0,
+        pack_bytes_copied: engine.metrics.pack_bytes_copied - pack0,
+        delta_pack_hits: engine.metrics.delta_pack_hits - hits0,
     })
 }
 

@@ -165,6 +165,13 @@ impl DecodeGroup {
         (&mut self.seqs, &self.cache)
     }
 
+    /// Disjoint mutable borrows of the sequences and the cache, for the
+    /// engine's parallel per-slot post-decode pipeline (each worker gets
+    /// one `&mut SeqState` plus one cache slot view).
+    pub fn seqs_and_cache_mut(&mut self) -> (&mut [SeqState], &mut GroupCache) {
+        (&mut self.seqs, &mut self.cache)
+    }
+
     /// Mark the sequence with the longest cache as OOM-failed (FullKV's
     /// fate at capacity; mirrors the paper's OOM cells).
     pub fn mark_oom(&mut self) {

@@ -8,12 +8,15 @@
 //!   1. buckets the live batch to the smallest compiled `B` and the live
 //!      cache to the smallest compiled capacity `C` (needs one slot of
 //!      headroom for the in-graph insert),
-//!   2. packs + uploads the cache, runs `decode_b{B}_c{C}`,
-//!   3. mirrors the in-graph K/V insert host-side, greedily samples,
-//!   4. feeds attention probs into the RASR score accumulator (Eq. 5)
-//!      and the layerwise sparsity tracker (Eq. 1),
-//!   5. asks the per-sequence policy for retention plans per layer and
-//!      applies them (multi-round pruning during decoding).
+//!   2. delta-packs the cache into the bucket's persistent resident
+//!      scratch (epoch protocol, see [`crate::kvcache`]) — steady-state
+//!      append-only steps copy one token row per (layer, slot) instead
+//!      of the whole C-prefix — then uploads + runs `decode_b{B}_c{C}`,
+//!   3. fans the per-slot post-decode work (host-side K/V insert mirror,
+//!      RASR score accumulation Eq. 5, sparsity tracking Eq. 1, greedy
+//!      sampling, and multi-round policy pruning) out across the worker
+//!      pool — each slot's state is disjoint, so slots proceed in
+//!      parallel with per-slot scratch buffers.
 //!
 //! FullKV never prunes, so step 1 eventually finds no capacity bucket —
 //! that error is surfaced as an OOM on the sequence, mirroring the
@@ -30,11 +33,13 @@ pub use group::{DecodeGroup, FinishReason, PruneEvent, SeqState};
 
 use crate::attn::score::ProbsView;
 use crate::config::ServingConfig;
-use crate::kvcache::CacheDims;
+use crate::kvcache::{CacheDims, PackScratch, SlotViewMut};
 use crate::metrics::EngineMetrics;
 use crate::policy::{LayerState, PolicyKind};
-use crate::runtime::tensors::{HostTensorF32, HostTensorI32};
+use crate::runtime::registry::DecodeOut;
+use crate::runtime::tensors::HostTensorF32;
 use crate::runtime::Runtime;
+use crate::util::threadpool::ThreadPool;
 
 pub struct Engine {
     pub rt: Runtime,
@@ -42,10 +47,15 @@ pub struct Engine {
     /// Largest compiled capacity for the active profile (the OOM line).
     pub cmax: usize,
     batch_buckets: Vec<usize>,
-    /// Scratch upload tensors keyed by (batch, capacity) bucket, reused
-    /// across steps to keep the hot loop allocation-free.
-    scratch: HashMap<(usize, usize), (HostTensorF32, HostTensorF32, HostTensorI32)>,
-    score_buf: Vec<f32>,
+    /// Persistent resident upload scratch keyed by (batch, capacity)
+    /// bucket. Each records per-(layer, slot) residency epochs so the
+    /// steady-state step copies only what changed ([`PackScratch`]).
+    scratch: HashMap<(usize, usize), PackScratch>,
+    /// Per-slot score scratch (index = slot), so the parallel post-decode
+    /// pipeline needs no shared mutable buffer.
+    slot_score_bufs: Vec<Vec<f32>>,
+    /// Worker pool for the per-slot post-decode pipeline.
+    pool: ThreadPool,
     pub metrics: EngineMetrics,
     /// When set, [`Engine::step`] keeps a copy of the raw per-head
     /// attention probs `[L, B, Hq, C]` of the last step — the Figures 1
@@ -70,7 +80,8 @@ impl Engine {
             cmax,
             batch_buckets,
             scratch: HashMap::new(),
-            score_buf: Vec::new(),
+            slot_score_bufs: Vec::new(),
+            pool: ThreadPool::new(slot_workers()),
             metrics: EngineMetrics::default(),
             keep_probs: false,
             last_probs: None,
@@ -166,14 +177,12 @@ impl Engine {
         };
 
         let d = self.rt.meta.dims.clone();
-        let (k_s, v_s, l_s) = self.scratch.entry((bb, cap)).or_insert_with(|| {
-            (
-                HostTensorF32::zeros(&[d.n_layers, bb, d.n_kv_heads, cap, d.d_head]),
-                HostTensorF32::zeros(&[d.n_layers, bb, d.n_kv_heads, cap, d.d_head]),
-                HostTensorI32::zeros(&[d.n_layers, bb]),
-            )
-        });
-        group.cache.pack(bb, cap, k_s, v_s, l_s)?;
+        let cd = group.cache.dims.clone();
+        let scratch = self
+            .scratch
+            .entry((bb, cap))
+            .or_insert_with(|| PackScratch::new(&cd, bb, cap));
+        let pstats = group.cache.pack_delta(scratch)?;
 
         let mut tokens = vec![0i32; bb];
         let mut positions = vec![0i32; bb];
@@ -184,47 +193,72 @@ impl Engine {
         let t_pack = t0.elapsed().as_secs_f64();
 
         let t1 = Instant::now();
-        let out = self.rt.decode(bb, cap, k_s, v_s, l_s, &tokens, &positions)?;
+        let out = self.rt.decode(bb, cap, &scratch.k, &scratch.v,
+                                 &scratch.lens, &tokens, &positions)?;
         let t_exec = t1.elapsed().as_secs_f64();
 
+        // Per-slot post-decode pipeline: every slot's work (K/V insert
+        // mirror, Eq. 5 score accumulation, Eq. 1 sparsity, sampling,
+        // multi-round pruning) touches only that slot's state, so slots
+        // run concurrently on the worker pool.
         let t2 = Instant::now();
-        let mut produced = Vec::with_capacity(n);
         let hkv_d = d.n_kv_heads * d.d_head;
-        let pv = ProbsView::new(&out.probs);
-        for b in 0..n {
-            // Mirror the in-graph insert host-side.
-            let pos = group.seq(b).abs_pos as i32;
-            for l in 0..d.n_layers {
-                let off = (l * bb + b) * hkv_d;
-                group.cache.insert(
-                    l,
-                    b,
-                    &out.k_new.data[off..off + hkv_d],
-                    &out.v_new.data[off..off + hkv_d],
-                    pos,
-                )?;
+        let vocab = d.vocab_size;
+        let n_layers = d.n_layers;
+        let cmax = self.cmax;
+        if self.slot_score_bufs.len() < n {
+            self.slot_score_bufs.resize_with(n, Vec::new);
+        }
+        let mut results: Vec<Option<Result<SlotOutcome>>> =
+            std::iter::repeat_with(|| None).take(n).collect();
+        {
+            let (seqs, cache) = group.seqs_and_cache_mut();
+            let views = cache.slot_views_mut(n);
+            let out_ref = &out;
+            if n == 1 {
+                // No point paying thread hand-off for one slot.
+                let view = views.into_iter().next().unwrap();
+                results[0] = Some(process_slot(
+                    view, &mut seqs[0], &mut self.slot_score_bufs[0],
+                    out_ref, 0, bb, n_layers, hkv_d, vocab, cmax,
+                ));
+            } else {
+                let mut jobs: Vec<Box<dyn FnOnce() + Send + '_>> =
+                    Vec::with_capacity(n);
+                for (b, (((view, seq), buf), res)) in views
+                    .into_iter()
+                    .zip(seqs.iter_mut())
+                    .zip(self.slot_score_bufs.iter_mut())
+                    .zip(results.iter_mut())
+                    .enumerate()
+                {
+                    jobs.push(Box::new(move || {
+                        *res = Some(process_slot(
+                            view, seq, buf, out_ref, b, bb, n_layers,
+                            hkv_d, vocab, cmax,
+                        ));
+                    }));
+                }
+                self.pool.scoped(jobs);
             }
-            // Score accumulation (Eq. 5) + sparsity tracking (Eq. 1).
-            let gamma = group.seq(b).policy.gamma();
-            for l in 0..d.n_layers {
-                let live = group.cache.len(l, b);
-                pv.head_sum_into(l, b, live, &mut self.score_buf);
-                group.cache.accumulate_scores(l, b, gamma, &self.score_buf);
-                group.seq_mut(b).sparsity.observe(l, &self.score_buf);
-            }
-            // Sample + bookkeeping.
-            let logits = &out.logits.data[b * d.vocab_size..(b + 1) * d.vocab_size];
-            let tok = argmax(logits);
-            group.seq_mut(b).note_token(tok);
-            produced.push((b, tok));
-            // Multi-round pruning.
-            self.apply_policies(group, b)?;
+        }
+        let mut produced = Vec::with_capacity(n);
+        for (b, r) in results.into_iter().enumerate() {
+            let o = r
+                .ok_or_else(|| anyhow!("slot {b} worker panicked"))??;
+            produced.push((b, o.token));
+            self.metrics.prune_events += o.prune_events;
+            self.metrics.pruned_tokens += o.pruned_tokens;
         }
         let t_policy = t2.elapsed().as_secs_f64();
         if self.keep_probs {
             self.last_probs = Some(out.probs.clone());
         }
 
+        self.metrics.pack_bytes_copied += pstats.bytes_copied as u64;
+        self.metrics.delta_pack_hits +=
+            (pstats.pairs_delta + pstats.pairs_skipped) as u64;
+        self.metrics.delta_pack_full += pstats.pairs_full as u64;
         self.metrics.decode_steps += 1;
         self.metrics.decode_tokens += n as u64;
         self.metrics.pack_seconds.push(t_pack);
@@ -235,35 +269,16 @@ impl Engine {
         Ok(produced)
     }
 
-    /// Run each layer's retention plan for one slot.
+    /// Run each layer's retention plan for one slot (the serial entry
+    /// used by prefill; decode steps run [`policy_pass`] inside the
+    /// parallel per-slot pipeline).
     fn apply_policies(&mut self, group: &mut DecodeGroup, b: usize) -> Result<()> {
-        let layers = group.cache.dims.layers;
-        for l in 0..layers {
-            let len = group.cache.len(l, b);
-            if len == 0 {
-                continue;
-            }
-            // Split borrows: the policy lives in seqs[b], the score/pos
-            // views in the cache.
-            let (seqs, cache) = group.split_mut();
-            let seq = &mut seqs[b];
-            let st = LayerState {
-                scores: cache.scores(l, b),
-                pos: cache.pos(l, b),
-                len,
-                step: seq.steps,
-                sparsity: seq.sparsity.sparsity(l),
-                capacity: self.cmax,
-            };
-            let plan = seq.policy.plan(l, &st);
-            if let Some(keep) = plan {
-                let before = len;
-                let after = group.cache.apply_retention(l, b, &keep)?;
-                group.seq_mut(b).note_prune(l, before, after);
-                self.metrics.prune_events += 1;
-                self.metrics.pruned_tokens += (before - after) as u64;
-            }
-        }
+        let cmax = self.cmax;
+        let (seqs, cache) = group.seqs_and_cache_mut();
+        let mut view = cache.slot_view_mut(b);
+        let (events, pruned) = policy_pass(&mut view, &mut seqs[b], cmax)?;
+        self.metrics.prune_events += events;
+        self.metrics.pruned_tokens += pruned;
         Ok(())
     }
 
@@ -278,12 +293,115 @@ impl Engine {
     }
 }
 
-/// Greedy sampling.
+/// Worker count for the per-slot post-decode pipeline. Capped: slots are
+/// short CPU-bound jobs and the PJRT exec phase owns the machine anyway.
+fn slot_workers() -> usize {
+    std::thread::available_parallelism()
+        .map(|n| n.get())
+        .unwrap_or(1)
+        .clamp(1, 8)
+}
+
+/// Everything one slot's post-decode job reports back to the step.
+struct SlotOutcome {
+    token: i32,
+    prune_events: u64,
+    pruned_tokens: u64,
+}
+
+/// One slot's complete post-decode work: K/V insert mirror, score
+/// accumulation + sparsity, greedy sampling, multi-round pruning. Runs on
+/// a pool worker; touches only slot-local state (`view`, `seq`, `buf`).
+#[allow(clippy::too_many_arguments)]
+fn process_slot(
+    mut view: SlotViewMut<'_>,
+    seq: &mut group::SeqState,
+    score_buf: &mut Vec<f32>,
+    out: &DecodeOut,
+    b: usize,
+    bb: usize,
+    n_layers: usize,
+    hkv_d: usize,
+    vocab: usize,
+    cmax: usize,
+) -> Result<SlotOutcome> {
+    // Mirror the in-graph insert host-side.
+    let pos = seq.abs_pos as i32;
+    for l in 0..n_layers {
+        let off = (l * bb + b) * hkv_d;
+        view.insert(
+            l,
+            &out.k_new.data[off..off + hkv_d],
+            &out.v_new.data[off..off + hkv_d],
+            pos,
+        )?;
+    }
+    // Score accumulation (Eq. 5) + sparsity tracking (Eq. 1).
+    let gamma = seq.policy.gamma();
+    let pv = ProbsView::new(&out.probs);
+    for l in 0..n_layers {
+        let live = view.len(l);
+        pv.head_sum_into(l, b, live, score_buf);
+        view.accumulate_scores(l, gamma, score_buf);
+        seq.sparsity.observe(l, score_buf);
+    }
+    // Sample + bookkeeping.
+    let logits = &out.logits.data[b * vocab..(b + 1) * vocab];
+    let token = argmax(logits);
+    seq.note_token(token);
+    // Multi-round pruning.
+    let (prune_events, pruned_tokens) = policy_pass(&mut view, seq, cmax)?;
+    Ok(SlotOutcome { token, prune_events, pruned_tokens })
+}
+
+/// Retention plans for every layer of one slot; returns (prune events,
+/// pruned tokens). Shared by the parallel decode pipeline and prefill.
+fn policy_pass(
+    view: &mut SlotViewMut<'_>,
+    seq: &mut group::SeqState,
+    cmax: usize,
+) -> Result<(u64, u64)> {
+    let mut events = 0u64;
+    let mut pruned = 0u64;
+    for l in 0..view.layers() {
+        let len = view.len(l);
+        if len == 0 {
+            continue;
+        }
+        let plan = {
+            let st = LayerState {
+                scores: view.scores(l),
+                pos: view.pos(l),
+                len,
+                step: seq.steps,
+                sparsity: seq.sparsity.sparsity(l),
+                capacity: cmax,
+            };
+            seq.policy.plan(l, &st)
+        };
+        if let Some(keep) = plan {
+            let after = view.apply_retention(l, &keep)?;
+            seq.note_prune(l, len, after);
+            events += 1;
+            pruned += (len - after) as u64;
+        }
+    }
+    Ok((events, pruned))
+}
+
+/// Greedy sampling, NaN-safe: NaN logits are skipped (a NaN must never
+/// win a `>` comparison *or* block a later finite value), ties keep the
+/// first maximum, and an all-NaN row falls back to token 0.
 pub fn argmax(xs: &[f32]) -> i32 {
     let mut best = 0;
     let mut bv = f32::NEG_INFINITY;
+    let mut seen = false;
     for (i, &x) in xs.iter().enumerate() {
-        if x > bv {
+        if x.is_nan() {
+            continue;
+        }
+        if !seen || x > bv {
+            seen = true;
             bv = x;
             best = i;
         }
@@ -299,5 +417,29 @@ mod tests {
     fn argmax_picks_first_max() {
         assert_eq!(argmax(&[0.1, 0.9, 0.9, 0.2]), 1);
         assert_eq!(argmax(&[-1.0, -2.0]), 0);
+    }
+
+    #[test]
+    fn argmax_skips_nans() {
+        assert_eq!(argmax(&[f32::NAN, 0.5, 0.9]), 2);
+        assert_eq!(argmax(&[0.9, f32::NAN, 0.5]), 0);
+        // A NaN head must not shadow a later finite -inf.
+        assert_eq!(argmax(&[f32::NAN, f32::NEG_INFINITY]), 1);
+        // NaN tail keeps the earlier max.
+        assert_eq!(argmax(&[0.1, 0.7, f32::NAN]), 1);
+    }
+
+    #[test]
+    fn argmax_all_nan_falls_back_to_zero() {
+        assert_eq!(argmax(&[f32::NAN, f32::NAN]), 0);
+        assert_eq!(argmax(&[]), 0);
+    }
+
+    #[test]
+    fn argmax_ties_break_to_first_even_at_neg_infinity() {
+        assert_eq!(
+            argmax(&[f32::NEG_INFINITY, f32::NEG_INFINITY]),
+            0
+        );
     }
 }

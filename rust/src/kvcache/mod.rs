@@ -15,12 +15,40 @@
 //! C-prefix of each (l, b, h) row into a scratch tensor for the chosen
 //! capacity bucket — the smaller Lethe keeps the cache, the smaller the
 //! bucket and the less is uploaded/attended per step.
+//!
+//! # Epoch / dirty protocol (incremental delta-pack)
+//!
+//! Every (layer, slot) pair carries a [`SlotEpoch`]: `epoch` advances on
+//! *every* mutation of that pair, and `rewrite` records the epoch of the
+//! last **non-append** mutation (retention gather, prefill load, slot
+//! swap, slot reset). Appends ([`GroupCache::insert`]) bump only `epoch`,
+//! so `rewrite < e <= epoch` certifies that everything between epoch `e`
+//! and now was append-only: rows `0..len(e)` are byte-identical to what
+//! they were at `e`, and only rows `len(e)..len` are new.
+//!
+//! [`PackScratch`] is the consumer: a persistent upload image for one
+//! (batch, capacity) bucket that records, per (l, b), the epoch + row
+//! count it holds, tagged with the owning cache's unique id.
+//! [`GroupCache::pack_delta`] then reconciles per pair:
+//!   * epoch unchanged          → skip (zero bytes copied),
+//!   * append-only since sync   → copy only the new token rows,
+//!   * rewritten / unknown cache→ full C-prefix re-copy of that pair.
+//! The invariant (enforced by `tests/delta_pack_prop.rs`) is that the
+//! resident scratch is bit-identical to a fresh [`GroupCache::pack`]
+//! after every reconcile. Cache ids are never reused and a [`Clone`] of a
+//! cache takes a fresh id, so residency can never confuse two diverging
+//! copies.
 
 pub mod quant;
+
+use std::marker::PhantomData;
+use std::sync::atomic::{AtomicU64, Ordering};
 
 use anyhow::{ensure, Result};
 
 use crate::runtime::tensors::{HostTensorF32, HostTensorI32};
+
+use quant::{kv_row_bytes, KvFormat};
 
 #[derive(Clone, Debug)]
 pub struct CacheDims {
@@ -31,9 +59,26 @@ pub struct CacheDims {
     pub d_head: usize,
 }
 
-#[derive(Clone)]
+/// Change-tracking state for one (layer, slot) pair. `epoch` advances on
+/// every mutation; `rewrite` is the epoch of the last non-append mutation
+/// (see the module-level protocol docs).
+#[derive(Clone, Copy, Debug, Default, PartialEq, Eq)]
+pub struct SlotEpoch {
+    pub epoch: u64,
+    pub rewrite: u64,
+}
+
+static NEXT_CACHE_ID: AtomicU64 = AtomicU64::new(1);
+
+fn next_cache_id() -> u64 {
+    NEXT_CACHE_ID.fetch_add(1, Ordering::Relaxed)
+}
+
 pub struct GroupCache {
     pub dims: CacheDims,
+    /// Process-unique identity; fresh per `new` AND per `clone` so
+    /// [`PackScratch`] residency never matches a different cache.
+    id: u64,
     /// [L, B, Hkv, Cmax, D]
     k: Vec<f32>,
     v: Vec<f32>,
@@ -43,6 +88,26 @@ pub struct GroupCache {
     pos: Vec<Vec<i32>>,
     /// [L][B] -> accumulated attention score per slot.
     scores: Vec<Vec<f32>>,
+    /// [L, B] change-tracking epochs (delta-pack protocol).
+    epochs: Vec<SlotEpoch>,
+}
+
+impl Clone for GroupCache {
+    /// A clone is a logically distinct cache: it takes a fresh id so a
+    /// scratch synced against the original can never false-hit on the
+    /// (independently mutated) copy.
+    fn clone(&self) -> Self {
+        GroupCache {
+            dims: self.dims.clone(),
+            id: next_cache_id(),
+            k: self.k.clone(),
+            v: self.v.clone(),
+            lens: self.lens.clone(),
+            pos: self.pos.clone(),
+            scores: self.scores.clone(),
+            epochs: self.epochs.clone(),
+        }
+    }
 }
 
 impl GroupCache {
@@ -51,12 +116,22 @@ impl GroupCache {
         let n = layers * batch * kv_heads * capacity * d_head;
         GroupCache {
             dims,
+            id: next_cache_id(),
             k: vec![0.0; n],
             v: vec![0.0; n],
             lens: vec![0; layers * batch],
             pos: vec![Vec::new(); layers * batch],
             scores: vec![Vec::new(); layers * batch],
+            epochs: vec![SlotEpoch::default(); layers * batch],
         }
+    }
+
+    pub fn cache_id(&self) -> u64 {
+        self.id
+    }
+
+    pub fn slot_epoch(&self, l: usize, b: usize) -> SlotEpoch {
+        self.epochs[self.lb(l, b)]
     }
 
     #[inline]
@@ -82,9 +157,12 @@ impl GroupCache {
         (0..self.dims.batch).map(|b| self.max_len_slot(b)).max().unwrap_or(0)
     }
 
-    /// Total live KV bytes (f32 K+V) — the Table 2 metric.
+    /// Total live KV bytes — the Table 2 metric. Routed through the
+    /// quant-aware per-row cost so the number stays honest if the
+    /// storage format changes (this cache stores f32).
     pub fn live_bytes(&self) -> usize {
-        let row = self.dims.kv_heads * self.dims.d_head * 4 * 2;
+        let row = kv_row_bytes(self.dims.kv_heads, self.dims.d_head,
+                               KvFormat::F32);
         self.lens.iter().map(|&n| n * row).sum()
     }
 
@@ -111,23 +189,7 @@ impl GroupCache {
         v_row: &[f32],
         abs_pos: i32,
     ) -> Result<()> {
-        let d = self.dims.d_head;
-        let hkv = self.dims.kv_heads;
-        ensure!(k_row.len() == hkv * d && v_row.len() == hkv * d,
-                "bad row size");
-        let idx = self.lb(l, b);
-        let c = self.lens[idx];
-        ensure!(c < self.dims.capacity,
-                "cache overflow at layer {l} slot {b} (len {c})");
-        for h in 0..hkv {
-            let off = self.row_offset(l, b, h, c);
-            self.k[off..off + d].copy_from_slice(&k_row[h * d..(h + 1) * d]);
-            self.v[off..off + d].copy_from_slice(&v_row[h * d..(h + 1) * d]);
-        }
-        self.lens[idx] = c + 1;
-        self.pos[idx].push(abs_pos);
-        self.scores[idx].push(0.0);
-        Ok(())
+        self.slot_view_mut(b).insert(l, k_row, v_row, abs_pos)
     }
 
     /// Bulk-load a prefilled sequence into slot `b` (from prefill k_all
@@ -159,6 +221,7 @@ impl GroupCache {
             self.lens[idx] = len;
             self.pos[idx] = (0..len as i32).collect();
             self.scores[idx] = vec![0.0; len];
+            self.touch_rewrite(idx);
         }
         Ok(())
     }
@@ -169,31 +232,48 @@ impl GroupCache {
             self.lens[idx] = 0;
             self.pos[idx].clear();
             self.scores[idx].clear();
+            self.touch_rewrite(idx);
         }
         // K/V rows beyond lens are dead; zero lazily only where read.
     }
 
-    /// Swap two slots' contents entirely (scheduler keeps active slots
-    /// front-packed; used when a middle sequence finishes).
+    /// Mark (layer, slot) `idx` rewritten: bump the epoch and move the
+    /// rewrite watermark to it.
+    fn touch_rewrite(&mut self, idx: usize) {
+        let e = &mut self.epochs[idx];
+        e.epoch += 1;
+        e.rewrite = e.epoch;
+    }
+
+    /// Swap two slots' contents (scheduler keeps active slots
+    /// front-packed; used when a middle sequence finishes). Only the live
+    /// rows — `max(len_a, len_b)` per layer — are moved: dead rows beyond
+    /// the live length are never read (the decode kernel masks by lens),
+    /// so copying the full Cmax·D extent would be wasted bandwidth.
     pub fn swap_slots(&mut self, a: usize, b: usize) {
         if a == b {
             return;
         }
-        let CacheDims { layers, kv_heads, capacity, d_head, .. } = self.dims;
-        let row = capacity * d_head;
+        let CacheDims { layers, kv_heads, d_head, .. } = self.dims;
         for l in 0..layers {
+            let (ia, ib) = (self.lb(l, a), self.lb(l, b));
+            let n = self.lens[ia].max(self.lens[ib]) * d_head;
             for h in 0..kv_heads {
                 let oa = self.row_offset(l, a, h, 0);
                 let ob = self.row_offset(l, b, h, 0);
-                for i in 0..row {
+                for i in 0..n {
                     self.k.swap(oa + i, ob + i);
                     self.v.swap(oa + i, ob + i);
                 }
             }
-            let (ia, ib) = (self.lb(l, a), self.lb(l, b));
             self.lens.swap(ia, ib);
             self.pos.swap(ia, ib);
             self.scores.swap(ia, ib);
+            // Both sides count as rewritten; keep each pair's epoch
+            // strictly increasing past both old values.
+            let next = self.epochs[ia].epoch.max(self.epochs[ib].epoch) + 1;
+            self.epochs[ia] = SlotEpoch { epoch: next, rewrite: next };
+            self.epochs[ib] = SlotEpoch { epoch: next, rewrite: next };
         }
     }
 
@@ -208,12 +288,7 @@ impl GroupCache {
         gamma: f32,
         add: &[f32],
     ) {
-        let idx = self.lb(l, b);
-        let n = self.lens[idx];
-        let s = &mut self.scores[idx];
-        for j in 0..n {
-            s[j] = gamma * s[j] + add.get(j).copied().unwrap_or(0.0);
-        }
+        self.slot_view_mut(b).accumulate_scores(l, gamma, add);
     }
 
     /// Apply a retention plan to (l, b): keep exactly the rows whose
@@ -226,34 +301,7 @@ impl GroupCache {
         b: usize,
         keep: &[usize],
     ) -> Result<usize> {
-        let idx = self.lb(l, b);
-        let n = self.lens[idx];
-        let mut ks: Vec<usize> = keep.iter().copied().collect();
-        ks.sort_unstable();
-        ks.dedup();
-        ensure!(ks.iter().all(|&i| i < n),
-                "retention index out of range (len {n})");
-        let d = self.dims.d_head;
-        for h in 0..self.dims.kv_heads {
-            let base = self.row_offset(l, b, h, 0);
-            for (dst, &src) in ks.iter().enumerate() {
-                if dst != src {
-                    let (do_, so) = (base + dst * d, base + src * d);
-                    self.k.copy_within(so..so + d, do_);
-                    self.v.copy_within(so..so + d, do_);
-                }
-            }
-        }
-        let pos = &mut self.pos[idx];
-        let sc = &mut self.scores[idx];
-        for (dst, &src) in ks.iter().enumerate() {
-            pos[dst] = pos[src];
-            sc[dst] = sc[src];
-        }
-        pos.truncate(ks.len());
-        sc.truncate(ks.len());
-        self.lens[idx] = ks.len();
-        Ok(ks.len())
+        self.slot_view_mut(b).apply_retention(l, keep)
     }
 
     /// Pack the C-prefix of the first `bb` slots into upload tensors for
@@ -293,6 +341,115 @@ impl GroupCache {
         Ok(())
     }
 
+    /// Reconcile a persistent [`PackScratch`] with the current cache
+    /// state, copying only what changed since the scratch was last
+    /// synced (see the module-level epoch protocol). The scratch ends up
+    /// bit-identical to a fresh [`GroupCache::pack`] at the same bucket.
+    pub fn pack_delta(&self, scratch: &mut PackScratch) -> Result<PackStats> {
+        let CacheDims { layers, batch, kv_heads, d_head, .. } = self.dims;
+        let (bb, cap) = (scratch.bb, scratch.cap);
+        ensure!(bb <= batch, "batch bucket {bb} > group size {batch}");
+        ensure!(cap <= self.dims.capacity, "bucket {cap} > Cmax");
+        let want = vec![layers, bb, kv_heads, cap, d_head];
+        ensure!(scratch.k.shape == want && scratch.v.shape == want,
+                "scratch shape mismatch: {:?} vs {want:?}", scratch.k.shape);
+        // Residency from another cache (or none) says nothing about this
+        // one — every pair gets a full re-copy below.
+        let cold = scratch.cache_id != Some(self.id);
+        // Mark cold until the reconcile fully succeeds: an error below
+        // (e.g. a mid-loop bucket overflow) leaves `res` partially
+        // rewritten, and residency claiming the *previous* cache over
+        // mixed contents could silently skip pairs on the next pack.
+        scratch.cache_id = None;
+        let mut stats = PackStats::default();
+        let n_block = cap * d_head;
+        for l in 0..layers {
+            for b in 0..bb {
+                let idx = self.lb(l, b);
+                let len = self.lens[idx];
+                ensure!(len <= cap,
+                        "live rows exceed bucket {cap} at ({l},{b})");
+                let st = self.epochs[idx];
+                let ridx = l * bb + b;
+                let (re, rlen) = scratch.res[ridx];
+                let (from, to) = if !cold && re == st.epoch {
+                    stats.pairs_skipped += 1;
+                    (0, 0)
+                } else if !cold && re >= st.rewrite {
+                    // Append-only since last sync: rows 0..rlen are
+                    // unchanged, only the newly inserted rows move.
+                    stats.pairs_delta += 1;
+                    (rlen, len)
+                } else {
+                    // Rewritten (or cold): re-copy the full C-prefix so
+                    // dead rows match a fresh pack too.
+                    stats.pairs_full += 1;
+                    (0, cap)
+                };
+                if to > from {
+                    let count = (to - from) * d_head;
+                    for h in 0..kv_heads {
+                        let src = self.row_offset(l, b, h, from);
+                        let dst = ((l * bb + b) * kv_heads + h) * n_block
+                            + from * d_head;
+                        scratch.k.data[dst..dst + count]
+                            .copy_from_slice(&self.k[src..src + count]);
+                        scratch.v.data[dst..dst + count]
+                            .copy_from_slice(&self.v[src..src + count]);
+                    }
+                    stats.bytes_copied += count * kv_heads * 4 * 2;
+                }
+                scratch.res[ridx] = (st.epoch, len);
+                scratch.lens.data[ridx] = len as i32;
+            }
+        }
+        scratch.cache_id = Some(self.id);
+        Ok(stats)
+    }
+
+    /// Raw component pointers shared by the view constructors.
+    fn raw_parts(&mut self) -> RawParts {
+        RawParts {
+            k: self.k.as_mut_ptr(),
+            v: self.v.as_mut_ptr(),
+            lens: self.lens.as_mut_ptr(),
+            pos: self.pos.as_mut_ptr(),
+            scores: self.scores.as_mut_ptr(),
+            epochs: self.epochs.as_mut_ptr(),
+        }
+    }
+
+    /// Exclusive mutable view over one slot's state across all layers.
+    pub fn slot_view_mut(&mut self, b: usize) -> SlotViewMut<'_> {
+        assert!(b < self.dims.batch, "slot {b} out of range");
+        let parts = self.raw_parts();
+        SlotViewMut {
+            b,
+            dims: self.dims.clone(),
+            parts,
+            _borrow: PhantomData,
+        }
+    }
+
+    /// Disjoint mutable views over slots `0..n`, for parallel per-slot
+    /// post-decode work. Each view only ever touches its own slot's
+    /// K/V regions, lens, pos, scores and epochs, so the views can be
+    /// sent to different worker threads simultaneously.
+    pub fn slot_views_mut(&mut self, n: usize) -> Vec<SlotViewMut<'_>> {
+        assert!(n <= self.dims.batch,
+                "view count {n} > group size {}", self.dims.batch);
+        let parts = self.raw_parts();
+        let dims = self.dims.clone();
+        (0..n)
+            .map(|b| SlotViewMut {
+                b,
+                dims: dims.clone(),
+                parts,
+                _borrow: PhantomData,
+            })
+            .collect()
+    }
+
     /// Retained-slot bitmap for one layer/slot against absolute positions
     /// 0..=max_pos (Figure 3 visualisation).
     pub fn retention_bitmap(&self, l: usize, b: usize, max_pos: usize) -> Vec<bool> {
@@ -303,6 +460,224 @@ impl GroupCache {
             }
         }
         bm
+    }
+}
+
+/// Raw pointers to the cache's component buffers (Copy so every view can
+/// carry the full set; provenance is the whole allocation, each view
+/// restricts itself to its slot's disjoint sub-ranges).
+#[derive(Clone, Copy)]
+struct RawParts {
+    k: *mut f32,
+    v: *mut f32,
+    lens: *mut usize,
+    pos: *mut Vec<i32>,
+    scores: *mut Vec<f32>,
+    epochs: *mut SlotEpoch,
+}
+
+/// Exclusive mutable access to one slot `b` of a [`GroupCache`], across
+/// all layers. Obtained via [`GroupCache::slot_views_mut`]; the borrow on
+/// the cache lives as long as any view, and distinct views touch disjoint
+/// (layer, slot) state, so a set of views is safe to use from multiple
+/// threads at once (the engine's parallel post-decode pipeline).
+pub struct SlotViewMut<'a> {
+    b: usize,
+    dims: CacheDims,
+    parts: RawParts,
+    _borrow: PhantomData<&'a mut GroupCache>,
+}
+
+// SAFETY: all pointed-to data is plain owned memory (`f32`/`usize`/`Vec`s
+// of Send types), and the constructor hands out at most one view per
+// slot, so no two threads ever alias the same (layer, slot) state.
+unsafe impl Send for SlotViewMut<'_> {}
+
+impl SlotViewMut<'_> {
+    pub fn slot(&self) -> usize {
+        self.b
+    }
+
+    pub fn layers(&self) -> usize {
+        self.dims.layers
+    }
+
+    #[inline]
+    fn lb(&self, l: usize) -> usize {
+        l * self.dims.batch + self.b
+    }
+
+    #[inline]
+    fn row_offset(&self, l: usize, h: usize, c: usize) -> usize {
+        let CacheDims { batch, kv_heads, capacity, d_head, .. } = self.dims;
+        (((l * batch + self.b) * kv_heads + h) * capacity + c) * d_head
+    }
+
+    /// The contiguous [Cmax, D] block of this slot's (l, h) K rows.
+    /// SAFETY: the range is exclusive to this slot (disjoint across
+    /// views) and the PhantomData borrow keeps the cache alive/unmoved.
+    fn k_block(&mut self, l: usize, h: usize) -> &mut [f32] {
+        let off = self.row_offset(l, h, 0);
+        let n = self.dims.capacity * self.dims.d_head;
+        unsafe { std::slice::from_raw_parts_mut(self.parts.k.add(off), n) }
+    }
+
+    fn v_block(&mut self, l: usize, h: usize) -> &mut [f32] {
+        let off = self.row_offset(l, h, 0);
+        let n = self.dims.capacity * self.dims.d_head;
+        unsafe { std::slice::from_raw_parts_mut(self.parts.v.add(off), n) }
+    }
+
+    pub fn len(&self, l: usize) -> usize {
+        unsafe { *self.parts.lens.add(self.lb(l)) }
+    }
+
+    pub fn is_empty(&self) -> bool {
+        (0..self.dims.layers).all(|l| self.len(l) == 0)
+    }
+
+    pub fn pos(&self, l: usize) -> &[i32] {
+        unsafe { &*self.parts.pos.add(self.lb(l)) }
+    }
+
+    pub fn scores(&self, l: usize) -> &[f32] {
+        unsafe { &*self.parts.scores.add(self.lb(l)) }
+    }
+
+    /// Append one token's K/V (layout [Hkv, D]); see
+    /// [`GroupCache::insert`]. Bumps the pair's epoch (append).
+    pub fn insert(
+        &mut self,
+        l: usize,
+        k_row: &[f32],
+        v_row: &[f32],
+        abs_pos: i32,
+    ) -> Result<()> {
+        let d = self.dims.d_head;
+        let hkv = self.dims.kv_heads;
+        ensure!(k_row.len() == hkv * d && v_row.len() == hkv * d,
+                "bad row size");
+        let idx = self.lb(l);
+        let c = self.len(l);
+        ensure!(c < self.dims.capacity,
+                "cache overflow at layer {l} slot {} (len {c})", self.b);
+        for h in 0..hkv {
+            self.k_block(l, h)[c * d..(c + 1) * d]
+                .copy_from_slice(&k_row[h * d..(h + 1) * d]);
+            self.v_block(l, h)[c * d..(c + 1) * d]
+                .copy_from_slice(&v_row[h * d..(h + 1) * d]);
+        }
+        unsafe {
+            *self.parts.lens.add(idx) = c + 1;
+            (*self.parts.pos.add(idx)).push(abs_pos);
+            (*self.parts.scores.add(idx)).push(0.0);
+            (*self.parts.epochs.add(idx)).epoch += 1;
+        }
+        Ok(())
+    }
+
+    /// RASR score update; see [`GroupCache::accumulate_scores`].
+    pub fn accumulate_scores(&mut self, l: usize, gamma: f32, add: &[f32]) {
+        let idx = self.lb(l);
+        let n = self.len(l);
+        let s = unsafe { &mut *self.parts.scores.add(idx) };
+        for j in 0..n {
+            s[j] = gamma * s[j] + add.get(j).copied().unwrap_or(0.0);
+        }
+    }
+
+    /// Retention gather; see [`GroupCache::apply_retention`]. Marks the
+    /// pair rewritten (delta-pack full re-copy on next pack).
+    pub fn apply_retention(&mut self, l: usize, keep: &[usize]) -> Result<usize> {
+        let idx = self.lb(l);
+        let n = self.len(l);
+        let mut ks: Vec<usize> = keep.to_vec();
+        ks.sort_unstable();
+        ks.dedup();
+        ensure!(ks.iter().all(|&i| i < n),
+                "retention index out of range (len {n})");
+        let d = self.dims.d_head;
+        for h in 0..self.dims.kv_heads {
+            gather_rows(self.k_block(l, h), d, &ks);
+            gather_rows(self.v_block(l, h), d, &ks);
+        }
+        unsafe {
+            let pos = &mut *self.parts.pos.add(idx);
+            let sc = &mut *self.parts.scores.add(idx);
+            for (dst, &src) in ks.iter().enumerate() {
+                pos[dst] = pos[src];
+                sc[dst] = sc[src];
+            }
+            pos.truncate(ks.len());
+            sc.truncate(ks.len());
+            *self.parts.lens.add(idx) = ks.len();
+            let e = &mut *self.parts.epochs.add(idx);
+            e.epoch += 1;
+            e.rewrite = e.epoch;
+        }
+        Ok(ks.len())
+    }
+}
+
+/// Front-packing gather of D-wide rows by ascending source index.
+fn gather_rows(block: &mut [f32], d: usize, ks: &[usize]) {
+    for (dst, &src) in ks.iter().enumerate() {
+        if dst != src {
+            block.copy_within(src * d..(src + 1) * d, dst * d);
+        }
+    }
+}
+
+/// What one [`GroupCache::pack_delta`] call actually moved.
+#[derive(Clone, Copy, Debug, Default)]
+pub struct PackStats {
+    /// Host bytes copied into the scratch (K + V).
+    pub bytes_copied: usize,
+    /// (layer, slot) pairs re-copied in full (rewritten or cold).
+    pub pairs_full: usize,
+    /// Pairs where only newly appended rows were copied.
+    pub pairs_delta: usize,
+    /// Pairs already resident at the current epoch (zero copy).
+    pub pairs_skipped: usize,
+}
+
+/// Persistent upload image for one (batch, capacity) bucket, plus the
+/// per-(layer, slot) residency record [`GroupCache::pack_delta`] uses to
+/// decide how little it can copy.
+pub struct PackScratch {
+    pub k: HostTensorF32,
+    pub v: HostTensorF32,
+    pub lens: HostTensorI32,
+    bb: usize,
+    cap: usize,
+    /// Which cache (by unique id) the residency describes; None = cold.
+    cache_id: Option<u64>,
+    /// [L * bb] -> (epoch held, rows valid at that epoch).
+    res: Vec<(u64, usize)>,
+}
+
+impl PackScratch {
+    /// `dims` supplies layers/kv_heads/d_head; `bb`/`cap` are the bucket.
+    pub fn new(dims: &CacheDims, bb: usize, cap: usize) -> PackScratch {
+        let shape = [dims.layers, bb, dims.kv_heads, cap, dims.d_head];
+        PackScratch {
+            k: HostTensorF32::zeros(&shape),
+            v: HostTensorF32::zeros(&shape),
+            lens: HostTensorI32::zeros(&[dims.layers, bb]),
+            bb,
+            cap,
+            cache_id: None,
+            res: vec![(0, 0); dims.layers * bb],
+        }
+    }
+
+    pub fn bucket(&self) -> (usize, usize) {
+        (self.bb, self.cap)
+    }
+
+    /// Drop residency; the next pack_delta re-copies everything.
+    pub fn invalidate(&mut self) {
+        self.cache_id = None;
     }
 }
 
@@ -438,5 +813,144 @@ mod tests {
         c.apply_retention(0, 0, &[0, 4]).unwrap();
         let bm = c.retention_bitmap(0, 0, 4);
         assert_eq!(bm, vec![true, false, false, false, true]);
+    }
+
+    fn assert_matches_fresh_pack(c: &GroupCache, s: &PackScratch) {
+        let (bb, cap) = s.bucket();
+        let shape = [c.dims.layers, bb, c.dims.kv_heads, cap, c.dims.d_head];
+        let mut k = HostTensorF32::zeros(&shape);
+        let mut v = HostTensorF32::zeros(&shape);
+        let mut lens = HostTensorI32::zeros(&[c.dims.layers, bb]);
+        c.pack(bb, cap, &mut k, &mut v, &mut lens).unwrap();
+        assert_eq!(k.data, s.k.data, "K scratch diverged from fresh pack");
+        assert_eq!(v.data, s.v.data, "V scratch diverged from fresh pack");
+        assert_eq!(lens.data, s.lens.data, "lens diverged from fresh pack");
+    }
+
+    #[test]
+    fn epochs_distinguish_appends_from_rewrites() {
+        let mut c = GroupCache::new(dims());
+        let e0 = c.slot_epoch(0, 0);
+        c.insert(0, 0, &row(1.0, 2, 4), &row(1.0, 2, 4), 0).unwrap();
+        let e1 = c.slot_epoch(0, 0);
+        assert_eq!(e1.epoch, e0.epoch + 1);
+        assert_eq!(e1.rewrite, e0.rewrite, "append must not move rewrite");
+        c.apply_retention(0, 0, &[0]).unwrap();
+        let e2 = c.slot_epoch(0, 0);
+        assert!(e2.epoch > e1.epoch);
+        assert_eq!(e2.rewrite, e2.epoch, "retention is a rewrite");
+    }
+
+    #[test]
+    fn delta_pack_append_only_copies_only_new_rows() {
+        let mut c = GroupCache::new(dims());
+        for t in 0..3 {
+            for l in 0..2 {
+                c.insert(l, 0, &row(t as f32, 2, 4), &row(t as f32, 2, 4), t)
+                    .unwrap();
+            }
+        }
+        let mut s = PackScratch::new(&c.dims, 2, 8);
+        let st = c.pack_delta(&mut s).unwrap();
+        assert_eq!(st.pairs_full, 4, "cold sync re-copies every pair");
+        assert_matches_fresh_pack(&c, &s);
+
+        // One append on (0, 0): exactly one delta pair, rest skipped,
+        // bytes == 1 row * Hkv * D * 4 bytes * 2 tensors.
+        c.insert(0, 0, &row(9.0, 2, 4), &row(9.0, 2, 4), 3).unwrap();
+        let st = c.pack_delta(&mut s).unwrap();
+        assert_eq!(st.pairs_delta, 1);
+        assert_eq!(st.pairs_skipped, 3);
+        assert_eq!(st.pairs_full, 0);
+        assert_eq!(st.bytes_copied, 2 * 4 * 4 * 2);
+        assert_matches_fresh_pack(&c, &s);
+
+        // No change at all: pure skip.
+        let st = c.pack_delta(&mut s).unwrap();
+        assert_eq!(st.pairs_skipped, 4);
+        assert_eq!(st.bytes_copied, 0);
+        assert_matches_fresh_pack(&c, &s);
+    }
+
+    #[test]
+    fn delta_pack_repacks_rewritten_pairs() {
+        let mut c = GroupCache::new(dims());
+        for t in 0..5 {
+            for l in 0..2 {
+                c.insert(l, 0, &row(t as f32, 2, 4), &row(t as f32, 2, 4), t)
+                    .unwrap();
+            }
+        }
+        let mut s = PackScratch::new(&c.dims, 2, 8);
+        c.pack_delta(&mut s).unwrap();
+        c.apply_retention(0, 0, &[0, 2, 4]).unwrap();
+        let st = c.pack_delta(&mut s).unwrap();
+        assert_eq!(st.pairs_full, 1, "only the retained pair re-copies");
+        assert_eq!(st.pairs_skipped, 3);
+        assert_matches_fresh_pack(&c, &s);
+
+        c.swap_slots(0, 1);
+        let st = c.pack_delta(&mut s).unwrap();
+        assert_eq!(st.pairs_full, 4, "swap rewrites both slots, all layers");
+        assert_matches_fresh_pack(&c, &s);
+    }
+
+    #[test]
+    fn delta_pack_never_trusts_a_different_cache() {
+        let mut c = GroupCache::new(dims());
+        c.insert(0, 0, &row(1.0, 2, 4), &row(1.0, 2, 4), 0).unwrap();
+        let mut s = PackScratch::new(&c.dims, 2, 8);
+        c.pack_delta(&mut s).unwrap();
+
+        // A clone has a fresh id: same epochs, divergent future.
+        let mut c2 = c.clone();
+        assert_ne!(c.cache_id(), c2.cache_id());
+        c2.insert(0, 0, &row(7.0, 2, 4), &row(7.0, 2, 4), 1).unwrap();
+        let st = c2.pack_delta(&mut s).unwrap();
+        assert_eq!(st.pairs_full, 4, "unknown cache forces a cold sync");
+        assert_matches_fresh_pack(&c2, &s);
+
+        s.invalidate();
+        let st = c2.pack_delta(&mut s).unwrap();
+        assert_eq!(st.pairs_full, 4);
+    }
+
+    #[test]
+    fn delta_pack_rejects_overfull_bucket() {
+        let mut c = GroupCache::new(dims());
+        for t in 0..5 {
+            c.insert(0, 0, &row(0.0, 2, 4), &row(0.0, 2, 4), t).unwrap();
+        }
+        let mut s = PackScratch::new(&c.dims, 2, 4);
+        assert!(c.pack_delta(&mut s).is_err());
+    }
+
+    #[test]
+    fn slot_views_are_disjoint_and_usable_in_parallel() {
+        let mut c = GroupCache::new(dims());
+        let views = c.slot_views_mut(2);
+        std::thread::scope(|sc| {
+            for (i, mut view) in views.into_iter().enumerate() {
+                sc.spawn(move || {
+                    for t in 0..4 {
+                        for l in 0..view.layers() {
+                            view.insert(l, &row(i as f32, 2, 4),
+                                        &row(i as f32, 2, 4), t)
+                                .unwrap();
+                        }
+                    }
+                    view.accumulate_scores(0, 1.0, &[0.5; 4]);
+                    view.apply_retention(0, &[1, 3]).unwrap();
+                });
+            }
+        });
+        assert_eq!(c.len(0, 0), 2);
+        assert_eq!(c.len(0, 1), 2);
+        assert_eq!(c.len(1, 0), 4);
+        assert_eq!(c.pos(0, 1), &[1, 3]);
+        assert!((c.scores(0, 0)[0] - 0.5).abs() < 1e-6);
+        // Slot 1's K data must be the value its own thread wrote.
+        let off = c.row_offset(0, 1, 0, 0);
+        assert!((c.k[off] - 1.0).abs() < 1e-6);
     }
 }

@@ -16,6 +16,28 @@
 
 use anyhow::{ensure, Result};
 
+/// KV storage format, for byte accounting (Table 2). Every `live_bytes`
+/// style metric routes through [`kv_row_bytes`] so memory numbers stay
+/// honest across storage backends.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum KvFormat {
+    /// 4 bytes per element (the serving default).
+    F32,
+    /// Per-row symmetric int8: 1 byte per element + one f32 scale per
+    /// (head, tensor) row.
+    QuantI8,
+}
+
+/// Bytes to store one cached token row — K *and* V, all `kv_heads` heads
+/// of `d_head` elements — in the given format.
+pub fn kv_row_bytes(kv_heads: usize, d_head: usize, fmt: KvFormat) -> usize {
+    let per_head = match fmt {
+        KvFormat::F32 => d_head * 4,
+        KvFormat::QuantI8 => d_head + 4,
+    };
+    kv_heads * per_head * 2
+}
+
 /// One quantized row: i8 mantissas + a power-independent f32 scale.
 #[derive(Clone, Debug, Default)]
 pub struct QuantRow {
@@ -142,16 +164,14 @@ impl QuantCache {
 
     /// Stored bytes for the live rows (i8 + scale), vs 4 bytes/elem f32.
     pub fn live_bytes(&self) -> usize {
-        let per_row = self.d_head + 4;
-        self.lens.iter().map(|&n| n * self.kv_heads * per_row * 2).sum()
+        let row = kv_row_bytes(self.kv_heads, self.d_head, KvFormat::QuantI8);
+        self.lens.iter().map(|&n| n * row).sum()
     }
 
     /// f32-equivalent live bytes (what GroupCache would hold).
     pub fn f32_equivalent_bytes(&self) -> usize {
-        self.lens
-            .iter()
-            .map(|&n| n * self.kv_heads * self.d_head * 4 * 2)
-            .sum()
+        let row = kv_row_bytes(self.kv_heads, self.d_head, KvFormat::F32);
+        self.lens.iter().map(|&n| n * row).sum()
     }
 }
 
@@ -160,6 +180,14 @@ mod tests {
     use super::*;
     use crate::util::prng::Rng;
     use crate::util::proptest::{check, vec_f32};
+
+    #[test]
+    fn kv_row_bytes_by_format() {
+        // 2 heads * 4 elems * 4 bytes * 2 tensors
+        assert_eq!(kv_row_bytes(2, 4, KvFormat::F32), 64);
+        // 2 heads * (4 elems + 4-byte scale) * 2 tensors
+        assert_eq!(kv_row_bytes(2, 4, KvFormat::QuantI8), 32);
+    }
 
     #[test]
     fn roundtrip_error_is_bounded() {

@@ -19,6 +19,15 @@ pub struct EngineMetrics {
     pub prune_events: u64,
     pub pruned_tokens: u64,
     pub ooms: u64,
+    /// Host bytes actually copied into upload scratch by delta-pack
+    /// (K + V); a full per-step repack would be L·B·Hkv·C·D·8 every step.
+    pub pack_bytes_copied: u64,
+    /// (layer, slot) pairs served by the delta path (append-only copy or
+    /// pure residency skip) instead of a full re-copy.
+    pub delta_pack_hits: u64,
+    /// (layer, slot) pairs that needed a full re-copy (cold scratch,
+    /// retention, swap, prefill or reset since last sync).
+    pub delta_pack_full: u64,
     pub live_bytes_last: usize,
     /// decode capacity bucket -> steps run at that bucket.
     pub capacity_hist: BTreeMap<usize, u64>,
@@ -78,6 +87,9 @@ impl EngineMetrics {
             ("prune_events", Json::from(self.prune_events as usize)),
             ("pruned_tokens", Json::from(self.pruned_tokens as usize)),
             ("ooms", Json::from(self.ooms as usize)),
+            ("pack_bytes_copied", Json::from(self.pack_bytes_copied as usize)),
+            ("delta_pack_hits", Json::from(self.delta_pack_hits as usize)),
+            ("delta_pack_full", Json::from(self.delta_pack_full as usize)),
             ("live_bytes_last", Json::from(self.live_bytes_last)),
             ("decode_tput_tok_s", Json::num(self.decode_tput())),
             ("step_seconds_mean", Json::num(self.step_seconds_mean())),
@@ -105,11 +117,21 @@ mod tests {
     fn json_roundtrips() {
         let mut m = EngineMetrics::default();
         m.decode_steps = 3;
+        m.pack_bytes_copied = 4096;
+        m.delta_pack_hits = 12;
         m.capacity_hist.insert(128, 2);
         m.capacity_hist.insert(256, 1);
         let j = m.to_json().to_string();
         let parsed = crate::util::json::parse(&j).unwrap();
         assert_eq!(parsed.get("decode_steps").unwrap().as_usize().unwrap(), 3);
+        assert_eq!(
+            parsed.get("pack_bytes_copied").unwrap().as_usize().unwrap(),
+            4096
+        );
+        assert_eq!(
+            parsed.get("delta_pack_hits").unwrap().as_usize().unwrap(),
+            12
+        );
         assert_eq!(
             parsed.get("capacity_hist").unwrap().as_arr().unwrap().len(),
             2

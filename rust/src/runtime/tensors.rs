@@ -36,6 +36,12 @@ impl HostTensorF32 {
         self.data.len()
     }
 
+    /// Payload size in bytes (f32 = 4 bytes/element). Used by the
+    /// delta-pack telemetry to report resident-scratch footprints.
+    pub fn bytes(&self) -> usize {
+        self.data.len() * 4
+    }
+
     pub fn upload(&self, client: &PjRtClient) -> Result<PjRtBuffer> {
         Ok(client.buffer_from_host_buffer(&self.data, &self.shape, None)?)
     }
@@ -61,6 +67,15 @@ impl HostTensorI32 {
             data.len()
         );
         Ok(HostTensorI32 { shape: shape.to_vec(), data })
+    }
+
+    pub fn numel(&self) -> usize {
+        self.data.len()
+    }
+
+    /// Payload size in bytes (i32 = 4 bytes/element).
+    pub fn bytes(&self) -> usize {
+        self.data.len() * 4
     }
 
     pub fn upload(&self, client: &PjRtClient) -> Result<PjRtBuffer> {
@@ -109,5 +124,13 @@ mod tests {
     fn from_vec_validates() {
         assert!(HostTensorF32::from_vec(&[2, 2], vec![0.0; 3]).is_err());
         assert!(HostTensorI32::from_vec(&[2, 2], vec![0; 4]).is_ok());
+    }
+
+    #[test]
+    fn byte_sizes() {
+        assert_eq!(HostTensorF32::zeros(&[2, 3]).bytes(), 24);
+        let i = HostTensorI32::zeros(&[4]);
+        assert_eq!(i.numel(), 4);
+        assert_eq!(i.bytes(), 16);
     }
 }

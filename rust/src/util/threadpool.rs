@@ -6,7 +6,7 @@
 
 use std::sync::atomic::{AtomicUsize, Ordering};
 use std::sync::mpsc;
-use std::sync::{Arc, Mutex};
+use std::sync::{Arc, Condvar, Mutex};
 use std::thread;
 
 type Job = Box<dyn FnOnce() + Send + 'static>;
@@ -69,6 +69,68 @@ impl ThreadPool {
             .expect("threadpool already shut down");
     }
 
+    /// Run a batch of *borrowing* jobs to completion (scoped fork-join).
+    /// Unlike [`ThreadPool::spawn`], jobs may borrow from the caller's
+    /// stack: the call blocks until every job in the batch has finished
+    /// (panicked jobs count as finished), which restores the borrow
+    /// contract before returning — the same argument `std::thread::scope`
+    /// makes. Used by the engine's parallel per-slot decode pipeline.
+    pub fn scoped<'a>(&self, mut jobs: Vec<Box<dyn FnOnce() + Send + 'a>>) {
+        struct Latch {
+            done: Mutex<usize>,
+            cv: Condvar,
+        }
+        struct DoneGuard(Arc<Latch>);
+        impl Drop for DoneGuard {
+            fn drop(&mut self) {
+                // Fires on normal return AND during unwind, so the join
+                // below never hangs on a panicked job (the worker loop
+                // catches the unwind).
+                *self.0.done.lock().unwrap() += 1;
+                self.0.cv.notify_one();
+            }
+        }
+        // The caller is a perfectly good worker for one job: keep the
+        // last one to run inline instead of parking immediately.
+        let Some(inline) = jobs.pop() else { return };
+        let total = jobs.len();
+        let latch = Arc::new(Latch { done: Mutex::new(0), cv: Condvar::new() });
+        for job in jobs {
+            let guard = DoneGuard(Arc::clone(&latch));
+            let wrapped: Box<dyn FnOnce() + Send + 'a> = Box::new(move || {
+                let _completes_on_any_exit = guard;
+                job();
+            });
+            // SAFETY: `wrapped` only borrows data that outlives 'a, and
+            // this function does not return (even by unwind — see the
+            // catch below) until every enqueued job has run to
+            // completion, so no borrow is used past its real lifetime.
+            // The transmute only erases the lifetime; layout is
+            // identical.
+            let wrapped: Job = unsafe {
+                std::mem::transmute::<Box<dyn FnOnce() + Send + 'a>, Job>(
+                    wrapped,
+                )
+            };
+            self.inflight.fetch_add(1, Ordering::SeqCst);
+            self.tx
+                .send(Msg::Run(wrapped))
+                .expect("threadpool already shut down");
+        }
+        // A panic in the inline job must not skip the join (the workers
+        // would still hold borrows): defer the unwind past the wait.
+        let inline_result =
+            std::panic::catch_unwind(std::panic::AssertUnwindSafe(inline));
+        let mut done = latch.done.lock().unwrap();
+        while *done < total {
+            done = latch.cv.wait(done).unwrap();
+        }
+        drop(done);
+        if let Err(p) = inline_result {
+            std::panic::resume_unwind(p);
+        }
+    }
+
     /// Jobs submitted but not yet finished.
     pub fn inflight(&self) -> usize {
         self.inflight.load(Ordering::SeqCst)
@@ -125,6 +187,40 @@ mod tests {
         }
         pool.wait_idle();
         assert_eq!(counter.load(Ordering::SeqCst), 10);
+    }
+
+    #[test]
+    fn scoped_jobs_may_borrow_the_stack() {
+        let pool = ThreadPool::new(4);
+        let mut data = vec![0u64; 32];
+        let jobs: Vec<Box<dyn FnOnce() + Send + '_>> = data
+            .iter_mut()
+            .enumerate()
+            .map(|(i, slot)| {
+                Box::new(move || *slot = i as u64 * 2)
+                    as Box<dyn FnOnce() + Send + '_>
+            })
+            .collect();
+        pool.scoped(jobs);
+        for (i, &v) in data.iter().enumerate() {
+            assert_eq!(v, i as u64 * 2);
+        }
+    }
+
+    #[test]
+    fn scoped_joins_even_when_a_job_panics() {
+        let pool = ThreadPool::new(2);
+        let counter = Arc::new(AtomicU64::new(0));
+        let mut jobs: Vec<Box<dyn FnOnce() + Send + '_>> = Vec::new();
+        jobs.push(Box::new(|| panic!("boom")));
+        for _ in 0..8 {
+            let c = Arc::clone(&counter);
+            jobs.push(Box::new(move || {
+                c.fetch_add(1, Ordering::SeqCst);
+            }));
+        }
+        pool.scoped(jobs); // must not hang
+        assert_eq!(counter.load(Ordering::SeqCst), 8);
     }
 
     #[test]
