@@ -3,23 +3,33 @@
 //!
 //!   decode exec   — PJRT execute per (B, C) bucket (upload + run + fetch)
 //!   cache pack    — GroupCache::pack into upload scratch
+//!   delta pack    — epoch-tracked incremental pack (f32 and q8 backends)
+//!   q8 insert     — per-token insert incl. int8 quantization
 //!   score accum   — RASR Eq. 5 update over a full group
 //!   hoyer         — Eq. 1 sparsity over a C-vector
 //!   lethe plan    — Algorithm 1 on a worst-case layer
 //!   apply retain  — the eviction gather
 //!   json parse    — manifest-sized document (startup path)
+//!
+//! Every pure-rust row is also written to `bench_results/hotpath.csv`
+//! via `bench_support::hotpath_csv`.
 
-use lethe::bench_support::try_engine;
+use lethe::bench_support::{hotpath_csv, try_engine};
 use lethe::config::{LetheParams, ServingConfig};
-use lethe::kvcache::{CacheDims, GroupCache, PackScratch};
+use lethe::kvcache::{CacheDims, GroupCache, KvFormat, PackScratch};
 use lethe::policy::{EvictionPolicy, LayerState, LethePolicy};
 use lethe::runtime::tensors::{HostTensorF32, HostTensorI32};
 use lethe::util::prng::Rng;
-use lethe::util::stats::{bench, bench_row};
+use lethe::util::stats::{bench, bench_row, Summary};
 
 fn main() -> anyhow::Result<()> {
     println!("=== hotpath microbenches (warmup 3, n=20) ===");
     let mut rng = Rng::new(0x407);
+    let mut csv: Vec<(String, Summary)> = Vec::new();
+    let emit = |name: &str, s: &Summary, csv: &mut Vec<(String, Summary)>| {
+        println!("{}", bench_row(name, s));
+        csv.push((name.to_string(), s.clone()));
+    };
 
     // --- pure-rust paths -------------------------------------------------
     let dims = CacheDims {
@@ -29,7 +39,7 @@ fn main() -> anyhow::Result<()> {
         capacity: 512,
         d_head: 32,
     };
-    let mut cache = GroupCache::new(dims.clone());
+    let mut cache = GroupCache::new(dims);
     let row: Vec<f32> = (0..64).map(|i| i as f32).collect();
     for b in 0..8 {
         for t in 0..400 {
@@ -44,7 +54,7 @@ fn main() -> anyhow::Result<()> {
     let s = bench(3, 20, || {
         cache.pack(8, 512, &mut k_s, &mut v_s, &mut l_s).unwrap();
     });
-    println!("{}", bench_row("cache pack b8 c512 (16.8MB)", &s));
+    emit("cache pack b8 c512 (16.8MB)", &s, &mut csv);
 
     // Steady-state decode step: one appended token per (l, b), then an
     // incremental pack — the Engine::step path. A separate clone keeps
@@ -63,16 +73,51 @@ fn main() -> anyhow::Result<()> {
         t += 1;
         dcache.pack_delta(&mut scratch).unwrap();
     });
-    println!(
-        "{}",
-        bench_row(
-            &format!(
-                "delta pack (append-only step, {:.1}MB resident)",
-                scratch.k.bytes() as f64 / 1e6
-            ),
-            &s
-        )
+    emit(
+        &format!(
+            "delta pack (append-only step, {:.1}MB resident)",
+            scratch.k.bytes() as f64 / 1e6
+        ),
+        &s,
+        &mut csv,
     );
+
+    // Quantized (kv.format = "q8") backend: the same per-token paths on
+    // int8 storage. Insert pays the per-row quantization; the append-only
+    // delta pack pays the dequantization of exactly the new rows into the
+    // f32 upload scratch.
+    let mut q_ins = GroupCache::with_format(dims, KvFormat::QuantI8);
+    for b in 0..8 {
+        for tq in 0..400 {
+            for l in 0..4 {
+                q_ins.insert(l, b, &row, &row, tq as i32).unwrap();
+            }
+        }
+    }
+    let mut tq = 400i32;
+    let s = bench(3, 20, || {
+        for b in 0..8 {
+            for l in 0..4 {
+                q_ins.insert(l, b, &row, &row, tq).unwrap();
+            }
+        }
+        tq += 1;
+    });
+    emit("q8 insert+quantize (32 rows/step)", &s, &mut csv);
+
+    let mut q_d = q_ins.clone();
+    let mut q_scratch = PackScratch::new(&dims, 8, 512);
+    q_d.pack_delta(&mut q_scratch).unwrap(); // cold full sync
+    let s = bench(3, 20, || {
+        for b in 0..8 {
+            for l in 0..4 {
+                q_d.insert(l, b, &row, &row, tq).unwrap();
+            }
+        }
+        tq += 1;
+        q_d.pack_delta(&mut q_scratch).unwrap();
+    });
+    emit("q8 dequant pack (append-only step)", &s, &mut csv);
 
     let add: Vec<f32> = (0..400).map(|_| rng.f32()).collect();
     let s = bench(3, 20, || {
@@ -82,13 +127,13 @@ fn main() -> anyhow::Result<()> {
             }
         }
     });
-    println!("{}", bench_row("score accum (32 rows x 400)", &s));
+    emit("score accum (32 rows x 400)", &s, &mut csv);
 
     let scores: Vec<f32> = (0..400).map(|_| rng.f32() * rng.f32()).collect();
     let s = bench(3, 20, || {
         std::hint::black_box(lethe::attn::sparsity::hoyer_sparsity(&scores));
     });
-    println!("{}", bench_row("hoyer sparsity (400)", &s));
+    emit("hoyer sparsity (400)", &s, &mut csv);
 
     let pos: Vec<i32> = (0..400).collect();
     let params = LetheParams {
@@ -110,21 +155,23 @@ fn main() -> anyhow::Result<()> {
         };
         std::hint::black_box(p2.plan(0, &st));
     });
-    println!("{}", bench_row("lethe plan (400 slots, incl alloc)", &s));
+    emit("lethe plan (400 slots, incl alloc)", &s, &mut csv);
 
     let keep: Vec<usize> = (0..400).filter(|i| i % 3 != 0).collect();
     let s = bench(3, 20, || {
         let mut c2 = cache.clone();
         c2.apply_retention(0, 0, &keep).unwrap();
     });
-    println!("{}", bench_row("apply retention (400→267, incl clone)", &s));
+    emit("apply retention (400→267, incl clone)", &s, &mut csv);
 
     let manifest = std::fs::read_to_string("artifacts/model_meta.json")
         .unwrap_or_else(|_| "{}".into());
     let s = bench(3, 20, || {
         std::hint::black_box(lethe::util::json::parse(&manifest).unwrap());
     });
-    println!("{}", bench_row("json parse (manifest)", &s));
+    emit("json parse (manifest)", &s, &mut csv);
+
+    hotpath_csv(&csv)?;
 
     // --- PJRT decode per bucket -------------------------------------------
     let cfg = ServingConfig::default();

@@ -12,6 +12,7 @@
 use lethe::bench_support::{gen_tasks, print_table, run_tasks, try_engine,
                            write_csv};
 use lethe::config::ServingConfig;
+use lethe::kvcache::KvFormat;
 use lethe::model::DEEPSEEK_R1_DISTILL;
 use lethe::policy::PolicyKind;
 use lethe::sim::{run_trace, Simulator, TraceConfig};
@@ -87,59 +88,68 @@ fn main() -> anyhow::Result<()> {
 
     // ---- (b) real engine section ---------------------------------------
     // Tiny-model-calibrated τ (see Table 6) so the capacity-bucket
-    // mechanism engages within short generations.
+    // mechanism engages within short generations. Both storage backends
+    // run the full serving path end-to-end (prefill → multi-round
+    // pruning → delta-pack upload → completion); the q8 rows measure the
+    // quantize-on-insert / dequantize-on-pack overhead in situ.
     cfg.baseline.budget = 48;
     cfg.lethe.evict_threshold = 48;
     cfg.lethe.sparse_ratio = 25.0;
     let Some((mut engine, tok)) = try_engine(cfg) else { return Ok(()) };
     let mut rows = Vec::new();
     let mut csv = Vec::new();
-    for kind in [PolicyKind::FullKv, PolicyKind::Lethe] {
-        let mut row = vec![kind.label().to_string()];
-        for b in [1usize, 2, 4, 8] {
-            // Long-ish multihop generations so pruning matters. First a
-            // warmup pass (compiles the (B, C) executables), then the
-            // measured pass.
-            let tasks = gen_tasks(100 + b as u64, 2 * b, 24, 4);
-            let _ = run_tasks(&mut engine, &tok, kind, &tasks, b, 80)?;
-            engine.metrics.reset();
-            let st = run_tasks(&mut engine, &tok, kind, &tasks, b, 80)?;
-            let tput = engine.metrics.decode_tput();
-            let pairs = engine.metrics.delta_pack_hits
-                + engine.metrics.delta_pack_full;
-            let hit_pct = if pairs == 0 {
-                0.0
-            } else {
-                100.0 * engine.metrics.delta_pack_hits as f64 / pairs as f64
-            };
-            eprintln!(
-                "[delta-pack] {} b={}: {:.0}% pair hit rate, \
-                 {:.2}MB copied over the run",
-                kind.label(),
-                b,
-                hit_pct,
-                st.pack_bytes_copied as f64 / 1e6
-            );
-            row.push(format!("{tput:.0}"));
-            csv.push(format!(
-                "{},{},{:.1},{:.1},{}",
-                kind.label(),
-                b,
-                tput,
-                hit_pct,
-                st.pack_bytes_copied
-            ));
+    for fmt in [KvFormat::F32, KvFormat::QuantI8] {
+        engine.cfg.kv.format = fmt;
+        for kind in [PolicyKind::FullKv, PolicyKind::Lethe] {
+            let mut row = vec![format!("{}/{}", kind.label(), fmt.label())];
+            for b in [1usize, 2, 4, 8] {
+                // Long-ish multihop generations so pruning matters. First
+                // a warmup pass (compiles the (B, C) executables), then
+                // the measured pass.
+                let tasks = gen_tasks(100 + b as u64, 2 * b, 24, 4);
+                let _ = run_tasks(&mut engine, &tok, kind, &tasks, b, 80)?;
+                engine.metrics.reset();
+                let st = run_tasks(&mut engine, &tok, kind, &tasks, b, 80)?;
+                let tput = engine.metrics.decode_tput();
+                let pairs = engine.metrics.delta_pack_hits
+                    + engine.metrics.delta_pack_full;
+                let hit_pct = if pairs == 0 {
+                    0.0
+                } else {
+                    100.0 * engine.metrics.delta_pack_hits as f64
+                        / pairs as f64
+                };
+                eprintln!(
+                    "[delta-pack] {}/{} b={}: {:.0}% pair hit rate, \
+                     {:.2}MB copied over the run",
+                    kind.label(),
+                    fmt.label(),
+                    b,
+                    hit_pct,
+                    st.pack_bytes_copied as f64 / 1e6
+                );
+                row.push(format!("{tput:.0}"));
+                csv.push(format!(
+                    "{},{},{},{:.1},{:.1},{}",
+                    kind.label(),
+                    fmt.label(),
+                    b,
+                    tput,
+                    hit_pct,
+                    st.pack_bytes_copied
+                ));
+            }
+            rows.push(row);
         }
-        rows.push(row);
     }
     print_table(
         "Table 3(b) — measured decode throughput (tok/s), lethe-tiny engine",
-        &["policy", "b=1", "b=2", "b=4", "b=8"],
+        &["policy/kv", "b=1", "b=2", "b=4", "b=8"],
         &rows,
     );
     write_csv(
         "table3_tput_real.csv",
-        "policy,batch,tok_s,delta_hit_pct,pack_bytes",
+        "policy,kv_format,batch,tok_s,delta_hit_pct,pack_bytes",
         &csv,
     )?;
     Ok(())

@@ -58,7 +58,11 @@ pub fn write_csv(name: &str, header: &str, rows: &[String]) -> Result<()> {
 pub struct RunStats {
     pub wall_s: f64,
     pub gen_tokens: usize,
+    /// Peak live KV bytes as actually stored by the backend.
     pub peak_live_bytes: usize,
+    /// The same peak priced at f32 (Table 2's "f32-equivalent" column;
+    /// equals `peak_live_bytes` on the dense backend).
+    pub peak_f32_equiv_bytes: usize,
     pub final_acc: f64,
     /// Hop-trace accuracy (see [`crate::eval::judge_chain`]).
     pub chain_acc: f64,
@@ -85,6 +89,7 @@ pub fn run_tasks(
     let hits0 = engine.metrics.delta_pack_hits;
     let t0 = std::time::Instant::now();
     let mut peak = 0usize;
+    let mut peak_f32 = 0usize;
     let mut gen_tokens = 0usize;
     let mut hits = 0usize;
     let mut chain_hits = 0usize;
@@ -108,6 +113,7 @@ pub fn run_tasks(
         while group.active() > 0 {
             engine.step(&mut group)?;
             peak = peak.max(group.cache.live_bytes());
+            peak_f32 = peak_f32.max(group.cache.f32_equivalent_bytes());
             group.reap();
         }
         for seq in &group.done {
@@ -124,6 +130,7 @@ pub fn run_tasks(
         wall_s: t0.elapsed().as_secs_f64(),
         gen_tokens,
         peak_live_bytes: peak,
+        peak_f32_equiv_bytes: peak_f32,
         final_acc: hits as f64 / tasks.len() as f64,
         chain_acc: chain_hits as f64 / tasks.len() as f64,
         ooms: engine.metrics.ooms - ooms0,
@@ -131,6 +138,20 @@ pub fn run_tasks(
         pack_bytes_copied: engine.metrics.pack_bytes_copied - pack0,
         delta_pack_hits: engine.metrics.delta_pack_hits - hits0,
     })
+}
+
+/// Write the hotpath microbench rows to `bench_results/hotpath.csv`
+/// (name + per-iteration seconds), so the q8/f32 storage-backend rows
+/// land next to each other in the experiment logs.
+pub fn hotpath_csv(rows: &[(String, crate::util::stats::Summary)]) -> Result<()> {
+    let lines: Vec<String> = rows
+        .iter()
+        .map(|(name, s)| {
+            format!("{name},{:.9},{:.9},{:.9},{:.9}", s.mean, s.p50, s.min,
+                    s.max)
+        })
+        .collect();
+    write_csv("hotpath.csv", "name,mean_s,p50_s,min_s,max_s", &lines)
 }
 
 /// Tasks for a (pairs, hops) workload.

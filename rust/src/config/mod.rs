@@ -9,6 +9,7 @@ use std::path::Path;
 
 use anyhow::{Context, Result};
 
+use crate::kvcache::KvFormat;
 use crate::util::json::Json;
 
 /// Lethe-specific knobs (paper defaults: sparse_ratio=400, recent_ratio=0.3).
@@ -69,6 +70,16 @@ impl Default for BaselineParams {
     }
 }
 
+/// KV cache storage knobs. `format` selects the engine storage backend
+/// (see [`crate::kvcache::backend`]): `"f32"` dense rows (the serving
+/// default) or `"q8"` per-row symmetric int8 (~3.9× smaller, dequantized
+/// during upload packing). Table 2 reports both actual and
+/// f32-equivalent bytes so the two formats stay comparable.
+#[derive(Clone, Debug, Default, PartialEq, Eq)]
+pub struct KvConfig {
+    pub format: KvFormat,
+}
+
 #[derive(Clone, Debug)]
 pub struct SchedulerConfig {
     /// Max sequences decoded together (bucketed to compiled batch sizes).
@@ -101,6 +112,7 @@ pub struct ServingConfig {
     pub lethe: LetheParams,
     pub baseline: BaselineParams,
     pub scheduler: SchedulerConfig,
+    pub kv: KvConfig,
 }
 
 impl Default for ServingConfig {
@@ -111,6 +123,7 @@ impl Default for ServingConfig {
             lethe: LetheParams::default(),
             baseline: BaselineParams::default(),
             scheduler: SchedulerConfig::default(),
+            kv: KvConfig::default(),
         }
     }
 }
@@ -136,7 +149,7 @@ impl ServingConfig {
         let mut c = ServingConfig::default();
         for (k, _) in j.as_obj()? {
             if !["artifacts_dir", "cache_profile", "lethe", "baseline",
-                 "scheduler"]
+                 "scheduler", "kv"]
                 .contains(&k.as_str())
             {
                 anyhow::bail!("unknown config section '{k}'");
@@ -172,6 +185,17 @@ impl ServingConfig {
                     .iter()
                     .map(|x| x.as_usize())
                     .collect::<Result<_>>()?;
+            }
+        }
+        if let Some(kv) = j.opt("kv") {
+            for (k, _) in kv.as_obj()? {
+                if k.as_str() != "format" {
+                    anyhow::bail!("unknown kv key '{k}'");
+                }
+            }
+            if let Some(v) = kv.opt("format") {
+                c.kv.format = KvFormat::parse(v.as_str()?)
+                    .context("config key 'kv.format'")?;
             }
         }
         c.validate()?;
@@ -229,6 +253,40 @@ mod tests {
         assert_eq!(c.lethe.recent_ratio, 0.2);
         assert_eq!(c.lethe.gamma, 0.95); // untouched default
         assert_eq!(c.scheduler.max_batch, 4);
+    }
+
+    #[test]
+    fn kv_format_defaults_to_f32_and_parses_q8() {
+        // Absent section and absent key both leave the default.
+        let c = ServingConfig::from_json(&parse("{}").unwrap()).unwrap();
+        assert_eq!(c.kv.format, KvFormat::F32);
+        let c = ServingConfig::from_json(&parse(r#"{"kv": {}}"#).unwrap())
+            .unwrap();
+        assert_eq!(c.kv.format, KvFormat::F32);
+        let c = ServingConfig::from_json(
+            &parse(r#"{"kv": {"format": "q8"}}"#).unwrap(),
+        )
+        .unwrap();
+        assert_eq!(c.kv.format, KvFormat::QuantI8);
+        let c = ServingConfig::from_json(
+            &parse(r#"{"kv": {"format": "f32"}}"#).unwrap(),
+        )
+        .unwrap();
+        assert_eq!(c.kv.format, KvFormat::F32);
+    }
+
+    #[test]
+    fn kv_format_rejects_unknown_values_and_keys() {
+        let err = ServingConfig::from_json(
+            &parse(r#"{"kv": {"format": "fp8"}}"#).unwrap(),
+        )
+        .unwrap_err();
+        assert!(format!("{err:#}").contains("unknown kv format 'fp8'"),
+                "unhelpful error: {err:#}");
+        assert!(ServingConfig::from_json(
+            &parse(r#"{"kv": {"fmt": "q8"}}"#).unwrap()
+        )
+        .is_err());
     }
 
     #[test]

@@ -4,7 +4,7 @@
 //! smallest compiled batch bucket.
 
 use crate::attn::sparsity::SparsityTracker;
-use crate::kvcache::{CacheDims, GroupCache};
+use crate::kvcache::{CacheDims, GroupCache, KvFormat};
 use crate::policy::{EvictionPolicy, PolicyKind};
 
 #[derive(Clone, Copy, Debug, PartialEq, Eq)]
@@ -119,10 +119,20 @@ pub struct DecodeGroup {
 }
 
 impl DecodeGroup {
+    /// Group over the dense f32 storage backend.
     pub fn new(dims: CacheDims, default_policy: PolicyKind) -> DecodeGroup {
+        Self::with_format(dims, default_policy, KvFormat::F32)
+    }
+
+    /// Group with an explicit KV storage backend (`kv.format`).
+    pub fn with_format(
+        dims: CacheDims,
+        default_policy: PolicyKind,
+        fmt: KvFormat,
+    ) -> DecodeGroup {
         let cap = dims.batch;
         DecodeGroup {
-            cache: GroupCache::new(dims),
+            cache: GroupCache::with_format(dims, fmt),
             seqs: Vec::with_capacity(cap),
             done: Vec::new(),
             default_policy,

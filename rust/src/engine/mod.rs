@@ -10,7 +10,8 @@
 //!      headroom for the in-graph insert),
 //!   2. delta-packs the cache into the bucket's persistent resident
 //!      scratch (epoch protocol, see [`crate::kvcache`]) — steady-state
-//!      append-only steps copy one token row per (layer, slot) instead
+//!      append-only steps copy (or, on the quantized `kv.format = "q8"`
+//!      backend, dequantize) one token row per (layer, slot) instead
 //!      of the whole C-prefix — then uploads + runs `decode_b{B}_c{C}`,
 //!   3. fans the per-slot post-decode work (host-side K/V insert mirror,
 //!      RASR score accumulation Eq. 5, sparsity tracking Eq. 1, greedy
@@ -104,8 +105,14 @@ impl Engine {
         }
     }
 
+    /// New decode group on the configured KV storage backend
+    /// (`kv.format`: dense f32 or quantized int8).
     pub fn new_group(&self, group_size: usize, policy: PolicyKind) -> DecodeGroup {
-        DecodeGroup::new(self.cache_dims(group_size), policy)
+        DecodeGroup::with_format(
+            self.cache_dims(group_size),
+            policy,
+            self.cfg.kv.format,
+        )
     }
 
     /// Smallest compiled batch bucket >= n.
@@ -177,7 +184,7 @@ impl Engine {
         };
 
         let d = self.rt.meta.dims.clone();
-        let cd = group.cache.dims.clone();
+        let cd = group.cache.dims;
         let scratch = self
             .scratch
             .entry((bb, cap))
@@ -265,6 +272,8 @@ impl Engine {
         self.metrics.exec_seconds.push(t_exec);
         self.metrics.policy_seconds.push(t_policy);
         self.metrics.live_bytes_last = group.cache.live_bytes();
+        self.metrics.f32_equiv_bytes_last = group.cache.f32_equivalent_bytes();
+        self.metrics.kv_format = group.cache.format();
         *self.metrics.capacity_hist.entry(cap).or_insert(0) += 1;
         Ok(produced)
     }

@@ -1,0 +1,678 @@
+//! Pluggable KV row-storage backends: the [`KvStore`] trait and its two
+//! enum-dispatched implementations.
+//!
+//! [`super::GroupCache`] owns all *bookkeeping* — per-(layer, slot)
+//! lengths, original positions, accumulated scores and the delta-pack
+//! epoch protocol — and delegates the *row storage* (the K/V payload
+//! bytes) to a [`KvBackend`]. The backend contract is deliberately small:
+//!
+//!   * [`KvStore::write_row`]    — store one token's `[Hkv, D]` K/V rows,
+//!   * [`KvStore::load_rows`]    — bulk prefill load of one (l, b, h) block,
+//!   * [`KvStore::gather_rows`]  — the front-packing retention gather,
+//!   * [`KvStore::swap_rows`]    — slot swap (scheduler reap path),
+//!   * [`KvStore::read_rows`]    — materialize a row range as f32 into the
+//!                                 upload scratch (memcpy for dense,
+//!                                 dequantize for quantized storage).
+//!
+//! Because the epoch/rewrite watermarks live in `GroupCache`, the
+//! incremental delta-pack protocol is backend-independent: an append-only
+//! step copies (or dequantizes) only the newly inserted rows regardless
+//! of how the backend holds them. The only backend obligation is that
+//! [`KvStore::read_rows`] is *deterministic* for a given stored state —
+//! including dead rows past the live length — so a delta-maintained
+//! scratch stays bit-identical to a fresh full pack.
+//!
+//! Two backends ship today:
+//!   * [`DenseF32`] — plain f32 rows, 4 B/elem (the serving default),
+//!   * [`QuantI8`]  — per-row symmetric int8, 1 B/elem + one f32 scale
+//!     per (head, tensor) row (~3.9× smaller; the paper's composition
+//!     claim, now on the real serving path).
+//!
+//! Dispatch is by enum rather than `dyn` so the per-token hot path stays
+//! devirtualized; future backends (fp8, pinned/device-resident scratch)
+//! add a variant and an impl.
+
+use super::quant::{dequantize_span, kv_row_bytes, quantize_row_into, KvFormat};
+use super::CacheDims;
+
+/// The storage contract between [`super::GroupCache`] and a backend.
+/// Row coordinates are (layer `l`, slot `b`, head `h`, row `c`); all
+/// bounds are validated by the cache before a call, so implementations
+/// may assume `l/b/h/c` are in range and slices are correctly sized.
+pub trait KvStore {
+    fn dims(&self) -> &CacheDims;
+
+    /// Storage format tag (drives Table 2 byte accounting).
+    fn format(&self) -> KvFormat;
+
+    /// Bytes to hold one cached token row (K + V, all heads) as stored.
+    fn row_bytes(&self) -> usize {
+        let d = self.dims();
+        kv_row_bytes(d.kv_heads, d.d_head, self.format())
+    }
+
+    /// Bytes the same row would occupy on the dense f32 backend (the
+    /// "f32-equivalent" column of Table 2).
+    fn f32_row_bytes(&self) -> usize {
+        let d = self.dims();
+        kv_row_bytes(d.kv_heads, d.d_head, KvFormat::F32)
+    }
+
+    /// Store one token's K/V rows (layout `[Hkv, D]` each) at row `c` of
+    /// (l, b), for every head.
+    fn write_row(&mut self, l: usize, b: usize, c: usize, k_row: &[f32], v_row: &[f32]);
+
+    /// Bulk-load `len` contiguous rows (`[len, D]` each) into rows
+    /// `0..len` of (l, b, h) — the prefill path.
+    fn load_rows(
+        &mut self,
+        l: usize,
+        b: usize,
+        h: usize,
+        k_rows: &[f32],
+        v_rows: &[f32],
+        len: usize,
+    );
+
+    /// Front-packing gather by ascending, deduplicated source row index
+    /// (the retention eviction), applied to every head of (l, b).
+    fn gather_rows(&mut self, l: usize, b: usize, keep: &[usize]);
+
+    /// Swap the first `n` rows of slots `a` and `b` at layer `l`, every
+    /// head (the scheduler's reap/front-pack path).
+    fn swap_rows(&mut self, l: usize, a: usize, b: usize, n: usize);
+
+    /// Materialize rows `from..to` of (l, b, h) as f32 into `dst`
+    /// (`(to - from) * D` values): memcpy for dense storage, dequantize
+    /// for quantized. Must be deterministic for a given stored state,
+    /// dead rows included (the delta-pack bit-identity invariant).
+    #[allow(clippy::too_many_arguments)]
+    fn read_rows(
+        &self,
+        l: usize,
+        b: usize,
+        h: usize,
+        which_v: bool,
+        from: usize,
+        to: usize,
+        dst: &mut [f32],
+    );
+}
+
+#[inline]
+fn dense_off(dims: &CacheDims, l: usize, b: usize, h: usize, c: usize) -> usize {
+    let CacheDims { batch, kv_heads, capacity, d_head, .. } = *dims;
+    (((l * batch + b) * kv_heads + h) * capacity + c) * d_head
+}
+
+#[inline]
+fn quant_idx(dims: &CacheDims, l: usize, b: usize, h: usize, c: usize) -> usize {
+    let CacheDims { batch, kv_heads, capacity, .. } = *dims;
+    ((l * batch + b) * kv_heads + h) * capacity + c
+}
+
+/// Dense f32 row storage: conceptually `[L, B, Hkv, Cmax, D]` row-major
+/// for K and V each. This is exactly the storage the pre-backend
+/// `GroupCache` carried inline.
+#[derive(Clone)]
+pub struct DenseF32 {
+    dims: CacheDims,
+    k: Vec<f32>,
+    v: Vec<f32>,
+}
+
+impl DenseF32 {
+    pub fn new(dims: CacheDims) -> DenseF32 {
+        let CacheDims { layers, batch, kv_heads, capacity, d_head } = dims;
+        let n = layers * batch * kv_heads * capacity * d_head;
+        DenseF32 { dims, k: vec![0.0; n], v: vec![0.0; n] }
+    }
+
+    pub(super) fn raw(&mut self) -> RawKv {
+        RawKv::Dense { k: self.k.as_mut_ptr(), v: self.v.as_mut_ptr() }
+    }
+}
+
+impl KvStore for DenseF32 {
+    fn dims(&self) -> &CacheDims {
+        &self.dims
+    }
+
+    fn format(&self) -> KvFormat {
+        KvFormat::F32
+    }
+
+    fn write_row(&mut self, l: usize, b: usize, c: usize, k_row: &[f32], v_row: &[f32]) {
+        let dims = self.dims;
+        let raw = self.raw();
+        // SAFETY: `&mut self` grants exclusive access to every slot.
+        unsafe { raw.write_row(&dims, l, b, c, k_row, v_row) }
+    }
+
+    fn load_rows(
+        &mut self,
+        l: usize,
+        b: usize,
+        h: usize,
+        k_rows: &[f32],
+        v_rows: &[f32],
+        len: usize,
+    ) {
+        let n = len * self.dims.d_head;
+        let off = dense_off(&self.dims, l, b, h, 0);
+        self.k[off..off + n].copy_from_slice(&k_rows[..n]);
+        self.v[off..off + n].copy_from_slice(&v_rows[..n]);
+    }
+
+    fn gather_rows(&mut self, l: usize, b: usize, keep: &[usize]) {
+        let dims = self.dims;
+        let raw = self.raw();
+        // SAFETY: `&mut self` grants exclusive access to every slot.
+        unsafe { raw.gather_rows(&dims, l, b, keep) }
+    }
+
+    fn swap_rows(&mut self, l: usize, a: usize, b: usize, n: usize) {
+        let dims = self.dims;
+        let raw = self.raw();
+        // SAFETY: `&mut self` grants exclusive access to every slot.
+        unsafe { raw.swap_rows(&dims, l, a, b, n) }
+    }
+
+    #[allow(clippy::too_many_arguments)]
+    fn read_rows(
+        &self,
+        l: usize,
+        b: usize,
+        h: usize,
+        which_v: bool,
+        from: usize,
+        to: usize,
+        dst: &mut [f32],
+    ) {
+        let n = (to - from) * self.dims.d_head;
+        let off = dense_off(&self.dims, l, b, h, from);
+        let src = if which_v { &self.v } else { &self.k };
+        dst[..n].copy_from_slice(&src[off..off + n]);
+    }
+}
+
+/// Per-row symmetric int8 storage: flat i8 mantissas laid out exactly
+/// like the dense backend (`[L, B, Hkv, Cmax, D]`, 1 B/elem) plus one
+/// f32 scale per (layer, slot, head, row, tensor) in `[L, B, Hkv, Cmax]`
+/// side arrays. Everything is allocated once in [`QuantI8::new`] — the
+/// per-token insert quantizes in place with zero heap traffic, and the
+/// stored footprint is exactly what [`kv_row_bytes`] reports
+/// (`d_head + 4` bytes per head-tensor row), so Table 2's "actual q8
+/// bytes" column is honest. Quantization happens at insert/prefill
+/// time; [`KvStore::read_rows`] dequantizes into the f32 upload
+/// scratch, so the delta-pack protocol pays the dequant cost only for
+/// rows that actually changed. Zero-initialized scales make every
+/// never-written row dequantize to exact zeros (read determinism).
+#[derive(Clone)]
+pub struct QuantI8 {
+    dims: CacheDims,
+    k_q: Vec<i8>,
+    v_q: Vec<i8>,
+    k_s: Vec<f32>,
+    v_s: Vec<f32>,
+}
+
+impl QuantI8 {
+    pub fn new(dims: CacheDims) -> QuantI8 {
+        let CacheDims { layers, batch, kv_heads, capacity, d_head } = dims;
+        let rows = layers * batch * kv_heads * capacity;
+        QuantI8 {
+            dims,
+            k_q: vec![0; rows * d_head],
+            v_q: vec![0; rows * d_head],
+            k_s: vec![0.0; rows],
+            v_s: vec![0.0; rows],
+        }
+    }
+
+    pub(super) fn raw(&mut self) -> RawKv {
+        RawKv::Quant {
+            k_q: self.k_q.as_mut_ptr(),
+            v_q: self.v_q.as_mut_ptr(),
+            k_s: self.k_s.as_mut_ptr(),
+            v_s: self.v_s.as_mut_ptr(),
+        }
+    }
+}
+
+impl KvStore for QuantI8 {
+    fn dims(&self) -> &CacheDims {
+        &self.dims
+    }
+
+    fn format(&self) -> KvFormat {
+        KvFormat::QuantI8
+    }
+
+    fn write_row(&mut self, l: usize, b: usize, c: usize, k_row: &[f32], v_row: &[f32]) {
+        let dims = self.dims;
+        let raw = self.raw();
+        // SAFETY: `&mut self` grants exclusive access to every slot.
+        unsafe { raw.write_row(&dims, l, b, c, k_row, v_row) }
+    }
+
+    fn load_rows(
+        &mut self,
+        l: usize,
+        b: usize,
+        h: usize,
+        k_rows: &[f32],
+        v_rows: &[f32],
+        len: usize,
+    ) {
+        let d = self.dims.d_head;
+        for c in 0..len {
+            let off = dense_off(&self.dims, l, b, h, c);
+            let si = quant_idx(&self.dims, l, b, h, c);
+            self.k_s[si] = quantize_row_into(
+                &k_rows[c * d..(c + 1) * d],
+                &mut self.k_q[off..off + d],
+            );
+            self.v_s[si] = quantize_row_into(
+                &v_rows[c * d..(c + 1) * d],
+                &mut self.v_q[off..off + d],
+            );
+        }
+    }
+
+    fn gather_rows(&mut self, l: usize, b: usize, keep: &[usize]) {
+        let dims = self.dims;
+        let raw = self.raw();
+        // SAFETY: `&mut self` grants exclusive access to every slot.
+        unsafe { raw.gather_rows(&dims, l, b, keep) }
+    }
+
+    fn swap_rows(&mut self, l: usize, a: usize, b: usize, n: usize) {
+        let dims = self.dims;
+        let raw = self.raw();
+        // SAFETY: `&mut self` grants exclusive access to every slot.
+        unsafe { raw.swap_rows(&dims, l, a, b, n) }
+    }
+
+    #[allow(clippy::too_many_arguments)]
+    fn read_rows(
+        &self,
+        l: usize,
+        b: usize,
+        h: usize,
+        which_v: bool,
+        from: usize,
+        to: usize,
+        dst: &mut [f32],
+    ) {
+        let d = self.dims.d_head;
+        let (q, s) = if which_v {
+            (&self.v_q, &self.v_s)
+        } else {
+            (&self.k_q, &self.k_s)
+        };
+        for c in from..to {
+            let off = dense_off(&self.dims, l, b, h, c);
+            let si = quant_idx(&self.dims, l, b, h, c);
+            // Never-written rows have scale 0 ⇒ exact zeros, so a fresh
+            // pack and a delta-maintained scratch agree byte-for-byte.
+            dequantize_span(
+                &q[off..off + d],
+                s[si],
+                &mut dst[(c - from) * d..(c - from + 1) * d],
+            );
+        }
+    }
+}
+
+/// The engine-facing backend: enum dispatch over the shipped
+/// implementations (kept devirtualized on the per-token hot path).
+#[derive(Clone)]
+pub enum KvBackend {
+    Dense(DenseF32),
+    Quant(QuantI8),
+}
+
+impl KvBackend {
+    pub fn new(dims: CacheDims, fmt: KvFormat) -> KvBackend {
+        match fmt {
+            KvFormat::F32 => KvBackend::Dense(DenseF32::new(dims)),
+            KvFormat::QuantI8 => KvBackend::Quant(QuantI8::new(dims)),
+        }
+    }
+
+    /// Raw row-buffer pointers for the slot-view path (see [`RawKv`]).
+    pub(super) fn raw(&mut self) -> RawKv {
+        match self {
+            KvBackend::Dense(d) => d.raw(),
+            KvBackend::Quant(q) => q.raw(),
+        }
+    }
+}
+
+impl KvStore for KvBackend {
+    fn dims(&self) -> &CacheDims {
+        match self {
+            KvBackend::Dense(d) => d.dims(),
+            KvBackend::Quant(q) => q.dims(),
+        }
+    }
+
+    fn format(&self) -> KvFormat {
+        match self {
+            KvBackend::Dense(d) => d.format(),
+            KvBackend::Quant(q) => q.format(),
+        }
+    }
+
+    fn write_row(&mut self, l: usize, b: usize, c: usize, k_row: &[f32], v_row: &[f32]) {
+        match self {
+            KvBackend::Dense(d) => d.write_row(l, b, c, k_row, v_row),
+            KvBackend::Quant(q) => q.write_row(l, b, c, k_row, v_row),
+        }
+    }
+
+    fn load_rows(
+        &mut self,
+        l: usize,
+        b: usize,
+        h: usize,
+        k_rows: &[f32],
+        v_rows: &[f32],
+        len: usize,
+    ) {
+        match self {
+            KvBackend::Dense(d) => d.load_rows(l, b, h, k_rows, v_rows, len),
+            KvBackend::Quant(q) => q.load_rows(l, b, h, k_rows, v_rows, len),
+        }
+    }
+
+    fn gather_rows(&mut self, l: usize, b: usize, keep: &[usize]) {
+        match self {
+            KvBackend::Dense(d) => d.gather_rows(l, b, keep),
+            KvBackend::Quant(q) => q.gather_rows(l, b, keep),
+        }
+    }
+
+    fn swap_rows(&mut self, l: usize, a: usize, b: usize, n: usize) {
+        match self {
+            KvBackend::Dense(d) => d.swap_rows(l, a, b, n),
+            KvBackend::Quant(q) => q.swap_rows(l, a, b, n),
+        }
+    }
+
+    #[allow(clippy::too_many_arguments)]
+    fn read_rows(
+        &self,
+        l: usize,
+        b: usize,
+        h: usize,
+        which_v: bool,
+        from: usize,
+        to: usize,
+        dst: &mut [f32],
+    ) {
+        match self {
+            KvBackend::Dense(d) => d.read_rows(l, b, h, which_v, from, to, dst),
+            KvBackend::Quant(q) => q.read_rows(l, b, h, which_v, from, to, dst),
+        }
+    }
+}
+
+/// Raw pointers into one backend's row buffers, `Copy` so every
+/// [`super::SlotViewMut`] can carry the full set. Provenance is the whole
+/// K/V allocation; each caller restricts itself to its own slot's
+/// disjoint rows (the same discipline as the view's lens/pos/scores
+/// pointers), which is what makes a set of slot views usable from
+/// multiple threads at once.
+#[derive(Clone, Copy)]
+pub(super) enum RawKv {
+    Dense { k: *mut f32, v: *mut f32 },
+    Quant { k_q: *mut i8, v_q: *mut i8, k_s: *mut f32, v_s: *mut f32 },
+}
+
+impl RawKv {
+    /// Store one token's K/V rows at row `c` of (l, b); see
+    /// [`KvStore::write_row`].
+    ///
+    /// SAFETY: caller must hold exclusive access to slot `b`'s rows of
+    /// the owning backend (one slot view per slot), the backend must
+    /// outlive the call, `c < capacity`, and row slices must be
+    /// `[Hkv * D]`.
+    pub(super) unsafe fn write_row(
+        self,
+        dims: &CacheDims,
+        l: usize,
+        b: usize,
+        c: usize,
+        k_row: &[f32],
+        v_row: &[f32],
+    ) {
+        let d = dims.d_head;
+        match self {
+            RawKv::Dense { k, v } => {
+                for h in 0..dims.kv_heads {
+                    let off = dense_off(dims, l, b, h, c);
+                    unsafe {
+                        std::ptr::copy_nonoverlapping(
+                            k_row.as_ptr().add(h * d), k.add(off), d);
+                        std::ptr::copy_nonoverlapping(
+                            v_row.as_ptr().add(h * d), v.add(off), d);
+                    }
+                }
+            }
+            RawKv::Quant { k_q, v_q, k_s, v_s } => {
+                for h in 0..dims.kv_heads {
+                    let off = dense_off(dims, l, b, h, c);
+                    let si = quant_idx(dims, l, b, h, c);
+                    unsafe {
+                        let kq = std::slice::from_raw_parts_mut(
+                            k_q.add(off), d);
+                        *k_s.add(si) = quantize_row_into(
+                            &k_row[h * d..(h + 1) * d], kq);
+                        let vq = std::slice::from_raw_parts_mut(
+                            v_q.add(off), d);
+                        *v_s.add(si) = quantize_row_into(
+                            &v_row[h * d..(h + 1) * d], vq);
+                    }
+                }
+            }
+        }
+    }
+
+    /// Front-packing gather by ascending, deduplicated source index; see
+    /// [`KvStore::gather_rows`].
+    ///
+    /// SAFETY: as [`RawKv::write_row`]; every index in `keep` must be
+    /// below the slot's live length.
+    pub(super) unsafe fn gather_rows(self, dims: &CacheDims, l: usize, b: usize, keep: &[usize]) {
+        let d = dims.d_head;
+        for h in 0..dims.kv_heads {
+            match self {
+                RawKv::Dense { k, v } => {
+                    for (dst, &src) in keep.iter().enumerate() {
+                        if dst != src {
+                            // keep is sorted + deduplicated, so src > dst
+                            // and the D-wide rows never overlap.
+                            let so = dense_off(dims, l, b, h, src);
+                            let doff = dense_off(dims, l, b, h, dst);
+                            unsafe {
+                                std::ptr::copy_nonoverlapping(
+                                    k.add(so) as *const f32, k.add(doff), d);
+                                std::ptr::copy_nonoverlapping(
+                                    v.add(so) as *const f32, v.add(doff), d);
+                            }
+                        }
+                    }
+                }
+                RawKv::Quant { k_q, v_q, k_s, v_s } => {
+                    for (dst, &src) in keep.iter().enumerate() {
+                        if dst != src {
+                            // src > dst (sorted + deduplicated keep), so
+                            // the mantissa spans never overlap. The tail
+                            // keeps stale-but-deterministic rows, same
+                            // as the dense gather.
+                            let so = dense_off(dims, l, b, h, src);
+                            let doff = dense_off(dims, l, b, h, dst);
+                            unsafe {
+                                std::ptr::copy_nonoverlapping(
+                                    k_q.add(so) as *const i8,
+                                    k_q.add(doff), d);
+                                std::ptr::copy_nonoverlapping(
+                                    v_q.add(so) as *const i8,
+                                    v_q.add(doff), d);
+                                *k_s.add(quant_idx(dims, l, b, h, dst)) =
+                                    *k_s.add(quant_idx(dims, l, b, h, src));
+                                *v_s.add(quant_idx(dims, l, b, h, dst)) =
+                                    *v_s.add(quant_idx(dims, l, b, h, src));
+                            }
+                        }
+                    }
+                }
+            }
+        }
+    }
+
+    /// Swap the first `n` rows of slots `a` and `b` at layer `l`; see
+    /// [`KvStore::swap_rows`].
+    ///
+    /// SAFETY: caller must hold exclusive access to BOTH slots' rows
+    /// (this is the serial reap path, never the parallel slot-view path)
+    /// and `a != b`, `n <= capacity`.
+    pub(super) unsafe fn swap_rows(self, dims: &CacheDims, l: usize, a: usize, b: usize, n: usize) {
+        let d = dims.d_head;
+        match self {
+            RawKv::Dense { k, v } => {
+                for h in 0..dims.kv_heads {
+                    let oa = dense_off(dims, l, a, h, 0);
+                    let ob = dense_off(dims, l, b, h, 0);
+                    // Distinct slots: the two n*D regions never overlap.
+                    unsafe {
+                        std::ptr::swap_nonoverlapping(
+                            k.add(oa), k.add(ob), n * d);
+                        std::ptr::swap_nonoverlapping(
+                            v.add(oa), v.add(ob), n * d);
+                    }
+                }
+            }
+            RawKv::Quant { k_q, v_q, k_s, v_s } => {
+                for h in 0..dims.kv_heads {
+                    let oa = dense_off(dims, l, a, h, 0);
+                    let ob = dense_off(dims, l, b, h, 0);
+                    let sa = quant_idx(dims, l, a, h, 0);
+                    let sb = quant_idx(dims, l, b, h, 0);
+                    // Distinct slots: none of the regions overlap.
+                    unsafe {
+                        std::ptr::swap_nonoverlapping(
+                            k_q.add(oa), k_q.add(ob), n * d);
+                        std::ptr::swap_nonoverlapping(
+                            v_q.add(oa), v_q.add(ob), n * d);
+                        std::ptr::swap_nonoverlapping(
+                            k_s.add(sa), k_s.add(sb), n);
+                        std::ptr::swap_nonoverlapping(
+                            v_s.add(sa), v_s.add(sb), n);
+                    }
+                }
+            }
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::prng::Rng;
+    use crate::util::proptest::vec_f32;
+
+    fn dims() -> CacheDims {
+        CacheDims { layers: 2, batch: 2, kv_heads: 2, capacity: 8, d_head: 4 }
+    }
+
+    fn read_row(store: &dyn KvStore, l: usize, b: usize, h: usize, c: usize) -> Vec<f32> {
+        let d = store.dims().d_head;
+        let mut out = vec![0.0; d];
+        store.read_rows(l, b, h, false, c, c + 1, &mut out);
+        out
+    }
+
+    #[test]
+    fn backends_report_their_format_and_bytes() {
+        let dense = KvBackend::new(dims(), KvFormat::F32);
+        let quant = KvBackend::new(dims(), KvFormat::QuantI8);
+        assert_eq!(dense.format(), KvFormat::F32);
+        assert_eq!(quant.format(), KvFormat::QuantI8);
+        // 2 heads * 4 elems * 4 B * 2 tensors vs 2 * (4 + 4) * 2.
+        assert_eq!(dense.row_bytes(), 64);
+        assert_eq!(quant.row_bytes(), 32);
+        assert_eq!(quant.f32_row_bytes(), dense.row_bytes());
+    }
+
+    #[test]
+    fn dense_and_quant_agree_on_written_rows() {
+        let mut rng = Rng::new(11);
+        let mut dense = KvBackend::new(dims(), KvFormat::F32);
+        let mut quant = KvBackend::new(dims(), KvFormat::QuantI8);
+        for c in 0..4 {
+            let kr = vec_f32(&mut rng, 2 * 4, -2.0, 2.0);
+            let vr = vec_f32(&mut rng, 2 * 4, -2.0, 2.0);
+            dense.write_row(0, 1, c, &kr, &vr);
+            quant.write_row(0, 1, c, &kr, &vr);
+        }
+        for c in 0..4 {
+            for h in 0..2 {
+                let exact = read_row(&dense, 0, 1, h, c);
+                let approx = read_row(&quant, 0, 1, h, c);
+                let amax = exact.iter().fold(0f32, |m, &x| m.max(x.abs()));
+                for (a, b) in exact.iter().zip(&approx) {
+                    assert!(
+                        (a - b).abs() <= amax / 127.0 * 0.5 + 1e-6,
+                        "{a} vs {b}"
+                    );
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn quant_dead_rows_read_as_zero() {
+        let quant = KvBackend::new(dims(), KvFormat::QuantI8);
+        assert_eq!(read_row(&quant, 1, 0, 1, 7), vec![0.0; 4]);
+    }
+
+    #[test]
+    fn gather_front_packs_both_backends() {
+        let mut rng = Rng::new(5);
+        let rows: Vec<Vec<f32>> =
+            (0..6).map(|_| vec_f32(&mut rng, 8, -1.0, 1.0)).collect();
+        for fmt in [KvFormat::F32, KvFormat::QuantI8] {
+            let mut s = KvBackend::new(dims(), fmt);
+            for (c, r) in rows.iter().enumerate() {
+                s.write_row(0, 0, c, r, r);
+            }
+            s.gather_rows(0, 0, &[1, 4]);
+            let tol = if fmt == KvFormat::F32 { 0.0 } else { 0.02 };
+            let got0 = read_row(&s, 0, 0, 0, 0);
+            let got1 = read_row(&s, 0, 0, 0, 1);
+            for (a, b) in got0.iter().zip(&rows[1][..4]) {
+                assert!((a - b).abs() <= tol, "{a} vs {b}");
+            }
+            for (a, b) in got1.iter().zip(&rows[4][..4]) {
+                assert!((a - b).abs() <= tol, "{a} vs {b}");
+            }
+        }
+    }
+
+    #[test]
+    fn swap_rows_swaps_slot_prefixes() {
+        for fmt in [KvFormat::F32, KvFormat::QuantI8] {
+            let mut s = KvBackend::new(dims(), fmt);
+            let ra = vec![1.0f32; 8];
+            let rb = vec![-1.0f32; 8];
+            s.write_row(1, 0, 0, &ra, &ra);
+            s.write_row(1, 1, 0, &rb, &rb);
+            s.swap_rows(1, 0, 1, 1);
+            assert!((read_row(&s, 1, 0, 0, 0)[0] + 1.0).abs() < 1e-2);
+            assert!((read_row(&s, 1, 1, 0, 0)[0] - 1.0).abs() < 1e-2);
+        }
+    }
+}

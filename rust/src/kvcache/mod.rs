@@ -1,20 +1,29 @@
-//! Host-owned KV cache for a decode group (the serving state).
+//! Host-owned KV cache for a decode group (the serving state), built on
+//! pluggable row-storage backends.
 //!
-//! Layout mirrors the executables' expectation: conceptually
-//! `[L, B, Hkv, Cmax, D]` row-major, with per-(layer, slot) lengths —
-//! per-layer lengths are what make Lethe's layerwise budgets expressible.
-//! Alongside K/V we track, per (layer, slot):
-//!   * `pos`    — each cached row's original absolute position (recency
-//!                signal for RASR / H2O / StreamingLLM),
-//!   * `scores` — the policy's accumulated attention score per row
-//!                (RASR Eq. 5; γ is policy-owned).
+//! # Architecture: bookkeeping vs storage
 //!
-//! Eviction is [`GroupCache::apply_retention`]: an in-place front-packing
-//! gather by source index, applied identically to K, V, pos and scores so
-//! the four stay aligned. Upload packing ([`GroupCache::pack`]) copies the
-//! C-prefix of each (l, b, h) row into a scratch tensor for the chosen
-//! capacity bucket — the smaller Lethe keeps the cache, the smaller the
-//! bucket and the less is uploaded/attended per step.
+//! [`GroupCache`] owns the *bookkeeping* of the conceptual
+//! `[L, B, Hkv, Cmax, D]` cache: per-(layer, slot) lengths (what makes
+//! Lethe's layerwise budgets expressible), each row's original absolute
+//! position `pos` (recency signal for RASR / H2O / StreamingLLM), the
+//! policy's accumulated attention score per row (RASR Eq. 5; γ is
+//! policy-owned), and the delta-pack epoch protocol below. The K/V
+//! payload itself lives behind the [`KvStore`] trait
+//! ([`backend`] module), enum-dispatched over:
+//!
+//!   * [`DenseF32`] (`kv.format = "f32"`, default) — plain f32 rows,
+//!   * [`QuantI8`]  (`kv.format = "q8"`) — per-row symmetric int8,
+//!     ~3.9× smaller, quantized at insert and dequantized during packing
+//!     (the paper's "compose with quantized caches" claim, on the real
+//!     serving path).
+//!
+//! Eviction is [`GroupCache::apply_retention`]: an in-place
+//! front-packing gather by source index, applied identically to the
+//! backend rows, pos and scores so they stay aligned. Upload packing
+//! ([`GroupCache::pack`]) materializes the C-prefix of each (l, b, h)
+//! row as f32 in a scratch tensor for the chosen capacity bucket — a
+//! memcpy on the dense backend, a dequantization on the quantized one.
 //!
 //! # Epoch / dirty protocol (incremental delta-pack)
 //!
@@ -23,22 +32,35 @@
 //! last **non-append** mutation (retention gather, prefill load, slot
 //! swap, slot reset). Appends ([`GroupCache::insert`]) bump only `epoch`,
 //! so `rewrite < e <= epoch` certifies that everything between epoch `e`
-//! and now was append-only: rows `0..len(e)` are byte-identical to what
-//! they were at `e`, and only rows `len(e)..len` are new.
+//! and now was append-only: rows `0..len(e)` are unchanged and only rows
+//! `len(e)..len` are new. Because the watermarks live here — not in the
+//! backend — the protocol is identical for every backend; the only
+//! backend obligation is that [`KvStore::read_rows`] is deterministic
+//! for a given stored state (dead rows included), which keeps a
+//! delta-maintained scratch bit-identical to a fresh pack.
 //!
-//! [`PackScratch`] is the consumer: a persistent upload image for one
-//! (batch, capacity) bucket that records, per (l, b), the epoch + row
-//! count it holds, tagged with the owning cache's unique id.
+//! [`PackScratch`] is the consumer: a persistent f32 upload image for
+//! one (batch, capacity) bucket that records, per (l, b), the epoch +
+//! row count it holds, tagged with the owning cache's unique id.
 //! [`GroupCache::pack_delta`] then reconciles per pair:
 //!   * epoch unchanged          → skip (zero bytes copied),
 //!   * append-only since sync   → copy only the new token rows,
 //!   * rewritten / unknown cache→ full C-prefix re-copy of that pair.
-//! The invariant (enforced by `tests/delta_pack_prop.rs`) is that the
-//! resident scratch is bit-identical to a fresh [`GroupCache::pack`]
-//! after every reconcile. Cache ids are never reused and a [`Clone`] of a
-//! cache takes a fresh id, so residency can never confuse two diverging
-//! copies.
+//! The invariant (enforced by `tests/delta_pack_prop.rs` and, across
+//! backends, `tests/backend_prop.rs`) is that the resident scratch is
+//! bit-identical to a fresh [`GroupCache::pack`] after every reconcile.
+//! Cache ids are never reused and a [`Clone`] of a cache takes a fresh
+//! id, so residency can never confuse two diverging copies.
+//!
+//! # Byte accounting (Table 2)
+//!
+//! [`GroupCache::live_bytes`] is live rows × the *backend's* per-row
+//! cost ([`quant::kv_row_bytes`]); [`GroupCache::f32_equivalent_bytes`]
+//! prices the same rows at f32. Table 2 reports both, so the memory
+//! numbers show token-count reduction (Lethe) and storage compression
+//! (backend) separately — and their product, the compounded saving.
 
+pub mod backend;
 pub mod quant;
 
 use std::marker::PhantomData;
@@ -48,9 +70,12 @@ use anyhow::{ensure, Result};
 
 use crate::runtime::tensors::{HostTensorF32, HostTensorI32};
 
-use quant::{kv_row_bytes, KvFormat};
+pub use backend::{DenseF32, KvBackend, KvStore, QuantI8};
+pub use quant::KvFormat;
 
-#[derive(Clone, Debug)]
+use backend::RawKv;
+
+#[derive(Clone, Copy, Debug)]
 pub struct CacheDims {
     pub layers: usize,
     pub batch: usize,
@@ -79,9 +104,8 @@ pub struct GroupCache {
     /// Process-unique identity; fresh per `new` AND per `clone` so
     /// [`PackScratch`] residency never matches a different cache.
     id: u64,
-    /// [L, B, Hkv, Cmax, D]
-    k: Vec<f32>,
-    v: Vec<f32>,
+    /// Row storage (K/V payload) behind the backend contract.
+    kv: KvBackend,
     /// [L, B]
     lens: Vec<usize>,
     /// [L][B] -> per-slot original absolute position, length = lens[l][b].
@@ -98,10 +122,9 @@ impl Clone for GroupCache {
     /// (independently mutated) copy.
     fn clone(&self) -> Self {
         GroupCache {
-            dims: self.dims.clone(),
+            dims: self.dims,
             id: next_cache_id(),
-            k: self.k.clone(),
-            v: self.v.clone(),
+            kv: self.kv.clone(),
             lens: self.lens.clone(),
             pos: self.pos.clone(),
             scores: self.scores.clone(),
@@ -111,14 +134,19 @@ impl Clone for GroupCache {
 }
 
 impl GroupCache {
+    /// Dense f32 cache (the serving default).
     pub fn new(dims: CacheDims) -> Self {
-        let CacheDims { layers, batch, kv_heads, capacity, d_head } = dims;
-        let n = layers * batch * kv_heads * capacity * d_head;
+        Self::with_format(dims, KvFormat::F32)
+    }
+
+    /// Cache with an explicit storage backend (`kv.format` in
+    /// [`crate::config::ServingConfig`]).
+    pub fn with_format(dims: CacheDims, fmt: KvFormat) -> Self {
+        let CacheDims { layers, batch, .. } = dims;
         GroupCache {
             dims,
             id: next_cache_id(),
-            k: vec![0.0; n],
-            v: vec![0.0; n],
+            kv: KvBackend::new(dims, fmt),
             lens: vec![0; layers * batch],
             pos: vec![Vec::new(); layers * batch],
             scores: vec![Vec::new(); layers * batch],
@@ -128,6 +156,11 @@ impl GroupCache {
 
     pub fn cache_id(&self) -> u64 {
         self.id
+    }
+
+    /// Storage format of the active backend.
+    pub fn format(&self) -> KvFormat {
+        self.kv.format()
     }
 
     pub fn slot_epoch(&self, l: usize, b: usize) -> SlotEpoch {
@@ -157,12 +190,19 @@ impl GroupCache {
         (0..self.dims.batch).map(|b| self.max_len_slot(b)).max().unwrap_or(0)
     }
 
-    /// Total live KV bytes — the Table 2 metric. Routed through the
-    /// quant-aware per-row cost so the number stays honest if the
-    /// storage format changes (this cache stores f32).
+    /// Total live KV bytes as actually stored by the backend — the
+    /// Table 2 metric. Routed through the format-aware per-row cost so
+    /// the number stays honest across storage backends.
     pub fn live_bytes(&self) -> usize {
-        let row = kv_row_bytes(self.dims.kv_heads, self.dims.d_head,
-                               KvFormat::F32);
+        let row = self.kv.row_bytes();
+        self.lens.iter().map(|&n| n * row).sum()
+    }
+
+    /// What the same live rows would occupy on the dense f32 backend
+    /// (Table 2's "f32-equivalent" column; equals [`Self::live_bytes`]
+    /// when the backend is dense).
+    pub fn f32_equivalent_bytes(&self) -> usize {
+        let row = self.kv.f32_row_bytes();
         self.lens.iter().map(|&n| n * row).sum()
     }
 
@@ -172,11 +212,6 @@ impl GroupCache {
 
     pub fn scores(&self, l: usize, b: usize) -> &[f32] {
         &self.scores[self.lb(l, b)]
-    }
-
-    fn row_offset(&self, l: usize, b: usize, h: usize, c: usize) -> usize {
-        let CacheDims { batch, kv_heads, capacity, d_head, .. } = self.dims;
-        (((l * batch + b) * kv_heads + h) * capacity + c) * d_head
     }
 
     /// Append one token's K/V (layout [Hkv, D]) at the next slot of
@@ -211,12 +246,15 @@ impl GroupCache {
             let idx = self.lb(l, b);
             for h in 0..kv_heads {
                 let src = ((l * kv_heads + h) * t) * d_head;
-                let dst = self.row_offset(l, b, h, 0);
                 let n = len * d_head;
-                self.k[dst..dst + n]
-                    .copy_from_slice(&k_all.data[src..src + n]);
-                self.v[dst..dst + n]
-                    .copy_from_slice(&v_all.data[src..src + n]);
+                self.kv.load_rows(
+                    l,
+                    b,
+                    h,
+                    &k_all.data[src..src + n],
+                    &v_all.data[src..src + n],
+                    len,
+                );
             }
             self.lens[idx] = len;
             self.pos[idx] = (0..len as i32).collect();
@@ -234,7 +272,7 @@ impl GroupCache {
             self.scores[idx].clear();
             self.touch_rewrite(idx);
         }
-        // K/V rows beyond lens are dead; zero lazily only where read.
+        // K/V rows beyond lens are dead; backends overwrite lazily.
     }
 
     /// Mark (layer, slot) `idx` rewritten: bump the epoch and move the
@@ -249,23 +287,15 @@ impl GroupCache {
     /// front-packed; used when a middle sequence finishes). Only the live
     /// rows — `max(len_a, len_b)` per layer — are moved: dead rows beyond
     /// the live length are never read (the decode kernel masks by lens),
-    /// so copying the full Cmax·D extent would be wasted bandwidth.
+    /// so moving the full Cmax extent would be wasted bandwidth.
     pub fn swap_slots(&mut self, a: usize, b: usize) {
         if a == b {
             return;
         }
-        let CacheDims { layers, kv_heads, d_head, .. } = self.dims;
-        for l in 0..layers {
+        for l in 0..self.dims.layers {
             let (ia, ib) = (self.lb(l, a), self.lb(l, b));
-            let n = self.lens[ia].max(self.lens[ib]) * d_head;
-            for h in 0..kv_heads {
-                let oa = self.row_offset(l, a, h, 0);
-                let ob = self.row_offset(l, b, h, 0);
-                for i in 0..n {
-                    self.k.swap(oa + i, ob + i);
-                    self.v.swap(oa + i, ob + i);
-                }
-            }
+            let n = self.lens[ia].max(self.lens[ib]);
+            self.kv.swap_rows(l, a, b, n);
             self.lens.swap(ia, ib);
             self.pos.swap(ia, ib);
             self.scores.swap(ia, ib);
@@ -304,10 +334,10 @@ impl GroupCache {
         self.slot_view_mut(b).apply_retention(l, keep)
     }
 
-    /// Pack the C-prefix of the first `bb` slots into upload tensors for
-    /// a (batch, capacity) bucket: k/v [L, bb, Hkv, C, D] + lens [L, bb].
-    /// Rows longer than C are a caller bug (the engine prunes or picks a
-    /// bigger bucket first).
+    /// Pack the C-prefix of the first `bb` slots into f32 upload tensors
+    /// for a (batch, capacity) bucket: k/v [L, bb, Hkv, C, D] +
+    /// lens [L, bb]. Rows longer than C are a caller bug (the engine
+    /// prunes or picks a bigger bucket first).
     pub fn pack(
         &self,
         bb: usize,
@@ -328,12 +358,11 @@ impl GroupCache {
                 ensure!(self.len(l, b) <= c,
                         "live rows exceed bucket {c} at ({l},{b})");
                 for h in 0..kv_heads {
-                    let src = self.row_offset(l, b, h, 0);
                     let dst = ((l * bb + b) * kv_heads + h) * n;
-                    k_out.data[dst..dst + n]
-                        .copy_from_slice(&self.k[src..src + n]);
-                    v_out.data[dst..dst + n]
-                        .copy_from_slice(&self.v[src..src + n]);
+                    self.kv.read_rows(l, b, h, false, 0, c,
+                                      &mut k_out.data[dst..dst + n]);
+                    self.kv.read_rows(l, b, h, true, 0, c,
+                                      &mut v_out.data[dst..dst + n]);
                 }
                 lens_out.data[l * bb + b] = self.lens[self.lb(l, b)] as i32;
             }
@@ -342,9 +371,10 @@ impl GroupCache {
     }
 
     /// Reconcile a persistent [`PackScratch`] with the current cache
-    /// state, copying only what changed since the scratch was last
-    /// synced (see the module-level epoch protocol). The scratch ends up
-    /// bit-identical to a fresh [`GroupCache::pack`] at the same bucket.
+    /// state, copying (dense) or dequantizing (quantized) only what
+    /// changed since the scratch was last synced (see the module-level
+    /// epoch protocol). The scratch ends up bit-identical to a fresh
+    /// [`GroupCache::pack`] at the same bucket.
     pub fn pack_delta(&self, scratch: &mut PackScratch) -> Result<PackStats> {
         let CacheDims { layers, batch, kv_heads, d_head, .. } = self.dims;
         let (bb, cap) = (scratch.bb, scratch.cap);
@@ -389,14 +419,15 @@ impl GroupCache {
                 if to > from {
                     let count = (to - from) * d_head;
                     for h in 0..kv_heads {
-                        let src = self.row_offset(l, b, h, from);
                         let dst = ((l * bb + b) * kv_heads + h) * n_block
                             + from * d_head;
-                        scratch.k.data[dst..dst + count]
-                            .copy_from_slice(&self.k[src..src + count]);
-                        scratch.v.data[dst..dst + count]
-                            .copy_from_slice(&self.v[src..src + count]);
+                        self.kv.read_rows(l, b, h, false, from, to,
+                                          &mut scratch.k.data[dst..dst + count]);
+                        self.kv.read_rows(l, b, h, true, from, to,
+                                          &mut scratch.v.data[dst..dst + count]);
                     }
+                    // f32 bytes written into the upload scratch (K + V);
+                    // format-independent because the scratch is f32.
                     stats.bytes_copied += count * kv_heads * 4 * 2;
                 }
                 scratch.res[ridx] = (st.epoch, len);
@@ -410,8 +441,7 @@ impl GroupCache {
     /// Raw component pointers shared by the view constructors.
     fn raw_parts(&mut self) -> RawParts {
         RawParts {
-            k: self.k.as_mut_ptr(),
-            v: self.v.as_mut_ptr(),
+            kv: self.kv.raw(),
             lens: self.lens.as_mut_ptr(),
             pos: self.pos.as_mut_ptr(),
             scores: self.scores.as_mut_ptr(),
@@ -425,7 +455,7 @@ impl GroupCache {
         let parts = self.raw_parts();
         SlotViewMut {
             b,
-            dims: self.dims.clone(),
+            dims: self.dims,
             parts,
             _borrow: PhantomData,
         }
@@ -433,17 +463,17 @@ impl GroupCache {
 
     /// Disjoint mutable views over slots `0..n`, for parallel per-slot
     /// post-decode work. Each view only ever touches its own slot's
-    /// K/V regions, lens, pos, scores and epochs, so the views can be
+    /// backend rows, lens, pos, scores and epochs, so the views can be
     /// sent to different worker threads simultaneously.
     pub fn slot_views_mut(&mut self, n: usize) -> Vec<SlotViewMut<'_>> {
         assert!(n <= self.dims.batch,
                 "view count {n} > group size {}", self.dims.batch);
         let parts = self.raw_parts();
-        let dims = self.dims.clone();
+        let dims = self.dims;
         (0..n)
             .map(|b| SlotViewMut {
                 b,
-                dims: dims.clone(),
+                dims,
                 parts,
                 _borrow: PhantomData,
             })
@@ -468,8 +498,7 @@ impl GroupCache {
 /// restricts itself to its slot's disjoint sub-ranges).
 #[derive(Clone, Copy)]
 struct RawParts {
-    k: *mut f32,
-    v: *mut f32,
+    kv: RawKv,
     lens: *mut usize,
     pos: *mut Vec<i32>,
     scores: *mut Vec<f32>,
@@ -488,9 +517,10 @@ pub struct SlotViewMut<'a> {
     _borrow: PhantomData<&'a mut GroupCache>,
 }
 
-// SAFETY: all pointed-to data is plain owned memory (`f32`/`usize`/`Vec`s
-// of Send types), and the constructor hands out at most one view per
-// slot, so no two threads ever alias the same (layer, slot) state.
+// SAFETY: all pointed-to data is plain owned memory (f32/i8 row buffers,
+// `usize`/`Vec`s of Send types), and the constructor hands out at most
+// one view per slot, so no two threads ever alias the same (layer, slot)
+// state.
 unsafe impl Send for SlotViewMut<'_> {}
 
 impl SlotViewMut<'_> {
@@ -505,27 +535,6 @@ impl SlotViewMut<'_> {
     #[inline]
     fn lb(&self, l: usize) -> usize {
         l * self.dims.batch + self.b
-    }
-
-    #[inline]
-    fn row_offset(&self, l: usize, h: usize, c: usize) -> usize {
-        let CacheDims { batch, kv_heads, capacity, d_head, .. } = self.dims;
-        (((l * batch + self.b) * kv_heads + h) * capacity + c) * d_head
-    }
-
-    /// The contiguous [Cmax, D] block of this slot's (l, h) K rows.
-    /// SAFETY: the range is exclusive to this slot (disjoint across
-    /// views) and the PhantomData borrow keeps the cache alive/unmoved.
-    fn k_block(&mut self, l: usize, h: usize) -> &mut [f32] {
-        let off = self.row_offset(l, h, 0);
-        let n = self.dims.capacity * self.dims.d_head;
-        unsafe { std::slice::from_raw_parts_mut(self.parts.k.add(off), n) }
-    }
-
-    fn v_block(&mut self, l: usize, h: usize) -> &mut [f32] {
-        let off = self.row_offset(l, h, 0);
-        let n = self.dims.capacity * self.dims.d_head;
-        unsafe { std::slice::from_raw_parts_mut(self.parts.v.add(off), n) }
     }
 
     pub fn len(&self, l: usize) -> usize {
@@ -561,13 +570,11 @@ impl SlotViewMut<'_> {
         let c = self.len(l);
         ensure!(c < self.dims.capacity,
                 "cache overflow at layer {l} slot {} (len {c})", self.b);
-        for h in 0..hkv {
-            self.k_block(l, h)[c * d..(c + 1) * d]
-                .copy_from_slice(&k_row[h * d..(h + 1) * d]);
-            self.v_block(l, h)[c * d..(c + 1) * d]
-                .copy_from_slice(&v_row[h * d..(h + 1) * d]);
-        }
+        // SAFETY: this view is the sole owner of slot `b`'s rows and
+        // bookkeeping entries; the PhantomData borrow keeps the cache
+        // alive and unmoved.
         unsafe {
+            self.parts.kv.write_row(&self.dims, l, self.b, c, k_row, v_row);
             *self.parts.lens.add(idx) = c + 1;
             (*self.parts.pos.add(idx)).push(abs_pos);
             (*self.parts.scores.add(idx)).push(0.0);
@@ -596,12 +603,9 @@ impl SlotViewMut<'_> {
         ks.dedup();
         ensure!(ks.iter().all(|&i| i < n),
                 "retention index out of range (len {n})");
-        let d = self.dims.d_head;
-        for h in 0..self.dims.kv_heads {
-            gather_rows(self.k_block(l, h), d, &ks);
-            gather_rows(self.v_block(l, h), d, &ks);
-        }
+        // SAFETY: as in `insert` — exclusive slot ownership.
         unsafe {
+            self.parts.kv.gather_rows(&self.dims, l, self.b, &ks);
             let pos = &mut *self.parts.pos.add(idx);
             let sc = &mut *self.parts.scores.add(idx);
             for (dst, &src) in ks.iter().enumerate() {
@@ -619,15 +623,6 @@ impl SlotViewMut<'_> {
     }
 }
 
-/// Front-packing gather of D-wide rows by ascending source index.
-fn gather_rows(block: &mut [f32], d: usize, ks: &[usize]) {
-    for (dst, &src) in ks.iter().enumerate() {
-        if dst != src {
-            block.copy_within(src * d..(src + 1) * d, dst * d);
-        }
-    }
-}
-
 /// What one [`GroupCache::pack_delta`] call actually moved.
 #[derive(Clone, Copy, Debug, Default)]
 pub struct PackStats {
@@ -641,9 +636,10 @@ pub struct PackStats {
     pub pairs_skipped: usize,
 }
 
-/// Persistent upload image for one (batch, capacity) bucket, plus the
-/// per-(layer, slot) residency record [`GroupCache::pack_delta`] uses to
-/// decide how little it can copy.
+/// Persistent f32 upload image for one (batch, capacity) bucket, plus
+/// the per-(layer, slot) residency record [`GroupCache::pack_delta`]
+/// uses to decide how little it can copy. The image is f32 for every
+/// backend: quantized storage dequantizes during reconcile.
 pub struct PackScratch {
     pub k: HostTensorF32,
     pub v: HostTensorF32,
@@ -693,6 +689,15 @@ mod tests {
         (0..hkv * d).map(|i| val + i as f32 * 0.01).collect()
     }
 
+    /// First element of the stored (l, b, h, row) K row, read through the
+    /// backend (replaces the old direct `c.k[off]` peeks).
+    fn k_at(c: &GroupCache, l: usize, b: usize, h: usize, row_idx: usize) -> f32 {
+        let d = c.dims.d_head;
+        let mut buf = vec![0.0; d];
+        c.kv.read_rows(l, b, h, false, row_idx, row_idx + 1, &mut buf);
+        buf[0]
+    }
+
     #[test]
     fn insert_then_lengths_and_bytes() {
         let mut c = GroupCache::new(dims());
@@ -708,6 +713,9 @@ mod tests {
         assert_eq!(c.max_len(), 3);
         // 2 layers * 3 tokens * (2 heads * 4 dim * 4 bytes * 2 tensors)
         assert_eq!(c.live_bytes(), 2 * 3 * 2 * 4 * 4 * 2);
+        // Dense backend: f32-equivalent == actual.
+        assert_eq!(c.f32_equivalent_bytes(), c.live_bytes());
+        assert_eq!(c.format(), KvFormat::F32);
     }
 
     #[test]
@@ -735,8 +743,7 @@ mod tests {
         assert!((s[1] - 0.4).abs() < 1e-6);
         assert!((s[2] - 0.6).abs() < 1e-6);
         // K row 1 must now hold original token 3's data.
-        let off = c.row_offset(0, 0, 0, 1);
-        assert!((c.k[off] - 3.0).abs() < 1e-6);
+        assert!((k_at(&c, 0, 0, 0, 1) - 3.0).abs() < 1e-6);
     }
 
     #[test]
@@ -782,8 +789,7 @@ mod tests {
         c.swap_slots(0, 1);
         assert_eq!(c.len(0, 0), 2);
         assert_eq!(c.len(0, 1), 1);
-        let off = c.row_offset(0, 0, 0, 0);
-        assert!((c.k[off] - 9.0).abs() < 1e-6);
+        assert!((k_at(&c, 0, 0, 0, 0) - 9.0).abs() < 1e-6);
     }
 
     #[test]
@@ -926,6 +932,57 @@ mod tests {
     }
 
     #[test]
+    fn quant_backend_end_to_end_retention_and_pack() {
+        let mut c = GroupCache::with_format(dims(), KvFormat::QuantI8);
+        assert_eq!(c.format(), KvFormat::QuantI8);
+        for t in 0..6 {
+            c.insert(0, 0, &row(t as f32, 2, 4), &row(t as f32, 2, 4), t)
+                .unwrap();
+        }
+        // Quantized storage is smaller than its f32 equivalent:
+        // (4 + 4) vs 4 * 4 bytes per head-row.
+        assert_eq!(c.live_bytes() * 2, c.f32_equivalent_bytes());
+        c.apply_retention(0, 0, &[0, 3, 5]).unwrap();
+        assert_eq!(c.pos(0, 0), &[0, 3, 5]);
+        // Row 1 after retention == original token 3, within quant error
+        // (amax ≈ 3.07 ⇒ tolerance ≈ 0.0121 + fuzz).
+        let got = k_at(&c, 0, 0, 0, 1);
+        assert!((got - 3.0).abs() < 0.02, "{got}");
+    }
+
+    #[test]
+    fn quant_backend_delta_pack_matches_fresh_pack() {
+        let mut c = GroupCache::with_format(dims(), KvFormat::QuantI8);
+        for t in 0..4 {
+            for l in 0..2 {
+                c.insert(l, 0, &row(t as f32, 2, 4), &row(t as f32, 2, 4), t)
+                    .unwrap();
+            }
+        }
+        let mut s = PackScratch::new(&c.dims, 2, 8);
+        let st = c.pack_delta(&mut s).unwrap();
+        assert_eq!(st.pairs_full, 4);
+        assert_matches_fresh_pack(&c, &s);
+
+        // Append-only step: the dequantized delta lands bit-identical.
+        c.insert(0, 0, &row(9.0, 2, 4), &row(9.0, 2, 4), 4).unwrap();
+        let st = c.pack_delta(&mut s).unwrap();
+        assert_eq!(st.pairs_delta, 1);
+        assert_matches_fresh_pack(&c, &s);
+
+        // Rewrite (retention) then reconcile: still bit-identical.
+        c.apply_retention(0, 0, &[1, 4]).unwrap();
+        c.pack_delta(&mut s).unwrap();
+        assert_matches_fresh_pack(&c, &s);
+
+        // Reap path: swap + reset, both backends share the epoch logic.
+        c.swap_slots(0, 1);
+        c.reset_slot(1);
+        c.pack_delta(&mut s).unwrap();
+        assert_matches_fresh_pack(&c, &s);
+    }
+
+    #[test]
     fn slot_views_are_disjoint_and_usable_in_parallel() {
         let mut c = GroupCache::new(dims());
         let views = c.slot_views_mut(2);
@@ -950,7 +1007,30 @@ mod tests {
         assert_eq!(c.pos(0, 1), &[1, 3]);
         assert!((c.scores(0, 0)[0] - 0.5).abs() < 1e-6);
         // Slot 1's K data must be the value its own thread wrote.
-        let off = c.row_offset(0, 1, 0, 0);
-        assert!((c.k[off] - 1.0).abs() < 1e-6);
+        assert!((k_at(&c, 0, 1, 0, 0) - 1.0).abs() < 1e-6);
+    }
+
+    #[test]
+    fn quant_slot_views_parallel_insert_and_retain() {
+        let mut c = GroupCache::with_format(dims(), KvFormat::QuantI8);
+        let views = c.slot_views_mut(2);
+        std::thread::scope(|sc| {
+            for (i, mut view) in views.into_iter().enumerate() {
+                sc.spawn(move || {
+                    for t in 0..4 {
+                        for l in 0..view.layers() {
+                            view.insert(l, &row(i as f32 + 1.0, 2, 4),
+                                        &row(i as f32 + 1.0, 2, 4), t)
+                                .unwrap();
+                        }
+                    }
+                    view.apply_retention(0, &[0, 2]).unwrap();
+                });
+            }
+        });
+        assert_eq!(c.len(0, 0), 2);
+        assert_eq!(c.len(0, 1), 2);
+        assert_eq!(c.pos(0, 1), &[0, 2]);
+        assert!((k_at(&c, 0, 1, 0, 0) - 2.0).abs() < 0.02);
     }
 }

@@ -1,6 +1,6 @@
-//! Quantized KV storage — the paper's composition claim ("Lethe can be
-//! layered on top of quantized caches for compounded memory savings",
-//! Related Work §Quantization).
+//! Quantized KV row primitives — the paper's composition claim ("Lethe
+//! can be layered on top of quantized caches for compounded memory
+//! savings", Related Work §Quantization).
 //!
 //! Per-row symmetric int8: each cached (layer, slot, head) K/V row of D
 //! floats is stored as i8[D] + one f32 scale (KIVI-style per-token
@@ -9,23 +9,49 @@
 //! accuracy cost is bounded by the quantization-error tests below and is
 //! orthogonal to (multiplies with) Lethe's token-count reduction.
 //!
-//! [`QuantCache`] mirrors the [`super::GroupCache`] retention/packing API
-//! so the engine could swap storage backends; the repo keeps f32 as the
-//! serving default (CPU PJRT gains nothing from i8 uploads) and uses this
-//! module to quantify the compounded-savings claim in `hotpath`/tests.
+//! This module owns the *row-level* pieces: [`KvFormat`] (config/CLI
+//! selection + byte accounting), [`kv_row_bytes`], and the
+//! [`quantize_row`]/[`dequantize_row`] pair. The cache-level storage
+//! built on them is [`super::backend::QuantI8`], a first-class
+//! [`super::backend::KvStore`] engine backend selected with
+//! `kv.format = "q8"` — the former side-car `QuantCache` promoted onto
+//! the real serving path.
 
-use anyhow::{ensure, Result};
+use anyhow::{bail, Result};
 
-/// KV storage format, for byte accounting (Table 2). Every `live_bytes`
-/// style metric routes through [`kv_row_bytes`] so memory numbers stay
-/// honest across storage backends.
-#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+/// KV storage format: selects the engine storage backend
+/// ([`super::backend::KvBackend`]) and prices byte accounting (Table 2).
+/// Every `live_bytes`-style metric routes through [`kv_row_bytes`] so
+/// memory numbers stay honest across storage backends.
+#[derive(Clone, Copy, Debug, Default, PartialEq, Eq)]
 pub enum KvFormat {
     /// 4 bytes per element (the serving default).
+    #[default]
     F32,
     /// Per-row symmetric int8: 1 byte per element + one f32 scale per
     /// (head, tensor) row.
     QuantI8,
+}
+
+impl KvFormat {
+    /// Parse the config/CLI name (`kv.format`: "f32" | "q8").
+    pub fn parse(s: &str) -> Result<KvFormat> {
+        match s {
+            "f32" => Ok(KvFormat::F32),
+            "q8" => Ok(KvFormat::QuantI8),
+            other => bail!(
+                "unknown kv format '{other}' (expected \"f32\" or \"q8\")"
+            ),
+        }
+    }
+
+    /// Config/CLI name, inverse of [`KvFormat::parse`].
+    pub fn label(self) -> &'static str {
+        match self {
+            KvFormat::F32 => "f32",
+            KvFormat::QuantI8 => "q8",
+        }
+    }
 }
 
 /// Bytes to store one cached token row — K *and* V, all `kv_heads` heads
@@ -39,140 +65,62 @@ pub fn kv_row_bytes(kv_heads: usize, d_head: usize, fmt: KvFormat) -> usize {
 }
 
 /// One quantized row: i8 mantissas + a power-independent f32 scale.
+/// Convenience carrier for tests/tools; the [`super::backend::QuantI8`]
+/// backend stores mantissas and scales in flat arrays instead (no
+/// per-row heap allocation on the decode hot path) via
+/// [`quantize_row_into`] / [`dequantize_span`].
 #[derive(Clone, Debug, Default)]
 pub struct QuantRow {
     pub q: Vec<i8>,
     pub scale: f32,
 }
 
-/// Symmetric per-row int8 quantization.
-pub fn quantize_row(x: &[f32]) -> QuantRow {
-    let amax = x.iter().fold(0f32, |m, &v| m.max(v.abs()));
+/// Symmetric per-row int8 quantization into a preallocated mantissa
+/// span; returns the scale. Non-finite-safe: NaN and ±Inf elements
+/// carry no usable magnitude, so they are skipped explicitly when
+/// computing `amax` and stored as exact zeros (consistent with the
+/// engine's NaN-safe argmax) — otherwise a single Inf would drive
+/// `scale` to Inf and dequantize the whole row to NaN (0 × Inf).
+pub fn quantize_row_into(x: &[f32], q: &mut [i8]) -> f32 {
+    debug_assert_eq!(q.len(), x.len());
+    let amax = x
+        .iter()
+        .filter(|v| v.is_finite())
+        .fold(0f32, |m, &v| m.max(v.abs()));
     if amax == 0.0 {
-        return QuantRow { q: vec![0; x.len()], scale: 0.0 };
+        q.fill(0);
+        return 0.0;
     }
     let scale = amax / 127.0;
     let inv = 1.0 / scale;
-    QuantRow {
-        q: x.iter().map(|&v| (v * inv).round().clamp(-127.0, 127.0) as i8)
-            .collect(),
-        scale,
+    for (qe, &v) in q.iter_mut().zip(x) {
+        *qe = if v.is_finite() {
+            (v * inv).round().clamp(-127.0, 127.0) as i8
+        } else {
+            0
+        };
+    }
+    scale
+}
+
+/// Allocating convenience wrapper over [`quantize_row_into`].
+pub fn quantize_row(x: &[f32]) -> QuantRow {
+    let mut q = vec![0i8; x.len()];
+    let scale = quantize_row_into(x, &mut q);
+    QuantRow { q, scale }
+}
+
+/// Dequantize a flat mantissa span with its scale (the inverse of
+/// [`quantize_row_into`]).
+pub fn dequantize_span(q: &[i8], scale: f32, out: &mut [f32]) {
+    debug_assert_eq!(out.len(), q.len());
+    for (o, &qe) in out.iter_mut().zip(q) {
+        *o = qe as f32 * scale;
     }
 }
 
 pub fn dequantize_row(r: &QuantRow, out: &mut [f32]) {
-    debug_assert_eq!(out.len(), r.q.len());
-    for (o, &q) in out.iter_mut().zip(&r.q) {
-        *o = q as f32 * r.scale;
-    }
-}
-
-/// Quantized group cache: same logical layout as GroupCache
-/// ([L, B, Hkv, C] rows of D), i8 storage.
-pub struct QuantCache {
-    pub layers: usize,
-    pub batch: usize,
-    pub kv_heads: usize,
-    pub capacity: usize,
-    pub d_head: usize,
-    /// [L*B*Hkv*C] rows; empty rows have scale 0/len 0.
-    k: Vec<QuantRow>,
-    v: Vec<QuantRow>,
-    lens: Vec<usize>, // [L*B]
-}
-
-impl QuantCache {
-    pub fn new(layers: usize, batch: usize, kv_heads: usize,
-               capacity: usize, d_head: usize) -> Self {
-        let rows = layers * batch * kv_heads * capacity;
-        QuantCache {
-            layers,
-            batch,
-            kv_heads,
-            capacity,
-            d_head,
-            k: vec![QuantRow::default(); rows],
-            v: vec![QuantRow::default(); rows],
-            lens: vec![0; layers * batch],
-        }
-    }
-
-    fn row_idx(&self, l: usize, b: usize, h: usize, c: usize) -> usize {
-        ((l * self.batch + b) * self.kv_heads + h) * self.capacity + c
-    }
-
-    pub fn len(&self, l: usize, b: usize) -> usize {
-        self.lens[l * self.batch + b]
-    }
-
-    pub fn is_empty(&self) -> bool {
-        self.lens.iter().all(|&n| n == 0)
-    }
-
-    /// Append one token's K/V rows (layout [Hkv, D] each).
-    pub fn insert(&mut self, l: usize, b: usize, k_row: &[f32],
-                  v_row: &[f32]) -> Result<()> {
-        let d = self.d_head;
-        ensure!(k_row.len() == self.kv_heads * d, "bad row");
-        let c = self.len(l, b);
-        ensure!(c < self.capacity, "quant cache overflow");
-        for h in 0..self.kv_heads {
-            let i = self.row_idx(l, b, h, c);
-            self.k[i] = quantize_row(&k_row[h * d..(h + 1) * d]);
-            self.v[i] = quantize_row(&v_row[h * d..(h + 1) * d]);
-        }
-        self.lens[l * self.batch + b] = c + 1;
-        Ok(())
-    }
-
-    /// Dequantize the live prefix of (l, b, h) into `out` ([len, D]).
-    pub fn dequantize_into(&self, l: usize, b: usize, h: usize,
-                           which_v: bool, out: &mut [f32]) {
-        let d = self.d_head;
-        let n = self.len(l, b);
-        debug_assert!(out.len() >= n * d);
-        for c in 0..n {
-            let i = self.row_idx(l, b, h, c);
-            let row = if which_v { &self.v[i] } else { &self.k[i] };
-            dequantize_row(row, &mut out[c * d..(c + 1) * d]);
-        }
-    }
-
-    /// Front-packing retention gather (same contract as
-    /// GroupCache::apply_retention).
-    pub fn apply_retention(&mut self, l: usize, b: usize, keep: &[usize])
-        -> Result<usize>
-    {
-        let n = self.len(l, b);
-        let mut ks: Vec<usize> = keep.to_vec();
-        ks.sort_unstable();
-        ks.dedup();
-        ensure!(ks.iter().all(|&i| i < n), "retention index out of range");
-        for h in 0..self.kv_heads {
-            for (dst, &src) in ks.iter().enumerate() {
-                if dst != src {
-                    let di = self.row_idx(l, b, h, dst);
-                    let si = self.row_idx(l, b, h, src);
-                    self.k.swap(di, si);
-                    self.v.swap(di, si);
-                }
-            }
-        }
-        self.lens[l * self.batch + b] = ks.len();
-        Ok(ks.len())
-    }
-
-    /// Stored bytes for the live rows (i8 + scale), vs 4 bytes/elem f32.
-    pub fn live_bytes(&self) -> usize {
-        let row = kv_row_bytes(self.kv_heads, self.d_head, KvFormat::QuantI8);
-        self.lens.iter().map(|&n| n * row).sum()
-    }
-
-    /// f32-equivalent live bytes (what GroupCache would hold).
-    pub fn f32_equivalent_bytes(&self) -> usize {
-        let row = kv_row_bytes(self.kv_heads, self.d_head, KvFormat::F32);
-        self.lens.iter().map(|&n| n * row).sum()
-    }
+    dequantize_span(&r.q, r.scale, out);
 }
 
 #[cfg(test)]
@@ -187,6 +135,18 @@ mod tests {
         assert_eq!(kv_row_bytes(2, 4, KvFormat::F32), 64);
         // 2 heads * (4 elems + 4-byte scale) * 2 tensors
         assert_eq!(kv_row_bytes(2, 4, KvFormat::QuantI8), 32);
+    }
+
+    #[test]
+    fn format_parse_roundtrips_and_rejects() {
+        assert_eq!(KvFormat::parse("f32").unwrap(), KvFormat::F32);
+        assert_eq!(KvFormat::parse("q8").unwrap(), KvFormat::QuantI8);
+        for fmt in [KvFormat::F32, KvFormat::QuantI8] {
+            assert_eq!(KvFormat::parse(fmt.label()).unwrap(), fmt);
+        }
+        assert!(KvFormat::parse("fp8").is_err());
+        assert!(KvFormat::parse("").is_err());
+        assert_eq!(KvFormat::default(), KvFormat::F32);
     }
 
     #[test]
@@ -213,6 +173,65 @@ mod tests {
     }
 
     #[test]
+    fn quantize_row_skips_nans() {
+        // NaNs must not poison the scale and must come back as exact 0.
+        let x = [1.0, f32::NAN, -2.0, f32::NAN];
+        let q = quantize_row(&x);
+        assert!((q.scale - 2.0 / 127.0).abs() < 1e-9);
+        assert_eq!(q.q[1], 0);
+        assert_eq!(q.q[3], 0);
+        let mut y = [9f32; 4];
+        dequantize_row(&q, &mut y);
+        assert_eq!(y[1], 0.0);
+        assert_eq!(y[3], 0.0);
+        assert!((y[0] - 1.0).abs() <= 2.0 / 127.0 * 0.5 + 1e-6);
+        assert!((y[2] + 2.0).abs() <= 2.0 / 127.0 * 0.5 + 1e-6);
+    }
+
+    #[test]
+    fn quantize_row_skips_infinities() {
+        // A single Inf must not drive the scale to Inf (which would
+        // dequantize every element to 0 × Inf = NaN).
+        let x = [f32::INFINITY, 3.0, f32::NEG_INFINITY, -1.5];
+        let q = quantize_row(&x);
+        assert!((q.scale - 3.0 / 127.0).abs() < 1e-9);
+        assert_eq!(q.q[0], 0);
+        assert_eq!(q.q[2], 0);
+        let mut y = [0f32; 4];
+        dequantize_row(&q, &mut y);
+        assert!(y.iter().all(|v| v.is_finite()), "{y:?}");
+        assert_eq!(y[0], 0.0);
+        assert!((y[1] - 3.0).abs() <= 3.0 / 127.0 * 0.5 + 1e-6);
+        assert!((y[3] + 1.5).abs() <= 3.0 / 127.0 * 0.5 + 1e-6);
+    }
+
+    #[test]
+    fn all_nan_row_quantizes_to_exact_zero() {
+        let q = quantize_row(&[f32::NAN; 3]);
+        assert_eq!(q.scale, 0.0);
+        assert_eq!(q.q, vec![0; 3]);
+        let mut y = [5f32; 3];
+        dequantize_row(&q, &mut y);
+        assert_eq!(y, [0.0; 3]);
+    }
+
+    #[test]
+    fn quantize_into_matches_allocating_wrapper() {
+        let mut rng = Rng::new(21);
+        let x = vec_f32(&mut rng, 32, -4.0, 4.0);
+        let r = quantize_row(&x);
+        let mut q = vec![0i8; 32];
+        let scale = quantize_row_into(&x, &mut q);
+        assert_eq!(scale, r.scale);
+        assert_eq!(q, r.q);
+        let mut a = vec![0f32; 32];
+        let mut b = vec![0f32; 32];
+        dequantize_row(&r, &mut a);
+        dequantize_span(&q, scale, &mut b);
+        assert_eq!(a, b);
+    }
+
+    #[test]
     fn property_quantization_relative_error() {
         check("quant-rel-err", 60, |rng, size| {
             let d = 4 + size;
@@ -232,51 +251,33 @@ mod tests {
     }
 
     #[test]
-    fn cache_insert_retain_dequantize() {
-        let mut c = QuantCache::new(2, 1, 2, 8, 4);
-        let mut rng = Rng::new(4);
-        let mut originals = Vec::new();
-        for _ in 0..5 {
-            let k = vec_f32(&mut rng, 8, -1.0, 1.0);
-            let v = vec_f32(&mut rng, 8, -1.0, 1.0);
-            c.insert(0, 0, &k, &v).unwrap();
-            c.insert(1, 0, &k, &v).unwrap();
-            originals.push(k);
-        }
-        assert_eq!(c.len(0, 0), 5);
-        c.apply_retention(0, 0, &[0, 2, 4]).unwrap();
-        assert_eq!(c.len(0, 0), 3);
-        let mut out = vec![0f32; 3 * 4];
-        c.dequantize_into(0, 0, 1, false, &mut out);
-        // Row 1 after retention == original token 2, head 1, ±quant err.
-        for (a, b) in originals[2][4..8].iter().zip(&out[4..8]) {
-            assert!((a - b).abs() < 0.02, "{a} vs {b}");
-        }
-    }
-
-    #[test]
     fn compounded_savings_vs_f32() {
-        let mut c = QuantCache::new(4, 1, 2, 64, 32);
+        // The Table 2 composition measured on a real q8-backed cache:
+        // Lethe's ~91.6% token reduction × the q8 storage ratio ≈ 40x+
+        // total. Goes through the live insert path so a backend that
+        // silently stored f32-sized rows would fail the ratio.
+        use super::super::{CacheDims, GroupCache};
+        let dims = CacheDims {
+            layers: 4,
+            batch: 1,
+            kv_heads: 2,
+            capacity: 64,
+            d_head: 32,
+        };
+        let mut c = GroupCache::with_format(dims, KvFormat::QuantI8);
         let row = vec![0.5f32; 64];
-        for _ in 0..50 {
+        for t in 0..50 {
             for l in 0..4 {
-                c.insert(l, 0, &row, &row).unwrap();
+                c.insert(l, 0, &row, &row, t).unwrap();
             }
         }
         let ratio = c.f32_equivalent_bytes() as f64 / c.live_bytes() as f64;
         assert!(ratio > 3.4, "quant saving only {ratio:.2}x");
-        // Composition: Lethe's ~91.6% token reduction × 3.5x quantization
-        // ≈ 40x+ total — the paper's "compounded" claim, quantified.
+        assert_eq!(
+            c.live_bytes(),
+            4 * 50 * kv_row_bytes(2, 32, KvFormat::QuantI8)
+        );
         let compounded = ratio * (1.0 / (1.0 - 0.916));
         assert!(compounded > 40.0);
-    }
-
-    #[test]
-    fn overflow_guard() {
-        let mut c = QuantCache::new(1, 1, 1, 2, 4);
-        let row = [0.1f32; 4];
-        c.insert(0, 0, &row, &row).unwrap();
-        c.insert(0, 0, &row, &row).unwrap();
-        assert!(c.insert(0, 0, &row, &row).is_err());
     }
 }

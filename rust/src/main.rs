@@ -32,6 +32,7 @@ fn spec() -> ArgSpec {
     .opt("artifacts", "artifacts", "artifacts directory")
     .opt("config", "", "optional JSON config file")
     .opt("policy", "lethe", "fullkv|lethe|h2o|streamingllm|pyramidkv")
+    .opt("kv-format", "", "KV storage backend: f32|q8 (default: config/f32)")
     .opt("prompt", "", "prompt text (generate)")
     .opt("max-new", "64", "max new tokens")
     .opt("n", "16", "requests (serve) / tasks per subject (eval)")
@@ -49,6 +50,9 @@ fn load_cfg(args: &lethe::util::argparse::Args) -> Result<ServingConfig> {
     };
     cfg.artifacts_dir = args.get("artifacts").to_string();
     cfg.scheduler.max_batch = args.get_usize("batch")?.max(1);
+    if !args.get("kv-format").is_empty() {
+        cfg.kv.format = lethe::kvcache::KvFormat::parse(args.get("kv-format"))?;
+    }
     Ok(cfg)
 }
 
@@ -120,9 +124,9 @@ fn cmd_generate(args: &lethe::util::argparse::Args) -> Result<()> {
     println!("output  : {}", resp.text);
     println!(
         "finish={} prompt_toks={} gen_toks={} ttft={:.3}s total={:.3}s \
-         prune_rounds={}",
+         prune_rounds={} kv={}",
         resp.finish, resp.prompt_tokens, resp.generated_tokens, resp.ttft_s,
-        resp.total_s, resp.prune_rounds
+        resp.total_s, resp.prune_rounds, resp.kv_format
     );
     Ok(())
 }

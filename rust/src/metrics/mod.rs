@@ -4,6 +4,7 @@
 
 use std::collections::BTreeMap;
 
+use crate::kvcache::KvFormat;
 use crate::util::json::Json;
 use crate::util::stats::Summary;
 
@@ -29,6 +30,12 @@ pub struct EngineMetrics {
     /// retention, swap, prefill or reset since last sync).
     pub delta_pack_full: u64,
     pub live_bytes_last: usize,
+    /// What `live_bytes_last` would cost at f32 (Table 2's
+    /// "f32-equivalent" column; equals `live_bytes_last` on the dense
+    /// backend).
+    pub f32_equiv_bytes_last: usize,
+    /// KV storage backend the last decode step served with.
+    pub kv_format: KvFormat,
     /// decode capacity bucket -> steps run at that bucket.
     pub capacity_hist: BTreeMap<usize, u64>,
 }
@@ -91,6 +98,8 @@ impl EngineMetrics {
             ("delta_pack_hits", Json::from(self.delta_pack_hits as usize)),
             ("delta_pack_full", Json::from(self.delta_pack_full as usize)),
             ("live_bytes_last", Json::from(self.live_bytes_last)),
+            ("f32_equivalent_bytes", Json::from(self.f32_equiv_bytes_last)),
+            ("kv_format", Json::str(self.kv_format.label())),
             ("decode_tput_tok_s", Json::num(self.decode_tput())),
             ("step_seconds_mean", Json::num(self.step_seconds_mean())),
             ("capacity_hist", Json::Arr(caps)),
@@ -119,6 +128,8 @@ mod tests {
         m.decode_steps = 3;
         m.pack_bytes_copied = 4096;
         m.delta_pack_hits = 12;
+        m.kv_format = KvFormat::QuantI8;
+        m.f32_equiv_bytes_last = 2048;
         m.capacity_hist.insert(128, 2);
         m.capacity_hist.insert(256, 1);
         let j = m.to_json().to_string();
@@ -135,6 +146,15 @@ mod tests {
         assert_eq!(
             parsed.get("capacity_hist").unwrap().as_arr().unwrap().len(),
             2
+        );
+        assert_eq!(parsed.get("kv_format").unwrap().as_str().unwrap(), "q8");
+        assert_eq!(
+            parsed
+                .get("f32_equivalent_bytes")
+                .unwrap()
+                .as_usize()
+                .unwrap(),
+            2048
         );
     }
 }

@@ -14,6 +14,7 @@ use std::time::Instant;
 use anyhow::Result;
 
 use crate::engine::{DecodeGroup, Engine, SeqState};
+use crate::kvcache::KvFormat;
 use crate::policy::{make_policy, PolicyKind};
 
 #[derive(Clone, Debug)]
@@ -81,6 +82,12 @@ impl Scheduler {
 
     pub fn waiting(&self) -> usize {
         self.waiting.len()
+    }
+
+    /// Storage backend the group cache serves with (`kv.format`);
+    /// surfaced per-completion by the server.
+    pub fn kv_format(&self) -> KvFormat {
+        self.group.cache.format()
     }
 
     pub fn active(&self) -> usize {

@@ -39,6 +39,8 @@ pub struct GenerateResponse {
     pub ttft_s: f64,
     pub total_s: f64,
     pub prune_rounds: usize,
+    /// KV storage backend the request was served on ("f32" | "q8").
+    pub kv_format: String,
 }
 
 enum Msg {
@@ -208,6 +210,7 @@ fn engine_thread(
         }
         match sched.tick(&mut engine) {
             Ok(report) => {
+                let kv_format = sched.kv_format().label();
                 let mut p = pending.lock().unwrap();
                 for c in report.completed {
                     if let Some(entry) = p.remove(&c.id) {
@@ -220,6 +223,7 @@ fn engine_thread(
                             ttft_s: c.ttft,
                             total_s: c.total,
                             prune_rounds: c.prune_rounds,
+                            kv_format: kv_format.to_string(),
                         };
                         let _ = entry.reply.send(Ok(resp));
                     }

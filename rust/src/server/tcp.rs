@@ -5,7 +5,8 @@
 //!       "policy": "lethe"}
 //!   <- {"ok": true, "text": "ab>12.", "finish": "Eos",
 //!       "prompt_tokens": 18, "generated_tokens": 7,
-//!       "ttft_s": 0.01, "total_s": 0.05, "prune_rounds": 0}
+//!       "ttft_s": 0.01, "total_s": 0.05, "prune_rounds": 0,
+//!       "kv_format": "f32"}
 //!
 //! One handler thread per connection (threadpool-bounded); requests on
 //! one connection are pipelined through the engine like any other
@@ -118,6 +119,7 @@ fn response_json(r: &GenerateResponse) -> Json {
         ("ttft_s", Json::num(r.ttft_s)),
         ("total_s", Json::num(r.total_s)),
         ("prune_rounds", Json::from(r.prune_rounds)),
+        ("kv_format", Json::str(&r.kv_format)),
     ])
 }
 
