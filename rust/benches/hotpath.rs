@@ -3,8 +3,9 @@
 //!
 //!   decode exec   — PJRT execute per (B, C) bucket (upload + run + fetch)
 //!   cache pack    — GroupCache::pack into upload scratch
-//!   delta pack    — epoch-tracked incremental pack (f32 and q8 backends)
+//!   delta pack    — epoch-tracked incremental pack (f32/q8/q4 backends)
 //!   q8 insert     — per-token insert incl. int8 quantization
+//!   q4 insert     — per-token insert incl. group-wise int4 quantization
 //!   score accum   — RASR Eq. 5 update over a full group
 //!   hoyer         — Eq. 1 sparsity over a C-vector
 //!   lethe plan    — Algorithm 1 on a worst-case layer
@@ -118,6 +119,42 @@ fn main() -> anyhow::Result<()> {
         q_d.pack_delta(&mut q_scratch).unwrap();
     });
     emit("q8 dequant pack (append-only step)", &s, &mut csv);
+
+    // Group-wise int4 (kv.format = "q4") backend: insert pays the
+    // per-group min/max + nibble packing, the append-only delta pack
+    // pays the group-wise dequantization of exactly the new rows.
+    let mut q4_ins = GroupCache::with_format(dims, KvFormat::QuantI4);
+    for b in 0..8 {
+        for t4 in 0..400 {
+            for l in 0..4 {
+                q4_ins.insert(l, b, &row, &row, t4 as i32).unwrap();
+            }
+        }
+    }
+    let mut t4 = 400i32;
+    let s = bench(3, 20, || {
+        for b in 0..8 {
+            for l in 0..4 {
+                q4_ins.insert(l, b, &row, &row, t4).unwrap();
+            }
+        }
+        t4 += 1;
+    });
+    emit("q4 insert+quantize (32 rows/step)", &s, &mut csv);
+
+    let mut q4_d = q4_ins.clone();
+    let mut q4_scratch = PackScratch::new(&dims, 8, 512);
+    q4_d.pack_delta(&mut q4_scratch).unwrap(); // cold full sync
+    let s = bench(3, 20, || {
+        for b in 0..8 {
+            for l in 0..4 {
+                q4_d.insert(l, b, &row, &row, t4).unwrap();
+            }
+        }
+        t4 += 1;
+        q4_d.pack_delta(&mut q4_scratch).unwrap();
+    });
+    emit("q4 dequant pack (append-only step)", &s, &mut csv);
 
     let add: Vec<f32> = (0..400).map(|_| rng.f32()).collect();
     let s = bench(3, 20, || {

@@ -8,10 +8,9 @@
 //!   (b) Real measured KV bytes from the live lethe-tiny engine across
 //!       compiled batch sizes (ground truth for the mechanism).
 
-use lethe::bench_support::{gen_tasks, print_table, run_tasks, try_engine,
-                           write_csv};
+use lethe::bench_support::{gen_tasks, kv_configs, print_table, run_tasks,
+                           try_engine, write_csv};
 use lethe::config::ServingConfig;
-use lethe::kvcache::KvFormat;
 use lethe::model::DEEPSEEK_R1_DISTILL;
 use lethe::policy::PolicyKind;
 use lethe::sim::{run_trace, Simulator, TraceConfig};
@@ -81,22 +80,31 @@ fn main() -> anyhow::Result<()> {
     // ---- (b) real engine section ---------------------------------------
     // Tight budgets + tiny-model-calibrated τ (Table 6 sweep) so pruning
     // actually engages on ~150-token prompts + 64-token generations.
-    // Both storage backends run: "actual" is bytes as stored (int8 for
-    // q8), "f32-eq" prices the same retained rows at f32, so the token
+    // All four storage configurations run (f32, q8, q4, and the
+    // sparsity-directed mixed map): "actual" is bytes as stored,
+    // "f32-eq" prices the same retained rows at f32, so the token
     // reduction (policy) and the storage compression (backend) stay
-    // separable — their product is the paper's compounded saving.
+    // separable — their product is the paper's compounded saving. For
+    // "mixed", per-layer byte rates vary: live_bytes sums each layer at
+    // its own format's rate.
     cfg.baseline.budget = 48;
     cfg.lethe.evict_threshold = 48;
     cfg.lethe.sparse_ratio = 25.0;
     let Some((mut engine, tok)) = try_engine(cfg) else { return Ok(()) };
     let mut rows = Vec::new();
     let mut csv = Vec::new();
-    for fmt in [KvFormat::F32, KvFormat::QuantI8] {
-        engine.cfg.kv.format = fmt;
+    for (label, kv) in kv_configs() {
+        engine.cfg.kv = kv;
         for kind in [PolicyKind::FullKv, PolicyKind::Lethe] {
-            let mut row = vec![format!("{}/{}", kind.label(), fmt.label())];
+            let mut row = vec![format!("{}/{}", kind.label(), label)];
             for b in [1usize, 2, 4, 8] {
                 let tasks = gen_tasks(7 + b as u64, 2 * b, 24, 4);
+                if label == "mixed" {
+                    // Seed the engine's sparsity EMA (cold estimates
+                    // resolve all-dense) so the measured pass serves on
+                    // the resolved per-layer map, as Table 3 does.
+                    let _ = run_tasks(&mut engine, &tok, kind, &tasks, b, 64)?;
+                }
                 engine.metrics.reset();
                 let st = run_tasks(&mut engine, &tok, kind, &tasks, b, 64)?;
                 row.push(format!(
@@ -107,12 +115,29 @@ fn main() -> anyhow::Result<()> {
                 csv.push(format!(
                     "{},{},{},{},{},{}",
                     kind.label(),
-                    fmt.label(),
+                    label,
                     b,
                     st.peak_live_bytes,
                     st.peak_f32_equiv_bytes,
                     st.ooms
                 ));
+            }
+            if label == "mixed" {
+                // Surface what the sparsity rule actually resolved to on
+                // the last-served group.
+                let fmts: Vec<&str> = engine
+                    .metrics
+                    .kv_layer_formats
+                    .iter()
+                    .map(|f| f.label())
+                    .collect();
+                eprintln!(
+                    "[mixed] {} realized per-layer formats: [{}] \
+                     (layer sparsity: {:?})",
+                    kind.label(),
+                    fmts.join(","),
+                    engine.layer_sparsity()
+                );
             }
             rows.push(row);
         }

@@ -9,10 +9,9 @@
 //!       mechanism (smaller retained cache → smaller capacity bucket →
 //!       less upload + attention per step) measured for real.
 
-use lethe::bench_support::{gen_tasks, print_table, run_tasks, try_engine,
-                           write_csv};
+use lethe::bench_support::{gen_tasks, kv_configs, print_table, run_tasks,
+                           try_engine, write_csv};
 use lethe::config::ServingConfig;
-use lethe::kvcache::KvFormat;
 use lethe::model::DEEPSEEK_R1_DISTILL;
 use lethe::policy::PolicyKind;
 use lethe::sim::{run_trace, Simulator, TraceConfig};
@@ -88,24 +87,29 @@ fn main() -> anyhow::Result<()> {
 
     // ---- (b) real engine section ---------------------------------------
     // Tiny-model-calibrated τ (see Table 6) so the capacity-bucket
-    // mechanism engages within short generations. Both storage backends
-    // run the full serving path end-to-end (prefill → multi-round
-    // pruning → delta-pack upload → completion); the q8 rows measure the
-    // quantize-on-insert / dequantize-on-pack overhead in situ.
+    // mechanism engages within short generations. All four storage
+    // configurations (f32, q8, q4, sparsity-directed mixed) run the
+    // full serving path end-to-end (prefill → multi-round pruning →
+    // delta-pack upload → completion); the quantized rows measure the
+    // quantize-on-insert / dequantize-on-pack overhead in situ, and the
+    // mixed rows exercise per-layer format maps resolved from the
+    // engine's live sparsity estimates.
     cfg.baseline.budget = 48;
     cfg.lethe.evict_threshold = 48;
     cfg.lethe.sparse_ratio = 25.0;
     let Some((mut engine, tok)) = try_engine(cfg) else { return Ok(()) };
     let mut rows = Vec::new();
     let mut csv = Vec::new();
-    for fmt in [KvFormat::F32, KvFormat::QuantI8] {
-        engine.cfg.kv.format = fmt;
+    for (label, kv) in kv_configs() {
+        engine.cfg.kv = kv;
         for kind in [PolicyKind::FullKv, PolicyKind::Lethe] {
-            let mut row = vec![format!("{}/{}", kind.label(), fmt.label())];
+            let mut row = vec![format!("{}/{}", kind.label(), label)];
             for b in [1usize, 2, 4, 8] {
                 // Long-ish multihop generations so pruning matters. First
-                // a warmup pass (compiles the (B, C) executables), then
-                // the measured pass.
+                // a warmup pass (compiles the (B, C) executables — and,
+                // for "mixed", seeds the engine's sparsity EMA so the
+                // measured pass serves on the resolved map), then the
+                // measured pass.
                 let tasks = gen_tasks(100 + b as u64, 2 * b, 24, 4);
                 let _ = run_tasks(&mut engine, &tok, kind, &tasks, b, 80)?;
                 engine.metrics.reset();
@@ -121,18 +125,19 @@ fn main() -> anyhow::Result<()> {
                 };
                 eprintln!(
                     "[delta-pack] {}/{} b={}: {:.0}% pair hit rate, \
-                     {:.2}MB copied over the run",
+                     {:.2}MB copied over the run (kv={})",
                     kind.label(),
-                    fmt.label(),
+                    label,
                     b,
                     hit_pct,
-                    st.pack_bytes_copied as f64 / 1e6
+                    st.pack_bytes_copied as f64 / 1e6,
+                    engine.metrics.kv_format
                 );
                 row.push(format!("{tput:.0}"));
                 csv.push(format!(
                     "{},{},{},{:.1},{:.1},{}",
                     kind.label(),
-                    fmt.label(),
+                    label,
                     b,
                     tput,
                     hit_pct,

@@ -8,8 +8,9 @@ use std::path::Path;
 
 use anyhow::Result;
 
-use crate::config::ServingConfig;
+use crate::config::{KvConfig, MixedKvRule, ServingConfig};
 use crate::engine::{Engine, SeqState};
+use crate::kvcache::KvFormat;
 use crate::model::Tokenizer;
 use crate::policy::{make_policy, PolicyKind};
 use crate::runtime::Runtime;
@@ -38,6 +39,25 @@ pub fn try_engine(cfg: ServingConfig) -> Option<(Engine, Tokenizer)> {
     let tok = Tokenizer::from_meta(&rt.meta).ok()?;
     let engine = Engine::new(rt, cfg).ok()?;
     Some((engine, tok))
+}
+
+/// The four KV storage configurations the storage-sensitive benches run
+/// (Tables 2(b)/3(b)): uniform f32 / q8 / q4 plus the sparsity-directed
+/// mixed rule (q4 on high-sparsity layers over an f32 default, at the
+/// default threshold), labelled for table rows and CSV columns.
+pub fn kv_configs() -> Vec<(&'static str, KvConfig)> {
+    vec![
+        ("f32", KvConfig { format: KvFormat::F32, ..KvConfig::default() }),
+        ("q8", KvConfig { format: KvFormat::QuantI8, ..KvConfig::default() }),
+        ("q4", KvConfig { format: KvFormat::QuantI4, ..KvConfig::default() }),
+        (
+            "mixed",
+            KvConfig {
+                mixed: Some(MixedKvRule::default()),
+                ..KvConfig::default()
+            },
+        ),
+    ]
 }
 
 pub fn write_csv(name: &str, header: &str, rows: &[String]) -> Result<()> {

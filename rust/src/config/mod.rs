@@ -5,6 +5,7 @@
 //! Table 6) and `recent_ratio` (fraction of the live cache always kept
 //! for recency — Table 5).
 
+use std::collections::BTreeMap;
 use std::path::Path;
 
 use anyhow::{Context, Result};
@@ -70,14 +71,74 @@ impl Default for BaselineParams {
     }
 }
 
-/// KV cache storage knobs. `format` selects the engine storage backend
-/// (see [`crate::kvcache::backend`]): `"f32"` dense rows (the serving
-/// default) or `"q8"` per-row symmetric int8 (~3.9× smaller, dequantized
-/// during upload packing). Table 2 reports both actual and
-/// f32-equivalent bytes so the two formats stay comparable.
-#[derive(Clone, Debug, Default, PartialEq, Eq)]
+/// Sparsity-directed mixed-precision rule (`kv.mixed`): layers whose
+/// estimated attention sparsity (Eq. 1 EMA, engine-aggregated) is at
+/// least `threshold` store their cache in the `sparse` format, the rest
+/// in the `dense` format. The rationale mirrors the paper's spatial
+/// dimension: high-sparsity layers concentrate attention on few tokens
+/// and tolerate aggressive compression, while dense layers spread mass
+/// and need fidelity.
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub struct MixedKvRule {
+    /// Format for high-sparsity layers (default `"q4"`).
+    pub sparse: KvFormat,
+    /// Format for low-sparsity layers (default `"f32"`).
+    pub dense: KvFormat,
+    /// Sparsity cutoff in [0, 1]; layers start below it (estimates are
+    /// zero until observed), so cold groups are all-dense.
+    pub threshold: f64,
+}
+
+impl Default for MixedKvRule {
+    fn default() -> Self {
+        MixedKvRule {
+            sparse: KvFormat::QuantI4,
+            dense: KvFormat::F32,
+            threshold: 0.5,
+        }
+    }
+}
+
+/// KV cache storage knobs. `format` selects the uniform engine storage
+/// backend (see [`crate::kvcache::backend`]): `"f32"` dense rows (the
+/// serving default), `"q8"` per-row symmetric int8 (~3.9× smaller) or
+/// `"q4"` group-wise int4 (~5.3× smaller), all dequantized during
+/// upload packing. `layer_formats` pins individual layers to an explicit
+/// format, and `mixed` derives the remaining layers' formats from the
+/// runtime sparsity estimates; resolution order per layer is
+/// `layer_formats` > `mixed` > `format` (see
+/// [`KvConfig::resolve_formats`]). Table 2 reports both actual and
+/// f32-equivalent bytes so every configuration stays comparable.
+#[derive(Clone, Debug, Default, PartialEq)]
 pub struct KvConfig {
+    /// Uniform default storage format.
     pub format: KvFormat,
+    /// Explicit per-layer overrides (layer index → format).
+    pub layer_formats: BTreeMap<usize, KvFormat>,
+    /// Optional sparsity-directed rule for layers without an override.
+    pub mixed: Option<MixedKvRule>,
+}
+
+impl KvConfig {
+    /// Resolve the per-layer storage formats for a model with `layers`
+    /// layers, given the engine's current per-layer sparsity estimates
+    /// (`sparsity[l]`; missing entries count as 0.0 = dense). Layer
+    /// precedence: explicit `layer_formats` entry, then the `mixed`
+    /// rule, then the uniform `format`.
+    pub fn resolve_formats(&self, layers: usize, sparsity: &[f64]) -> Vec<KvFormat> {
+        (0..layers)
+            .map(|l| {
+                if let Some(&f) = self.layer_formats.get(&l) {
+                    f
+                } else if let Some(m) = &self.mixed {
+                    let s = sparsity.get(l).copied().unwrap_or(0.0);
+                    if s >= m.threshold { m.sparse } else { m.dense }
+                } else {
+                    self.format
+                }
+            })
+            .collect()
+    }
 }
 
 #[derive(Clone, Debug)]
@@ -189,13 +250,47 @@ impl ServingConfig {
         }
         if let Some(kv) = j.opt("kv") {
             for (k, _) in kv.as_obj()? {
-                if k.as_str() != "format" {
+                if !["format", "layer_formats", "mixed"]
+                    .contains(&k.as_str())
+                {
                     anyhow::bail!("unknown kv key '{k}'");
                 }
             }
             if let Some(v) = kv.opt("format") {
                 c.kv.format = KvFormat::parse(v.as_str()?)
                     .context("config key 'kv.format'")?;
+            }
+            if let Some(v) = kv.opt("layer_formats") {
+                for (k, val) in v.as_obj()? {
+                    let l: usize = k.parse().map_err(|_| {
+                        anyhow::anyhow!(
+                            "kv.layer_formats key '{k}' is not a layer index"
+                        )
+                    })?;
+                    let f = KvFormat::parse(val.as_str()?)
+                        .with_context(|| format!("kv.layer_formats['{k}']"))?;
+                    c.kv.layer_formats.insert(l, f);
+                }
+            }
+            if let Some(m) = kv.opt("mixed") {
+                for (k, _) in m.as_obj()? {
+                    if !["sparse", "dense", "threshold"]
+                        .contains(&k.as_str())
+                    {
+                        anyhow::bail!("unknown kv.mixed key '{k}'");
+                    }
+                }
+                let mut rule = MixedKvRule::default();
+                if let Some(v) = m.opt("sparse") {
+                    rule.sparse = KvFormat::parse(v.as_str()?)
+                        .context("config key 'kv.mixed.sparse'")?;
+                }
+                if let Some(v) = m.opt("dense") {
+                    rule.dense = KvFormat::parse(v.as_str()?)
+                        .context("config key 'kv.mixed.dense'")?;
+                }
+                get_f64(m, "threshold", &mut rule.threshold)?;
+                c.kv.mixed = Some(rule);
             }
         }
         c.validate()?;
@@ -223,6 +318,12 @@ impl ServingConfig {
         anyhow::ensure!(self.scheduler.max_batch >= 1, "max_batch >= 1");
         anyhow::ensure!(!self.scheduler.prefill_buckets.is_empty(),
                         "need at least one prefill bucket");
+        if let Some(m) = &self.kv.mixed {
+            anyhow::ensure!(
+                (0.0..=1.0).contains(&m.threshold),
+                "kv.mixed.threshold must be in [0, 1]"
+            );
+        }
         Ok(())
     }
 }
@@ -273,6 +374,90 @@ mod tests {
         )
         .unwrap();
         assert_eq!(c.kv.format, KvFormat::F32);
+        let c = ServingConfig::from_json(
+            &parse(r#"{"kv": {"format": "q4"}}"#).unwrap(),
+        )
+        .unwrap();
+        assert_eq!(c.kv.format, KvFormat::QuantI4);
+    }
+
+    #[test]
+    fn kv_layer_formats_and_mixed_parse() {
+        let c = ServingConfig::from_json(
+            &parse(
+                r#"{"kv": {"format": "q8",
+                           "layer_formats": {"0": "f32", "3": "q4"},
+                           "mixed": {"sparse": "q4", "dense": "f32",
+                                     "threshold": 0.6}}}"#,
+            )
+            .unwrap(),
+        )
+        .unwrap();
+        assert_eq!(c.kv.format, KvFormat::QuantI8);
+        assert_eq!(c.kv.layer_formats.get(&0), Some(&KvFormat::F32));
+        assert_eq!(c.kv.layer_formats.get(&3), Some(&KvFormat::QuantI4));
+        let m = c.kv.mixed.unwrap();
+        assert_eq!(m.sparse, KvFormat::QuantI4);
+        assert_eq!(m.dense, KvFormat::F32);
+        assert_eq!(m.threshold, 0.6);
+
+        // Partial mixed spec keeps rule defaults.
+        let c = ServingConfig::from_json(
+            &parse(r#"{"kv": {"mixed": {}}}"#).unwrap(),
+        )
+        .unwrap();
+        let m = c.kv.mixed.unwrap();
+        assert_eq!(m, MixedKvRule::default());
+
+        // Bad layer key / format / threshold are rejected.
+        assert!(ServingConfig::from_json(
+            &parse(r#"{"kv": {"layer_formats": {"x": "q4"}}}"#).unwrap()
+        )
+        .is_err());
+        assert!(ServingConfig::from_json(
+            &parse(r#"{"kv": {"layer_formats": {"1": "fp8"}}}"#).unwrap()
+        )
+        .is_err());
+        assert!(ServingConfig::from_json(
+            &parse(r#"{"kv": {"mixed": {"threshold": 1.5}}}"#).unwrap()
+        )
+        .is_err());
+        assert!(ServingConfig::from_json(
+            &parse(r#"{"kv": {"mixed": {"cutoff": 0.5}}}"#).unwrap()
+        )
+        .is_err());
+    }
+
+    #[test]
+    fn resolve_formats_precedence_and_sparsity_rule() {
+        let mut kv = KvConfig {
+            format: KvFormat::QuantI8,
+            ..KvConfig::default()
+        };
+        // Uniform only.
+        assert_eq!(
+            kv.resolve_formats(3, &[]),
+            vec![KvFormat::QuantI8; 3]
+        );
+        // Mixed rule splits by threshold; missing estimates are dense.
+        kv.mixed = Some(MixedKvRule {
+            sparse: KvFormat::QuantI4,
+            dense: KvFormat::F32,
+            threshold: 0.5,
+        });
+        assert_eq!(
+            kv.resolve_formats(4, &[0.9, 0.1, 0.5]),
+            vec![
+                KvFormat::QuantI4, // 0.9 >= 0.5
+                KvFormat::F32,     // 0.1 < 0.5
+                KvFormat::QuantI4, // 0.5 >= 0.5
+                KvFormat::F32,     // no estimate yet
+            ]
+        );
+        // Explicit per-layer override beats the rule.
+        kv.layer_formats.insert(0, KvFormat::F32);
+        assert_eq!(kv.resolve_formats(2, &[0.9, 0.9])[0], KvFormat::F32);
+        assert_eq!(kv.resolve_formats(2, &[0.9, 0.9])[1], KvFormat::QuantI4);
     }
 
     #[test]

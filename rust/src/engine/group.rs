@@ -4,7 +4,7 @@
 //! smallest compiled batch bucket.
 
 use crate::attn::sparsity::SparsityTracker;
-use crate::kvcache::{CacheDims, GroupCache, KvFormat};
+use crate::kvcache::{CacheDims, FormatMap, GroupCache, KvFormat};
 use crate::policy::{EvictionPolicy, PolicyKind};
 
 #[derive(Clone, Copy, Debug, PartialEq, Eq)]
@@ -124,15 +124,25 @@ impl DecodeGroup {
         Self::with_format(dims, default_policy, KvFormat::F32)
     }
 
-    /// Group with an explicit KV storage backend (`kv.format`).
+    /// Group with one uniform KV storage backend (`kv.format`).
     pub fn with_format(
         dims: CacheDims,
         default_policy: PolicyKind,
         fmt: KvFormat,
     ) -> DecodeGroup {
+        Self::with_formats(dims, default_policy, FormatMap::uniform(dims.layers, fmt))
+    }
+
+    /// Group with a per-layer KV format map (`kv.layer_formats` /
+    /// `kv.mixed` resolved by the engine against its sparsity estimates).
+    pub fn with_formats(
+        dims: CacheDims,
+        default_policy: PolicyKind,
+        formats: FormatMap,
+    ) -> DecodeGroup {
         let cap = dims.batch;
         DecodeGroup {
-            cache: GroupCache::with_format(dims, fmt),
+            cache: GroupCache::with_formats(dims, formats),
             seqs: Vec::with_capacity(cap),
             done: Vec::new(),
             default_policy,

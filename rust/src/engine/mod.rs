@@ -34,7 +34,7 @@ pub use group::{DecodeGroup, FinishReason, PruneEvent, SeqState};
 
 use crate::attn::score::ProbsView;
 use crate::config::ServingConfig;
-use crate::kvcache::{CacheDims, PackScratch, SlotViewMut};
+use crate::kvcache::{CacheDims, FormatMap, PackScratch, SlotViewMut};
 use crate::metrics::EngineMetrics;
 use crate::policy::{LayerState, PolicyKind};
 use crate::runtime::registry::DecodeOut;
@@ -55,6 +55,12 @@ pub struct Engine {
     /// Per-slot score scratch (index = slot), so the parallel post-decode
     /// pipeline needs no shared mutable buffer.
     slot_score_bufs: Vec<Vec<f32>>,
+    /// Engine-level per-layer attention-sparsity EMA (Eq. 1), folded in
+    /// from every sequence's tracker after prefill and each decode step.
+    /// Feeds the `kv.mixed` sparsity-directed format rule when a new
+    /// group's per-layer storage map is resolved; starts at 0.0 (dense)
+    /// until real traffic has been observed.
+    layer_sparsity: Vec<f64>,
     /// Worker pool for the per-slot post-decode pipeline.
     pool: ThreadPool,
     pub metrics: EngineMetrics,
@@ -75,6 +81,21 @@ impl Engine {
                                    cfg.cache_profile))?;
         let cmax = *caps.iter().max().unwrap();
         let batch_buckets = rt.batch_buckets(&cfg.cache_profile);
+        let n_layers = rt.meta.dims.n_layers;
+        // Per-layer format overrides are resolved lazily at group
+        // construction; reject out-of-range layer indices up front so a
+        // config typo fails at boot, not silently.
+        if let Some(&bad) = cfg
+            .kv
+            .layer_formats
+            .keys()
+            .find(|&&l| l >= n_layers)
+        {
+            return Err(anyhow!(
+                "kv.layer_formats layer {bad} out of range \
+                 (model has {n_layers} layers)"
+            ));
+        }
         Ok(Engine {
             rt,
             cfg,
@@ -82,6 +103,7 @@ impl Engine {
             batch_buckets,
             scratch: HashMap::new(),
             slot_score_bufs: Vec::new(),
+            layer_sparsity: vec![0.0; n_layers],
             pool: ThreadPool::new(slot_workers()),
             metrics: EngineMetrics::default(),
             keep_probs: false,
@@ -105,14 +127,53 @@ impl Engine {
         }
     }
 
-    /// New decode group on the configured KV storage backend
-    /// (`kv.format`: dense f32 or quantized int8).
+    /// New decode group on the configured KV storage backends: the
+    /// per-layer format map is resolved from `kv.format` /
+    /// `kv.layer_formats` / `kv.mixed` against the engine's current
+    /// per-layer sparsity estimates (see [`Engine::layer_sparsity`]), so
+    /// a `kv.mixed` rule places high-sparsity layers in the compressed
+    /// format once traffic has been observed.
     pub fn new_group(&self, group_size: usize, policy: PolicyKind) -> DecodeGroup {
-        DecodeGroup::with_format(
+        DecodeGroup::with_formats(
             self.cache_dims(group_size),
             policy,
-            self.cfg.kv.format,
+            self.current_format_map(),
         )
+    }
+
+    /// The per-layer format map a group built right now would get
+    /// (`kv.format` / `kv.layer_formats` / `kv.mixed` resolved against
+    /// the current sparsity estimates). The scheduler compares this
+    /// against its live group's map to know when an idle group should be
+    /// rebuilt so the serving path picks up a changed `kv.mixed`
+    /// resolution.
+    pub fn current_format_map(&self) -> FormatMap {
+        FormatMap::new(self.cfg.kv.resolve_formats(
+            self.dims().n_layers,
+            &self.layer_sparsity,
+        ))
+    }
+
+    /// Engine-level per-layer attention-sparsity estimates (Eq. 1 EMA
+    /// across all served sequences; 0.0 until a layer has been observed).
+    pub fn layer_sparsity(&self) -> &[f64] {
+        &self.layer_sparsity
+    }
+
+    /// Fold the active sequences' per-layer sparsity trackers into the
+    /// engine-level EMA that seeds future groups' mixed format maps.
+    fn observe_group_sparsity(&mut self, group: &DecodeGroup) {
+        let n = group.active();
+        if n == 0 {
+            return;
+        }
+        for (l, est) in self.layer_sparsity.iter_mut().enumerate() {
+            let mean = (0..n)
+                .map(|b| group.seq(b).sparsity.sparsity(l))
+                .sum::<f64>()
+                / n as f64;
+            *est = 0.8 * *est + 0.2 * mean;
+        }
     }
 
     /// Smallest compiled batch bucket >= n.
@@ -153,6 +214,7 @@ impl Engine {
         }
         // Policies may prune immediately (long prompts).
         self.apply_policies(group, slot)?;
+        self.observe_group_sparsity(group);
 
         let tok = argmax(&out.logits.data);
         group.seq_mut(slot).note_prefilled(n, tok);
@@ -258,6 +320,7 @@ impl Engine {
             self.metrics.pruned_tokens += o.pruned_tokens;
         }
         let t_policy = t2.elapsed().as_secs_f64();
+        self.observe_group_sparsity(group);
         if self.keep_probs {
             self.last_probs = Some(out.probs.clone());
         }
@@ -273,7 +336,15 @@ impl Engine {
         self.metrics.policy_seconds.push(t_policy);
         self.metrics.live_bytes_last = group.cache.live_bytes();
         self.metrics.f32_equiv_bytes_last = group.cache.f32_equivalent_bytes();
-        self.metrics.kv_format = group.cache.format();
+        // Only re-materialize the format snapshot when the served map
+        // actually changed (group rebuild); keeps the steady-state step
+        // free of per-step String/Vec allocations.
+        if self.metrics.kv_layer_formats != group.cache.format_map().as_slice()
+        {
+            self.metrics.kv_format = group.cache.format_label();
+            self.metrics.kv_layer_formats =
+                group.cache.format_map().as_slice().to_vec();
+        }
         *self.metrics.capacity_hist.entry(cap).or_insert(0) += 1;
         Ok(produced)
     }

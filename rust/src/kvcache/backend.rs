@@ -1,5 +1,6 @@
-//! Pluggable KV row-storage backends: the [`KvStore`] trait and its two
-//! enum-dispatched implementations.
+//! Pluggable KV row-storage backends: the [`KvStore`] contract, the three
+//! uniform stores ([`DenseF32`], [`QuantI8`], [`QuantI4`]) and the
+//! per-layer [`KvBackend`] container the engine actually holds.
 //!
 //! [`super::GroupCache`] owns all *bookkeeping* — per-(layer, slot)
 //! lengths, original positions, accumulated scores and the delta-pack
@@ -22,17 +23,27 @@
 //! including dead rows past the live length — so a delta-maintained
 //! scratch stays bit-identical to a fresh full pack.
 //!
-//! Two backends ship today:
+//! Three row stores ship today:
 //!   * [`DenseF32`] — plain f32 rows, 4 B/elem (the serving default),
 //!   * [`QuantI8`]  — per-row symmetric int8, 1 B/elem + one f32 scale
-//!     per (head, tensor) row (~3.9× smaller; the paper's composition
-//!     claim, now on the real serving path).
+//!     per (head, tensor) row (~3.9× smaller at D = 128),
+//!   * [`QuantI4`]  — group-wise asymmetric int4 (KIVI-style: groups of
+//!     [`crate::kvcache::quant::Q4_GROUP`] along the head dim, per-group
+//!     f32 scale + zero, two codes per byte; ~5.3× smaller at D = 128).
 //!
+//! [`KvBackend`] is a **per-layer** container over those stores: each
+//! model layer owns an independently formatted single-layer store, so a
+//! sparsity-directed mixed map (`kv.layer_formats` / `kv.mixed`) can keep
+//! dense layers at full fidelity while compressing high-sparsity layers.
+//! A uniform `kv.format` is simply the map with every layer equal.
 //! Dispatch is by enum rather than `dyn` so the per-token hot path stays
-//! devirtualized; future backends (fp8, pinned/device-resident scratch)
-//! add a variant and an impl.
+//! devirtualized; future stores (fp8, pinned/device-resident scratch)
+//! add a [`LayerKv`] variant and an impl.
 
-use super::quant::{dequantize_span, kv_row_bytes, quantize_row_into, KvFormat};
+use super::quant::{
+    dequantize_row_q4, dequantize_span, kv_row_bytes, q4_groups,
+    q4_packed_bytes, quantize_row_into, quantize_row_q4_into, KvFormat,
+};
 use super::CacheDims;
 
 /// The storage contract between [`super::GroupCache`] and a backend.
@@ -40,19 +51,22 @@ use super::CacheDims;
 /// bounds are validated by the cache before a call, so implementations
 /// may assume `l/b/h/c` are in range and slices are correctly sized.
 pub trait KvStore {
+    /// Dimensions of the cache this store was allocated for.
     fn dims(&self) -> &CacheDims;
 
-    /// Storage format tag (drives Table 2 byte accounting).
-    fn format(&self) -> KvFormat;
+    /// Storage format of layer `l` (drives Table 2 byte accounting —
+    /// per layer, because a mixed map prices layers differently).
+    fn layer_format(&self, l: usize) -> KvFormat;
 
-    /// Bytes to hold one cached token row (K + V, all heads) as stored.
-    fn row_bytes(&self) -> usize {
+    /// Bytes to hold one cached token row (K + V, all heads) of layer
+    /// `l` as stored.
+    fn layer_row_bytes(&self, l: usize) -> usize {
         let d = self.dims();
-        kv_row_bytes(d.kv_heads, d.d_head, self.format())
+        kv_row_bytes(d.kv_heads, d.d_head, self.layer_format(l))
     }
 
-    /// Bytes the same row would occupy on the dense f32 backend (the
-    /// "f32-equivalent" column of Table 2).
+    /// Bytes the same row would occupy on the dense f32 store (the
+    /// "f32-equivalent" column of Table 2; format- and layer-independent).
     fn f32_row_bytes(&self) -> usize {
         let d = self.dims();
         kv_row_bytes(d.kv_heads, d.d_head, KvFormat::F32)
@@ -99,12 +113,16 @@ pub trait KvStore {
     );
 }
 
+/// Flat element offset of row (l, b, h, c) in a `[L, B, Hkv, Cmax, D]`
+/// element buffer.
 #[inline]
 fn dense_off(dims: &CacheDims, l: usize, b: usize, h: usize, c: usize) -> usize {
     let CacheDims { batch, kv_heads, capacity, d_head, .. } = *dims;
     (((l * batch + b) * kv_heads + h) * capacity + c) * d_head
 }
 
+/// Flat *row* index of (l, b, h, c) in a `[L, B, Hkv, Cmax]` side array
+/// (per-row scales, per-row group parameters, …).
 #[inline]
 fn quant_idx(dims: &CacheDims, l: usize, b: usize, h: usize, c: usize) -> usize {
     let CacheDims { batch, kv_heads, capacity, .. } = *dims;
@@ -122,6 +140,7 @@ pub struct DenseF32 {
 }
 
 impl DenseF32 {
+    /// Allocate zeroed dense storage for `dims`.
     pub fn new(dims: CacheDims) -> DenseF32 {
         let CacheDims { layers, batch, kv_heads, capacity, d_head } = dims;
         let n = layers * batch * kv_heads * capacity * d_head;
@@ -138,7 +157,7 @@ impl KvStore for DenseF32 {
         &self.dims
     }
 
-    fn format(&self) -> KvFormat {
+    fn layer_format(&self, _l: usize) -> KvFormat {
         KvFormat::F32
     }
 
@@ -218,6 +237,7 @@ pub struct QuantI8 {
 }
 
 impl QuantI8 {
+    /// Allocate zeroed int8 storage for `dims`.
     pub fn new(dims: CacheDims) -> QuantI8 {
         let CacheDims { layers, batch, kv_heads, capacity, d_head } = dims;
         let rows = layers * batch * kv_heads * capacity;
@@ -245,7 +265,7 @@ impl KvStore for QuantI8 {
         &self.dims
     }
 
-    fn format(&self) -> KvFormat {
+    fn layer_format(&self, _l: usize) -> KvFormat {
         KvFormat::QuantI8
     }
 
@@ -325,51 +345,73 @@ impl KvStore for QuantI8 {
     }
 }
 
-/// The engine-facing backend: enum dispatch over the shipped
-/// implementations (kept devirtualized on the per-token hot path).
+/// Group-wise asymmetric int4 storage (KIVI-style): each (layer, slot,
+/// head, row, tensor) row of D floats is split into
+/// [`crate::kvcache::quant::Q4_GROUP`]-element groups along the head
+/// dim; codes are packed two nibbles per byte in `[L, B, Hkv, Cmax,
+/// ceil(D/2)]` buffers, and each group keeps an f32 (scale, zero) pair
+/// in `[L, B, Hkv, Cmax, G]` side arrays (`G = ceil(D/32)`). As with
+/// [`QuantI8`], everything is allocated once in [`QuantI4::new`], the
+/// per-token insert quantizes in place with zero heap traffic, the
+/// stored footprint matches [`kv_row_bytes`] exactly, and
+/// zero-initialized buffers make never-written rows dequantize to exact
+/// zeros (codes 0 × scale 0 + zero 0), which is what keeps
+/// [`KvStore::read_rows`] deterministic over dead rows.
 #[derive(Clone)]
-pub enum KvBackend {
-    Dense(DenseF32),
-    Quant(QuantI8),
+pub struct QuantI4 {
+    dims: CacheDims,
+    k_q: Vec<u8>,
+    v_q: Vec<u8>,
+    k_s: Vec<f32>,
+    v_s: Vec<f32>,
+    k_z: Vec<f32>,
+    v_z: Vec<f32>,
 }
 
-impl KvBackend {
-    pub fn new(dims: CacheDims, fmt: KvFormat) -> KvBackend {
-        match fmt {
-            KvFormat::F32 => KvBackend::Dense(DenseF32::new(dims)),
-            KvFormat::QuantI8 => KvBackend::Quant(QuantI8::new(dims)),
+impl QuantI4 {
+    /// Allocate zeroed group-wise int4 storage for `dims`.
+    pub fn new(dims: CacheDims) -> QuantI4 {
+        let CacheDims { layers, batch, kv_heads, capacity, d_head } = dims;
+        let rows = layers * batch * kv_heads * capacity;
+        let packed = q4_packed_bytes(d_head);
+        let groups = q4_groups(d_head);
+        QuantI4 {
+            dims,
+            k_q: vec![0; rows * packed],
+            v_q: vec![0; rows * packed],
+            k_s: vec![0.0; rows * groups],
+            v_s: vec![0.0; rows * groups],
+            k_z: vec![0.0; rows * groups],
+            v_z: vec![0.0; rows * groups],
         }
     }
 
-    /// Raw row-buffer pointers for the slot-view path (see [`RawKv`]).
     pub(super) fn raw(&mut self) -> RawKv {
-        match self {
-            KvBackend::Dense(d) => d.raw(),
-            KvBackend::Quant(q) => q.raw(),
+        RawKv::Q4 {
+            k_q: self.k_q.as_mut_ptr(),
+            v_q: self.v_q.as_mut_ptr(),
+            k_s: self.k_s.as_mut_ptr(),
+            v_s: self.v_s.as_mut_ptr(),
+            k_z: self.k_z.as_mut_ptr(),
+            v_z: self.v_z.as_mut_ptr(),
         }
     }
 }
 
-impl KvStore for KvBackend {
+impl KvStore for QuantI4 {
     fn dims(&self) -> &CacheDims {
-        match self {
-            KvBackend::Dense(d) => d.dims(),
-            KvBackend::Quant(q) => q.dims(),
-        }
+        &self.dims
     }
 
-    fn format(&self) -> KvFormat {
-        match self {
-            KvBackend::Dense(d) => d.format(),
-            KvBackend::Quant(q) => q.format(),
-        }
+    fn layer_format(&self, _l: usize) -> KvFormat {
+        KvFormat::QuantI4
     }
 
     fn write_row(&mut self, l: usize, b: usize, c: usize, k_row: &[f32], v_row: &[f32]) {
-        match self {
-            KvBackend::Dense(d) => d.write_row(l, b, c, k_row, v_row),
-            KvBackend::Quant(q) => q.write_row(l, b, c, k_row, v_row),
-        }
+        let dims = self.dims;
+        let raw = self.raw();
+        // SAFETY: `&mut self` grants exclusive access to every slot.
+        unsafe { raw.write_row(&dims, l, b, c, k_row, v_row) }
     }
 
     fn load_rows(
@@ -381,24 +423,39 @@ impl KvStore for KvBackend {
         v_rows: &[f32],
         len: usize,
     ) {
-        match self {
-            KvBackend::Dense(d) => d.load_rows(l, b, h, k_rows, v_rows, len),
-            KvBackend::Quant(q) => q.load_rows(l, b, h, k_rows, v_rows, len),
+        let d = self.dims.d_head;
+        let packed = q4_packed_bytes(d);
+        let groups = q4_groups(d);
+        for c in 0..len {
+            let ri = quant_idx(&self.dims, l, b, h, c);
+            let (po, go) = (ri * packed, ri * groups);
+            quantize_row_q4_into(
+                &k_rows[c * d..(c + 1) * d],
+                &mut self.k_q[po..po + packed],
+                &mut self.k_s[go..go + groups],
+                &mut self.k_z[go..go + groups],
+            );
+            quantize_row_q4_into(
+                &v_rows[c * d..(c + 1) * d],
+                &mut self.v_q[po..po + packed],
+                &mut self.v_s[go..go + groups],
+                &mut self.v_z[go..go + groups],
+            );
         }
     }
 
     fn gather_rows(&mut self, l: usize, b: usize, keep: &[usize]) {
-        match self {
-            KvBackend::Dense(d) => d.gather_rows(l, b, keep),
-            KvBackend::Quant(q) => q.gather_rows(l, b, keep),
-        }
+        let dims = self.dims;
+        let raw = self.raw();
+        // SAFETY: `&mut self` grants exclusive access to every slot.
+        unsafe { raw.gather_rows(&dims, l, b, keep) }
     }
 
     fn swap_rows(&mut self, l: usize, a: usize, b: usize, n: usize) {
-        match self {
-            KvBackend::Dense(d) => d.swap_rows(l, a, b, n),
-            KvBackend::Quant(q) => q.swap_rows(l, a, b, n),
-        }
+        let dims = self.dims;
+        let raw = self.raw();
+        // SAFETY: `&mut self` grants exclusive access to every slot.
+        unsafe { raw.swap_rows(&dims, l, a, b, n) }
     }
 
     #[allow(clippy::too_many_arguments)]
@@ -412,14 +469,199 @@ impl KvStore for KvBackend {
         to: usize,
         dst: &mut [f32],
     ) {
-        match self {
-            KvBackend::Dense(d) => d.read_rows(l, b, h, which_v, from, to, dst),
-            KvBackend::Quant(q) => q.read_rows(l, b, h, which_v, from, to, dst),
+        let d = self.dims.d_head;
+        let packed = q4_packed_bytes(d);
+        let groups = q4_groups(d);
+        let (q, s, z) = if which_v {
+            (&self.v_q, &self.v_s, &self.v_z)
+        } else {
+            (&self.k_q, &self.k_s, &self.k_z)
+        };
+        for c in from..to {
+            let ri = quant_idx(&self.dims, l, b, h, c);
+            let (po, go) = (ri * packed, ri * groups);
+            // Never-written rows carry (scale, zero) = (0, 0) ⇒ exact
+            // zeros — same determinism argument as the int8 store.
+            dequantize_row_q4(
+                &q[po..po + packed],
+                &s[go..go + groups],
+                &z[go..go + groups],
+                &mut dst[(c - from) * d..(c - from + 1) * d],
+            );
         }
     }
 }
 
-/// Raw pointers into one backend's row buffers, `Copy` so every
+/// One layer's row store inside a [`KvBackend`] (allocated with
+/// `dims.layers == 1`; the container translates layer indices).
+#[derive(Clone)]
+pub enum LayerKv {
+    /// Dense f32 rows ([`DenseF32`]).
+    Dense(DenseF32),
+    /// Per-row symmetric int8 ([`QuantI8`]).
+    Q8(QuantI8),
+    /// Group-wise asymmetric int4 ([`QuantI4`]).
+    Q4(QuantI4),
+}
+
+impl LayerKv {
+    fn new(dims: CacheDims, fmt: KvFormat) -> LayerKv {
+        match fmt {
+            KvFormat::F32 => LayerKv::Dense(DenseF32::new(dims)),
+            KvFormat::QuantI8 => LayerKv::Q8(QuantI8::new(dims)),
+            KvFormat::QuantI4 => LayerKv::Q4(QuantI4::new(dims)),
+        }
+    }
+
+    fn store(&self) -> &dyn KvStore {
+        match self {
+            LayerKv::Dense(s) => s,
+            LayerKv::Q8(s) => s,
+            LayerKv::Q4(s) => s,
+        }
+    }
+
+    fn store_mut(&mut self) -> &mut dyn KvStore {
+        match self {
+            LayerKv::Dense(s) => s,
+            LayerKv::Q8(s) => s,
+            LayerKv::Q4(s) => s,
+        }
+    }
+
+    fn raw(&mut self) -> RawKv {
+        match self {
+            LayerKv::Dense(s) => s.raw(),
+            LayerKv::Q8(s) => s.raw(),
+            LayerKv::Q4(s) => s.raw(),
+        }
+    }
+}
+
+/// The engine-facing backend: one independently formatted single-layer
+/// store per model layer, so a mixed per-layer format map is first-class
+/// and a uniform `kv.format` is just the degenerate map. The `(l, …)`
+/// coordinates of [`KvStore`] are translated to layer-local calls
+/// (`l = 0` on the owning store); cross-layer operations never exist in
+/// the contract, so layers with different formats cannot interact.
+#[derive(Clone)]
+pub struct KvBackend {
+    dims: CacheDims,
+    stores: Vec<LayerKv>,
+}
+
+impl KvBackend {
+    /// Uniform-format backend (every layer stored as `fmt`).
+    pub fn new(dims: CacheDims, fmt: KvFormat) -> KvBackend {
+        Self::with_formats(dims, &vec![fmt; dims.layers])
+    }
+
+    /// Per-layer backend: `formats[l]` selects layer `l`'s store
+    /// (`formats.len()` must equal `dims.layers`).
+    pub fn with_formats(dims: CacheDims, formats: &[KvFormat]) -> KvBackend {
+        assert_eq!(
+            formats.len(),
+            dims.layers,
+            "format map covers {} layers, cache has {}",
+            formats.len(),
+            dims.layers
+        );
+        let layer_dims = CacheDims { layers: 1, ..dims };
+        KvBackend {
+            dims,
+            stores: formats
+                .iter()
+                .map(|&f| LayerKv::new(layer_dims, f))
+                .collect(),
+        }
+    }
+
+    /// Refresh `out` with one raw pointer set per layer, for the
+    /// slot-view path (see [`RawKv`]). The pointers stay valid until the
+    /// backend is mutated structurally (never after construction) or
+    /// moved; callers re-derive the table on every view handout.
+    pub(super) fn raw_table(&mut self, out: &mut Vec<RawKv>) {
+        out.clear();
+        out.extend(self.stores.iter_mut().map(|s| s.raw()));
+    }
+}
+
+impl KvStore for KvBackend {
+    fn dims(&self) -> &CacheDims {
+        &self.dims
+    }
+
+    fn layer_format(&self, l: usize) -> KvFormat {
+        self.stores[l].store().layer_format(0)
+    }
+
+    fn write_row(&mut self, l: usize, b: usize, c: usize, k_row: &[f32], v_row: &[f32]) {
+        self.stores[l].store_mut().write_row(0, b, c, k_row, v_row);
+    }
+
+    fn load_rows(
+        &mut self,
+        l: usize,
+        b: usize,
+        h: usize,
+        k_rows: &[f32],
+        v_rows: &[f32],
+        len: usize,
+    ) {
+        self.stores[l].store_mut().load_rows(0, b, h, k_rows, v_rows, len);
+    }
+
+    fn gather_rows(&mut self, l: usize, b: usize, keep: &[usize]) {
+        self.stores[l].store_mut().gather_rows(0, b, keep);
+    }
+
+    fn swap_rows(&mut self, l: usize, a: usize, b: usize, n: usize) {
+        self.stores[l].store_mut().swap_rows(0, a, b, n);
+    }
+
+    #[allow(clippy::too_many_arguments)]
+    fn read_rows(
+        &self,
+        l: usize,
+        b: usize,
+        h: usize,
+        which_v: bool,
+        from: usize,
+        to: usize,
+        dst: &mut [f32],
+    ) {
+        self.stores[l].store().read_rows(0, b, h, which_v, from, to, dst);
+    }
+}
+
+/// Per-layer table of [`RawKv`] pointer sets, `Copy` so every
+/// [`super::SlotViewMut`] can carry it. The table itself lives in the
+/// owning [`super::GroupCache`] (rebuilt on every view handout) and the
+/// views' borrow keeps it alive and unmoved.
+#[derive(Clone, Copy)]
+pub(super) struct RawKvTable {
+    ptr: *const RawKv,
+    len: usize,
+}
+
+impl RawKvTable {
+    pub(super) fn new(table: &[RawKv]) -> RawKvTable {
+        RawKvTable { ptr: table.as_ptr(), len: table.len() }
+    }
+
+    /// Layer `l`'s raw pointer set. Callers pass `l = 0` to the returned
+    /// [`RawKv`]'s operations: each entry points into a single-layer
+    /// store.
+    ///
+    /// SAFETY: the table this was built from must still be alive (the
+    /// slot-view borrow on the owning cache guarantees it).
+    pub(super) unsafe fn layer(self, l: usize) -> RawKv {
+        debug_assert!(l < self.len, "layer {l} out of range ({})", self.len);
+        unsafe { *self.ptr.add(l) }
+    }
+}
+
+/// Raw pointers into one layer store's row buffers, `Copy` so every
 /// [`super::SlotViewMut`] can carry the full set. Provenance is the whole
 /// K/V allocation; each caller restricts itself to its own slot's
 /// disjoint rows (the same discipline as the view's lens/pos/scores
@@ -429,6 +671,14 @@ impl KvStore for KvBackend {
 pub(super) enum RawKv {
     Dense { k: *mut f32, v: *mut f32 },
     Quant { k_q: *mut i8, v_q: *mut i8, k_s: *mut f32, v_s: *mut f32 },
+    Q4 {
+        k_q: *mut u8,
+        v_q: *mut u8,
+        k_s: *mut f32,
+        v_s: *mut f32,
+        k_z: *mut f32,
+        v_z: *mut f32,
+    },
 }
 
 impl RawKv {
@@ -474,6 +724,34 @@ impl RawKv {
                             v_q.add(off), d);
                         *v_s.add(si) = quantize_row_into(
                             &v_row[h * d..(h + 1) * d], vq);
+                    }
+                }
+            }
+            RawKv::Q4 { k_q, v_q, k_s, v_s, k_z, v_z } => {
+                let packed = q4_packed_bytes(d);
+                let groups = q4_groups(d);
+                for h in 0..dims.kv_heads {
+                    let ri = quant_idx(dims, l, b, h, c);
+                    let (po, go) = (ri * packed, ri * groups);
+                    unsafe {
+                        quantize_row_q4_into(
+                            &k_row[h * d..(h + 1) * d],
+                            std::slice::from_raw_parts_mut(
+                                k_q.add(po), packed),
+                            std::slice::from_raw_parts_mut(
+                                k_s.add(go), groups),
+                            std::slice::from_raw_parts_mut(
+                                k_z.add(go), groups),
+                        );
+                        quantize_row_q4_into(
+                            &v_row[h * d..(h + 1) * d],
+                            std::slice::from_raw_parts_mut(
+                                v_q.add(po), packed),
+                            std::slice::from_raw_parts_mut(
+                                v_s.add(go), groups),
+                            std::slice::from_raw_parts_mut(
+                                v_z.add(go), groups),
+                        );
                     }
                 }
             }
@@ -529,6 +807,38 @@ impl RawKv {
                         }
                     }
                 }
+                RawKv::Q4 { k_q, v_q, k_s, v_s, k_z, v_z } => {
+                    let packed = q4_packed_bytes(d);
+                    let groups = q4_groups(d);
+                    for (dst, &src) in keep.iter().enumerate() {
+                        if dst != src {
+                            // src > dst as above: none of the packed or
+                            // group-parameter spans overlap.
+                            let rs = quant_idx(dims, l, b, h, src);
+                            let rd = quant_idx(dims, l, b, h, dst);
+                            unsafe {
+                                std::ptr::copy_nonoverlapping(
+                                    k_q.add(rs * packed) as *const u8,
+                                    k_q.add(rd * packed), packed);
+                                std::ptr::copy_nonoverlapping(
+                                    v_q.add(rs * packed) as *const u8,
+                                    v_q.add(rd * packed), packed);
+                                std::ptr::copy_nonoverlapping(
+                                    k_s.add(rs * groups) as *const f32,
+                                    k_s.add(rd * groups), groups);
+                                std::ptr::copy_nonoverlapping(
+                                    v_s.add(rs * groups) as *const f32,
+                                    v_s.add(rd * groups), groups);
+                                std::ptr::copy_nonoverlapping(
+                                    k_z.add(rs * groups) as *const f32,
+                                    k_z.add(rd * groups), groups);
+                                std::ptr::copy_nonoverlapping(
+                                    v_z.add(rs * groups) as *const f32,
+                                    v_z.add(rd * groups), groups);
+                            }
+                        }
+                    }
+                }
             }
         }
     }
@@ -574,6 +884,35 @@ impl RawKv {
                     }
                 }
             }
+            RawKv::Q4 { k_q, v_q, k_s, v_s, k_z, v_z } => {
+                let packed = q4_packed_bytes(d);
+                let groups = q4_groups(d);
+                for h in 0..dims.kv_heads {
+                    let ra = quant_idx(dims, l, a, h, 0);
+                    let rb = quant_idx(dims, l, b, h, 0);
+                    // Distinct slots: none of the regions overlap.
+                    unsafe {
+                        std::ptr::swap_nonoverlapping(
+                            k_q.add(ra * packed), k_q.add(rb * packed),
+                            n * packed);
+                        std::ptr::swap_nonoverlapping(
+                            v_q.add(ra * packed), v_q.add(rb * packed),
+                            n * packed);
+                        std::ptr::swap_nonoverlapping(
+                            k_s.add(ra * groups), k_s.add(rb * groups),
+                            n * groups);
+                        std::ptr::swap_nonoverlapping(
+                            v_s.add(ra * groups), v_s.add(rb * groups),
+                            n * groups);
+                        std::ptr::swap_nonoverlapping(
+                            k_z.add(ra * groups), k_z.add(rb * groups),
+                            n * groups);
+                        std::ptr::swap_nonoverlapping(
+                            v_z.add(ra * groups), v_z.add(rb * groups),
+                            n * groups);
+                    }
+                }
+            }
         }
     }
 }
@@ -583,6 +922,9 @@ mod tests {
     use super::*;
     use crate::util::prng::Rng;
     use crate::util::proptest::vec_f32;
+
+    const ALL_FORMATS: [KvFormat; 3] =
+        [KvFormat::F32, KvFormat::QuantI8, KvFormat::QuantI4];
 
     fn dims() -> CacheDims {
         CacheDims { layers: 2, batch: 2, kv_heads: 2, capacity: 8, d_head: 4 }
@@ -595,39 +937,72 @@ mod tests {
         out
     }
 
+    /// Format error bound plus float fuzz; the bound itself lives in
+    /// [`crate::kvcache::quant::dequant_error_bound`].
+    fn format_tol(fmt: KvFormat, exact: &[f32]) -> f32 {
+        crate::kvcache::quant::dequant_error_bound(fmt, exact) + 1e-6
+    }
+
     #[test]
     fn backends_report_their_format_and_bytes() {
         let dense = KvBackend::new(dims(), KvFormat::F32);
         let quant = KvBackend::new(dims(), KvFormat::QuantI8);
-        assert_eq!(dense.format(), KvFormat::F32);
-        assert_eq!(quant.format(), KvFormat::QuantI8);
-        // 2 heads * 4 elems * 4 B * 2 tensors vs 2 * (4 + 4) * 2.
-        assert_eq!(dense.row_bytes(), 64);
-        assert_eq!(quant.row_bytes(), 32);
-        assert_eq!(quant.f32_row_bytes(), dense.row_bytes());
+        let q4 = KvBackend::new(dims(), KvFormat::QuantI4);
+        for l in 0..2 {
+            assert_eq!(dense.layer_format(l), KvFormat::F32);
+            assert_eq!(quant.layer_format(l), KvFormat::QuantI8);
+            assert_eq!(q4.layer_format(l), KvFormat::QuantI4);
+        }
+        // 2 heads * 4 elems * 4 B * 2 tensors, vs 2 * (4 + 4) * 2,
+        // vs 2 * (2 packed + 8 group bytes) * 2.
+        assert_eq!(dense.layer_row_bytes(0), 64);
+        assert_eq!(quant.layer_row_bytes(0), 32);
+        assert_eq!(q4.layer_row_bytes(1), 40);
+        assert_eq!(quant.f32_row_bytes(), dense.layer_row_bytes(0));
+        assert_eq!(q4.f32_row_bytes(), dense.layer_row_bytes(0));
     }
 
     #[test]
-    fn dense_and_quant_agree_on_written_rows() {
-        let mut rng = Rng::new(11);
-        let mut dense = KvBackend::new(dims(), KvFormat::F32);
-        let mut quant = KvBackend::new(dims(), KvFormat::QuantI8);
-        for c in 0..4 {
-            let kr = vec_f32(&mut rng, 2 * 4, -2.0, 2.0);
-            let vr = vec_f32(&mut rng, 2 * 4, -2.0, 2.0);
-            dense.write_row(0, 1, c, &kr, &vr);
-            quant.write_row(0, 1, c, &kr, &vr);
-        }
-        for c in 0..4 {
-            for h in 0..2 {
-                let exact = read_row(&dense, 0, 1, h, c);
-                let approx = read_row(&quant, 0, 1, h, c);
-                let amax = exact.iter().fold(0f32, |m, &x| m.max(x.abs()));
-                for (a, b) in exact.iter().zip(&approx) {
-                    assert!(
-                        (a - b).abs() <= amax / 127.0 * 0.5 + 1e-6,
-                        "{a} vs {b}"
-                    );
+    fn mixed_backend_reports_per_layer_formats_and_bytes() {
+        let kv = KvBackend::with_formats(
+            dims(),
+            &[KvFormat::F32, KvFormat::QuantI4],
+        );
+        assert_eq!(kv.layer_format(0), KvFormat::F32);
+        assert_eq!(kv.layer_format(1), KvFormat::QuantI4);
+        assert_eq!(kv.layer_row_bytes(0), 64);
+        assert_eq!(kv.layer_row_bytes(1), 40);
+    }
+
+    #[test]
+    #[should_panic(expected = "format map covers")]
+    fn mismatched_format_map_panics() {
+        KvBackend::with_formats(dims(), &[KvFormat::F32]);
+    }
+
+    #[test]
+    fn quantized_backends_agree_with_dense_on_written_rows() {
+        for fmt in [KvFormat::QuantI8, KvFormat::QuantI4] {
+            let mut rng = Rng::new(11);
+            let mut dense = KvBackend::new(dims(), KvFormat::F32);
+            let mut quant = KvBackend::new(dims(), fmt);
+            for c in 0..4 {
+                let kr = vec_f32(&mut rng, 2 * 4, -2.0, 2.0);
+                let vr = vec_f32(&mut rng, 2 * 4, -2.0, 2.0);
+                dense.write_row(0, 1, c, &kr, &vr);
+                quant.write_row(0, 1, c, &kr, &vr);
+            }
+            for c in 0..4 {
+                for h in 0..2 {
+                    let exact = read_row(&dense, 0, 1, h, c);
+                    let approx = read_row(&quant, 0, 1, h, c);
+                    let tol = format_tol(fmt, &exact);
+                    for (a, b) in exact.iter().zip(&approx) {
+                        assert!(
+                            (a - b).abs() <= tol,
+                            "{fmt:?}: {a} vs {b} (tol {tol})"
+                        );
+                    }
                 }
             }
         }
@@ -635,36 +1010,39 @@ mod tests {
 
     #[test]
     fn quant_dead_rows_read_as_zero() {
-        let quant = KvBackend::new(dims(), KvFormat::QuantI8);
-        assert_eq!(read_row(&quant, 1, 0, 1, 7), vec![0.0; 4]);
+        for fmt in [KvFormat::QuantI8, KvFormat::QuantI4] {
+            let quant = KvBackend::new(dims(), fmt);
+            assert_eq!(read_row(&quant, 1, 0, 1, 7), vec![0.0; 4], "{fmt:?}");
+        }
     }
 
     #[test]
-    fn gather_front_packs_both_backends() {
+    fn gather_front_packs_every_backend() {
         let mut rng = Rng::new(5);
         let rows: Vec<Vec<f32>> =
             (0..6).map(|_| vec_f32(&mut rng, 8, -1.0, 1.0)).collect();
-        for fmt in [KvFormat::F32, KvFormat::QuantI8] {
+        for fmt in ALL_FORMATS {
             let mut s = KvBackend::new(dims(), fmt);
             for (c, r) in rows.iter().enumerate() {
                 s.write_row(0, 0, c, r, r);
             }
             s.gather_rows(0, 0, &[1, 4]);
-            let tol = if fmt == KvFormat::F32 { 0.0 } else { 0.02 };
             let got0 = read_row(&s, 0, 0, 0, 0);
             let got1 = read_row(&s, 0, 0, 0, 1);
             for (a, b) in got0.iter().zip(&rows[1][..4]) {
-                assert!((a - b).abs() <= tol, "{a} vs {b}");
+                let tol = format_tol(fmt, &rows[1][..4]);
+                assert!((a - b).abs() <= tol, "{fmt:?}: {a} vs {b}");
             }
             for (a, b) in got1.iter().zip(&rows[4][..4]) {
-                assert!((a - b).abs() <= tol, "{a} vs {b}");
+                let tol = format_tol(fmt, &rows[4][..4]);
+                assert!((a - b).abs() <= tol, "{fmt:?}: {a} vs {b}");
             }
         }
     }
 
     #[test]
     fn swap_rows_swaps_slot_prefixes() {
-        for fmt in [KvFormat::F32, KvFormat::QuantI8] {
+        for fmt in ALL_FORMATS {
             let mut s = KvBackend::new(dims(), fmt);
             let ra = vec![1.0f32; 8];
             let rb = vec![-1.0f32; 8];

@@ -9,14 +9,22 @@
 //! position `pos` (recency signal for RASR / H2O / StreamingLLM), the
 //! policy's accumulated attention score per row (RASR Eq. 5; γ is
 //! policy-owned), and the delta-pack epoch protocol below. The K/V
-//! payload itself lives behind the [`KvStore`] trait
-//! ([`backend`] module), enum-dispatched over:
+//! payload itself lives behind the [`KvStore`] trait ([`backend`]
+//! module), with **one independently formatted store per layer**
+//! ([`FormatMap`]):
 //!
-//!   * [`DenseF32`] (`kv.format = "f32"`, default) — plain f32 rows,
-//!   * [`QuantI8`]  (`kv.format = "q8"`) — per-row symmetric int8,
-//!     ~3.9× smaller, quantized at insert and dequantized during packing
-//!     (the paper's "compose with quantized caches" claim, on the real
-//!     serving path).
+//!   * [`DenseF32`] (`"f32"`, default) — plain f32 rows,
+//!   * [`QuantI8`]  (`"q8"`) — per-row symmetric int8, ~3.9× smaller,
+//!     quantized at insert and dequantized during packing,
+//!   * [`QuantI4`]  (`"q4"`) — group-wise asymmetric int4 (groups of 32
+//!     along the head dim, per-group scale + zero, two codes per byte),
+//!     ~5.3× smaller.
+//!
+//! A uniform `kv.format` makes every layer the same; `kv.layer_formats`
+//! or the sparsity-fed `kv.mixed` rule place each layer in its own
+//! format (the paper's "compose with quantized caches" claim, extended
+//! to precision-per-layer: high-sparsity layers tolerate aggressive
+//! compression while dense layers keep full fidelity).
 //!
 //! Eviction is [`GroupCache::apply_retention`]: an in-place
 //! front-packing gather by source index, applied identically to the
@@ -54,11 +62,15 @@
 //!
 //! # Byte accounting (Table 2)
 //!
-//! [`GroupCache::live_bytes`] is live rows × the *backend's* per-row
-//! cost ([`quant::kv_row_bytes`]); [`GroupCache::f32_equivalent_bytes`]
-//! prices the same rows at f32. Table 2 reports both, so the memory
-//! numbers show token-count reduction (Lethe) and storage compression
-//! (backend) separately — and their product, the compounded saving.
+//! [`GroupCache::live_bytes`] is live rows × the owning **layer's**
+//! per-row cost ([`quant::kv_row_bytes`] at that layer's format, summed
+//! per (layer, slot) — a mixed map prices every layer at its own rate);
+//! [`GroupCache::f32_equivalent_bytes`] prices the same rows at f32.
+//! Table 2 reports both, so the memory numbers show token-count
+//! reduction (Lethe) and storage compression (backend) separately — and
+//! their product, the compounded saving.
+
+#![deny(missing_docs)]
 
 pub mod backend;
 pub mod quant;
@@ -70,18 +82,77 @@ use anyhow::{ensure, Result};
 
 use crate::runtime::tensors::{HostTensorF32, HostTensorI32};
 
-pub use backend::{DenseF32, KvBackend, KvStore, QuantI8};
+pub use backend::{DenseF32, KvBackend, KvStore, QuantI4, QuantI8};
 pub use quant::KvFormat;
 
-use backend::RawKv;
+use backend::{RawKv, RawKvTable};
 
+/// Shape of one group's conceptual `[L, B, Hkv, Cmax, D]` cache.
 #[derive(Clone, Copy, Debug)]
 pub struct CacheDims {
+    /// Model layers L.
     pub layers: usize,
+    /// Co-batched slots B (the group size).
     pub batch: usize,
+    /// KV heads Hkv (GQA: ≤ query heads).
     pub kv_heads: usize,
-    pub capacity: usize, // Cmax
+    /// Row capacity Cmax (largest compiled decode bucket).
+    pub capacity: usize,
+    /// Head dimension D.
     pub d_head: usize,
+}
+
+/// Per-layer KV storage formats for one group cache: which
+/// [`KvFormat`] each layer's rows are stored in. Built by the engine
+/// from `kv.format` / `kv.layer_formats` / `kv.mixed` and handed to
+/// [`GroupCache::with_formats`].
+#[derive(Clone, Debug, PartialEq, Eq)]
+pub struct FormatMap {
+    per_layer: Vec<KvFormat>,
+}
+
+impl FormatMap {
+    /// Map with every layer stored as `fmt`.
+    pub fn uniform(layers: usize, fmt: KvFormat) -> FormatMap {
+        FormatMap { per_layer: vec![fmt; layers] }
+    }
+
+    /// Map from an explicit per-layer vector (index = layer).
+    pub fn new(per_layer: Vec<KvFormat>) -> FormatMap {
+        FormatMap { per_layer }
+    }
+
+    /// Number of layers the map covers.
+    pub fn layers(&self) -> usize {
+        self.per_layer.len()
+    }
+
+    /// Layer `l`'s storage format.
+    pub fn get(&self, l: usize) -> KvFormat {
+        self.per_layer[l]
+    }
+
+    /// The formats as a slice (index = layer).
+    pub fn as_slice(&self) -> &[KvFormat] {
+        &self.per_layer
+    }
+
+    /// `Some(fmt)` when every layer shares one format, `None` for a
+    /// genuinely mixed map.
+    pub fn uniform_format(&self) -> Option<KvFormat> {
+        let first = *self.per_layer.first()?;
+        self.per_layer.iter().all(|&f| f == first).then_some(first)
+    }
+
+    /// Short serving label: the format name when uniform ("f32" | "q8" |
+    /// "q4"), `"mixed"` otherwise (the per-layer vector is surfaced
+    /// separately in metrics).
+    pub fn label(&self) -> String {
+        match self.uniform_format() {
+            Some(f) => f.label().to_string(),
+            None => "mixed".to_string(),
+        }
+    }
 }
 
 /// Change-tracking state for one (layer, slot) pair. `epoch` advances on
@@ -89,7 +160,9 @@ pub struct CacheDims {
 /// (see the module-level protocol docs).
 #[derive(Clone, Copy, Debug, Default, PartialEq, Eq)]
 pub struct SlotEpoch {
+    /// Monotonic mutation counter for the pair.
     pub epoch: u64,
+    /// Epoch of the last non-append mutation (rewrite watermark).
     pub rewrite: u64,
 }
 
@@ -99,13 +172,22 @@ fn next_cache_id() -> u64 {
     NEXT_CACHE_ID.fetch_add(1, Ordering::Relaxed)
 }
 
+/// Host-owned KV cache for one decode group: bookkeeping (lens, pos,
+/// scores, epochs) plus per-layer row storage behind [`KvStore`]. See
+/// the module docs for the architecture and the delta-pack protocol.
 pub struct GroupCache {
+    /// Shape of the cache (layers, slots, heads, capacity, head dim).
     pub dims: CacheDims,
     /// Process-unique identity; fresh per `new` AND per `clone` so
     /// [`PackScratch`] residency never matches a different cache.
     id: u64,
     /// Row storage (K/V payload) behind the backend contract.
     kv: KvBackend,
+    /// Per-layer storage formats of `kv` (cached for cheap reads).
+    formats: FormatMap,
+    /// Scratch table of per-layer raw pointer sets; refreshed on every
+    /// view handout, valid only while that view borrow lives.
+    raw_kv: Vec<RawKv>,
     /// [L, B]
     lens: Vec<usize>,
     /// [L][B] -> per-slot original absolute position, length = lens[l][b].
@@ -125,6 +207,10 @@ impl Clone for GroupCache {
             dims: self.dims,
             id: next_cache_id(),
             kv: self.kv.clone(),
+            formats: self.formats.clone(),
+            // Stale raw pointers must never travel with a clone; the
+            // table is rebuilt on the next view handout.
+            raw_kv: Vec::new(),
             lens: self.lens.clone(),
             pos: self.pos.clone(),
             scores: self.scores.clone(),
@@ -139,14 +225,22 @@ impl GroupCache {
         Self::with_format(dims, KvFormat::F32)
     }
 
-    /// Cache with an explicit storage backend (`kv.format` in
-    /// [`crate::config::ServingConfig`]).
+    /// Cache with one uniform storage format across layers
+    /// (`kv.format` in [`crate::config::ServingConfig`]).
     pub fn with_format(dims: CacheDims, fmt: KvFormat) -> Self {
+        Self::with_formats(dims, FormatMap::uniform(dims.layers, fmt))
+    }
+
+    /// Cache with an explicit per-layer format map (`kv.layer_formats` /
+    /// `kv.mixed`); `formats.layers()` must equal `dims.layers`.
+    pub fn with_formats(dims: CacheDims, formats: FormatMap) -> Self {
         let CacheDims { layers, batch, .. } = dims;
         GroupCache {
             dims,
             id: next_cache_id(),
-            kv: KvBackend::new(dims, fmt),
+            kv: KvBackend::with_formats(dims, formats.as_slice()),
+            formats,
+            raw_kv: Vec::new(),
             lens: vec![0; layers * batch],
             pos: vec![Vec::new(); layers * batch],
             scores: vec![Vec::new(); layers * batch],
@@ -154,15 +248,23 @@ impl GroupCache {
         }
     }
 
+    /// Process-unique cache identity (delta-pack residency key).
     pub fn cache_id(&self) -> u64 {
         self.id
     }
 
-    /// Storage format of the active backend.
-    pub fn format(&self) -> KvFormat {
-        self.kv.format()
+    /// Per-layer storage formats of the active backend.
+    pub fn format_map(&self) -> &FormatMap {
+        &self.formats
     }
 
+    /// Serving label of the storage configuration: the format name when
+    /// uniform ("f32" | "q8" | "q4"), `"mixed"` otherwise.
+    pub fn format_label(&self) -> String {
+        self.formats.label()
+    }
+
+    /// Change-tracking epoch state of (layer `l`, slot `b`).
     pub fn slot_epoch(&self, l: usize, b: usize) -> SlotEpoch {
         self.epochs[self.lb(l, b)]
     }
@@ -172,10 +274,12 @@ impl GroupCache {
         l * self.dims.batch + b
     }
 
+    /// Live rows of (layer `l`, slot `b`).
     pub fn len(&self, l: usize, b: usize) -> usize {
         self.lens[self.lb(l, b)]
     }
 
+    /// True when no (layer, slot) holds any live rows.
     pub fn is_empty(&self) -> bool {
         self.lens.iter().all(|&l| l == 0)
     }
@@ -190,26 +294,37 @@ impl GroupCache {
         (0..self.dims.batch).map(|b| self.max_len_slot(b)).max().unwrap_or(0)
     }
 
-    /// Total live KV bytes as actually stored by the backend — the
-    /// Table 2 metric. Routed through the format-aware per-row cost so
-    /// the number stays honest across storage backends.
+    /// Total live KV bytes as actually stored — the Table 2 metric.
+    /// Summed per (layer, slot) at the **owning layer's** per-row cost
+    /// ([`KvStore::layer_row_bytes`]), so mixed per-layer maps report
+    /// every layer at its own rate rather than assuming one group-wide
+    /// format.
     pub fn live_bytes(&self) -> usize {
-        let row = self.kv.row_bytes();
-        self.lens.iter().map(|&n| n * row).sum()
+        // lens is [L, B] row-major: one chunk per layer. Allocation-free
+        // (this runs per decode step for the metrics snapshot).
+        self.lens
+            .chunks(self.dims.batch)
+            .enumerate()
+            .map(|(l, slots)| {
+                self.kv.layer_row_bytes(l) * slots.iter().sum::<usize>()
+            })
+            .sum()
     }
 
     /// What the same live rows would occupy on the dense f32 backend
     /// (Table 2's "f32-equivalent" column; equals [`Self::live_bytes`]
-    /// when the backend is dense).
+    /// when every layer is dense).
     pub fn f32_equivalent_bytes(&self) -> usize {
         let row = self.kv.f32_row_bytes();
         self.lens.iter().map(|&n| n * row).sum()
     }
 
+    /// Original absolute position of each live row of (l, b).
     pub fn pos(&self, l: usize, b: usize) -> &[i32] {
         &self.pos[self.lb(l, b)]
     }
 
+    /// Accumulated attention score of each live row of (l, b).
     pub fn scores(&self, l: usize, b: usize) -> &[f32] {
         &self.scores[self.lb(l, b)]
     }
@@ -264,6 +379,8 @@ impl GroupCache {
         Ok(())
     }
 
+    /// Clear slot `b` across all layers (lens/pos/scores; rows beyond
+    /// the live length are dead and overwritten lazily).
     pub fn reset_slot(&mut self, b: usize) {
         for l in 0..self.dims.layers {
             let idx = self.lb(l, b);
@@ -438,10 +555,14 @@ impl GroupCache {
         Ok(stats)
     }
 
-    /// Raw component pointers shared by the view constructors.
+    /// Raw component pointers shared by the view constructors. Refreshes
+    /// the per-layer [`RawKv`] table in `self.raw_kv`; the returned
+    /// parts point into it, so they are only valid while the view borrow
+    /// on `self` lives.
     fn raw_parts(&mut self) -> RawParts {
+        self.kv.raw_table(&mut self.raw_kv);
         RawParts {
-            kv: self.kv.raw(),
+            kv: RawKvTable::new(&self.raw_kv),
             lens: self.lens.as_mut_ptr(),
             pos: self.pos.as_mut_ptr(),
             scores: self.scores.as_mut_ptr(),
@@ -498,7 +619,7 @@ impl GroupCache {
 /// restricts itself to its slot's disjoint sub-ranges).
 #[derive(Clone, Copy)]
 struct RawParts {
-    kv: RawKv,
+    kv: RawKvTable,
     lens: *mut usize,
     pos: *mut Vec<i32>,
     scores: *mut Vec<f32>,
@@ -524,10 +645,12 @@ pub struct SlotViewMut<'a> {
 unsafe impl Send for SlotViewMut<'_> {}
 
 impl SlotViewMut<'_> {
+    /// The slot index this view owns.
     pub fn slot(&self) -> usize {
         self.b
     }
 
+    /// Model layers covered by the view (== the cache's layer count).
     pub fn layers(&self) -> usize {
         self.dims.layers
     }
@@ -537,18 +660,22 @@ impl SlotViewMut<'_> {
         l * self.dims.batch + self.b
     }
 
+    /// Live rows of this slot at layer `l`.
     pub fn len(&self, l: usize) -> usize {
         unsafe { *self.parts.lens.add(self.lb(l)) }
     }
 
+    /// True when no layer of this slot holds live rows.
     pub fn is_empty(&self) -> bool {
         (0..self.dims.layers).all(|l| self.len(l) == 0)
     }
 
+    /// Original absolute positions of this slot's rows at layer `l`.
     pub fn pos(&self, l: usize) -> &[i32] {
         unsafe { &*self.parts.pos.add(self.lb(l)) }
     }
 
+    /// Accumulated attention scores of this slot's rows at layer `l`.
     pub fn scores(&self, l: usize) -> &[f32] {
         unsafe { &*self.parts.scores.add(self.lb(l)) }
     }
@@ -572,9 +699,13 @@ impl SlotViewMut<'_> {
                 "cache overflow at layer {l} slot {} (len {c})", self.b);
         // SAFETY: this view is the sole owner of slot `b`'s rows and
         // bookkeeping entries; the PhantomData borrow keeps the cache
-        // alive and unmoved.
+        // (and its raw table) alive and unmoved. Layer `l`'s entry is a
+        // single-layer store, so the row write passes l = 0.
         unsafe {
-            self.parts.kv.write_row(&self.dims, l, self.b, c, k_row, v_row);
+            self.parts
+                .kv
+                .layer(l)
+                .write_row(&self.dims, 0, self.b, c, k_row, v_row);
             *self.parts.lens.add(idx) = c + 1;
             (*self.parts.pos.add(idx)).push(abs_pos);
             (*self.parts.scores.add(idx)).push(0.0);
@@ -603,9 +734,10 @@ impl SlotViewMut<'_> {
         ks.dedup();
         ensure!(ks.iter().all(|&i| i < n),
                 "retention index out of range (len {n})");
-        // SAFETY: as in `insert` — exclusive slot ownership.
+        // SAFETY: as in `insert` — exclusive slot ownership; layer-local
+        // gather on layer `l`'s single-layer store.
         unsafe {
-            self.parts.kv.gather_rows(&self.dims, l, self.b, &ks);
+            self.parts.kv.layer(l).gather_rows(&self.dims, 0, self.b, &ks);
             let pos = &mut *self.parts.pos.add(idx);
             let sc = &mut *self.parts.scores.add(idx);
             for (dst, &src) in ks.iter().enumerate() {
@@ -641,8 +773,11 @@ pub struct PackStats {
 /// uses to decide how little it can copy. The image is f32 for every
 /// backend: quantized storage dequantizes during reconcile.
 pub struct PackScratch {
+    /// Packed K image `[L, bb, Hkv, C, D]` (always f32).
     pub k: HostTensorF32,
+    /// Packed V image `[L, bb, Hkv, C, D]` (always f32).
     pub v: HostTensorF32,
+    /// Live-row counts `[L, bb]`.
     pub lens: HostTensorI32,
     bb: usize,
     cap: usize,
@@ -667,6 +802,7 @@ impl PackScratch {
         }
     }
 
+    /// The (batch, capacity) bucket this scratch was sized for.
     pub fn bucket(&self) -> (usize, usize) {
         (self.bb, self.cap)
     }
@@ -715,7 +851,8 @@ mod tests {
         assert_eq!(c.live_bytes(), 2 * 3 * 2 * 4 * 4 * 2);
         // Dense backend: f32-equivalent == actual.
         assert_eq!(c.f32_equivalent_bytes(), c.live_bytes());
-        assert_eq!(c.format(), KvFormat::F32);
+        assert_eq!(c.format_map().uniform_format(), Some(KvFormat::F32));
+        assert_eq!(c.format_label(), "f32");
     }
 
     #[test]
@@ -934,7 +1071,8 @@ mod tests {
     #[test]
     fn quant_backend_end_to_end_retention_and_pack() {
         let mut c = GroupCache::with_format(dims(), KvFormat::QuantI8);
-        assert_eq!(c.format(), KvFormat::QuantI8);
+        assert_eq!(c.format_map().uniform_format(), Some(KvFormat::QuantI8));
+        assert_eq!(c.format_label(), "q8");
         for t in 0..6 {
             c.insert(0, 0, &row(t as f32, 2, 4), &row(t as f32, 2, 4), t)
                 .unwrap();
@@ -978,6 +1116,92 @@ mod tests {
         // Reap path: swap + reset, both backends share the epoch logic.
         c.swap_slots(0, 1);
         c.reset_slot(1);
+        c.pack_delta(&mut s).unwrap();
+        assert_matches_fresh_pack(&c, &s);
+    }
+
+    #[test]
+    fn format_map_uniform_and_mixed_labels() {
+        let u = FormatMap::uniform(3, KvFormat::QuantI4);
+        assert_eq!(u.layers(), 3);
+        assert_eq!(u.uniform_format(), Some(KvFormat::QuantI4));
+        assert_eq!(u.label(), "q4");
+        let m = FormatMap::new(vec![KvFormat::F32, KvFormat::QuantI4]);
+        assert_eq!(m.uniform_format(), None);
+        assert_eq!(m.label(), "mixed");
+        assert_eq!(m.get(0), KvFormat::F32);
+        assert_eq!(m.get(1), KvFormat::QuantI4);
+        assert_eq!(m.as_slice(), &[KvFormat::F32, KvFormat::QuantI4]);
+    }
+
+    #[test]
+    fn mixed_map_prices_each_layer_at_its_own_rate() {
+        // Layer 0 dense (f32), layer 1 group-wise int4, in one group.
+        let mut c = GroupCache::with_formats(
+            dims(),
+            FormatMap::new(vec![KvFormat::F32, KvFormat::QuantI4]),
+        );
+        assert_eq!(c.format_label(), "mixed");
+        for t in 0..3 {
+            for l in 0..2 {
+                c.insert(l, 0, &row(t as f32, 2, 4), &row(t as f32, 2, 4), t)
+                    .unwrap();
+            }
+        }
+        // Per-layer sums: 3 rows * 64 B (f32) + 3 rows * 40 B (q4),
+        // not 6 rows at either single-format rate.
+        use super::quant::kv_row_bytes;
+        let f32_row = kv_row_bytes(2, 4, KvFormat::F32);
+        let q4_row = kv_row_bytes(2, 4, KvFormat::QuantI4);
+        assert_eq!(c.live_bytes(), 3 * f32_row + 3 * q4_row);
+        assert_eq!(c.f32_equivalent_bytes(), 6 * f32_row);
+    }
+
+    #[test]
+    fn mixed_map_delta_pack_matches_fresh_pack() {
+        let mut c = GroupCache::with_formats(
+            dims(),
+            FormatMap::new(vec![KvFormat::F32, KvFormat::QuantI4]),
+        );
+        for t in 0..4 {
+            for l in 0..2 {
+                c.insert(l, 0, &row(t as f32, 2, 4), &row(t as f32, 2, 4), t)
+                    .unwrap();
+            }
+        }
+        let mut s = PackScratch::new(&c.dims, 2, 8);
+        let st = c.pack_delta(&mut s).unwrap();
+        assert_eq!(st.pairs_full, 4);
+        assert_matches_fresh_pack(&c, &s);
+        // The dense layer's packed rows are exact; the q4 layer's are
+        // close (range [0, 3.07] ⇒ tolerance ≈ 0.11).
+        assert!((s.k.data[0] - 0.0).abs() < 1e-6);
+        c.insert(0, 0, &row(9.0, 2, 4), &row(9.0, 2, 4), 4).unwrap();
+        c.insert(1, 0, &row(9.0, 2, 4), &row(9.0, 2, 4), 4).unwrap();
+        let st = c.pack_delta(&mut s).unwrap();
+        assert_eq!(st.pairs_delta, 2);
+        assert_matches_fresh_pack(&c, &s);
+        c.apply_retention(1, 0, &[0, 2]).unwrap();
+        c.swap_slots(0, 1);
+        c.pack_delta(&mut s).unwrap();
+        assert_matches_fresh_pack(&c, &s);
+    }
+
+    #[test]
+    fn q4_backend_end_to_end_retention_and_pack() {
+        let mut c = GroupCache::with_format(dims(), KvFormat::QuantI4);
+        assert_eq!(c.format_label(), "q4");
+        for t in 0..6 {
+            c.insert(0, 0, &row(t as f32, 2, 4), &row(t as f32, 2, 4), t)
+                .unwrap();
+        }
+        c.apply_retention(0, 0, &[0, 3, 5]).unwrap();
+        assert_eq!(c.pos(0, 0), &[0, 3, 5]);
+        // Row 1 after retention == original token 3, within the group
+        // quant error (range [0, 3.03] ⇒ tolerance ≈ 0.101 + fuzz).
+        let got = k_at(&c, 0, 0, 0, 1);
+        assert!((got - 3.0).abs() < 0.11, "{got}");
+        let mut s = PackScratch::new(&c.dims, 2, 8);
         c.pack_delta(&mut s).unwrap();
         assert_matches_fresh_pack(&c, &s);
     }

@@ -2,20 +2,31 @@
 //! can be layered on top of quantized caches for compounded memory
 //! savings", Related Work §Quantization).
 //!
-//! Per-row symmetric int8: each cached (layer, slot, head) K/V row of D
-//! floats is stored as i8[D] + one f32 scale (KIVI-style per-token
-//! granularity, the variant that preserves outlier channels best at this
-//! row shape). 4×(1 − 33/132) ≈ 3.9× memory reduction vs f32; the
-//! accuracy cost is bounded by the quantization-error tests below and is
-//! orthogonal to (multiplies with) Lethe's token-count reduction.
+//! Two quantized row codecs ship today:
+//!
+//!   * **Per-row symmetric int8** (`"q8"`): each cached (layer, slot,
+//!     head) K/V row of D floats is stored as i8[D] + one f32 scale
+//!     (KIVI-style per-token granularity, the variant that preserves
+//!     outlier channels best at this row shape). 4×(1 − 33/132) ≈ 3.9×
+//!     memory reduction vs f32 at D = 128.
+//!   * **Group-wise asymmetric int4** (`"q4"`): the same row split into
+//!     groups of [`Q4_GROUP`] = 32 elements along the head dim; each
+//!     group stores an f32 scale + f32 zero-point and its elements as
+//!     4-bit codes packed two nibbles per byte (even index = low nibble).
+//!     ≈ 5.3× reduction vs f32 at D = 128; the group granularity bounds
+//!     the error blast radius of a single outlier channel.
+//!
+//! The accuracy cost of both codecs is bounded by the quantization-error
+//! tests below and is orthogonal to (multiplies with) Lethe's token-count
+//! reduction.
 //!
 //! This module owns the *row-level* pieces: [`KvFormat`] (config/CLI
-//! selection + byte accounting), [`kv_row_bytes`], and the
-//! [`quantize_row`]/[`dequantize_row`] pair. The cache-level storage
-//! built on them is [`super::backend::QuantI8`], a first-class
-//! [`super::backend::KvStore`] engine backend selected with
-//! `kv.format = "q8"` — the former side-car `QuantCache` promoted onto
-//! the real serving path.
+//! selection + byte accounting), [`kv_row_bytes`], the
+//! [`quantize_row`]/[`dequantize_row`] int8 pair and the
+//! [`quantize_row_q4_into`]/[`dequantize_row_q4`] int4 pair. The
+//! cache-level storage built on them lives in [`super::backend`]
+//! ([`super::backend::QuantI8`] / [`super::backend::QuantI4`]), selected
+//! per layer via `kv.format` / `kv.layer_formats` / `kv.mixed`.
 
 use anyhow::{bail, Result};
 
@@ -31,16 +42,21 @@ pub enum KvFormat {
     /// Per-row symmetric int8: 1 byte per element + one f32 scale per
     /// (head, tensor) row.
     QuantI8,
+    /// Group-wise asymmetric int4: half a byte per element + one f32
+    /// scale and one f32 zero-point per [`Q4_GROUP`]-element group.
+    QuantI4,
 }
 
 impl KvFormat {
-    /// Parse the config/CLI name (`kv.format`: "f32" | "q8").
+    /// Parse the config/CLI name (`kv.format`: "f32" | "q8" | "q4").
     pub fn parse(s: &str) -> Result<KvFormat> {
         match s {
             "f32" => Ok(KvFormat::F32),
             "q8" => Ok(KvFormat::QuantI8),
+            "q4" => Ok(KvFormat::QuantI4),
             other => bail!(
-                "unknown kv format '{other}' (expected \"f32\" or \"q8\")"
+                "unknown kv format '{other}' \
+                 (expected \"f32\", \"q8\" or \"q4\")"
             ),
         }
     }
@@ -50,6 +66,7 @@ impl KvFormat {
         match self {
             KvFormat::F32 => "f32",
             KvFormat::QuantI8 => "q8",
+            KvFormat::QuantI4 => "q4",
         }
     }
 }
@@ -60,6 +77,10 @@ pub fn kv_row_bytes(kv_heads: usize, d_head: usize, fmt: KvFormat) -> usize {
     let per_head = match fmt {
         KvFormat::F32 => d_head * 4,
         KvFormat::QuantI8 => d_head + 4,
+        // Packed nibbles + (scale, zero) f32 pair per group.
+        KvFormat::QuantI4 => {
+            q4_packed_bytes(d_head) + q4_groups(d_head) * 8
+        }
     };
     kv_heads * per_head * 2
 }
@@ -71,7 +92,9 @@ pub fn kv_row_bytes(kv_heads: usize, d_head: usize, fmt: KvFormat) -> usize {
 /// [`quantize_row_into`] / [`dequantize_span`].
 #[derive(Clone, Debug, Default)]
 pub struct QuantRow {
+    /// Signed int8 mantissas, one per row element.
     pub q: Vec<i8>,
+    /// Dequantization scale: `x ≈ q * scale`.
     pub scale: f32,
 }
 
@@ -104,6 +127,18 @@ pub fn quantize_row_into(x: &[f32], q: &mut [i8]) -> f32 {
 }
 
 /// Allocating convenience wrapper over [`quantize_row_into`].
+///
+/// ```
+/// use lethe::kvcache::quant::{dequantize_row, quantize_row};
+/// let x = [0.5f32, -1.25, 2.0, 0.0];
+/// let q = quantize_row(&x);
+/// let mut y = [0.0f32; 4];
+/// dequantize_row(&q, &mut y);
+/// let tol = 2.0 / 127.0 * 0.5 + 1e-6; // amax / 127 / 2
+/// for (a, b) in x.iter().zip(&y) {
+///     assert!((a - b).abs() <= tol);
+/// }
+/// ```
 pub fn quantize_row(x: &[f32]) -> QuantRow {
     let mut q = vec![0i8; x.len()];
     let scale = quantize_row_into(x, &mut q);
@@ -119,8 +154,158 @@ pub fn dequantize_span(q: &[i8], scale: f32, out: &mut [f32]) {
     }
 }
 
+/// Dequantize a [`QuantRow`] (inverse of [`quantize_row`]).
 pub fn dequantize_row(r: &QuantRow, out: &mut [f32]) {
     dequantize_span(&r.q, r.scale, out);
+}
+
+/// Elements per int4 quantization group along the head dim (KIVI-style
+/// group size). The last group of a row may be shorter when `d_head` is
+/// not a multiple of this.
+pub const Q4_GROUP: usize = 32;
+
+/// Number of int4 groups needed to cover a `d_head`-element row.
+pub const fn q4_groups(d_head: usize) -> usize {
+    d_head.div_ceil(Q4_GROUP)
+}
+
+/// Bytes of packed int4 codes for a `d_head`-element row (two codes per
+/// byte; odd tails leave the final high nibble zero).
+pub const fn q4_packed_bytes(d_head: usize) -> usize {
+    d_head.div_ceil(2)
+}
+
+/// Group-wise asymmetric int4 quantization of one row into preallocated
+/// spans: `q` holds [`q4_packed_bytes`]`(x.len())` packed codes (element
+/// `i` lives in byte `i / 2`; even `i` = low nibble), `scales`/`zeros`
+/// hold one f32 each per [`q4_groups`]`(x.len())` group. An element
+/// dequantizes to `code * scale + zero`.
+///
+/// Each group's range is `[min(gmin, 0), max(gmax, 0)]` over its finite
+/// elements — widened to include 0.0 so that (a) non-finite elements
+/// (NaN/±Inf carry no usable magnitude) can be stored as the code
+/// nearest zero and (b) an all-zero or never-written group dequantizes
+/// to exact zeros (scale = 0, zero = 0 — the `read_rows` determinism
+/// obligation). The per-element error for finite inputs is bounded by
+/// `scale / 2 = (hi − lo) / 30`.
+///
+/// ```
+/// use lethe::kvcache::quant::{
+///     dequantize_row_q4, q4_groups, q4_packed_bytes, quantize_row_q4_into,
+/// };
+/// // 40 elements → two groups (32 + 8) at group size 32.
+/// let x: Vec<f32> = (0..40).map(|i| (i as f32) * 0.25 - 3.0).collect();
+/// let mut q = vec![0u8; q4_packed_bytes(x.len())];
+/// let mut scales = vec![0.0f32; q4_groups(x.len())];
+/// let mut zeros = vec![0.0f32; q4_groups(x.len())];
+/// quantize_row_q4_into(&x, &mut q, &mut scales, &mut zeros);
+/// let mut y = vec![0.0f32; x.len()];
+/// dequantize_row_q4(&q, &scales, &zeros, &mut y);
+/// for (g, chunk) in x.chunks(32).enumerate() {
+///     let lo = chunk.iter().fold(0f32, |m, &v| m.min(v));
+///     let hi = chunk.iter().fold(0f32, |m, &v| m.max(v));
+///     let tol = (hi - lo) / 15.0 * 0.5 + 1e-6;
+///     for (a, b) in chunk.iter().zip(&y[g * 32..]) {
+///         assert!((a - b).abs() <= tol, "{a} vs {b}");
+///     }
+/// }
+/// ```
+pub fn quantize_row_q4_into(
+    x: &[f32],
+    q: &mut [u8],
+    scales: &mut [f32],
+    zeros: &mut [f32],
+) {
+    debug_assert_eq!(q.len(), q4_packed_bytes(x.len()));
+    debug_assert_eq!(scales.len(), q4_groups(x.len()));
+    debug_assert_eq!(zeros.len(), q4_groups(x.len()));
+    q.fill(0);
+    for (g, chunk) in x.chunks(Q4_GROUP).enumerate() {
+        // Finite-only range, widened to include 0.0 (see the doc above).
+        let mut lo = 0f32;
+        let mut hi = 0f32;
+        for &v in chunk.iter().filter(|v| v.is_finite()) {
+            lo = lo.min(v);
+            hi = hi.max(v);
+        }
+        // Range math in f64: a finite group spanning ±huge (e.g. ±3e38)
+        // would overflow `hi - lo` to +Inf in f32, driving scale to Inf
+        // and every dequantized element to NaN — the exact poisoning the
+        // non-finite filtering above exists to prevent. The f64 width /
+        // 15 always fits back into a finite f32.
+        let scale = ((hi as f64 - lo as f64) / 15.0) as f32;
+        zeros[g] = lo;
+        scales[g] = scale;
+        if scale == 0.0 {
+            // Degenerate group (all zeros, or nothing finite): codes stay
+            // 0 and the group dequantizes to exact `lo` (= 0.0) values.
+            continue;
+        }
+        let inv = 1.0 / scale as f64;
+        for (j, &v) in chunk.iter().enumerate() {
+            let v = if v.is_finite() { v } else { 0.0 };
+            let code = ((v as f64 - lo as f64) * inv)
+                .round()
+                .clamp(0.0, 15.0) as u8;
+            let i = g * Q4_GROUP + j;
+            q[i / 2] |= code << (4 * (i & 1));
+        }
+    }
+}
+
+/// Worst-case absolute dequantization error for a row whose exact
+/// values are `exact`, stored in `fmt` — the single source of truth the
+/// backend equivalence tests bound against (f32 is exact; q8 is the
+/// per-row symmetric bound `amax / 127 / 2`; q4 is the per-group bound
+/// `(hi − lo) / 15 / 2` over the zero-widened range, maximized across
+/// groups). Non-finite elements are excluded, mirroring the quantizers.
+pub fn dequant_error_bound(fmt: KvFormat, exact: &[f32]) -> f32 {
+    match fmt {
+        KvFormat::F32 => 0.0,
+        KvFormat::QuantI8 => {
+            let amax = exact
+                .iter()
+                .filter(|v| v.is_finite())
+                .fold(0f32, |m, &v| m.max(v.abs()));
+            amax / 127.0 * 0.5
+        }
+        KvFormat::QuantI4 => exact
+            .chunks(Q4_GROUP)
+            .map(|g| {
+                let mut lo = 0f32;
+                let mut hi = 0f32;
+                for &v in g.iter().filter(|v| v.is_finite()) {
+                    lo = lo.min(v);
+                    hi = hi.max(v);
+                }
+                // f64 width math, mirroring the quantizer: a finite
+                // group spanning ±huge must yield a finite bound.
+                ((hi as f64 - lo as f64) / 15.0 * 0.5) as f32
+            })
+            .fold(0f32, f32::max),
+    }
+}
+
+/// Dequantize a packed group-wise int4 row (the inverse of
+/// [`quantize_row_q4_into`]); `out.len()` is the row's element count.
+pub fn dequantize_row_q4(
+    q: &[u8],
+    scales: &[f32],
+    zeros: &[f32],
+    out: &mut [f32],
+) {
+    debug_assert_eq!(q.len(), q4_packed_bytes(out.len()));
+    debug_assert_eq!(scales.len(), q4_groups(out.len()));
+    for (i, o) in out.iter_mut().enumerate() {
+        let code = (q[i / 2] >> (4 * (i & 1))) & 0x0F;
+        let g = i / Q4_GROUP;
+        // f64 accumulation + clamp: `15 * scale` can exceed f32::MAX
+        // mid-expression for extreme (still finite) groups even though
+        // the final value `≈ hi` is representable; clamping keeps the
+        // output finite for any finite stored (scale, zero).
+        let x = code as f64 * scales[g] as f64 + zeros[g] as f64;
+        *o = x.clamp(f32::MIN as f64, f32::MAX as f64) as f32;
+    }
 }
 
 #[cfg(test)]
@@ -135,18 +320,138 @@ mod tests {
         assert_eq!(kv_row_bytes(2, 4, KvFormat::F32), 64);
         // 2 heads * (4 elems + 4-byte scale) * 2 tensors
         assert_eq!(kv_row_bytes(2, 4, KvFormat::QuantI8), 32);
+        // 2 heads * (2 packed bytes + 1 group * 8) * 2 tensors
+        assert_eq!(kv_row_bytes(2, 4, KvFormat::QuantI4), 40);
+        // At a realistic head dim the ordering is f32 > q8 > q4:
+        // per head-tensor 128*4=512 vs 128+4=132 vs 64+4*8=96.
+        assert_eq!(kv_row_bytes(1, 128, KvFormat::F32), 1024);
+        assert_eq!(kv_row_bytes(1, 128, KvFormat::QuantI8), 264);
+        assert_eq!(kv_row_bytes(1, 128, KvFormat::QuantI4), 192);
     }
 
     #[test]
     fn format_parse_roundtrips_and_rejects() {
         assert_eq!(KvFormat::parse("f32").unwrap(), KvFormat::F32);
         assert_eq!(KvFormat::parse("q8").unwrap(), KvFormat::QuantI8);
-        for fmt in [KvFormat::F32, KvFormat::QuantI8] {
+        assert_eq!(KvFormat::parse("q4").unwrap(), KvFormat::QuantI4);
+        for fmt in [KvFormat::F32, KvFormat::QuantI8, KvFormat::QuantI4] {
             assert_eq!(KvFormat::parse(fmt.label()).unwrap(), fmt);
         }
         assert!(KvFormat::parse("fp8").is_err());
         assert!(KvFormat::parse("").is_err());
         assert_eq!(KvFormat::default(), KvFormat::F32);
+    }
+
+    fn q4_roundtrip(x: &[f32]) -> Vec<f32> {
+        let mut q = vec![0u8; q4_packed_bytes(x.len())];
+        let mut s = vec![0f32; q4_groups(x.len())];
+        let mut z = vec![0f32; q4_groups(x.len())];
+        quantize_row_q4_into(x, &mut q, &mut s, &mut z);
+        let mut y = vec![0f32; x.len()];
+        dequantize_row_q4(&q, &s, &z, &mut y);
+        y
+    }
+
+    #[test]
+    fn q4_geometry_helpers() {
+        assert_eq!(q4_groups(32), 1);
+        assert_eq!(q4_groups(33), 2);
+        assert_eq!(q4_groups(64), 2);
+        assert_eq!(q4_packed_bytes(4), 2);
+        assert_eq!(q4_packed_bytes(5), 3);
+    }
+
+    #[test]
+    fn q4_roundtrip_error_is_group_bounded() {
+        let mut rng = Rng::new(17);
+        // 70 elements → 3 groups, one of them a short tail.
+        let x = vec_f32(&mut rng, 70, -5.0, 5.0);
+        let y = q4_roundtrip(&x);
+        for (g, chunk) in x.chunks(Q4_GROUP).enumerate() {
+            let lo = chunk.iter().fold(0f32, |m, &v| m.min(v));
+            let hi = chunk.iter().fold(0f32, |m, &v| m.max(v));
+            let tol = (hi - lo) / 15.0 * 0.5 + 1e-6;
+            for (a, b) in chunk.iter().zip(&y[g * Q4_GROUP..]) {
+                assert!((a - b).abs() <= tol, "{a} vs {b} (tol {tol})");
+            }
+        }
+    }
+
+    #[test]
+    fn q4_zero_row_is_exact_and_nonfinite_is_near_zero() {
+        assert_eq!(q4_roundtrip(&[0.0; 40]), vec![0.0; 40]);
+        // Non-finite elements must come back near zero and must not
+        // poison the group's scale.
+        let x = [1.0, f32::NAN, -2.0, f32::INFINITY, 0.5];
+        let y = q4_roundtrip(&x);
+        let tol = 3.0 / 15.0 * 0.5 + 1e-6; // range [-2, 1]
+        assert!(y.iter().all(|v| v.is_finite()), "{y:?}");
+        assert!((y[0] - 1.0).abs() <= tol);
+        assert!(y[1].abs() <= tol);
+        assert!((y[2] + 2.0).abs() <= tol);
+        assert!(y[3].abs() <= tol);
+        assert!((y[4] - 0.5).abs() <= tol);
+        // All-NaN rows degrade to exact zeros (scale 0, zero 0).
+        assert_eq!(q4_roundtrip(&[f32::NAN; 3]), vec![0.0; 3]);
+    }
+
+    #[test]
+    fn q4_one_sided_groups_still_represent_zero() {
+        // All-positive group: the range is widened to [0, hi] so a
+        // stored non-finite (code nearest 0) stays near zero.
+        let x = [3.0f32, 4.0, 5.0, f32::NAN];
+        let y = q4_roundtrip(&x);
+        let tol = 5.0 / 15.0 * 0.5 + 1e-6;
+        assert!((y[0] - 3.0).abs() <= tol);
+        assert!(y[3].abs() <= tol);
+    }
+
+    #[test]
+    fn q4_extreme_finite_group_stays_finite() {
+        // A finite group spanning ±huge has a width that overflows f32:
+        // the scale must not become Inf (which would dequantize the
+        // whole group to NaN) and the round trip must stay finite and
+        // within the (huge) group bound.
+        let x = [3.0e38f32, -2.0e38, 0.0, 1.0];
+        let y = q4_roundtrip(&x);
+        assert!(y.iter().all(|v| v.is_finite()), "{y:?}");
+        let tol = dequant_error_bound(KvFormat::QuantI4, &x);
+        assert!(tol.is_finite());
+        // Tiny multiplicative slack: at e38 scale the bound itself is
+        // subject to f32 rounding.
+        let tol = tol * 1.001;
+        for (a, b) in x.iter().zip(&y) {
+            assert!((a - b).abs() <= tol, "{a} vs {b} (tol {tol})");
+        }
+    }
+
+    #[test]
+    fn q4_odd_length_tail_nibble_roundtrips() {
+        let x = [1.0f32, -1.0, 0.25];
+        let y = q4_roundtrip(&x);
+        let tol = 2.0 / 15.0 * 0.5 + 1e-6;
+        for (a, b) in x.iter().zip(&y) {
+            assert!((a - b).abs() <= tol, "{a} vs {b}");
+        }
+    }
+
+    #[test]
+    fn property_q4_relative_error() {
+        check("q4-rel-err", 60, |rng, size| {
+            let d = 4 + size;
+            let x = vec_f32(rng, d, -10.0, 10.0);
+            let y = q4_roundtrip(&x);
+            let num: f32 =
+                x.iter().zip(&y).map(|(a, b)| (a - b) * (a - b)).sum();
+            let den: f32 = x.iter().map(|a| a * a).sum::<f32>().max(1e-12);
+            let rel = (num / den).sqrt();
+            // 4-bit codes over a zero-including range: coarser than q8
+            // (expected ≈ 6.7% relative L2 on uniform rows) but bounded.
+            if rel > 0.12 {
+                return Err(format!("relative L2 error {rel}"));
+            }
+            Ok(())
+        });
     }
 
     #[test]

@@ -9,9 +9,9 @@
 
 use std::path::Path;
 
-use anyhow::Result;
+use anyhow::{bail, Result};
 
-use lethe::config::ServingConfig;
+use lethe::config::{MixedKvRule, ServingConfig};
 use lethe::engine::Engine;
 use lethe::eval;
 use lethe::model::{ModelMeta, Tokenizer, DEEPSEEK_R1_DISTILL};
@@ -32,7 +32,12 @@ fn spec() -> ArgSpec {
     .opt("artifacts", "artifacts", "artifacts directory")
     .opt("config", "", "optional JSON config file")
     .opt("policy", "lethe", "fullkv|lethe|h2o|streamingllm|pyramidkv")
-    .opt("kv-format", "", "KV storage backend: f32|q8 (default: config/f32)")
+    .opt("kv-format", "",
+         "KV storage backend: f32|q8|q4 (default: config/f32)")
+    .opt("kv-mixed", "",
+         "sparsity-directed per-layer formats, e.g. \
+          sparse=q4,dense=f32,threshold=0.5 (keys optional; omitted \
+          keys use exactly those defaults)")
     .opt("prompt", "", "prompt text (generate)")
     .opt("max-new", "64", "max new tokens")
     .opt("n", "16", "requests (serve) / tasks per subject (eval)")
@@ -53,7 +58,39 @@ fn load_cfg(args: &lethe::util::argparse::Args) -> Result<ServingConfig> {
     if !args.get("kv-format").is_empty() {
         cfg.kv.format = lethe::kvcache::KvFormat::parse(args.get("kv-format"))?;
     }
+    if args.has("kv-mixed") {
+        cfg.kv.mixed = Some(parse_kv_mixed(args.get("kv-mixed"))?);
+    }
+    cfg.validate()?;
     Ok(cfg)
+}
+
+/// Parse the `--kv-mixed` rule: comma-separated `key=value` pairs with
+/// keys `sparse`, `dense`, `threshold`; omitted keys keep the
+/// [`MixedKvRule`] defaults (sparse=q4, dense=f32, threshold=0.5).
+fn parse_kv_mixed(s: &str) -> Result<MixedKvRule> {
+    let mut rule = MixedKvRule::default();
+    for part in s.split(',').filter(|p| !p.trim().is_empty()) {
+        let Some((k, v)) = part.split_once('=') else {
+            bail!("--kv-mixed entry '{part}' is not key=value");
+        };
+        match k.trim() {
+            "sparse" => rule.sparse = lethe::kvcache::KvFormat::parse(v.trim())?,
+            "dense" => rule.dense = lethe::kvcache::KvFormat::parse(v.trim())?,
+            "threshold" => {
+                rule.threshold = v
+                    .trim()
+                    .parse()
+                    .map_err(|e| anyhow::anyhow!(
+                        "--kv-mixed threshold '{}': {e}", v.trim()))?;
+            }
+            other => bail!(
+                "unknown --kv-mixed key '{other}' \
+                 (sparse|dense|threshold)"
+            ),
+        }
+    }
+    Ok(rule)
 }
 
 fn main() -> Result<()> {

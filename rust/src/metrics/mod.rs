@@ -34,8 +34,13 @@ pub struct EngineMetrics {
     /// "f32-equivalent" column; equals `live_bytes_last` on the dense
     /// backend).
     pub f32_equiv_bytes_last: usize,
-    /// KV storage backend the last decode step served with.
-    pub kv_format: KvFormat,
+    /// KV storage label the last decode step served with ("f32" | "q8" |
+    /// "q4" | "mixed"; empty before the first step).
+    pub kv_format: String,
+    /// Per-layer storage formats of the last-served group (index =
+    /// layer) — the full picture behind a "mixed" label, and what makes
+    /// the varying per-layer byte rates of Table 2 auditable.
+    pub kv_layer_formats: Vec<KvFormat>,
     /// decode capacity bucket -> steps run at that bucket.
     pub capacity_hist: BTreeMap<usize, u64>,
 }
@@ -99,7 +104,16 @@ impl EngineMetrics {
             ("delta_pack_full", Json::from(self.delta_pack_full as usize)),
             ("live_bytes_last", Json::from(self.live_bytes_last)),
             ("f32_equivalent_bytes", Json::from(self.f32_equiv_bytes_last)),
-            ("kv_format", Json::str(self.kv_format.label())),
+            ("kv_format", Json::str(&self.kv_format)),
+            (
+                "kv_layer_formats",
+                Json::Arr(
+                    self.kv_layer_formats
+                        .iter()
+                        .map(|f| Json::str(f.label()))
+                        .collect(),
+                ),
+            ),
             ("decode_tput_tok_s", Json::num(self.decode_tput())),
             ("step_seconds_mean", Json::num(self.step_seconds_mean())),
             ("capacity_hist", Json::Arr(caps)),
@@ -128,7 +142,8 @@ mod tests {
         m.decode_steps = 3;
         m.pack_bytes_copied = 4096;
         m.delta_pack_hits = 12;
-        m.kv_format = KvFormat::QuantI8;
+        m.kv_format = "mixed".to_string();
+        m.kv_layer_formats = vec![KvFormat::F32, KvFormat::QuantI4];
         m.f32_equiv_bytes_last = 2048;
         m.capacity_hist.insert(128, 2);
         m.capacity_hist.insert(256, 1);
@@ -147,7 +162,14 @@ mod tests {
             parsed.get("capacity_hist").unwrap().as_arr().unwrap().len(),
             2
         );
-        assert_eq!(parsed.get("kv_format").unwrap().as_str().unwrap(), "q8");
+        assert_eq!(
+            parsed.get("kv_format").unwrap().as_str().unwrap(),
+            "mixed"
+        );
+        let lf = parsed.get("kv_layer_formats").unwrap().as_arr().unwrap();
+        assert_eq!(lf.len(), 2);
+        assert_eq!(lf[0].as_str().unwrap(), "f32");
+        assert_eq!(lf[1].as_str().unwrap(), "q4");
         assert_eq!(
             parsed
                 .get("f32_equivalent_bytes")

@@ -9,10 +9,15 @@
 //! (RASR Eq. 5) and calls [`EvictionPolicy::plan`] per layer; `Some(keep)`
 //! triggers [`crate::kvcache::GroupCache::apply_retention`].
 
+/// FullKV baseline (never evicts; the paper's OOM column).
 pub mod fullkv;
+/// H2O heavy-hitter baseline.
 pub mod h2o;
+/// Lethe — the paper's layer- and time-adaptive policy (Algorithm 1).
 pub mod lethe;
+/// PyramidKV fixed layerwise-budget baseline.
 pub mod pyramid;
+/// StreamingLLM sink+recency baseline.
 pub mod streaming;
 
 use crate::config::ServingConfig;
@@ -43,14 +48,23 @@ pub struct LayerState<'a> {
 /// Table 4 capability row.
 #[derive(Clone, Copy, Debug, PartialEq, Eq)]
 pub struct Capabilities {
+    /// Protects recent tokens explicitly.
     pub recency_aware: bool,
+    /// Uses accumulated attention mass in its retention decision.
     pub attention_aware: bool,
+    /// Allocates budget per layer rather than one global budget.
     pub layerwise_budget: bool,
+    /// Adapts budgets at runtime (vs fixed at configuration time).
     pub adaptive_budget: bool,
+    /// Prunes repeatedly over a generation (vs once after prefill).
     pub multi_step_pruning: bool,
 }
 
+/// One eviction policy instance, owned by a single sequence (it may
+/// carry per-layer adaptive state). See the module docs for the engine
+/// contract.
 pub trait EvictionPolicy: Send {
+    /// Display name (matches [`PolicyKind::label`]).
     fn name(&self) -> &'static str;
 
     /// Score decay γ the engine applies when accumulating attention mass
@@ -64,19 +78,27 @@ pub trait EvictionPolicy: Send {
     /// deduplicated downstream; relative order is preserved by the cache).
     fn plan(&mut self, layer: usize, st: &LayerState<'_>) -> Option<Vec<usize>>;
 
+    /// The policy's Table 4 capability row.
     fn capabilities(&self) -> Capabilities;
 }
 
+/// Selector for the five implemented policies (CLI/config/requests).
 #[derive(Clone, Copy, Debug, PartialEq, Eq)]
 pub enum PolicyKind {
+    /// Never evicts (upper-bound accuracy, OOMs at capacity).
     FullKv,
+    /// The paper's layer- and time-adaptive policy.
     Lethe,
+    /// Heavy-hitter + recency split budget.
     H2o,
+    /// Attention-sink prefix + recency window.
     StreamingLlm,
+    /// Fixed pyramidal per-layer budgets.
     PyramidKv,
 }
 
 impl PolicyKind {
+    /// Parse a CLI/config/request policy name (case-insensitive).
     pub fn parse(s: &str) -> anyhow::Result<PolicyKind> {
         Ok(match s.to_ascii_lowercase().as_str() {
             "fullkv" | "full" => PolicyKind::FullKv,
@@ -91,6 +113,7 @@ impl PolicyKind {
         })
     }
 
+    /// Paper-style display label (table rows, server responses).
     pub fn label(&self) -> &'static str {
         match self {
             PolicyKind::FullKv => "FullKV",
@@ -101,6 +124,7 @@ impl PolicyKind {
         }
     }
 
+    /// Every implemented policy, in the paper's table order.
     pub const ALL: [PolicyKind; 5] = [
         PolicyKind::FullKv,
         PolicyKind::H2o,

@@ -14,7 +14,6 @@ use std::time::Instant;
 use anyhow::Result;
 
 use crate::engine::{DecodeGroup, Engine, SeqState};
-use crate::kvcache::KvFormat;
 use crate::policy::{make_policy, PolicyKind};
 
 #[derive(Clone, Debug)]
@@ -84,10 +83,11 @@ impl Scheduler {
         self.waiting.len()
     }
 
-    /// Storage backend the group cache serves with (`kv.format`);
-    /// surfaced per-completion by the server.
-    pub fn kv_format(&self) -> KvFormat {
-        self.group.cache.format()
+    /// Storage label the group cache serves with ("f32" | "q8" | "q4" |
+    /// "mixed" for a per-layer map); surfaced per-completion by the
+    /// server.
+    pub fn kv_format(&self) -> String {
+        self.group.cache.format_label()
     }
 
     pub fn active(&self) -> usize {
@@ -102,6 +102,21 @@ impl Scheduler {
     /// decode step, reap completions.
     pub fn tick(&mut self, engine: &mut Engine) -> Result<TickReport> {
         let mut report = TickReport::default();
+
+        // 0. Per-layer format maps (`kv.mixed`) are resolved from the
+        // engine's sparsity estimates at group construction, and those
+        // estimates start at zero — so the boot-time group is always
+        // all-dense. Whenever the group is idle (holds no live rows),
+        // rebuild it if the resolution has changed, so the serving path
+        // actually migrates onto the sparsity-directed map once traffic
+        // has been observed. A busy group keeps its map (live rows are
+        // never re-quantized in place; see ROADMAP follow-ons).
+        if self.group.active() == 0
+            && *self.group.cache.format_map() != engine.current_format_map()
+        {
+            self.group = engine
+                .new_group(self.group.group_size(), self.group.default_policy);
+        }
 
         // 1. Prefill into free slots.
         while self.group.has_free_slot() {

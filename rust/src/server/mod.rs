@@ -39,7 +39,8 @@ pub struct GenerateResponse {
     pub ttft_s: f64,
     pub total_s: f64,
     pub prune_rounds: usize,
-    /// KV storage backend the request was served on ("f32" | "q8").
+    /// KV storage the request was served on ("f32" | "q8" | "q4", or
+    /// "mixed" when a per-layer format map was active).
     pub kv_format: String,
 }
 
@@ -210,7 +211,7 @@ fn engine_thread(
         }
         match sched.tick(&mut engine) {
             Ok(report) => {
-                let kv_format = sched.kv_format().label();
+                let kv_format = sched.kv_format();
                 let mut p = pending.lock().unwrap();
                 for c in report.completed {
                     if let Some(entry) = p.remove(&c.id) {
@@ -223,7 +224,7 @@ fn engine_thread(
                             ttft_s: c.ttft,
                             total_s: c.total,
                             prune_rounds: c.prune_rounds,
-                            kv_format: kv_format.to_string(),
+                            kv_format: kv_format.clone(),
                         };
                         let _ = entry.reply.send(Ok(resp));
                     }

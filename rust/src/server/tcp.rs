@@ -8,6 +8,10 @@
 //!       "ttft_s": 0.01, "total_s": 0.05, "prune_rounds": 0,
 //!       "kv_format": "f32"}
 //!
+//! `kv_format` reports the storage the request was served on: "f32",
+//! "q8", "q4", or "mixed" when a per-layer format map
+//! (`kv.layer_formats` / `kv.mixed`) was active.
+//!
 //! One handler thread per connection (threadpool-bounded); requests on
 //! one connection are pipelined through the engine like any other
 //! client's. Malformed lines get {"ok": false, "error": ...} without

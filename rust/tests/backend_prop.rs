@@ -1,19 +1,26 @@
 //! Backend equivalence property: the same PRNG interleaving of inserts,
 //! retentions, prefill loads, slot swaps, slot resets and score updates
-//! applied to a DenseF32-backed and a QuantI8-backed [`GroupCache`] must
-//! keep the two in lockstep:
+//! applied to a DenseF32-backed [`GroupCache`] and to each quantized /
+//! mixed variant (uniform q8, uniform q4, and a per-layer map with a
+//! dense f32 layer and a q4 layer in one group) must keep the caches in
+//! lockstep:
 //!
 //!   * identical per-(layer, slot) `len`, `pos`, `scores` and
 //!     epoch/rewrite bookkeeping (the delta-pack protocol lives above
 //!     the backend, so it must not be able to tell backends apart),
 //!   * identical [`PackStats`] pair classification on every reconcile,
-//!   * the quantized packed output within the per-row symmetric-int8
-//!     error bound of the dense packed output on every *live* row
-//!     (dense rows are exact, so they double as the reference), and
-//!   * `f32_equivalent_bytes` of the quant cache equal to the dense
-//!     cache's actual `live_bytes` (Table 2's comparability invariant).
+//!   * the packed output within the owning **layer format's** error
+//!     bound of the dense packed output on every *live* row — exact for
+//!     f32 layers, per-row symmetric int8 bound for q8 layers, per-group
+//!     zero-widened int4 bound for q4 layers (dense rows are exact, so
+//!     they double as the reference), and
+//!   * `f32_equivalent_bytes` of every variant equal to the dense
+//!     cache's actual `live_bytes` (Table 2's comparability invariant),
+//!     with the variant's own `live_bytes` never exceeding it.
 
-use lethe::kvcache::{CacheDims, GroupCache, KvFormat, PackScratch, PackStats};
+use lethe::kvcache::{
+    CacheDims, FormatMap, GroupCache, KvFormat, PackScratch, PackStats,
+};
 use lethe::runtime::tensors::HostTensorF32;
 use lethe::util::proptest::{check, vec_f32};
 
@@ -30,6 +37,30 @@ fn dims() -> CacheDims {
         kv_heads: HKV,
         capacity: CAP,
         d_head: D,
+    }
+}
+
+/// The variants run against the dense reference.
+fn variants() -> Vec<(&'static str, FormatMap)> {
+    vec![
+        ("q8", FormatMap::uniform(LAYERS, KvFormat::QuantI8)),
+        ("q4", FormatMap::uniform(LAYERS, KvFormat::QuantI4)),
+        (
+            "mixed",
+            FormatMap::new(vec![KvFormat::F32, KvFormat::QuantI4]),
+        ),
+    ]
+}
+
+/// Worst-case absolute dequantization error for a row stored in `fmt`
+/// whose exact values are `exact`. The bound itself is the shared
+/// [`lethe::kvcache::quant::dequant_error_bound`] contract; f32 layers
+/// get no fuzz (dense packed rows must match bit-for-bit), quantized
+/// layers get float fuzz on top.
+fn format_tol(fmt: KvFormat, exact: &[f32]) -> f32 {
+    match fmt {
+        KvFormat::F32 => 0.0,
+        _ => lethe::kvcache::quant::dequant_error_bound(fmt, exact) + 1e-6,
     }
 }
 
@@ -66,14 +97,22 @@ fn check_lockstep(dense: &GroupCache, quant: &GroupCache) -> Result<(), String> 
             quant.f32_equivalent_bytes()
         ));
     }
-    if quant.live_bytes() >= dense.live_bytes() && !dense.is_empty() {
-        return Err("quantized storage not smaller than dense".into());
+    // Every variant stores at most as much as dense (strictly less for
+    // any quantized layer holding rows; a mixed map's f32 layer prices
+    // at the dense rate, so "≤" is the cross-variant invariant).
+    if quant.live_bytes() > dense.live_bytes() {
+        return Err(format!(
+            "quantized storage larger than dense: {} vs {}",
+            quant.live_bytes(),
+            dense.live_bytes()
+        ));
     }
     Ok(())
 }
 
 /// Reconcile both scratches and compare: identical pair classification,
-/// identical lens, and bounded dequantization error on every live row.
+/// identical lens, and the per-layer format's dequantization bound on
+/// every live row.
 fn check_packed(
     dense: &GroupCache,
     quant: &GroupCache,
@@ -95,15 +134,24 @@ fn check_packed(
     }
     let (bb, c) = ds.bucket();
     for l in 0..LAYERS {
+        let fmt = quant.format_map().get(l);
         for b in 0..bb {
             let live = dense.len(l, b);
             for h in 0..HKV {
                 for r in 0..live {
                     let off = (((l * bb + b) * HKV + h) * c + r) * D;
-                    row_close(&ds.k.data[off..off + D], &qs.k.data[off..off + D])
-                        .map_err(|m| format!("K ({l},{b},{h},{r}): {m}"))?;
-                    row_close(&ds.v.data[off..off + D], &qs.v.data[off..off + D])
-                        .map_err(|m| format!("V ({l},{b},{h},{r}): {m}"))?;
+                    row_close(
+                        fmt,
+                        &ds.k.data[off..off + D],
+                        &qs.k.data[off..off + D],
+                    )
+                    .map_err(|m| format!("K ({l},{b},{h},{r}): {m}"))?;
+                    row_close(
+                        fmt,
+                        &ds.v.data[off..off + D],
+                        &qs.v.data[off..off + D],
+                    )
+                    .map_err(|m| format!("V ({l},{b},{h},{r}): {m}"))?;
                 }
             }
         }
@@ -111,119 +159,139 @@ fn check_packed(
     Ok(())
 }
 
-/// Per-row symmetric int8 bound: |x − dq(q(x))| ≤ amax/127/2 (+ fuzz).
-/// The dense row stores the original values exactly, so its amax is the
-/// amax the quantizer saw.
-fn row_close(exact: &[f32], approx: &[f32]) -> Result<(), String> {
-    let amax = exact.iter().fold(0f32, |m, &v| m.max(v.abs()));
-    let tol = amax / 127.0 * 0.5 + 1e-6;
+/// The dense row stores the original values exactly, so its range is the
+/// range the quantizer saw.
+fn row_close(fmt: KvFormat, exact: &[f32], approx: &[f32]) -> Result<(), String> {
+    let tol = format_tol(fmt, exact);
     for (a, b) in exact.iter().zip(approx) {
         if (a - b).abs() > tol {
-            return Err(format!("{a} vs {b} (tol {tol})"));
+            return Err(format!("{a} vs {b} (tol {tol}, {fmt:?})"));
         }
     }
     Ok(())
 }
 
 #[test]
-fn dense_and_quant_backends_stay_in_lockstep() {
-    check("backend-equivalence", 30, |rng, size| {
-        let mut dense = GroupCache::with_format(dims(), KvFormat::F32);
-        let mut quant = GroupCache::with_format(dims(), KvFormat::QuantI8);
-        let mut ds = PackScratch::new(&dims(), BATCH, CAP);
-        let mut qs = PackScratch::new(&dims(), BATCH, CAP);
+fn quantized_and_mixed_backends_stay_in_lockstep_with_dense() {
+    for (name, formats) in variants() {
+        check(&format!("backend-equivalence-{name}"), 30, |rng, size| {
+            let mut dense = GroupCache::with_format(dims(), KvFormat::F32);
+            let mut quant = GroupCache::with_formats(dims(), formats.clone());
+            let mut ds = PackScratch::new(&dims(), BATCH, CAP);
+            let mut qs = PackScratch::new(&dims(), BATCH, CAP);
 
-        let steps = 4 + size;
-        let mut abs = 0i32;
-        for step in 0..steps {
-            match rng.range(0, 6) {
-                0 | 1 => {
-                    // Append one token to a random (layer, slot), same
-                    // values into both backends.
-                    let l = rng.range(0, LAYERS - 1);
-                    let b = rng.range(0, BATCH - 1);
-                    if dense.len(l, b) < CAP {
-                        let kr = vec_f32(rng, HKV * D, -2.0, 2.0);
-                        let vr = vec_f32(rng, HKV * D, -2.0, 2.0);
+            let steps = 4 + size;
+            let mut abs = 0i32;
+            for step in 0..steps {
+                match rng.range(0, 6) {
+                    0 | 1 => {
+                        // Append one token to a random (layer, slot), same
+                        // values into both backends.
+                        let l = rng.range(0, LAYERS - 1);
+                        let b = rng.range(0, BATCH - 1);
+                        if dense.len(l, b) < CAP {
+                            let kr = vec_f32(rng, HKV * D, -2.0, 2.0);
+                            let vr = vec_f32(rng, HKV * D, -2.0, 2.0);
+                            dense
+                                .insert(l, b, &kr, &vr, abs)
+                                .map_err(|e| e.to_string())?;
+                            quant
+                                .insert(l, b, &kr, &vr, abs)
+                                .map_err(|e| e.to_string())?;
+                            abs += 1;
+                        }
+                    }
+                    2 => {
+                        // Retention: same keep subset on both.
+                        let l = rng.range(0, LAYERS - 1);
+                        let b = rng.range(0, BATCH - 1);
+                        let n = dense.len(l, b);
+                        if n > 0 {
+                            let keep: Vec<usize> =
+                                (0..n).filter(|_| rng.bool(0.6)).collect();
+                            dense
+                                .apply_retention(l, b, &keep)
+                                .map_err(|e| e.to_string())?;
+                            quant
+                                .apply_retention(l, b, &keep)
+                                .map_err(|e| e.to_string())?;
+                        }
+                    }
+                    3 => {
+                        // Prefill-load a random slot from the same tensors.
+                        let b = rng.range(0, BATCH - 1);
+                        let t = rng.range(1, CAP);
+                        let len = rng.range(1, t);
+                        let k_all = HostTensorF32::from_vec(
+                            &[LAYERS, 1, HKV, t, D],
+                            vec_f32(rng, LAYERS * HKV * t * D, -1.0, 1.0),
+                        )
+                        .map_err(|e| e.to_string())?;
+                        let v_all = HostTensorF32::from_vec(
+                            &[LAYERS, 1, HKV, t, D],
+                            vec_f32(rng, LAYERS * HKV * t * D, -1.0, 1.0),
+                        )
+                        .map_err(|e| e.to_string())?;
                         dense
-                            .insert(l, b, &kr, &vr, abs)
+                            .load_prefill(b, &k_all, &v_all, len)
                             .map_err(|e| e.to_string())?;
                         quant
-                            .insert(l, b, &kr, &vr, abs)
-                            .map_err(|e| e.to_string())?;
-                        abs += 1;
-                    }
-                }
-                2 => {
-                    // Retention: same keep subset on both.
-                    let l = rng.range(0, LAYERS - 1);
-                    let b = rng.range(0, BATCH - 1);
-                    let n = dense.len(l, b);
-                    if n > 0 {
-                        let keep: Vec<usize> =
-                            (0..n).filter(|_| rng.bool(0.6)).collect();
-                        dense
-                            .apply_retention(l, b, &keep)
-                            .map_err(|e| e.to_string())?;
-                        quant
-                            .apply_retention(l, b, &keep)
+                            .load_prefill(b, &k_all, &v_all, len)
                             .map_err(|e| e.to_string())?;
                     }
-                }
-                3 => {
-                    // Prefill-load a random slot from the same tensors.
-                    let b = rng.range(0, BATCH - 1);
-                    let t = rng.range(1, CAP);
-                    let len = rng.range(1, t);
-                    let k_all = HostTensorF32::from_vec(
-                        &[LAYERS, 1, HKV, t, D],
-                        vec_f32(rng, LAYERS * HKV * t * D, -1.0, 1.0),
-                    )
-                    .map_err(|e| e.to_string())?;
-                    let v_all = HostTensorF32::from_vec(
-                        &[LAYERS, 1, HKV, t, D],
-                        vec_f32(rng, LAYERS * HKV * t * D, -1.0, 1.0),
-                    )
-                    .map_err(|e| e.to_string())?;
-                    dense
-                        .load_prefill(b, &k_all, &v_all, len)
-                        .map_err(|e| e.to_string())?;
-                    quant
-                        .load_prefill(b, &k_all, &v_all, len)
-                        .map_err(|e| e.to_string())?;
-                }
-                4 => {
-                    // Swap two random slots (reap path).
-                    let a = rng.range(0, BATCH - 1);
-                    let b = rng.range(0, BATCH - 1);
-                    dense.swap_slots(a, b);
-                    quant.swap_slots(a, b);
-                }
-                5 => {
-                    // RASR score update — identical float math both sides.
-                    let l = rng.range(0, LAYERS - 1);
-                    let b = rng.range(0, BATCH - 1);
-                    let n = dense.len(l, b);
-                    if n > 0 {
-                        let add = vec_f32(rng, n, 0.0, 1.0);
-                        dense.accumulate_scores(l, b, 0.9, &add);
-                        quant.accumulate_scores(l, b, 0.9, &add);
+                    4 => {
+                        // Swap two random slots (reap path).
+                        let a = rng.range(0, BATCH - 1);
+                        let b = rng.range(0, BATCH - 1);
+                        dense.swap_slots(a, b);
+                        quant.swap_slots(a, b);
+                    }
+                    5 => {
+                        // RASR score update — identical float math both sides.
+                        let l = rng.range(0, LAYERS - 1);
+                        let b = rng.range(0, BATCH - 1);
+                        let n = dense.len(l, b);
+                        if n > 0 {
+                            let add = vec_f32(rng, n, 0.0, 1.0);
+                            dense.accumulate_scores(l, b, 0.9, &add);
+                            quant.accumulate_scores(l, b, 0.9, &add);
+                        }
+                    }
+                    _ => {
+                        let b = rng.range(0, BATCH - 1);
+                        dense.reset_slot(b);
+                        quant.reset_slot(b);
                     }
                 }
-                _ => {
-                    let b = rng.range(0, BATCH - 1);
-                    dense.reset_slot(b);
-                    quant.reset_slot(b);
-                }
+
+                check_lockstep(&dense, &quant)
+                    .map_err(|m| format!("[{name}] step {step}: {m}"))?;
+                check_packed(&dense, &quant, &mut ds, &mut qs)
+                    .map_err(|m| format!("[{name}] step {step}: {m}"))?;
             }
+            Ok(())
+        });
+    }
+}
 
-            check_lockstep(&dense, &quant)
-                .map_err(|m| format!("step {step}: {m}"))?;
-            check_packed(&dense, &quant, &mut ds, &mut qs)
-                .map_err(|m| format!("step {step}: {m}"))?;
-        }
-        Ok(())
-    });
+#[test]
+fn mixed_map_stores_strictly_less_once_the_quant_layer_fills() {
+    // The mixed variant's "≤ dense" invariant becomes strict as soon as
+    // its quantized layer holds rows — the f32 layer alone must price
+    // identically to dense.
+    let mut mixed = GroupCache::with_formats(
+        dims(),
+        FormatMap::new(vec![KvFormat::F32, KvFormat::QuantI4]),
+    );
+    let mut dense = GroupCache::with_format(dims(), KvFormat::F32);
+    let row = vec![0.5f32; HKV * D];
+    mixed.insert(0, 0, &row, &row, 0).unwrap();
+    dense.insert(0, 0, &row, &row, 0).unwrap();
+    assert_eq!(mixed.live_bytes(), dense.live_bytes());
+    mixed.insert(1, 0, &row, &row, 0).unwrap();
+    dense.insert(1, 0, &row, &row, 0).unwrap();
+    assert!(mixed.live_bytes() < dense.live_bytes());
+    assert_eq!(mixed.f32_equivalent_bytes(), dense.live_bytes());
 }
 
 #[test]
@@ -232,31 +300,34 @@ fn quant_scratch_residency_survives_cache_swap_between_groups() {
     // one scratch alternating between two quantized caches must force a
     // cold re-sync on every owner change (unique cache ids), and the
     // delta-maintained image must stay bit-identical to a fresh pack.
-    let mut a = GroupCache::with_format(dims(), KvFormat::QuantI8);
-    let mut b = GroupCache::with_format(dims(), KvFormat::QuantI8);
-    let row_a = vec![1.0f32; HKV * D];
-    let row_b = vec![2.0f32; HKV * D];
-    for l in 0..LAYERS {
-        a.insert(l, 0, &row_a, &row_a, 0).unwrap();
-        b.insert(l, 0, &row_b, &row_b, 0).unwrap();
-        b.insert(l, 0, &row_b, &row_b, 1).unwrap();
-    }
-    let mut scratch = PackScratch::new(&dims(), 2, 16);
-    for _ in 0..3 {
-        for cache in [&a, &b] {
-            let st = cache.pack_delta(&mut scratch).unwrap();
-            assert_eq!(st.pairs_full, LAYERS * 2,
-                       "owner change must cold-sync every pair");
-            // Reference: fresh pack at the same bucket.
-            let shape = [LAYERS, 2, HKV, 16, D];
-            let mut k = HostTensorF32::zeros(&shape);
-            let mut v = HostTensorF32::zeros(&shape);
-            let mut lens =
-                lethe::runtime::tensors::HostTensorI32::zeros(&[LAYERS, 2]);
-            cache.pack(2, 16, &mut k, &mut v, &mut lens).unwrap();
-            assert_eq!(k.data, scratch.k.data);
-            assert_eq!(v.data, scratch.v.data);
-            assert_eq!(lens.data, scratch.lens.data);
+    // Runs on every quantized/mixed variant.
+    for (name, formats) in variants() {
+        let mut a = GroupCache::with_formats(dims(), formats.clone());
+        let mut b = GroupCache::with_formats(dims(), formats);
+        let row_a = vec![1.0f32; HKV * D];
+        let row_b = vec![2.0f32; HKV * D];
+        for l in 0..LAYERS {
+            a.insert(l, 0, &row_a, &row_a, 0).unwrap();
+            b.insert(l, 0, &row_b, &row_b, 0).unwrap();
+            b.insert(l, 0, &row_b, &row_b, 1).unwrap();
+        }
+        let mut scratch = PackScratch::new(&dims(), 2, 16);
+        for _ in 0..3 {
+            for cache in [&a, &b] {
+                let st = cache.pack_delta(&mut scratch).unwrap();
+                assert_eq!(st.pairs_full, LAYERS * 2,
+                           "[{name}] owner change must cold-sync every pair");
+                // Reference: fresh pack at the same bucket.
+                let shape = [LAYERS, 2, HKV, 16, D];
+                let mut k = HostTensorF32::zeros(&shape);
+                let mut v = HostTensorF32::zeros(&shape);
+                let mut lens =
+                    lethe::runtime::tensors::HostTensorI32::zeros(&[LAYERS, 2]);
+                cache.pack(2, 16, &mut k, &mut v, &mut lens).unwrap();
+                assert_eq!(k.data, scratch.k.data, "[{name}]");
+                assert_eq!(v.data, scratch.v.data, "[{name}]");
+                assert_eq!(lens.data, scratch.lens.data, "[{name}]");
+            }
         }
     }
 }
