@@ -9,11 +9,12 @@ use std::path::Path;
 use anyhow::Result;
 
 use crate::config::{KvConfig, MixedKvRule, ServingConfig};
-use crate::engine::{Engine, SeqState};
+use crate::engine::{Engine, FinishReason, SeqState};
 use crate::kvcache::KvFormat;
 use crate::model::Tokenizer;
 use crate::policy::{make_policy, PolicyKind};
 use crate::runtime::Runtime;
+use crate::scheduler::{Completion, Request, Scheduler};
 use crate::util::prng::Rng;
 use crate::workload::Task;
 
@@ -158,6 +159,87 @@ pub fn run_tasks(
         pack_bytes_copied: engine.metrics.pack_bytes_copied - pack0,
         delta_pack_hits: engine.metrics.delta_pack_hits - hits0,
     })
+}
+
+/// Lifecycle telemetry from a sustained-load churn run ([`run_churn`]).
+pub struct ChurnStats {
+    pub wall_s: f64,
+    /// Completions with `FinishReason::Oom` (must be zero whenever
+    /// every sequence fits the compiled capacity alone).
+    pub oom_finishes: usize,
+    /// Recompute-preemptions over the run.
+    pub preemptions: u64,
+    /// Preempted sequences resumed (prompt + generated re-prefilled).
+    pub resumes: u64,
+    /// Layer formats migrated in place on the live group.
+    pub kv_migrations: u64,
+    /// Migrations that happened while the core was serving load (live
+    /// rows in the group, a prefill in flight, or work queued).
+    pub busy_migrations: u64,
+    /// Ticks where a prefill chunk and at least one decoded token
+    /// landed together — chunked prefill interleaving with decode.
+    pub interleaved_ticks: usize,
+    /// Largest waiting-queue depth observed (over-subscription proof).
+    pub peak_queue_depth: usize,
+}
+
+/// Sustained-load churn driver over the real [`Scheduler`] (the serving
+/// path with chunked prefill, recompute-preemption and live format
+/// migration — not the bench-group closed loop). All `tasks` are
+/// submitted up front, over-subscribing the group; returns lifecycle
+/// telemetry plus every completion.
+pub fn run_churn(
+    engine: &mut Engine,
+    tok: &Tokenizer,
+    policy: PolicyKind,
+    tasks: &[Task],
+    max_new: usize,
+) -> Result<(ChurnStats, Vec<Completion>)> {
+    let mut sched = Scheduler::new(engine, policy);
+    for (i, task) in tasks.iter().enumerate() {
+        sched.submit(Request {
+            id: i as u64,
+            prompt: tok.encode_prompt(&task.prompt)?,
+            max_new_tokens: max_new,
+            policy,
+            submitted_at: std::time::Instant::now(),
+        })?;
+    }
+    let t0 = std::time::Instant::now();
+    let mut stats = ChurnStats {
+        wall_s: 0.0,
+        oom_finishes: 0,
+        preemptions: 0,
+        resumes: 0,
+        kv_migrations: 0,
+        busy_migrations: 0,
+        interleaved_ticks: 0,
+        peak_queue_depth: 0,
+    };
+    let mut completions = Vec::new();
+    while !sched.idle() {
+        let busy = !sched.group.cache.is_empty()
+            || sched.prefilling() > 0
+            || sched.waiting() > 0;
+        stats.peak_queue_depth = stats.peak_queue_depth.max(sched.waiting());
+        let r = sched.tick(engine)?;
+        if r.prefill_chunks > 0 && r.decoded_tokens > 0 {
+            stats.interleaved_ticks += 1;
+        }
+        if r.migrated > 0 && busy {
+            stats.busy_migrations += r.migrated as u64;
+        }
+        completions.extend(r.completed);
+    }
+    stats.wall_s = t0.elapsed().as_secs_f64();
+    stats.oom_finishes = completions
+        .iter()
+        .filter(|c| c.finish == FinishReason::Oom)
+        .count();
+    stats.preemptions = sched.preemptions;
+    stats.resumes = sched.resumes;
+    stats.kv_migrations = sched.migrations;
+    Ok((stats, completions))
 }
 
 /// Write the hotpath microbench rows to `bench_results/hotpath.csv`

@@ -151,6 +151,25 @@ pub struct SchedulerConfig {
     pub max_new_tokens: usize,
     /// Prefill bucket sizes available (must match compiled artifacts).
     pub prefill_buckets: Vec<usize>,
+    /// Chunked-prefill grain: per scheduler tick, one prefilling
+    /// sequence advances by up to this many prompt tokens (the compiled
+    /// prefill kernels recompute the prefix at the smallest bucket that
+    /// fits, so this bounds the per-tick stall to one executable run).
+    /// Long prompts therefore interleave with decode steps instead of
+    /// blocking the co-batched group.
+    pub prefill_chunk: usize,
+    /// Group-wide live-KV byte budget (0 = unlimited). When the
+    /// co-batched group's `live_bytes` exceeds it, the youngest
+    /// sequence is recompute-preempted back to the waiting queue
+    /// (prompt + generated re-prefilled on resume) — never OOM-killed;
+    /// `FinishReason::Oom` stays reserved for sequences that exceed the
+    /// largest compiled capacity even alone.
+    pub kv_budget_bytes: usize,
+    /// Consecutive ticks the engine's resolved per-layer format map
+    /// must differ from the live group's before the scheduler migrates
+    /// layer formats in place (hysteresis against a sparsity EMA
+    /// hovering at the `kv.mixed` threshold).
+    pub migrate_patience: usize,
 }
 
 impl Default for SchedulerConfig {
@@ -160,6 +179,9 @@ impl Default for SchedulerConfig {
             max_waiting: 256,
             max_new_tokens: 96,
             prefill_buckets: vec![32, 64, 128, 192],
+            prefill_chunk: 64,
+            kv_budget_bytes: 0,
+            migrate_patience: 4,
         }
     }
 }
@@ -240,6 +262,9 @@ impl ServingConfig {
             get_usize(s, "max_batch", &mut c.scheduler.max_batch)?;
             get_usize(s, "max_waiting", &mut c.scheduler.max_waiting)?;
             get_usize(s, "max_new_tokens", &mut c.scheduler.max_new_tokens)?;
+            get_usize(s, "prefill_chunk", &mut c.scheduler.prefill_chunk)?;
+            get_usize(s, "kv_budget_bytes", &mut c.scheduler.kv_budget_bytes)?;
+            get_usize(s, "migrate_patience", &mut c.scheduler.migrate_patience)?;
             if let Some(v) = s.opt("prefill_buckets") {
                 c.scheduler.prefill_buckets = v
                     .as_arr()?
@@ -318,6 +343,10 @@ impl ServingConfig {
         anyhow::ensure!(self.scheduler.max_batch >= 1, "max_batch >= 1");
         anyhow::ensure!(!self.scheduler.prefill_buckets.is_empty(),
                         "need at least one prefill bucket");
+        anyhow::ensure!(self.scheduler.prefill_chunk >= 1,
+                        "prefill_chunk must be >= 1");
+        anyhow::ensure!(self.scheduler.migrate_patience >= 1,
+                        "migrate_patience must be >= 1");
         if let Some(m) = &self.kv.mixed {
             anyhow::ensure!(
                 (0.0..=1.0).contains(&m.threshold),
@@ -354,6 +383,34 @@ mod tests {
         assert_eq!(c.lethe.recent_ratio, 0.2);
         assert_eq!(c.lethe.gamma, 0.95); // untouched default
         assert_eq!(c.scheduler.max_batch, 4);
+    }
+
+    #[test]
+    fn scheduler_lifecycle_knobs_parse_and_validate() {
+        let c = ServingConfig::from_json(&parse("{}").unwrap()).unwrap();
+        assert_eq!(c.scheduler.prefill_chunk, 64);
+        assert_eq!(c.scheduler.kv_budget_bytes, 0);
+        assert_eq!(c.scheduler.migrate_patience, 4);
+        let c = ServingConfig::from_json(
+            &parse(
+                r#"{"scheduler": {"prefill_chunk": 16,
+                                  "kv_budget_bytes": 65536,
+                                  "migrate_patience": 2}}"#,
+            )
+            .unwrap(),
+        )
+        .unwrap();
+        assert_eq!(c.scheduler.prefill_chunk, 16);
+        assert_eq!(c.scheduler.kv_budget_bytes, 65536);
+        assert_eq!(c.scheduler.migrate_patience, 2);
+        assert!(ServingConfig::from_json(
+            &parse(r#"{"scheduler": {"prefill_chunk": 0}}"#).unwrap()
+        )
+        .is_err());
+        assert!(ServingConfig::from_json(
+            &parse(r#"{"scheduler": {"migrate_patience": 0}}"#).unwrap()
+        )
+        .is_err());
     }
 
     #[test]

@@ -11,7 +11,43 @@ use crate::policy::{EvictionPolicy, PolicyKind};
 pub enum FinishReason {
     Eos,
     Length,
+    /// Reserved for sequences that cannot fit even alone: the live
+    /// cache of this single sequence exceeds the largest compiled
+    /// capacity. Co-residency pressure is handled by recompute-
+    /// preemption in the scheduler, never by an OOM kill.
     Oom,
+}
+
+/// Lifecycle of one sequence through the serving core. Owned by the
+/// scheduler's state machine:
+///
+/// ```text
+/// Waiting ──► Prefilling{consumed} ──► Decoding ──► Finished
+///    ▲                                    │
+///    └────────────── Preempted ◄──────────┘   (recompute on resume)
+/// ```
+///
+/// `Prefilling` consumes the prompt chunk-wise (`scheduler.prefill_chunk`
+/// tokens per tick) so long prompts interleave with decode steps; a
+/// `Preempted` sequence re-enters `Waiting` carrying its generated
+/// tokens, and its resume prefill recomputes prompt + generated so the
+/// continuation is exactly the uncontended one (greedy decode).
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum SeqPhase {
+    /// In the waiting queue; no work done yet (or re-queued after a
+    /// preemption).
+    Waiting,
+    /// Chunk-wise prompt processing: `consumed` prompt tokens done.
+    Prefilling {
+        /// Prompt tokens processed so far.
+        consumed: usize,
+    },
+    /// Co-batched in the decode group, generating.
+    Decoding,
+    /// Evicted under co-residency pressure; waiting to resume.
+    Preempted,
+    /// Completed (`FinishReason` set) and reported.
+    Finished,
 }
 
 /// One pruning round's record (Figure 3 / diagnostics).
@@ -38,6 +74,18 @@ pub struct SeqState {
     pub eos: i32,
     pub finished: Option<FinishReason>,
     pub prune_log: Vec<PruneEvent>,
+    /// Lifecycle position (see [`SeqPhase`]); advanced by the scheduler
+    /// and, on completion, by the token-accept bookkeeping.
+    pub phase: SeqPhase,
+    /// Original prompt token ids, kept so a recompute-preemption can
+    /// re-prefill prompt + generated on resume.
+    pub prompt: Vec<i32>,
+    /// Monotonic admission stamp (set by the scheduler at install);
+    /// the *youngest* sequence — largest stamp — is the preemption
+    /// victim, minimizing recomputed work.
+    pub admit_stamp: u64,
+    /// How many times this sequence has been preempted and resumed.
+    pub preemptions: u32,
     /// Wall-clock bookkeeping for latency metrics (set by the server).
     pub submitted_at: Option<std::time::Instant>,
     pub first_token_at: Option<std::time::Instant>,
@@ -64,6 +112,10 @@ impl SeqState {
             eos,
             finished: None,
             prune_log: Vec::new(),
+            phase: SeqPhase::Waiting,
+            prompt: Vec::new(),
+            admit_stamp: 0,
+            preemptions: 0,
             submitted_at: None,
             first_token_at: None,
         }
@@ -89,10 +141,14 @@ impl SeqState {
     fn accept(&mut self, token: i32) {
         self.generated.push(token);
         self.last_token = token;
+        self.phase = SeqPhase::Decoding;
         if token == self.eos {
             self.finished = Some(FinishReason::Eos);
         } else if self.generated.len() >= self.max_new {
             self.finished = Some(FinishReason::Length);
+        }
+        if self.finished.is_some() {
+            self.phase = SeqPhase::Finished;
         }
     }
 
@@ -192,15 +248,35 @@ impl DecodeGroup {
         (&mut self.seqs, &mut self.cache)
     }
 
-    /// Mark the sequence with the longest cache as OOM-failed (FullKV's
-    /// fate at capacity; mirrors the paper's OOM cells).
+    /// Mark the sequence with the longest cache as OOM-failed. The
+    /// longest sequence is the one whose live rows exceed the largest
+    /// compiled capacity — it would not fit even alone, which is exactly
+    /// what [`FinishReason::Oom`] is reserved for (co-residency pressure
+    /// is the scheduler's recompute-preemption, not an OOM).
     pub fn mark_oom(&mut self) {
         if let Some((b, _)) = (0..self.seqs.len())
             .map(|b| (b, self.cache.max_len_slot(b)))
             .max_by_key(|&(_, l)| l)
         {
             self.seqs[b].finished = Some(FinishReason::Oom);
+            self.seqs[b].phase = SeqPhase::Finished;
         }
+    }
+
+    /// Take the sequence at `slot` out of the group (recompute-
+    /// preemption): its cache rows are recycled exactly like a reap —
+    /// swap-with-last keeps the survivors front-packed — but the
+    /// [`SeqState`] is returned to the caller instead of being reported
+    /// done, so the scheduler can re-queue it for a later resume.
+    pub fn remove(&mut self, slot: usize) -> SeqState {
+        assert!(slot < self.seqs.len(), "slot {slot} not active");
+        let last = self.seqs.len() - 1;
+        self.cache.swap_slots(slot, last);
+        self.seqs.swap(slot, last);
+        let mut seq = self.seqs.pop().unwrap();
+        self.cache.reset_slot(last);
+        seq.phase = SeqPhase::Preempted;
+        seq
     }
 
     /// Remove finished sequences, keeping slots front-packed; returns how
@@ -283,6 +359,39 @@ mod tests {
         assert_eq!(g.cache.len(0, 2), 0);
         assert_eq!(g.done.len(), 1);
         assert!(g.has_free_slot());
+    }
+
+    #[test]
+    fn remove_returns_seq_and_recycles_slot() {
+        let mut g = DecodeGroup::new(dims(3), PolicyKind::FullKv);
+        for i in 0..3 {
+            let slot = g.free_slot().unwrap();
+            g.cache
+                .insert(0, slot, &[i as f32; 4], &[0.0; 4], 0)
+                .unwrap();
+            let mut s = seq(i as u64);
+            s.note_prefilled(1, 10);
+            g.install(slot, s);
+        }
+        let victim = g.remove(1);
+        assert_eq!(victim.id, 1);
+        assert_eq!(victim.phase, SeqPhase::Preempted);
+        assert_eq!(g.active(), 2);
+        // Old slot 2 (id 2) front-packed into slot 1, its rows along.
+        assert_eq!(g.seqs[1].id, 2);
+        assert_eq!(g.cache.len(0, 1), 1);
+        assert_eq!(g.cache.len(0, 2), 0, "victim's rows recycled");
+        assert!(g.done.is_empty(), "a preemption is not a completion");
+    }
+
+    #[test]
+    fn phase_tracks_lifecycle_on_completion() {
+        let mut s = seq(1);
+        assert_eq!(s.phase, SeqPhase::Waiting);
+        s.note_prefilled(4, 10);
+        assert_eq!(s.phase, SeqPhase::Decoding);
+        s.note_token(2); // EOS
+        assert_eq!(s.phase, SeqPhase::Finished);
     }
 
     #[test]

@@ -30,14 +30,14 @@ use std::time::Instant;
 
 use anyhow::{anyhow, Result};
 
-pub use group::{DecodeGroup, FinishReason, PruneEvent, SeqState};
+pub use group::{DecodeGroup, FinishReason, PruneEvent, SeqPhase, SeqState};
 
 use crate::attn::score::ProbsView;
 use crate::config::ServingConfig;
 use crate::kvcache::{CacheDims, FormatMap, PackScratch, SlotViewMut};
 use crate::metrics::EngineMetrics;
 use crate::policy::{LayerState, PolicyKind};
-use crate::runtime::registry::DecodeOut;
+use crate::runtime::registry::{DecodeOut, PrefillOut};
 use crate::runtime::tensors::HostTensorF32;
 use crate::runtime::Runtime;
 use crate::util::threadpool::ThreadPool;
@@ -188,7 +188,9 @@ impl Engine {
     }
 
     /// Prefill a prompt into slot `slot` of the group; returns the first
-    /// generated token.
+    /// generated token. This is the monolithic path (benches, eval, the
+    /// chunked scheduler's final chunk is [`Engine::prefill_window`] +
+    /// [`Engine::install_prefill`]).
     pub fn prefill(
         &mut self,
         group: &mut DecodeGroup,
@@ -196,11 +198,51 @@ impl Engine {
         seq: SeqState,
         prompt: &[i32],
     ) -> Result<i32> {
+        let out = self.prefill_window(prompt)?;
+        self.install_prefill(group, slot, seq, prompt, out, false)
+    }
+
+    /// Run the bucketed prefill executable over a prompt *prefix* and
+    /// return its raw outputs. This is one chunk of a chunked prefill:
+    /// the compiled kernels take no prior KV, so each chunk recomputes
+    /// the prefix from position 0 at the smallest bucket that fits —
+    /// intermediate chunks bound the per-tick stall (one executable run)
+    /// and only the final chunk's outputs are installed.
+    pub fn prefill_window(&mut self, prefix: &[i32]) -> Result<PrefillOut> {
         let t0 = Instant::now();
-        let bucket = self.rt.prefill_bucket(prompt.len())?;
-        let out = self.rt.prefill(bucket, prompt)?;
-        let n = prompt.len();
+        let bucket = self.rt.prefill_bucket(prefix.len())?;
+        let out = self.rt.prefill(bucket, prefix)?;
+        self.metrics.prefill_seconds.push(t0.elapsed().as_secs_f64());
+        self.metrics.prefill_tokens += prefix.len() as u64;
+        Ok(out)
+    }
+
+    /// Install a completed prefill into slot `slot`: load the K/V rows,
+    /// seed RASR scores (Eq. 2) and sparsity, run the policies, and
+    /// record the generated token. `tokens` is exactly what
+    /// [`Engine::prefill_window`] consumed. With `resume = false` this
+    /// is a fresh prompt (`tokens` = the prompt; the token is the
+    /// sequence's first). With `resume = true` the sequence is being
+    /// revived after a recompute-preemption: `tokens` is its original
+    /// prompt plus everything it had generated, so the recomputed cache
+    /// and the produced next token are exactly what an uncontended run
+    /// would hold at this point (greedy decode is deterministic).
+    pub fn install_prefill(
+        &mut self,
+        group: &mut DecodeGroup,
+        slot: usize,
+        mut seq: SeqState,
+        tokens: &[i32],
+        out: PrefillOut,
+        resume: bool,
+    ) -> Result<i32> {
+        let n = tokens.len();
         group.cache.load_prefill(slot, &out.k_all, &out.v_all, n)?;
+        if !resume && seq.prompt.is_empty() {
+            // Keep the prompt for a possible future recompute-preemption
+            // (the bench path constructs SeqState without one).
+            seq.prompt = tokens.to_vec();
+        }
         group.install(slot, seq);
 
         // RASR init (Eq. 2): head-summed prefill attention mass.
@@ -217,10 +259,28 @@ impl Engine {
         self.observe_group_sparsity(group);
 
         let tok = argmax(&out.logits.data);
-        group.seq_mut(slot).note_prefilled(n, tok);
-        self.metrics.prefill_seconds.push(t0.elapsed().as_secs_f64());
-        self.metrics.prefill_tokens += n as u64;
+        if resume {
+            // The seq already carries prompt_len/abs_pos/generated from
+            // before the preemption; the prefill logits at the last
+            // position are exactly the next decode step's logits.
+            group.seq_mut(slot).note_token(tok);
+        } else {
+            group.seq_mut(slot).note_prefilled(n, tok);
+        }
         Ok(tok)
+    }
+
+    /// EOS token id from the artifact manifest's tokenizer specials
+    /// (position of `"<eos>"`; falls back to the historical id 2 when
+    /// the manifest carries no such special).
+    pub fn eos_token(&self) -> i32 {
+        self.rt.meta.eos_id().unwrap_or(2)
+    }
+
+    /// Largest compiled prefill bucket — the longest prompt (or
+    /// recompute-preemption resume prefix) the runtime can process.
+    pub fn max_prefill_tokens(&self) -> usize {
+        self.rt.meta.prefill_ts.iter().copied().max().unwrap_or(0)
     }
 
     /// One decode step over all active sequences. Returns per-slot newly

@@ -578,11 +578,44 @@ impl KvBackend {
 
     /// Refresh `out` with one raw pointer set per layer, for the
     /// slot-view path (see [`RawKv`]). The pointers stay valid until the
-    /// backend is mutated structurally (never after construction) or
+    /// backend is mutated structurally ([`KvBackend::migrate_layer`]) or
     /// moved; callers re-derive the table on every view handout.
     pub(super) fn raw_table(&mut self, out: &mut Vec<RawKv>) {
         out.clear();
         out.extend(self.stores.iter_mut().map(|s| s.raw()));
+    }
+
+    /// Rebuild layer `l`'s store in `fmt`, carrying the live rows over
+    /// (`slot_lens[b]` live rows per slot, supplied by the owning
+    /// [`super::GroupCache`]). Each live row is materialized as f32
+    /// through the old store's [`KvStore::read_rows`] (a dequantization
+    /// on quantized storage) and re-encoded through the new store's
+    /// [`KvStore::load_rows`] (a requantization). Dead rows are not
+    /// copied: the fresh store's zero-initialized buffers keep
+    /// [`KvStore::read_rows`] deterministic over them, exactly like a
+    /// newly constructed cache — callers must mark the layer rewritten
+    /// so resident pack scratches re-read it.
+    pub fn migrate_layer(&mut self, l: usize, fmt: KvFormat, slot_lens: &[usize]) {
+        debug_assert_eq!(slot_lens.len(), self.dims.batch);
+        let layer_dims = CacheDims { layers: 1, ..self.dims };
+        let mut fresh = LayerKv::new(layer_dims, fmt);
+        let d = self.dims.d_head;
+        let mut k_buf = Vec::new();
+        let mut v_buf = Vec::new();
+        for (b, &len) in slot_lens.iter().enumerate() {
+            if len == 0 {
+                continue;
+            }
+            k_buf.resize(len * d, 0.0);
+            v_buf.resize(len * d, 0.0);
+            for h in 0..self.dims.kv_heads {
+                let old = self.stores[l].store();
+                old.read_rows(0, b, h, false, 0, len, &mut k_buf);
+                old.read_rows(0, b, h, true, 0, len, &mut v_buf);
+                fresh.store_mut().load_rows(0, b, h, &k_buf, &v_buf, len);
+            }
+        }
+        self.stores[l] = fresh;
     }
 }
 

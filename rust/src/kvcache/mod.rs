@@ -24,7 +24,12 @@
 //! or the sparsity-fed `kv.mixed` rule place each layer in its own
 //! format (the paper's "compose with quantized caches" claim, extended
 //! to precision-per-layer: high-sparsity layers tolerate aggressive
-//! compression while dense layers keep full fidelity).
+//! compression while dense layers keep full fidelity). A layer's format
+//! can change **while the group is live** via
+//! [`GroupCache::migrate_layer_format`]: the rows are dequantized and
+//! re-encoded into a fresh store and the layer is marked rewritten, so
+//! resident pack scratches repack exactly that layer on the next
+//! [`GroupCache::pack_delta`].
 //!
 //! Eviction is [`GroupCache::apply_retention`]: an in-place
 //! front-packing gather by source index, applied identically to the
@@ -38,7 +43,7 @@
 //! Every (layer, slot) pair carries a [`SlotEpoch`]: `epoch` advances on
 //! *every* mutation of that pair, and `rewrite` records the epoch of the
 //! last **non-append** mutation (retention gather, prefill load, slot
-//! swap, slot reset). Appends ([`GroupCache::insert`]) bump only `epoch`,
+//! swap, slot reset, live format migration). Appends ([`GroupCache::insert`]) bump only `epoch`,
 //! so `rewrite < e <= epoch` certifies that everything between epoch `e`
 //! and now was append-only: rows `0..len(e)` are unchanged and only rows
 //! `len(e)..len` are new. Because the watermarks live here — not in the
@@ -130,6 +135,12 @@ impl FormatMap {
     /// Layer `l`'s storage format.
     pub fn get(&self, l: usize) -> KvFormat {
         self.per_layer[l]
+    }
+
+    /// Re-point layer `l` at `fmt` (live-migration bookkeeping; the row
+    /// payload itself moves in [`GroupCache::migrate_layer_format`]).
+    pub fn set(&mut self, l: usize, fmt: KvFormat) {
+        self.per_layer[l] = fmt;
     }
 
     /// The formats as a slice (index = layer).
@@ -317,6 +328,42 @@ impl GroupCache {
     pub fn f32_equivalent_bytes(&self) -> usize {
         let row = self.kv.f32_row_bytes();
         self.lens.iter().map(|&n| n * row).sum()
+    }
+
+    /// Bytes `rows` cached token rows would occupy across all layers at
+    /// the group's current per-layer formats — the scheduler's admission
+    /// and preemption-budget projection for a prompt of `rows` tokens.
+    pub fn bytes_for_rows(&self, rows: usize) -> usize {
+        (0..self.dims.layers)
+            .map(|l| self.kv.layer_row_bytes(l) * rows)
+            .sum()
+    }
+
+    /// Rewrite layer `l`'s rows into a freshly constructed `fmt` store
+    /// **while the group stays live**: lens/pos/scores are untouched,
+    /// the K/V payload is materialized as f32 row-wise from the old
+    /// store (a dequantization on quantized storage) and re-encoded into
+    /// the new one (a requantization), and every (l, b) pair's rewrite
+    /// watermark is bumped so the next [`GroupCache::pack_delta`]
+    /// re-copies exactly that layer — the scratch then reads the
+    /// migrated store, staying bit-identical to a fresh pack. Lossy when
+    /// either side is quantized, bounded by the formats' dequantization
+    /// error bounds ([`quant::dequant_error_bound`]). Returns `false`
+    /// (and touches nothing) when the layer already stores `fmt`.
+    pub fn migrate_layer_format(&mut self, l: usize, fmt: KvFormat) -> Result<bool> {
+        ensure!(l < self.dims.layers, "layer {l} out of range");
+        if self.formats.get(l) == fmt {
+            return Ok(false);
+        }
+        let lens: Vec<usize> =
+            (0..self.dims.batch).map(|b| self.len(l, b)).collect();
+        self.kv.migrate_layer(l, fmt, &lens);
+        self.formats.set(l, fmt);
+        for b in 0..self.dims.batch {
+            let idx = self.lb(l, b);
+            self.touch_rewrite(idx);
+        }
+        Ok(true)
     }
 
     /// Original absolute position of each live row of (l, b).
@@ -1184,6 +1231,70 @@ mod tests {
         c.apply_retention(1, 0, &[0, 2]).unwrap();
         c.swap_slots(0, 1);
         c.pack_delta(&mut s).unwrap();
+        assert_matches_fresh_pack(&c, &s);
+    }
+
+    #[test]
+    fn migrate_layer_format_keeps_bookkeeping_and_values() {
+        let mut c = GroupCache::new(dims());
+        for t in 0..5 {
+            c.insert(0, 0, &row(t as f32, 2, 4), &row(-(t as f32), 2, 4), t)
+                .unwrap();
+        }
+        c.accumulate_scores(0, 0, 1.0, &[0.1, 0.2, 0.3, 0.4, 0.5]);
+        let pos0 = c.pos(0, 0).to_vec();
+        let sc0 = c.scores(0, 0).to_vec();
+        let bytes_dense = c.live_bytes();
+        let e_before = c.slot_epoch(0, 0);
+        let other_layer = c.slot_epoch(1, 0);
+        assert!(c.migrate_layer_format(0, KvFormat::QuantI8).unwrap());
+        assert_eq!(c.format_map().get(0), KvFormat::QuantI8);
+        assert_eq!(c.format_label(), "mixed");
+        // Bookkeeping untouched, bytes repriced at the new rate.
+        assert_eq!(c.len(0, 0), 5);
+        assert_eq!(c.pos(0, 0), &pos0[..]);
+        assert_eq!(c.scores(0, 0), &sc0[..]);
+        assert!(c.live_bytes() < bytes_dense);
+        assert_eq!(c.f32_equivalent_bytes(), bytes_dense);
+        // Migration is a rewrite of exactly that layer.
+        let e_after = c.slot_epoch(0, 0);
+        assert!(e_after.epoch > e_before.epoch);
+        assert_eq!(e_after.rewrite, e_after.epoch, "migration is a rewrite");
+        assert_eq!(c.slot_epoch(1, 0), other_layer, "other layers untouched");
+        // Values survive the dequant → requant round trip (q8 bound).
+        let got = k_at(&c, 0, 0, 0, 3);
+        assert!((got - 3.0).abs() < 0.03, "{got}");
+        // No-op migration reports false and bumps nothing.
+        assert!(!c.migrate_layer_format(0, KvFormat::QuantI8).unwrap());
+        assert_eq!(c.slot_epoch(0, 0), e_after);
+        // Out-of-range layer is an error.
+        assert!(c.migrate_layer_format(7, KvFormat::F32).is_err());
+    }
+
+    #[test]
+    fn migrate_layer_format_keeps_delta_pack_bit_identical() {
+        let mut c = GroupCache::with_format(dims(), KvFormat::QuantI8);
+        for t in 0..4 {
+            for l in 0..2 {
+                c.insert(l, 0, &row(t as f32, 2, 4), &row(t as f32, 2, 4), t)
+                    .unwrap();
+            }
+        }
+        // Retention first, so the old store carries stale dead rows the
+        // migrated store must NOT inherit.
+        c.apply_retention(1, 0, &[0, 2, 3]).unwrap();
+        let mut s = PackScratch::new(&c.dims, 2, 8);
+        c.pack_delta(&mut s).unwrap();
+        c.migrate_layer_format(1, KvFormat::F32).unwrap();
+        let st = c.pack_delta(&mut s).unwrap();
+        assert_eq!(st.pairs_full, 2, "exactly the migrated layer repacks");
+        assert_eq!(st.pairs_skipped, 2);
+        assert_matches_fresh_pack(&c, &s);
+        // An append after migration lands on the new store via the
+        // normal delta path.
+        c.insert(1, 0, &row(9.0, 2, 4), &row(9.0, 2, 4), 4).unwrap();
+        let st = c.pack_delta(&mut s).unwrap();
+        assert_eq!(st.pairs_delta, 1);
         assert_matches_fresh_pack(&c, &s);
     }
 

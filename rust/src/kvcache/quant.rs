@@ -27,6 +27,13 @@
 //! cache-level storage built on them lives in [`super::backend`]
 //! ([`super::backend::QuantI8`] / [`super::backend::QuantI4`]), selected
 //! per layer via `kv.format` / `kv.layer_formats` / `kv.mixed`.
+//!
+//! These codecs are also the substrate of **live format migration**
+//! ([`super::GroupCache::migrate_layer_format`]): a layer changing
+//! format mid-serve is dequantized row-wise through the old codec and
+//! re-encoded through the new one, so a migration's additional error is
+//! bounded by one [`dequant_error_bound`] of the *destination* format
+//! applied to the already-materialized f32 rows.
 
 use anyhow::{bail, Result};
 

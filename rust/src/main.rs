@@ -38,6 +38,13 @@ fn spec() -> ArgSpec {
          "sparsity-directed per-layer formats, e.g. \
           sparse=q4,dense=f32,threshold=0.5 (keys optional; omitted \
           keys use exactly those defaults)")
+    .opt("prefill-chunk", "",
+         "chunked-prefill grain: prompt tokens consumed per scheduler \
+          tick (default: config/64)")
+    .opt("kv-budget-mb", "",
+         "group-wide live-KV budget in MB; over it the youngest \
+          sequence is recompute-preempted instead of OOM-killed \
+          (default: unlimited)")
     .opt("prompt", "", "prompt text (generate)")
     .opt("max-new", "64", "max new tokens")
     .opt("n", "16", "requests (serve) / tasks per subject (eval)")
@@ -60,6 +67,14 @@ fn load_cfg(args: &lethe::util::argparse::Args) -> Result<ServingConfig> {
     }
     if args.has("kv-mixed") {
         cfg.kv.mixed = Some(parse_kv_mixed(args.get("kv-mixed"))?);
+    }
+    if !args.get("prefill-chunk").is_empty() {
+        cfg.scheduler.prefill_chunk = args.get_usize("prefill-chunk")?;
+    }
+    if !args.get("kv-budget-mb").is_empty() {
+        let mb = args.get_f64("kv-budget-mb")?;
+        anyhow::ensure!(mb >= 0.0, "--kv-budget-mb must be >= 0");
+        cfg.scheduler.kv_budget_bytes = (mb * 1e6) as usize;
     }
     cfg.validate()?;
     Ok(cfg)

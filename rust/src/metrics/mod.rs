@@ -20,6 +20,20 @@ pub struct EngineMetrics {
     pub prune_events: u64,
     pub pruned_tokens: u64,
     pub ooms: u64,
+    /// Recompute-preemptions: sequences evicted back to the waiting
+    /// queue under co-residency pressure (scheduler lifecycle).
+    pub preemptions: u64,
+    /// Preempted sequences re-prefilled and returned to decoding.
+    pub resumes: u64,
+    /// Requests rejected by admission control (queue full / prompt
+    /// beyond the largest prefill bucket).
+    pub rejected: u64,
+    /// Waiting-queue depth after the last scheduler tick.
+    pub queue_depth_last: usize,
+    /// Layer formats migrated in place on a live group
+    /// (`GroupCache::migrate_layer_format`, driven by the scheduler
+    /// from `kv.mixed` / `kv.layer_formats` resolution changes).
+    pub kv_migrations: u64,
     /// Host bytes actually copied into upload scratch by delta-pack
     /// (K + V); a full per-step repack would be L·B·Hkv·C·D·8 every step.
     pub pack_bytes_copied: u64,
@@ -99,6 +113,11 @@ impl EngineMetrics {
             ("prune_events", Json::from(self.prune_events as usize)),
             ("pruned_tokens", Json::from(self.pruned_tokens as usize)),
             ("ooms", Json::from(self.ooms as usize)),
+            ("preemptions", Json::from(self.preemptions as usize)),
+            ("resumes", Json::from(self.resumes as usize)),
+            ("rejected", Json::from(self.rejected as usize)),
+            ("queue_depth", Json::from(self.queue_depth_last)),
+            ("kv_migrations", Json::from(self.kv_migrations as usize)),
             ("pack_bytes_copied", Json::from(self.pack_bytes_copied as usize)),
             ("delta_pack_hits", Json::from(self.delta_pack_hits as usize)),
             ("delta_pack_full", Json::from(self.delta_pack_full as usize)),
@@ -142,6 +161,11 @@ mod tests {
         m.decode_steps = 3;
         m.pack_bytes_copied = 4096;
         m.delta_pack_hits = 12;
+        m.preemptions = 2;
+        m.resumes = 2;
+        m.rejected = 1;
+        m.queue_depth_last = 5;
+        m.kv_migrations = 3;
         m.kv_format = "mixed".to_string();
         m.kv_layer_formats = vec![KvFormat::F32, KvFormat::QuantI4];
         m.f32_equiv_bytes_last = 2048;
@@ -157,6 +181,14 @@ mod tests {
         assert_eq!(
             parsed.get("delta_pack_hits").unwrap().as_usize().unwrap(),
             12
+        );
+        assert_eq!(parsed.get("preemptions").unwrap().as_usize().unwrap(), 2);
+        assert_eq!(parsed.get("resumes").unwrap().as_usize().unwrap(), 2);
+        assert_eq!(parsed.get("rejected").unwrap().as_usize().unwrap(), 1);
+        assert_eq!(parsed.get("queue_depth").unwrap().as_usize().unwrap(), 5);
+        assert_eq!(
+            parsed.get("kv_migrations").unwrap().as_usize().unwrap(),
+            3
         );
         assert_eq!(
             parsed.get("capacity_hist").unwrap().as_arr().unwrap().len(),

@@ -174,6 +174,18 @@ impl ModelMeta {
     pub fn kv_bytes_per_token(&self) -> usize {
         self.dims.n_layers * 2 * self.dims.n_kv_heads * self.dims.d_head * 4
     }
+
+    /// Token id of a named special (its position in the manifest's
+    /// `tokenizer.specials` list), e.g. `special_id("<eos>")`.
+    pub fn special_id(&self, name: &str) -> Option<i32> {
+        self.specials.iter().position(|s| s == name).map(|i| i as i32)
+    }
+
+    /// EOS token id from the manifest (None when the vocabulary carries
+    /// no `"<eos>"` special — callers decide their fallback).
+    pub fn eos_id(&self) -> Option<i32> {
+        self.special_id("<eos>")
+    }
 }
 
 #[cfg(test)]

@@ -4,7 +4,7 @@
 
 use std::collections::HashMap;
 
-use anyhow::{bail, Result};
+use anyhow::Result;
 
 use super::meta::ModelMeta;
 
@@ -23,9 +23,18 @@ impl Tokenizer {
     }
 
     pub fn new(specials: &[String], chars: &str) -> Result<Tokenizer> {
-        if specials.len() != 3 {
-            bail!("expected 3 specials (<pad>,<bos>,<eos>)");
-        }
+        // Special ids follow the manifest's list by *name*, not by a
+        // hardcoded position, so non-toy vocabularies (extra specials,
+        // reordered lists) terminate and pad correctly.
+        let id_of = |name: &str| -> Result<i32> {
+            specials
+                .iter()
+                .position(|s| s == name)
+                .map(|i| i as i32)
+                .ok_or_else(|| anyhow::anyhow!(
+                    "tokenizer specials {specials:?} missing '{name}'"))
+        };
+        let (pad, bos, eos) = (id_of("<pad>")?, id_of("<bos>")?, id_of("<eos>")?);
         let mut id_to_char: Vec<Option<char>> =
             vec![None; specials.len() + chars.chars().count()];
         let mut char_to_id = HashMap::new();
@@ -34,7 +43,7 @@ impl Tokenizer {
             id_to_char[id as usize] = Some(c);
             char_to_id.insert(c, id);
         }
-        Ok(Tokenizer { id_to_char, char_to_id, pad: 0, bos: 1, eos: 2 })
+        Ok(Tokenizer { id_to_char, char_to_id, pad, bos, eos })
     }
 
     pub fn vocab_size(&self) -> usize {
@@ -118,5 +127,22 @@ mod tests {
     fn rejects_out_of_vocab() {
         assert!(tok().encode("ABC").is_err());
         assert!(tok().encode("日").is_err());
+    }
+
+    #[test]
+    fn special_ids_follow_names_not_positions() {
+        // A non-toy manifest may order or extend the specials list
+        // differently; ids must track the names.
+        let t = Tokenizer::new(
+            &["<unk>".into(), "<eos>".into(), "<pad>".into(), "<bos>".into()],
+            "ab",
+        )
+        .unwrap();
+        assert_eq!((t.pad, t.bos, t.eos), (2, 3, 1));
+        assert_eq!(t.encode("a").unwrap(), vec![4]);
+        // Decode stops at the *named* EOS id.
+        assert_eq!(t.decode(&[4, 1, 5]), "a");
+        // A vocabulary with a missing special is rejected up front.
+        assert!(Tokenizer::new(&["<pad>".into(), "<bos>".into()], "ab").is_err());
     }
 }

@@ -1,20 +1,45 @@
-//! Continuous-batching scheduler (the vLLM-style serving loop, sized for
-//! one PJRT CPU device): a bounded waiting queue with admission control,
-//! prefill-on-join into free group slots, decode over the co-batched
-//! group, and completion reaping.
+//! Sequence-lifecycle scheduler (the vLLM-style serving loop, sized for
+//! one PJRT CPU device). Every sequence moves through an explicit state
+//! machine ([`crate::engine::SeqPhase`]):
 //!
-//! Policy: prefill-priority — whenever a slot is free and work is
-//! waiting, prefill before the next decode step (keeps the batch full,
-//! maximising decode throughput; the paper's batch-scaling tables depend
-//! on exactly this behaviour).
+//! ```text
+//! Waiting ──► Prefilling{consumed} ──► Decoding ──► Finished
+//!    ▲                                    │
+//!    └────────────── Preempted ◄──────────┘
+//! ```
+//!
+//! * **Chunked prefill** — prompts are consumed `prefill_chunk` tokens
+//!   per tick (one bucketed [`Engine::prefill_window`] run over the
+//!   growing prefix; the compiled kernels take no prior KV, so each
+//!   chunk recomputes the prefix and only the final chunk's outputs are
+//!   installed). A long prompt therefore interleaves with decode steps
+//!   instead of stalling every co-batched decoder, and prefilling
+//!   sequences round-robin so short prompts are never stuck behind a
+//!   long one.
+//! * **Recompute-preemption** — when the group's live KV bytes exceed
+//!   `scheduler.kv_budget_bytes`, the *youngest* resumable sequence is
+//!   evicted back to the waiting queue; on resume its prompt plus
+//!   everything it had generated is re-prefilled, which reconstructs
+//!   exactly the uncontended decode state (greedy decode is
+//!   deterministic). [`crate::engine::FinishReason::Oom`] stays
+//!   reserved for sequences whose own cache exceeds the largest
+//!   compiled capacity — they would not fit even alone.
+//! * **Live format migration** — between ticks the scheduler diffs the
+//!   engine's resolved per-layer format map (`kv.format` /
+//!   `kv.layer_formats` / `kv.mixed` against the live sparsity EMA)
+//!   with the group's and, after `migrate_patience` consecutive
+//!   differing ticks, rewrites the changed layers in place via
+//!   [`crate::kvcache::GroupCache::migrate_layer_format`] — no idle
+//!   window or group rebuild required.
 
 use std::collections::VecDeque;
 use std::time::Instant;
 
 use anyhow::Result;
 
-use crate::engine::{DecodeGroup, Engine, SeqState};
+use crate::engine::{DecodeGroup, Engine, SeqPhase, SeqState};
 use crate::policy::{make_policy, PolicyKind};
+use crate::util::json::Json;
 
 #[derive(Clone, Debug)]
 pub struct Request {
@@ -36,51 +61,136 @@ pub struct Completion {
     /// Seconds from submission to completion.
     pub total: f64,
     pub prune_rounds: usize,
+    /// How many times the sequence was preempted and resumed.
+    pub preemptions: u32,
 }
 
 /// Outcome of one scheduler tick.
 #[derive(Debug, Default)]
 pub struct TickReport {
+    /// Sequences whose prefill completed (entered Decoding) this tick.
     pub prefilled: usize,
+    /// Prefill chunks advanced this tick (0 or 1: one bucketed
+    /// executable run per tick keeps the stall bounded).
+    pub prefill_chunks: usize,
+    /// Sequences recompute-preempted back to the waiting queue.
+    pub preempted: usize,
+    /// Layer formats migrated in place on the live group.
+    pub migrated: usize,
     pub decoded_tokens: usize,
     pub completed: Vec<Completion>,
 }
 
+/// A queued unit of work: a fresh request, or a preempted sequence
+/// waiting to resume (its recompute prefix travels with it).
+enum WaitEntry {
+    Fresh(Request),
+    Resume {
+        /// Original prompt + generated-so-far: the resume prefill input.
+        tokens: Vec<i32>,
+        seq: SeqState,
+    },
+}
+
+impl WaitEntry {
+    /// Rows the entry's prefill would install (admission projection).
+    fn token_count(&self) -> usize {
+        match self {
+            WaitEntry::Fresh(r) => r.prompt.len(),
+            WaitEntry::Resume { tokens, .. } => tokens.len(),
+        }
+    }
+}
+
+/// One chunk-wise prefill in flight. Holds a slot reservation (jobs +
+/// active decoders never exceed the group size) but no cache rows until
+/// the final chunk installs.
+struct PrefillJob {
+    tokens: Vec<i32>,
+    consumed: usize,
+    seq: SeqState,
+    resume: bool,
+}
+
 pub struct Scheduler {
     pub group: DecodeGroup,
-    waiting: VecDeque<Request>,
+    waiting: VecDeque<WaitEntry>,
+    prefilling: Vec<PrefillJob>,
+    /// Round-robin cursor over `prefilling`.
+    rr: usize,
     max_waiting: usize,
+    prefill_chunk: usize,
+    /// Group-wide live-KV byte budget; 0 = unlimited.
+    kv_budget: usize,
+    migrate_patience: usize,
+    migrate_streak: usize,
+    /// Longest admissible prompt (largest compiled prefill bucket).
+    max_prompt_tokens: usize,
+    /// Longest resumable prefix (prefill bucket ∩ decode capacity).
+    max_resume_tokens: usize,
     eos: i32,
     n_layers: usize,
+    next_stamp: u64,
     pub rejected: u64,
+    pub preemptions: u64,
+    pub resumes: u64,
+    /// Layer formats migrated in place over the scheduler's lifetime.
+    pub migrations: u64,
 }
 
 impl Scheduler {
     pub fn new(engine: &Engine, policy: PolicyKind) -> Scheduler {
         let group_size = engine.cfg.scheduler.max_batch;
+        let sc = &engine.cfg.scheduler;
         Scheduler {
             group: engine.new_group(group_size, policy),
             waiting: VecDeque::new(),
-            max_waiting: engine.cfg.scheduler.max_waiting,
-            eos: 2,
+            prefilling: Vec::new(),
+            rr: 0,
+            max_waiting: sc.max_waiting,
+            prefill_chunk: sc.prefill_chunk.max(1),
+            kv_budget: sc.kv_budget_bytes,
+            migrate_patience: sc.migrate_patience.max(1),
+            migrate_streak: 0,
+            max_prompt_tokens: engine.max_prefill_tokens(),
+            max_resume_tokens: engine.max_prefill_tokens().min(engine.cmax),
+            eos: engine.eos_token(),
             n_layers: engine.dims().n_layers,
+            next_stamp: 1,
             rejected: 0,
+            preemptions: 0,
+            resumes: 0,
+            migrations: 0,
         }
     }
 
-    /// Admission control: Err when the waiting queue is full
-    /// (backpressure to the caller).
+    /// Admission control: Err when the waiting queue is full or the
+    /// prompt exceeds the largest compiled prefill bucket
+    /// (backpressure / rejection to the caller).
     pub fn submit(&mut self, req: Request) -> Result<()> {
+        if req.prompt.len() > self.max_prompt_tokens {
+            self.rejected += 1;
+            anyhow::bail!(
+                "prompt of {} tokens exceeds the largest prefill bucket {}",
+                req.prompt.len(),
+                self.max_prompt_tokens
+            );
+        }
         if self.waiting.len() >= self.max_waiting {
             self.rejected += 1;
             anyhow::bail!("queue full ({} waiting)", self.waiting.len());
         }
-        self.waiting.push_back(req);
+        self.waiting.push_back(WaitEntry::Fresh(req));
         Ok(())
     }
 
     pub fn waiting(&self) -> usize {
         self.waiting.len()
+    }
+
+    /// Sequences currently in chunk-wise prefill.
+    pub fn prefilling(&self) -> usize {
+        self.prefilling.len()
     }
 
     /// Storage label the group cache serves with ("f32" | "q8" | "q4" |
@@ -95,52 +205,123 @@ impl Scheduler {
     }
 
     pub fn idle(&self) -> bool {
-        self.waiting.is_empty() && self.group.active() == 0
+        self.waiting.is_empty()
+            && self.prefilling.is_empty()
+            && self.group.active() == 0
     }
 
-    /// One scheduler tick: fill free slots (prefill-priority), run one
-    /// decode step, reap completions.
+    /// Serving-pressure snapshot for the `{"stats": true}` front-end
+    /// query: queue/lifecycle depths, rejection/preemption/resume/
+    /// migration counters, plus the full engine metrics object.
+    pub fn stats_json(&self, engine: &Engine) -> Json {
+        Json::obj(vec![
+            ("queue_depth", Json::from(self.waiting.len())),
+            ("prefilling", Json::from(self.prefilling.len())),
+            ("active", Json::from(self.group.active())),
+            ("rejected", Json::from(self.rejected as usize)),
+            ("preemptions", Json::from(self.preemptions as usize)),
+            ("resumes", Json::from(self.resumes as usize)),
+            ("kv_migrations", Json::from(self.migrations as usize)),
+            ("kv_format", Json::str(&self.kv_format())),
+            ("metrics", engine.metrics.to_json()),
+        ])
+    }
+
+    /// One scheduler tick:
+    ///   0. migrate live layer formats onto the engine's resolved map,
+    ///   1. preempt under KV-byte pressure,
+    ///   2. admit waiting work into the chunked-prefill lane,
+    ///   3. advance one prefill chunk (installing on the final one),
+    ///   4. run one decode step over the co-batched group,
+    ///   5. reap completions.
     pub fn tick(&mut self, engine: &mut Engine) -> Result<TickReport> {
         let mut report = TickReport::default();
 
-        // 0. Per-layer format maps (`kv.mixed`) are resolved from the
-        // engine's sparsity estimates at group construction, and those
-        // estimates start at zero — so the boot-time group is always
-        // all-dense. Whenever the group is idle (holds no live rows),
-        // rebuild it if the resolution has changed, so the serving path
-        // actually migrates onto the sparsity-directed map once traffic
-        // has been observed. A busy group keeps its map (live rows are
-        // never re-quantized in place; see ROADMAP follow-ons).
-        if self.group.active() == 0
-            && *self.group.cache.format_map() != engine.current_format_map()
-        {
-            self.group = engine
-                .new_group(self.group.group_size(), self.group.default_policy);
+        // 0. Live per-layer format migration, with hysteresis. This
+        // replaces the old idle-only group rebuild: a busy group's
+        // layers are rewritten in place through the epoch protocol, so
+        // a server under sustained load still picks up the
+        // sparsity-directed `kv.mixed` resolution.
+        report.migrated = self.drive_migration(engine)?;
+
+        // 1. Co-residency pressure: recompute-preempt the youngest
+        // resumable sequence until the group fits its byte budget.
+        // Never preempts the last tenant (a single sequence over budget
+        // is not an OOM — Oom is reserved for the capacity line).
+        if self.kv_budget > 0 {
+            while self.group.cache.live_bytes() > self.kv_budget
+                && self.group.active() > 1
+                && self.preempt_one()
+            {
+                report.preempted += 1;
+            }
         }
 
-        // 1. Prefill into free slots.
-        while self.group.has_free_slot() {
-            let Some(req) = self.waiting.pop_front() else { break };
-            let slot = self.group.free_slot().unwrap();
-            let mut seq = SeqState::new(
-                req.id,
-                make_policy(req.policy, &engine.cfg, self.n_layers),
-                self.n_layers,
-                req.max_new_tokens,
-                self.eos,
-            );
-            seq.submitted_at = Some(req.submitted_at);
-            engine.prefill(&mut self.group, slot, seq, &req.prompt)?;
-            report.prefilled += 1;
+        // 2. Admission into the prefill lane (slot reservation: jobs +
+        // active never exceed the group size; byte budget projected for
+        // the prompt about to be installed).
+        while self.can_admit_front() {
+            let entry = self.waiting.pop_front().unwrap();
+            let job = self.start_job(entry, engine);
+            self.prefilling.push(job);
         }
 
-        // 2. One decode step over the co-batched group.
+        // 3. Advance one prefill job by one chunk (round-robin so a
+        // short prompt never waits out a long one's whole prefill).
+        if !self.prefilling.is_empty() {
+            let idx = self.rr % self.prefilling.len();
+            let next = {
+                let job = &self.prefilling[idx];
+                (job.consumed + self.prefill_chunk).min(job.tokens.len())
+            };
+            let out =
+                engine.prefill_window(&self.prefilling[idx].tokens[..next])?;
+            report.prefill_chunks += 1;
+            if next == self.prefilling[idx].tokens.len() {
+                let job = self.prefilling.remove(idx);
+                let slot = self
+                    .group
+                    .free_slot()
+                    .expect("prefill job holds a slot reservation");
+                engine.install_prefill(
+                    &mut self.group,
+                    slot,
+                    job.seq,
+                    &job.tokens,
+                    out,
+                    job.resume,
+                )?;
+                self.group.seq_mut(slot).admit_stamp = self.next_stamp;
+                self.next_stamp += 1;
+                if job.resume {
+                    self.resumes += 1;
+                }
+                report.prefilled += 1;
+                // The job that slid into `idx` is next in the rotation.
+                self.rr = idx;
+            } else {
+                let job = &mut self.prefilling[idx];
+                job.consumed = next;
+                job.seq.phase = SeqPhase::Prefilling { consumed: next };
+                self.rr = idx + 1;
+            }
+        }
+
+        // A sequence can finish on its install token (EOS or max_new of
+        // 1); reap it before decoding so the step never advances a
+        // finished sequence past its end (keeps a resumed run
+        // token-identical to an uncontended one).
+        self.group.reap();
+
+        // 4. One decode step over the co-batched group. (Capacity-line
+        // overflow inside `step` marks the longest sequence Oom — it
+        // would not fit even alone.)
         if self.group.active() > 0 {
             let produced = engine.step(&mut self.group)?;
             report.decoded_tokens = produced.len();
         }
 
-        // 3. Reap completions.
+        // 5. Reap completions.
         self.group.reap();
         let now = Instant::now();
         for seq in self.group.done.drain(..) {
@@ -154,10 +335,17 @@ impl Scheduler {
                     .unwrap_or(0.0),
                 total: (now - sub).as_secs_f64(),
                 prune_rounds: seq.prune_log.len(),
+                preemptions: seq.preemptions,
                 finish: seq.finished.unwrap(),
                 generated: seq.generated,
             });
         }
+
+        // Serving-pressure telemetry travels with the engine metrics.
+        engine.metrics.queue_depth_last = self.waiting.len();
+        engine.metrics.rejected = self.rejected;
+        engine.metrics.preemptions = self.preemptions;
+        engine.metrics.resumes = self.resumes;
         Ok(report)
     }
 
@@ -170,45 +358,271 @@ impl Scheduler {
         }
         Ok(out)
     }
+
+    /// Diff the engine's resolved format map against the live group's
+    /// and migrate changed layers in place once the difference has
+    /// persisted `migrate_patience` ticks. Returns layers migrated.
+    fn drive_migration(&mut self, engine: &mut Engine) -> Result<usize> {
+        let want = engine.current_format_map();
+        if *self.group.cache.format_map() == want {
+            self.migrate_streak = 0;
+            return Ok(0);
+        }
+        self.migrate_streak += 1;
+        if self.migrate_streak < self.migrate_patience {
+            return Ok(0);
+        }
+        let mut migrated = 0;
+        for l in 0..self.n_layers {
+            if self.group.cache.migrate_layer_format(l, want.get(l))? {
+                migrated += 1;
+            }
+        }
+        self.migrations += migrated as u64;
+        engine.metrics.kv_migrations += migrated as u64;
+        self.migrate_streak = 0;
+        Ok(migrated)
+    }
+
+    /// Whether the front waiting entry can start prefilling now.
+    fn can_admit_front(&self) -> bool {
+        let Some(entry) = self.waiting.front() else {
+            return false;
+        };
+        if self.prefilling.len() + self.group.active()
+            >= self.group.group_size()
+        {
+            return false;
+        }
+        if self.kv_budget == 0 {
+            return true;
+        }
+        // An empty core always admits (progress guarantee: a sequence
+        // the budget alone would starve still runs solo).
+        if self.group.active() == 0 && self.prefilling.is_empty() {
+            return true;
+        }
+        // Project live bytes + the reservations of prefills already in
+        // flight (they hold no cache rows yet but will install their
+        // full prompt) + the candidate's own footprint, so a burst of
+        // admissions cannot over-commit the budget and then thrash
+        // through preempt/resume cycles it caused itself.
+        let pending: usize = self
+            .prefilling
+            .iter()
+            .map(|j| self.group.cache.bytes_for_rows(j.tokens.len()))
+            .sum();
+        let projected = self.group.cache.bytes_for_rows(entry.token_count());
+        self.group.cache.live_bytes() + pending + projected <= self.kv_budget
+    }
+
+    /// Turn a waiting entry into a chunked-prefill job.
+    fn start_job(&self, entry: WaitEntry, engine: &Engine) -> PrefillJob {
+        match entry {
+            WaitEntry::Fresh(req) => {
+                let mut seq = SeqState::new(
+                    req.id,
+                    make_policy(req.policy, &engine.cfg, self.n_layers),
+                    self.n_layers,
+                    req.max_new_tokens,
+                    self.eos,
+                );
+                seq.submitted_at = Some(req.submitted_at);
+                seq.prompt = req.prompt.clone();
+                seq.phase = SeqPhase::Prefilling { consumed: 0 };
+                PrefillJob {
+                    tokens: req.prompt,
+                    consumed: 0,
+                    seq,
+                    resume: false,
+                }
+            }
+            WaitEntry::Resume { tokens, mut seq } => {
+                seq.phase = SeqPhase::Prefilling { consumed: 0 };
+                PrefillJob { tokens, consumed: 0, seq, resume: true }
+            }
+        }
+    }
+
+    /// Preempt the youngest resumable decoding sequence back to the
+    /// *front* of the waiting queue (it is the oldest admitted work
+    /// still unfinished among the queue's entries). Returns false when
+    /// no sequence can be preempted (none resumable within the prefill
+    /// buckets).
+    fn preempt_one(&mut self) -> bool {
+        let victim = (0..self.group.active())
+            .filter(|&b| {
+                let s = self.group.seq(b);
+                s.prompt.len() + s.generated.len() <= self.max_resume_tokens
+            })
+            .max_by_key(|&b| self.group.seq(b).admit_stamp);
+        let Some(b) = victim else {
+            return false;
+        };
+        let mut seq = self.group.remove(b);
+        seq.preemptions += 1;
+        let mut tokens = seq.prompt.clone();
+        tokens.extend_from_slice(&seq.generated);
+        self.preemptions += 1;
+        // Bypasses max_waiting on purpose: the sequence was already
+        // admitted once; backpressure applies to new work only.
+        self.waiting.push_front(WaitEntry::Resume { tokens, seq });
+        true
+    }
 }
 
 #[cfg(test)]
 mod tests {
     use super::*;
+    use crate::policy::FullKv;
 
-    fn req(id: u64) -> Request {
+    fn req(id: u64, prompt_len: usize) -> Request {
         Request {
             id,
-            prompt: vec![1, 3, 4],
+            prompt: vec![1; prompt_len],
             max_new_tokens: 4,
             policy: PolicyKind::Lethe,
             submitted_at: Instant::now(),
         }
     }
 
-    #[test]
-    fn admission_control_rejects_when_full() {
-        // Scheduler without an engine: test the queue paths only.
+    /// Scheduler without an engine: queue/lifecycle paths only.
+    fn bare_sched(batch: usize, max_waiting: usize, kv_budget: usize) -> Scheduler {
         let dims = crate::kvcache::CacheDims {
             layers: 1,
-            batch: 2,
+            batch,
             kv_heads: 1,
             capacity: 8,
             d_head: 4,
         };
-        let mut s = Scheduler {
+        Scheduler {
             group: DecodeGroup::new(dims, PolicyKind::Lethe),
             waiting: VecDeque::new(),
-            max_waiting: 2,
+            prefilling: Vec::new(),
+            rr: 0,
+            max_waiting,
+            prefill_chunk: 4,
+            kv_budget,
+            migrate_patience: 1,
+            migrate_streak: 0,
+            max_prompt_tokens: 64,
+            max_resume_tokens: 8,
             eos: 2,
             n_layers: 1,
+            next_stamp: 1,
             rejected: 0,
-        };
-        assert!(s.submit(req(1)).is_ok());
-        assert!(s.submit(req(2)).is_ok());
-        assert!(s.submit(req(3)).is_err());
+            preemptions: 0,
+            resumes: 0,
+            migrations: 0,
+        }
+    }
+
+    #[test]
+    fn admission_control_rejects_when_full_or_overlong() {
+        let mut s = bare_sched(2, 2, 0);
+        assert!(s.submit(req(1, 3)).is_ok());
+        assert!(s.submit(req(2, 3)).is_ok());
+        assert!(s.submit(req(3, 3)).is_err());
         assert_eq!(s.rejected, 1);
+        // A prompt beyond the largest prefill bucket is rejected even
+        // with queue room.
+        let mut s2 = bare_sched(2, 8, 0);
+        assert!(s2.submit(req(1, 65)).is_err());
+        assert_eq!(s2.rejected, 1);
         assert_eq!(s.waiting(), 2);
         assert!(!s.idle());
+    }
+
+    #[test]
+    fn preempt_picks_youngest_resumable_and_requeues_front() {
+        let mut s = bare_sched(3, 8, 1);
+        for i in 0..3 {
+            let mut seq =
+                SeqState::new(i, Box::new(FullKv), 1, 8, 2);
+            seq.prompt = vec![1, 3];
+            seq.note_prefilled(2, 10);
+            seq.admit_stamp = i + 1;
+            let slot = s.group.free_slot().unwrap();
+            s.group
+                .cache
+                .insert(0, slot, &[0.0; 4], &[0.0; 4], 0)
+                .unwrap();
+            s.group.install(slot, seq);
+        }
+        // Make the oldest sequence non-resumable (too long a prefix).
+        s.group.seqs[0].generated = vec![10; 20];
+        assert!(s.preempt_one());
+        assert_eq!(s.preemptions, 1);
+        assert_eq!(s.group.active(), 2);
+        // The youngest (stamp 3, id 2) went back to the queue front
+        // with its recompute prefix.
+        match s.waiting.front().unwrap() {
+            WaitEntry::Resume { tokens, seq } => {
+                assert_eq!(seq.id, 2);
+                assert_eq!(seq.phase, SeqPhase::Preempted);
+                assert_eq!(seq.preemptions, 1);
+                // prompt [1, 3] + the first generated token.
+                assert_eq!(tokens, &[1, 3, 10]);
+            }
+            _ => panic!("expected a resume entry at the front"),
+        }
+        // Preempt again: stamp 2 goes; the non-resumable stamp-1 seq
+        // is never a victim.
+        assert!(s.preempt_one());
+        assert_eq!(s.group.active(), 1);
+        assert_eq!(s.group.seqs[0].admit_stamp, 1);
+        assert!(!s.preempt_one(), "last tenant is non-resumable here");
+    }
+
+    #[test]
+    fn admission_projects_byte_budget() {
+        // Budget fits one 4-token prompt (1 layer, 1 head, d=4 → 32 B
+        // per row) but not two.
+        let mut s = bare_sched(3, 8, 6 * 32);
+        assert!(s.submit(req(1, 4)).is_ok());
+        assert!(s.can_admit_front(), "empty core always admits");
+        // Simulate an installed 4-row sequence.
+        let mut seq = SeqState::new(1, Box::new(FullKv), 1, 8, 2);
+        seq.note_prefilled(4, 10);
+        for t in 0..4 {
+            s.group.cache.insert(0, 0, &[0.0; 4], &[0.0; 4], t).unwrap();
+        }
+        s.group.install(0, seq);
+        assert!(s.submit(req(2, 4)).is_ok());
+        assert!(
+            !s.can_admit_front(),
+            "4 live + 4 projected rows exceed the 6-row budget"
+        );
+        let mut s2 = bare_sched(3, 8, 0);
+        assert!(s2.submit(req(1, 4)).is_ok());
+        assert!(s2.can_admit_front(), "no budget, no gate");
+    }
+
+    #[test]
+    fn admission_counts_inflight_prefill_reservations() {
+        // Budget fits two 4-token prompts but not three; with one
+        // sequence decoding and one prompt mid-prefill, the third must
+        // wait even though live bytes alone would admit it.
+        let mut s = bare_sched(4, 8, 9 * 32);
+        let mut seq = SeqState::new(1, Box::new(FullKv), 1, 8, 2);
+        seq.note_prefilled(4, 10);
+        for t in 0..4 {
+            s.group.cache.insert(0, 0, &[0.0; 4], &[0.0; 4], t).unwrap();
+        }
+        s.group.install(0, seq);
+        s.prefilling.push(PrefillJob {
+            tokens: vec![1; 4],
+            consumed: 0,
+            seq: SeqState::new(2, Box::new(FullKv), 1, 8, 2),
+            resume: false,
+        });
+        assert!(s.submit(req(3, 4)).is_ok());
+        assert!(
+            !s.can_admit_front(),
+            "4 live + 4 in-flight + 4 projected rows exceed 9"
+        );
+        // Once the in-flight prefill lane drains, the same entry fits.
+        s.prefilling.clear();
+        assert!(s.can_admit_front());
     }
 }

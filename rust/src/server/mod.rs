@@ -39,6 +39,10 @@ pub struct GenerateResponse {
     pub ttft_s: f64,
     pub total_s: f64,
     pub prune_rounds: usize,
+    /// How many times the sequence was recompute-preempted under load
+    /// (each resume re-prefilled prompt + generated; the continuation is
+    /// the uncontended one).
+    pub preemptions: u32,
     /// KV storage the request was served on ("f32" | "q8" | "q4", or
     /// "mixed" when a per-layer format map was active).
     pub kv_format: String,
@@ -46,6 +50,9 @@ pub struct GenerateResponse {
 
 enum Msg {
     Generate(GenerateRequest, Sender<Result<GenerateResponse>>),
+    /// Serving-pressure snapshot (queue depth, preempt/resume counters,
+    /// live migrations, engine metrics) — the `{"stats": true}` query.
+    Stats(Sender<crate::util::json::Json>),
     Shutdown,
 }
 
@@ -96,6 +103,17 @@ impl Server {
     pub fn generate(&self, req: GenerateRequest) -> Result<GenerateResponse> {
         let rx = self.submit(req)?;
         rx.recv().context("engine thread dropped the request")?
+    }
+
+    /// Serving-pressure snapshot from the engine thread: queue depth,
+    /// rejected/preemption/resume counts, live KV migrations, and the
+    /// full engine metrics object.
+    pub fn stats(&self) -> Result<crate::util::json::Json> {
+        let (tx, rx) = mpsc::channel();
+        self.tx
+            .send(Msg::Stats(tx))
+            .map_err(|_| anyhow::anyhow!("server is shut down"))?;
+        rx.recv().context("engine thread dropped the stats query")
     }
 
     pub fn next_request_id(&self) -> u64 {
@@ -174,6 +192,9 @@ fn engine_thread(
                     shutdown = true;
                     break;
                 }
+                Msg::Stats(reply) => {
+                    let _ = reply.send(sched.stats_json(&engine));
+                }
                 Msg::Generate(req, reply) => {
                     let id = next_id;
                     next_id += 1;
@@ -224,6 +245,7 @@ fn engine_thread(
                             ttft_s: c.ttft,
                             total_s: c.total,
                             prune_rounds: c.prune_rounds,
+                            preemptions: c.preemptions,
                             kv_format: kv_format.clone(),
                         };
                         let _ = entry.reply.send(Ok(resp));

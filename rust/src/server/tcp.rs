@@ -6,11 +6,21 @@
 //!   <- {"ok": true, "text": "ab>12.", "finish": "Eos",
 //!       "prompt_tokens": 18, "generated_tokens": 7,
 //!       "ttft_s": 0.01, "total_s": 0.05, "prune_rounds": 0,
-//!       "kv_format": "f32"}
+//!       "preemptions": 0, "kv_format": "f32"}
 //!
 //! `kv_format` reports the storage the request was served on: "f32",
 //! "q8", "q4", or "mixed" when a per-layer format map
-//! (`kv.layer_formats` / `kv.mixed`) was active.
+//! (`kv.layer_formats` / `kv.mixed`) was active; `preemptions` counts
+//! how often the sequence was recompute-preempted under load.
+//!
+//! A `{"stats": true}` line returns the serving-pressure snapshot
+//! instead of a completion:
+//!
+//!   -> {"stats": true}
+//!   <- {"ok": true, "stats": {"queue_depth": 0, "active": 1,
+//!       "prefilling": 0, "rejected": 0, "preemptions": 2,
+//!       "resumes": 2, "kv_migrations": 4, "kv_format": "mixed",
+//!       "metrics": {...}}}
 //!
 //! One handler thread per connection (threadpool-bounded); requests on
 //! one connection are pipelined through the engine like any other
@@ -86,7 +96,7 @@ fn handle_conn(stream: TcpStream, server: &Server) -> Result<()> {
             continue;
         }
         let reply = match handle_line(&line, server) {
-            Ok(resp) => response_json(&resp),
+            Ok(resp) => resp,
             Err(e) => Json::obj(vec![
                 ("ok", Json::from(false)),
                 ("error", Json::str(&format!("{e:#}"))),
@@ -97,8 +107,18 @@ fn handle_conn(stream: TcpStream, server: &Server) -> Result<()> {
     Ok(())
 }
 
-fn handle_line(line: &str, server: &Server) -> Result<GenerateResponse> {
+fn handle_line(line: &str, server: &Server) -> Result<Json> {
     let j = parse(line).context("request is not valid JSON")?;
+    // Telemetry query: {"stats": true} (today `Scheduler::rejected` and
+    // friends are live counters, not write-only state).
+    if let Some(v) = j.opt("stats") {
+        if v.as_bool()? {
+            return Ok(Json::obj(vec![
+                ("ok", Json::from(true)),
+                ("stats", server.stats()?),
+            ]));
+        }
+    }
     let prompt = j.get("prompt")?.as_str()?.to_string();
     let max_new_tokens = j
         .opt("max_new_tokens")
@@ -109,7 +129,9 @@ fn handle_line(line: &str, server: &Server) -> Result<GenerateResponse> {
         .opt("policy")
         .map(|v| PolicyKind::parse(v.as_str()?))
         .transpose()?;
-    server.generate(GenerateRequest { prompt, max_new_tokens, policy })
+    let resp =
+        server.generate(GenerateRequest { prompt, max_new_tokens, policy })?;
+    Ok(response_json(&resp))
 }
 
 fn response_json(r: &GenerateResponse) -> Json {
@@ -123,6 +145,7 @@ fn response_json(r: &GenerateResponse) -> Json {
         ("ttft_s", Json::num(r.ttft_s)),
         ("total_s", Json::num(r.total_s)),
         ("prune_rounds", Json::from(r.prune_rounds)),
+        ("preemptions", Json::from(r.preemptions as usize)),
         ("kv_format", Json::str(&r.kv_format)),
     ])
 }
@@ -149,6 +172,18 @@ impl TcpClient {
             obj.push(("policy", Json::str(p)));
         }
         writeln!(self.writer, "{}", Json::obj(obj))?;
+        let mut line = String::new();
+        self.reader.read_line(&mut line)?;
+        parse(&line)
+    }
+
+    /// Serving-pressure snapshot (`{"stats": true}` query).
+    pub fn stats(&mut self) -> Result<Json> {
+        writeln!(
+            self.writer,
+            "{}",
+            Json::obj(vec![("stats", Json::from(true))])
+        )?;
         let mut line = String::new();
         self.reader.read_line(&mut line)?;
         parse(&line)

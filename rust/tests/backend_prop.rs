@@ -275,6 +275,169 @@ fn quantized_and_mixed_backends_stay_in_lockstep_with_dense() {
 }
 
 #[test]
+fn live_migration_preserves_bookkeeping_and_delta_pack_identity() {
+    // Random op stream on a busy cache, interleaved with random
+    // `migrate_layer_format` calls and delta-pack reconciles against a
+    // *resident* scratch. After every step:
+    //   * lens/pos/scores are untouched by migration, the migrated
+    //     layer's epochs are bumped to the rewrite watermark, and other
+    //     layers' epochs are untouched,
+    //   * the migrated rows match their pre-migration f32 reads within
+    //     the NEW format's dequantization bound (the requantizer's
+    //     input is exactly the pre-migration read),
+    //   * the next pack_delta output is bit-identical to a fresh pack
+    //     of the migrated cache — the one backend obligation.
+    let all = [KvFormat::F32, KvFormat::QuantI8, KvFormat::QuantI4];
+    check("live-migration", 30, |rng, size| {
+        let mut cache = GroupCache::with_format(dims(), KvFormat::F32);
+        let mut scratch = PackScratch::new(&dims(), BATCH, CAP);
+        let mut abs = 0i32;
+        let fresh_pack = |c: &GroupCache| {
+            let shape = [LAYERS, BATCH, HKV, CAP, D];
+            let mut k = HostTensorF32::zeros(&shape);
+            let mut v = HostTensorF32::zeros(&shape);
+            let mut lens =
+                lethe::runtime::tensors::HostTensorI32::zeros(&[LAYERS, BATCH]);
+            c.pack(BATCH, CAP, &mut k, &mut v, &mut lens).unwrap();
+            (k, v, lens)
+        };
+        for step in 0..(4 + size) {
+            match rng.range(0, 4) {
+                0 | 1 => {
+                    let l = rng.range(0, LAYERS - 1);
+                    let b = rng.range(0, BATCH - 1);
+                    if cache.len(l, b) < CAP {
+                        let kr = vec_f32(rng, HKV * D, -2.0, 2.0);
+                        let vr = vec_f32(rng, HKV * D, -2.0, 2.0);
+                        cache
+                            .insert(l, b, &kr, &vr, abs)
+                            .map_err(|e| e.to_string())?;
+                        abs += 1;
+                    }
+                }
+                2 => {
+                    let l = rng.range(0, LAYERS - 1);
+                    let b = rng.range(0, BATCH - 1);
+                    let n = cache.len(l, b);
+                    if n > 0 {
+                        let keep: Vec<usize> =
+                            (0..n).filter(|_| rng.bool(0.7)).collect();
+                        cache
+                            .apply_retention(l, b, &keep)
+                            .map_err(|e| e.to_string())?;
+                    }
+                }
+                _ => {
+                    // Live migration of a random layer to a random
+                    // (possibly identical) format.
+                    let l = rng.range(0, LAYERS - 1);
+                    let fmt = all[rng.range(0, all.len() - 1)];
+                    let was = cache.format_map().get(l);
+                    let (pre_k, pre_v, _) = fresh_pack(&cache);
+                    let lens_before: Vec<usize> =
+                        (0..BATCH).map(|b| cache.len(l, b)).collect();
+                    let pos_before: Vec<Vec<i32>> =
+                        (0..BATCH).map(|b| cache.pos(l, b).to_vec()).collect();
+                    let epochs_before: Vec<_> = (0..LAYERS)
+                        .flat_map(|ll| {
+                            (0..BATCH).map(move |b| (ll, b))
+                        })
+                        .map(|(ll, b)| cache.slot_epoch(ll, b))
+                        .collect();
+                    let changed = cache
+                        .migrate_layer_format(l, fmt)
+                        .map_err(|e| e.to_string())?;
+                    if changed != (was != fmt) {
+                        return Err("migration no-op detection wrong".into());
+                    }
+                    for b in 0..BATCH {
+                        if cache.len(l, b) != lens_before[b]
+                            || cache.pos(l, b) != &pos_before[b][..]
+                        {
+                            return Err(format!(
+                                "step {step}: migration disturbed \
+                                 lens/pos at ({l},{b})"
+                            ));
+                        }
+                    }
+                    for (i, (ll, b)) in (0..LAYERS)
+                        .flat_map(|ll| (0..BATCH).map(move |b| (ll, b)))
+                        .enumerate()
+                    {
+                        let e = cache.slot_epoch(ll, b);
+                        if ll == l && changed {
+                            if e.epoch <= epochs_before[i].epoch
+                                || e.rewrite != e.epoch
+                            {
+                                return Err(format!(
+                                    "step {step}: migrated layer not \
+                                     marked rewritten at ({ll},{b})"
+                                ));
+                            }
+                        } else if e != epochs_before[i] {
+                            return Err(format!(
+                                "step {step}: unmigrated pair ({ll},{b}) \
+                                 epoch moved"
+                            ));
+                        }
+                    }
+                    // Value accuracy: live rows within the NEW format's
+                    // bound of their pre-migration reads.
+                    if changed {
+                        let (post_k, post_v, _) = fresh_pack(&cache);
+                        for b in 0..BATCH {
+                            for h in 0..HKV {
+                                for r in 0..lens_before[b] {
+                                    let off = (((l * BATCH + b) * HKV + h)
+                                        * CAP
+                                        + r)
+                                        * D;
+                                    for (t, (pk, po)) in [
+                                        (&pre_k, &post_k),
+                                        (&pre_v, &post_v),
+                                    ]
+                                    .iter()
+                                    .enumerate()
+                                    {
+                                        let exact = &pk.data[off..off + D];
+                                        let got = &po.data[off..off + D];
+                                        let tol = format_tol(fmt, exact);
+                                        for (a, g) in exact.iter().zip(got) {
+                                            if (a - g).abs() > tol {
+                                                return Err(format!(
+                                                    "step {step}: tensor {t} \
+                                                     row ({l},{b},{h},{r}) \
+                                                     moved {a} -> {g} \
+                                                     (tol {tol})"
+                                                ));
+                                            }
+                                        }
+                                    }
+                                }
+                            }
+                        }
+                    }
+                }
+            }
+            // Delta-maintained scratch must stay bit-identical to a
+            // fresh pack of the (possibly just-migrated) cache.
+            cache.pack_delta(&mut scratch).map_err(|e| e.to_string())?;
+            let (k, v, lens) = fresh_pack(&cache);
+            if k.data != scratch.k.data
+                || v.data != scratch.v.data
+                || lens.data != scratch.lens.data
+            {
+                return Err(format!(
+                    "step {step}: scratch diverged from fresh pack after \
+                     migration"
+                ));
+            }
+        }
+        Ok(())
+    });
+}
+
+#[test]
 fn mixed_map_stores_strictly_less_once_the_quant_layer_fills() {
     // The mixed variant's "≤ dense" invariant becomes strict as soon as
     // its quantized layer holds rows — the f32 layer alone must price

@@ -212,6 +212,19 @@ fn tcp_frontend_serves_json_lines() {
     let text = resp.get("text").unwrap().as_str().unwrap().to_string();
     assert!(!text.is_empty());
     assert!(resp.get("generated_tokens").unwrap().as_usize().unwrap() <= 24);
+    assert_eq!(resp.get("preemptions").unwrap().as_usize().unwrap(), 0);
+    // Serving-pressure telemetry: {"stats": true} returns the
+    // queue/preemption/migration counters plus the engine metrics.
+    let stats = client.stats().unwrap();
+    assert!(stats.get("ok").unwrap().as_bool().unwrap(), "{stats}");
+    let s = stats.get("stats").unwrap();
+    assert_eq!(s.get("queue_depth").unwrap().as_usize().unwrap(), 0);
+    assert_eq!(s.get("rejected").unwrap().as_usize().unwrap(), 0);
+    assert_eq!(s.get("preemptions").unwrap().as_usize().unwrap(), 0);
+    assert_eq!(s.get("resumes").unwrap().as_usize().unwrap(), 0);
+    assert!(s.get("kv_migrations").unwrap().as_usize().is_ok());
+    let m = s.get("metrics").unwrap();
+    assert!(m.get("decode_steps").unwrap().as_usize().unwrap() >= 1);
     drop(client);
     accept.join().unwrap();
 }

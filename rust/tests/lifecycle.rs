@@ -1,0 +1,190 @@
+//! Sequence-lifecycle integration over the real runtime: chunked
+//! prefill interleaving with decode, and recompute-preemption /resume
+//! determinism. Skipped (with a notice) when artifacts are not built —
+//! the pure-Rust lifecycle paths are unit-tested in
+//! `src/scheduler/mod.rs`.
+
+use std::path::Path;
+use std::time::Instant;
+
+use lethe::config::ServingConfig;
+use lethe::engine::{Engine, FinishReason};
+use lethe::model::Tokenizer;
+use lethe::policy::PolicyKind;
+use lethe::runtime::Runtime;
+use lethe::scheduler::{Completion, Request, Scheduler};
+use lethe::util::prng::Rng;
+use lethe::workload::make_task;
+
+fn engine_or_skip(cfg: ServingConfig) -> Option<(Engine, Tokenizer)> {
+    let dir = Path::new("artifacts");
+    if !dir.join("model_meta.json").exists() {
+        eprintln!("[skip] run `make artifacts` first");
+        return None;
+    }
+    let rt = Runtime::load(dir).expect("runtime loads");
+    let tok = Tokenizer::from_meta(&rt.meta).unwrap();
+    Some((Engine::new(rt, cfg).unwrap(), tok))
+}
+
+fn req(id: u64, prompt: Vec<i32>, max_new: usize, policy: PolicyKind) -> Request {
+    Request {
+        id,
+        prompt,
+        max_new_tokens: max_new,
+        policy,
+        submitted_at: Instant::now(),
+    }
+}
+
+/// Run one request alone to completion (no budget pressure).
+fn solo_run(
+    engine: &mut Engine,
+    prompt: Vec<i32>,
+    max_new: usize,
+    policy: PolicyKind,
+) -> Completion {
+    let mut sched = Scheduler::new(engine, policy);
+    sched.submit(req(0, prompt, max_new, policy)).unwrap();
+    let mut done = sched.run_to_idle(engine).unwrap();
+    assert_eq!(done.len(), 1);
+    done.pop().unwrap()
+}
+
+/// (a) A short request keeps decoding — and its TTFT stays bounded —
+/// while a long prompt prefills chunk-wise in the same group.
+#[test]
+fn chunked_prefill_interleaves_decode_with_long_prompt() {
+    const CHUNK: usize = 24;
+    let mut cfg = ServingConfig::default();
+    cfg.scheduler.max_batch = 2;
+    cfg.scheduler.prefill_chunk = CHUNK;
+    let Some((mut engine, tok)) = engine_or_skip(cfg) else { return };
+
+    // Prompts are 6·n_pairs + 3 chars (+1 BOS token): 2 pairs ≈ 16
+    // tokens (one chunk), 24 pairs ≈ 148 tokens (several chunks).
+    let short = tok
+        .encode_prompt(&make_task(&mut Rng::new(1), 2, 1).prompt)
+        .unwrap();
+    let long = tok
+        .encode_prompt(&make_task(&mut Rng::new(2), 24, 4).prompt)
+        .unwrap();
+    assert!(short.len() <= CHUNK, "short prompt must fit one chunk");
+    assert!(long.len() > 3 * CHUNK, "long prompt must span several chunks");
+
+    let mut sched = Scheduler::new(&engine, PolicyKind::Lethe);
+    sched.submit(req(0, short, 24, PolicyKind::Lethe)).unwrap();
+    sched.submit(req(1, long.clone(), 8, PolicyKind::Lethe)).unwrap();
+
+    // Tick 1: both enter the prefill lane; the short one (one chunk)
+    // installs and takes its first decode step this very tick — its
+    // TTFT is one tick, not one-long-prefill.
+    let mut all_done = Vec::new();
+    let r = sched.tick(&mut engine).unwrap();
+    assert_eq!(r.prefilled, 1, "short prompt installs on tick 1");
+    assert_eq!(sched.prefilling(), 1, "long prompt still prefilling");
+    let short_done_t1 = r.completed.iter().any(|c| c.id == 0);
+    all_done.extend(r.completed);
+
+    // While the long prompt chunks through, the short sequence's decode
+    // steps keep landing in the same ticks.
+    let mut interleaved = 0;
+    let mut ticks = 0;
+    while sched.prefilling() > 0 && ticks < 64 {
+        let r = sched.tick(&mut engine).unwrap();
+        if r.prefill_chunks > 0 && r.decoded_tokens > 0 {
+            interleaved += 1;
+        }
+        ticks += 1;
+        all_done.extend(r.completed);
+    }
+    assert!(
+        interleaved > 0 || short_done_t1,
+        "no decode landed during the long prompt's chunked prefill"
+    );
+    // The long prefill really was chunked: one bucketed run per tick,
+    // so it spans exactly its chunk count after the short one's install.
+    let chunks = long.len().div_ceil(CHUNK);
+    assert!(
+        (2..=chunks + 2).contains(&ticks),
+        "long prefill took {ticks} ticks for {chunks} chunks"
+    );
+
+    all_done.extend(sched.run_to_idle(&mut engine).unwrap());
+    let mut ids: Vec<u64> = all_done.iter().map(|c| c.id).collect();
+    ids.sort_unstable();
+    assert_eq!(ids, vec![0, 1], "both requests complete");
+    for c in &all_done {
+        assert_ne!(c.finish, FinishReason::Oom);
+    }
+}
+
+/// (b) A preempted-then-resumed sequence reproduces exactly the tokens
+/// of an uncontended run: the resume prefill recomputes prompt +
+/// generated, and greedy decode is deterministic.
+#[test]
+fn preempted_sequence_resumes_with_identical_tokens() {
+    let mut cfg = ServingConfig::default();
+    cfg.scheduler.max_batch = 2;
+    let Some((mut engine, tok)) = engine_or_skip(cfg) else { return };
+
+    // Pick two tasks whose solo runs are long enough that the pair
+    // overlaps for several decode steps (selection is deterministic
+    // given the artifacts).
+    let mut picked = None;
+    for seed in 0..24 {
+        let ta = make_task(&mut Rng::new(seed), 8, 2);
+        let tb = make_task(&mut Rng::new(seed + 100), 8, 2);
+        let pa = tok.encode_prompt(&ta.prompt).unwrap();
+        let pb = tok.encode_prompt(&tb.prompt).unwrap();
+        if pa.len() > 64 || pb.len() > 64 {
+            continue;
+        }
+        let ca = solo_run(&mut engine, pa.clone(), 40, PolicyKind::FullKv);
+        let cb = solo_run(&mut engine, pb.clone(), 16, PolicyKind::FullKv);
+        if ca.generated.len() >= 6 && cb.generated.len() >= 4 {
+            picked = Some((pa, pb, ca, cb));
+            break;
+        }
+    }
+    let Some((pa, pb, solo_a, solo_b)) = picked else {
+        eprintln!("[skip] no task pair with long enough solo runs");
+        return;
+    };
+
+    // Contended run: a KV byte budget that fits both prompts but not
+    // their growth, so the younger sequence (B) gets recompute-
+    // preempted and later resumed.
+    engine.cfg.scheduler.kv_budget_bytes =
+        (pa.len() + pb.len() + 1) * engine.rt.meta.kv_bytes_per_token();
+    let mut sched = Scheduler::new(&engine, PolicyKind::FullKv);
+    sched.submit(req(0, pa, 40, PolicyKind::FullKv)).unwrap();
+    sched.submit(req(1, pb, 16, PolicyKind::FullKv)).unwrap();
+    let done = sched.run_to_idle(&mut engine).unwrap();
+
+    assert!(sched.preemptions >= 1, "budget never forced a preemption");
+    assert_eq!(sched.resumes, sched.preemptions);
+    assert_eq!(done.len(), 2);
+    for c in &done {
+        assert_ne!(
+            c.finish,
+            FinishReason::Oom,
+            "co-residency pressure must preempt, not OOM-kill"
+        );
+    }
+    let a = done.iter().find(|c| c.id == 0).unwrap();
+    let b = done.iter().find(|c| c.id == 1).unwrap();
+    assert!(b.preemptions >= 1, "the younger sequence is the victim");
+    assert_eq!(
+        b.generated, solo_b.generated,
+        "resumed sequence diverged from its uncontended run"
+    );
+    assert_eq!(a.preemptions, 0, "the older sequence keeps its slot");
+    assert_eq!(
+        a.generated, solo_a.generated,
+        "unpreempted sequence diverged from its uncontended run"
+    );
+    // Telemetry made it into the engine metrics.
+    assert!(engine.metrics.preemptions >= 1);
+    assert_eq!(engine.metrics.resumes, engine.metrics.preemptions);
+}

@@ -1,0 +1,122 @@
+//! Release-mode soak smoke: a churn workload of mixed-length prompts
+//! over-subscribing the decode group under a tight KV byte budget and a
+//! sparsity-directed `kv.mixed` format rule. Asserts the acceptance
+//! criteria of the sequence-lifecycle serving core in one sustained
+//! run with no idle window:
+//!
+//!   * over-subscription produces preempt/resume events and **zero**
+//!     OOM-kills (`FinishReason::Oom` stays reserved for sequences
+//!     that cannot fit even alone),
+//!   * the `kv.mixed` map migrates layer formats **on a busy group** —
+//!     `metrics.kv_layer_formats` changes while the same `GroupCache`
+//!     (no rebuild) keeps serving,
+//!   * decode steps keep landing during a long prompt's chunked
+//!     prefill.
+//!
+//! Skipped (with a notice) when artifacts are not built; CI runs the
+//! suite in release mode so this exercises the optimized scheduler.
+
+use std::path::Path;
+
+use lethe::bench_support::run_churn;
+use lethe::config::{MixedKvRule, ServingConfig};
+use lethe::kvcache::KvFormat;
+use lethe::policy::PolicyKind;
+use lethe::util::prng::Rng;
+use lethe::workload::make_task;
+
+#[test]
+fn churn_soak_preempts_resumes_and_migrates_without_oom() {
+    let dir = Path::new("artifacts");
+    if !dir.join("model_meta.json").exists() {
+        eprintln!("[skip] run `make artifacts` first");
+        return;
+    }
+    let mut cfg = ServingConfig::default();
+    cfg.scheduler.max_batch = 4;
+    cfg.scheduler.prefill_chunk = 24;
+    // Hysteresis long enough that the first co-residency preemption
+    // (priced at the boot-time all-dense rates) lands before the mixed
+    // map compresses the cache.
+    cfg.scheduler.migrate_patience = 30;
+    cfg.kv.mixed = Some(MixedKvRule {
+        sparse: KvFormat::QuantI4,
+        dense: KvFormat::F32,
+        threshold: 0.1,
+    });
+    let rt = lethe::runtime::Runtime::load(dir).expect("runtime loads");
+    let tok = lethe::model::Tokenizer::from_meta(&rt.meta).unwrap();
+    let mut engine = lethe::engine::Engine::new(rt, cfg).unwrap();
+
+    // Mixed-length churn: two long multi-hop prompts up front (the
+    // pressure pair), then alternating short and long.
+    let mut rng = Rng::new(7);
+    let tasks: Vec<_> = (0..12)
+        .map(|i| {
+            if i < 2 || i % 2 == 1 {
+                make_task(&mut rng, 12, 3)
+            } else {
+                make_task(&mut rng, 4, 1)
+            }
+        })
+        .collect();
+    // Budget: the first two prompts at boot-time (all-dense) rates plus
+    // one decode row. Admission (which projects live + in-flight +
+    // candidate bytes) legitimately accepts both, and their combined
+    // decode growth crosses the budget within a few steps — forcing a
+    // recompute-preemption instead of an OOM-kill.
+    let lens: Vec<usize> = tasks
+        .iter()
+        .map(|t| tok.encode_prompt(&t.prompt).unwrap().len())
+        .collect();
+    let row = engine.rt.meta.kv_bytes_per_token();
+    engine.cfg.scheduler.kv_budget_bytes = (lens[0] + lens[1] + 1) * row;
+
+    let boot_formats = engine.metrics.kv_layer_formats.clone();
+    let (stats, completions) =
+        run_churn(&mut engine, &tok, PolicyKind::Lethe, &tasks, 16).unwrap();
+
+    // Every request completes; none is OOM-killed.
+    assert_eq!(completions.len(), tasks.len());
+    let mut ids: Vec<u64> = completions.iter().map(|c| c.id).collect();
+    ids.sort_unstable();
+    assert_eq!(ids, (0..tasks.len() as u64).collect::<Vec<_>>());
+    assert_eq!(stats.oom_finishes, 0, "preemption must replace OOM-kills");
+    assert_eq!(engine.metrics.ooms, 0);
+
+    // Over-subscription really happened, and pressure was handled by
+    // preempt/resume.
+    assert!(stats.peak_queue_depth >= 1, "group was never over-subscribed");
+    assert!(stats.preemptions >= 1, "budget never forced a preemption");
+    assert!(stats.resumes >= 1, "no preempted sequence resumed");
+    assert_eq!(stats.resumes, stats.preemptions);
+
+    // The mixed map migrated on the busy group: per-layer formats
+    // changed without a group rebuild (run_churn keeps one Scheduler —
+    // and thus one GroupCache — for the whole run), while the core was
+    // under load.
+    assert!(stats.kv_migrations >= 1, "kv.mixed never migrated a layer");
+    assert!(
+        stats.busy_migrations >= 1,
+        "no migration landed while the core was serving load"
+    );
+    assert_ne!(
+        engine.metrics.kv_layer_formats, boot_formats,
+        "metrics never observed a changed per-layer format map"
+    );
+    assert!(
+        engine
+            .metrics
+            .kv_layer_formats
+            .iter()
+            .any(|&f| f == KvFormat::QuantI4),
+        "no layer ended up in the sparse format"
+    );
+    assert_eq!(engine.metrics.kv_migrations, stats.kv_migrations);
+
+    // Chunked prefill interleaved with decode in the same ticks.
+    assert!(
+        stats.interleaved_ticks >= 1,
+        "no decode step landed during a chunked prefill"
+    );
+}
