@@ -203,6 +203,7 @@ pub fn run_churn(
             max_new_tokens: max_new,
             policy,
             submitted_at: std::time::Instant::now(),
+            deadline_ms: None,
         })?;
     }
     let t0 = std::time::Instant::now();

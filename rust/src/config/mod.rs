@@ -170,6 +170,17 @@ pub struct SchedulerConfig {
     /// layer formats in place (hysteresis against a sparsity EMA
     /// hovering at the `kv.mixed` threshold).
     pub migrate_patience: usize,
+    /// Swap-vs-recompute cost model for preemption victims: a victim is
+    /// swapped to host (stored-precision rows serialized and restored
+    /// verbatim) instead of recompute-preempted when its live KV bytes
+    /// are at most `resume_tokens * swap_threshold_bytes_per_token`.
+    /// 0 disables swapping entirely (recompute only, the PR-5
+    /// behaviour).
+    pub swap_threshold_bytes_per_token: usize,
+    /// Graceful-shutdown drain window: after shutdown is requested the
+    /// scheduler stops admitting and gives in-flight work this many
+    /// milliseconds to finish before deadline-ing it out.
+    pub drain_window_ms: u64,
 }
 
 impl Default for SchedulerConfig {
@@ -182,7 +193,34 @@ impl Default for SchedulerConfig {
             prefill_chunk: 64,
             kv_budget_bytes: 0,
             migrate_patience: 4,
+            swap_threshold_bytes_per_token: 0,
+            drain_window_ms: 2000,
         }
+    }
+}
+
+/// Deterministic fault-injection knobs (`faults.*`). All rates default
+/// to zero, which disables injection entirely — the engine then holds
+/// no [`crate::fault::FaultPlan`] and the hot path pays one branch per
+/// tick.
+#[derive(Clone, Debug, Default, PartialEq)]
+pub struct FaultsConfig {
+    /// Seed for the fault schedule (same seed ⇒ same injected faults).
+    pub seed: u64,
+    /// Per-draw probability of injecting at the engine seams (KV
+    /// insert, runtime execute, migration, tick stall), in [0, 1].
+    pub rate: f64,
+    /// Milliseconds a `TickStall` injection sleeps before the step.
+    pub stall_ms: u64,
+    /// Per-connection probability of dropping a TCP connection after
+    /// its first request, in [0, 1].
+    pub conn_drop_rate: f64,
+}
+
+impl FaultsConfig {
+    /// True when any injection seam has a non-zero probability.
+    pub fn enabled(&self) -> bool {
+        self.rate > 0.0 || self.conn_drop_rate > 0.0
     }
 }
 
@@ -196,6 +234,7 @@ pub struct ServingConfig {
     pub baseline: BaselineParams,
     pub scheduler: SchedulerConfig,
     pub kv: KvConfig,
+    pub faults: FaultsConfig,
 }
 
 impl Default for ServingConfig {
@@ -207,6 +246,7 @@ impl Default for ServingConfig {
             baseline: BaselineParams::default(),
             scheduler: SchedulerConfig::default(),
             kv: KvConfig::default(),
+            faults: FaultsConfig::default(),
         }
     }
 }
@@ -232,7 +272,7 @@ impl ServingConfig {
         let mut c = ServingConfig::default();
         for (k, _) in j.as_obj()? {
             if !["artifacts_dir", "cache_profile", "lethe", "baseline",
-                 "scheduler", "kv"]
+                 "scheduler", "kv", "faults"]
                 .contains(&k.as_str())
             {
                 anyhow::bail!("unknown config section '{k}'");
@@ -265,6 +305,17 @@ impl ServingConfig {
             get_usize(s, "prefill_chunk", &mut c.scheduler.prefill_chunk)?;
             get_usize(s, "kv_budget_bytes", &mut c.scheduler.kv_budget_bytes)?;
             get_usize(s, "migrate_patience", &mut c.scheduler.migrate_patience)?;
+            get_usize(
+                s,
+                "swap_threshold_bytes_per_token",
+                &mut c.scheduler.swap_threshold_bytes_per_token,
+            )?;
+            if let Some(v) = s.opt("drain_window_ms") {
+                c.scheduler.drain_window_ms = v
+                    .as_usize()
+                    .context("config key 'drain_window_ms'")?
+                    as u64;
+            }
             if let Some(v) = s.opt("prefill_buckets") {
                 c.scheduler.prefill_buckets = v
                     .as_arr()?
@@ -318,6 +369,27 @@ impl ServingConfig {
                 c.kv.mixed = Some(rule);
             }
         }
+        if let Some(f) = j.opt("faults") {
+            for (k, _) in f.as_obj()? {
+                if !["seed", "rate", "stall_ms", "conn_drop_rate"]
+                    .contains(&k.as_str())
+                {
+                    anyhow::bail!("unknown faults key '{k}'");
+                }
+            }
+            if let Some(v) = f.opt("seed") {
+                c.faults.seed =
+                    v.as_usize().context("config key 'faults.seed'")? as u64;
+            }
+            get_f64(f, "rate", &mut c.faults.rate)?;
+            if let Some(v) = f.opt("stall_ms") {
+                c.faults.stall_ms = v
+                    .as_usize()
+                    .context("config key 'faults.stall_ms'")?
+                    as u64;
+            }
+            get_f64(f, "conn_drop_rate", &mut c.faults.conn_drop_rate)?;
+        }
         c.validate()?;
         Ok(c)
     }
@@ -353,6 +425,14 @@ impl ServingConfig {
                 "kv.mixed.threshold must be in [0, 1]"
             );
         }
+        anyhow::ensure!(
+            (0.0..=1.0).contains(&self.faults.rate),
+            "faults.rate must be in [0, 1]"
+        );
+        anyhow::ensure!(
+            (0.0..=1.0).contains(&self.faults.conn_drop_rate),
+            "faults.conn_drop_rate must be in [0, 1]"
+        );
         Ok(())
     }
 }
@@ -409,6 +489,47 @@ mod tests {
         .is_err());
         assert!(ServingConfig::from_json(
             &parse(r#"{"scheduler": {"migrate_patience": 0}}"#).unwrap()
+        )
+        .is_err());
+    }
+
+    #[test]
+    fn faults_and_resilience_knobs_parse_and_validate() {
+        // Defaults: injection off, swap off, 2 s drain window.
+        let c = ServingConfig::from_json(&parse("{}").unwrap()).unwrap();
+        assert!(!c.faults.enabled());
+        assert_eq!(c.scheduler.swap_threshold_bytes_per_token, 0);
+        assert_eq!(c.scheduler.drain_window_ms, 2000);
+
+        let c = ServingConfig::from_json(
+            &parse(
+                r#"{"faults": {"seed": 9, "rate": 0.05, "stall_ms": 3,
+                               "conn_drop_rate": 0.1},
+                    "scheduler": {"swap_threshold_bytes_per_token": 4096,
+                                  "drain_window_ms": 500}}"#,
+            )
+            .unwrap(),
+        )
+        .unwrap();
+        assert_eq!(c.faults.seed, 9);
+        assert_eq!(c.faults.rate, 0.05);
+        assert_eq!(c.faults.stall_ms, 3);
+        assert_eq!(c.faults.conn_drop_rate, 0.1);
+        assert!(c.faults.enabled());
+        assert_eq!(c.scheduler.swap_threshold_bytes_per_token, 4096);
+        assert_eq!(c.scheduler.drain_window_ms, 500);
+
+        // Out-of-range rates and unknown keys are rejected.
+        assert!(ServingConfig::from_json(
+            &parse(r#"{"faults": {"rate": 1.5}}"#).unwrap()
+        )
+        .is_err());
+        assert!(ServingConfig::from_json(
+            &parse(r#"{"faults": {"conn_drop_rate": -0.1}}"#).unwrap()
+        )
+        .is_err());
+        assert!(ServingConfig::from_json(
+            &parse(r#"{"faults": {"probability": 0.5}}"#).unwrap()
         )
         .is_err());
     }

@@ -4,6 +4,7 @@
 //! smallest compiled batch bucket.
 
 use crate::attn::sparsity::SparsityTracker;
+use crate::error::FailureKind;
 use crate::kvcache::{CacheDims, FormatMap, GroupCache, KvFormat};
 use crate::policy::{EvictionPolicy, PolicyKind};
 
@@ -16,6 +17,15 @@ pub enum FinishReason {
     /// capacity. Co-residency pressure is handled by recompute-
     /// preemption in the scheduler, never by an OOM kill.
     Oom,
+    /// The request's `deadline_ms` elapsed (or the shutdown drain
+    /// window closed) before the sequence finished; enforced at tick
+    /// boundaries by the scheduler.
+    DeadlineExceeded,
+    /// The sequence failed (KV alloc, runtime execute, migration, slot
+    /// panic, or an injected fault — see [`FailureKind`]) and was
+    /// finished in place of poisoning the tick: its slot and KV rows
+    /// are freed and every other sequence proceeds.
+    Error(FailureKind),
 }
 
 /// Lifecycle of one sequence through the serving core. Owned by the
@@ -89,6 +99,11 @@ pub struct SeqState {
     /// Wall-clock bookkeeping for latency metrics (set by the server).
     pub submitted_at: Option<std::time::Instant>,
     pub first_token_at: Option<std::time::Instant>,
+    /// Absolute completion deadline (from the request's `deadline_ms`);
+    /// the scheduler finishes the sequence with
+    /// [`FinishReason::DeadlineExceeded`] at the first tick boundary
+    /// past it. `None` = no deadline.
+    pub deadline: Option<std::time::Instant>,
 }
 
 impl SeqState {
@@ -118,7 +133,15 @@ impl SeqState {
             preemptions: 0,
             submitted_at: None,
             first_token_at: None,
+            deadline: None,
         }
+    }
+
+    /// Finish this sequence with a typed failure; the scheduler reaps
+    /// it like any other completion (slot and KV rows are freed).
+    pub fn fail(&mut self, kind: FailureKind) {
+        self.finished = Some(FinishReason::Error(kind));
+        self.phase = SeqPhase::Finished;
     }
 
     /// Record prefill completion + the first generated token.
@@ -263,6 +286,20 @@ impl DecodeGroup {
         }
     }
 
+    /// Mark the sequence with the longest cache as failed with a typed
+    /// reason — the group-wide analogue of [`DecodeGroup::mark_oom`]
+    /// for failures (e.g. a runtime execute error) that cannot be
+    /// attributed to one slot. Failing the longest sequence sheds the
+    /// most pressure; the survivors retry next tick.
+    pub fn mark_failed(&mut self, kind: FailureKind) {
+        if let Some((b, _)) = (0..self.seqs.len())
+            .map(|b| (b, self.cache.max_len_slot(b)))
+            .max_by_key(|&(_, l)| l)
+        {
+            self.seqs[b].fail(kind);
+        }
+    }
+
     /// Take the sequence at `slot` out of the group (recompute-
     /// preemption): its cache rows are recycled exactly like a reap —
     /// swap-with-last keeps the survivors front-packed — but the
@@ -392,6 +429,39 @@ mod tests {
         assert_eq!(s.phase, SeqPhase::Decoding);
         s.note_token(2); // EOS
         assert_eq!(s.phase, SeqPhase::Finished);
+    }
+
+    #[test]
+    fn fail_and_mark_failed_finish_with_typed_error() {
+        let mut s = seq(1);
+        s.note_prefilled(2, 10);
+        s.fail(FailureKind::SlotPanic);
+        assert_eq!(
+            s.finished,
+            Some(FinishReason::Error(FailureKind::SlotPanic))
+        );
+        assert_eq!(s.phase, SeqPhase::Finished);
+
+        // mark_failed hits the longest slot, like mark_oom, and the
+        // reap frees its slot for the survivors.
+        let mut g = DecodeGroup::new(dims(2), PolicyKind::FullKv);
+        for i in 0..2 {
+            let slot = g.free_slot().unwrap();
+            let mut s = seq(i as u64);
+            s.note_prefilled(1, 10);
+            g.install(slot, s);
+        }
+        g.cache.insert(0, 1, &[0.0; 4], &[0.0; 4], 0).unwrap();
+        g.cache.insert(0, 1, &[0.0; 4], &[0.0; 4], 1).unwrap();
+        g.mark_failed(FailureKind::RuntimeExecute);
+        assert_eq!(
+            g.seqs[1].finished,
+            Some(FinishReason::Error(FailureKind::RuntimeExecute))
+        );
+        assert!(g.seqs[0].finished.is_none());
+        assert_eq!(g.reap(), 1);
+        assert_eq!(g.active(), 1);
+        assert_eq!(g.cache.len(0, 1), 0, "failed slot's rows recycled");
     }
 
     #[test]

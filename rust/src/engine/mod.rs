@@ -34,6 +34,8 @@ pub use group::{DecodeGroup, FinishReason, PruneEvent, SeqPhase, SeqState};
 
 use crate::attn::score::ProbsView;
 use crate::config::ServingConfig;
+use crate::error::{EngineError, FailureKind};
+use crate::fault::{FaultPlan, FaultSite};
 use crate::kvcache::{CacheDims, FormatMap, PackScratch, SlotViewMut};
 use crate::metrics::EngineMetrics;
 use crate::policy::{LayerState, PolicyKind};
@@ -63,6 +65,11 @@ pub struct Engine {
     layer_sparsity: Vec<f64>,
     /// Worker pool for the per-slot post-decode pipeline.
     pool: ThreadPool,
+    /// Deterministic fault-injection plan (`faults.*` config); `None`
+    /// in production — the hot path then pays one branch per step. All
+    /// draws happen on single-threaded control flow *before* the
+    /// per-slot fan-out, so a seed fully determines the fault schedule.
+    pub faults: Option<FaultPlan>,
     pub metrics: EngineMetrics,
     /// When set, [`Engine::step`] keeps a copy of the raw per-head
     /// attention probs `[L, B, Hq, C]` of the last step — the Figures 1
@@ -96,6 +103,7 @@ impl Engine {
                  (model has {n_layers} layers)"
             ));
         }
+        let faults = FaultPlan::from_config(&cfg.faults);
         Ok(Engine {
             rt,
             cfg,
@@ -105,6 +113,7 @@ impl Engine {
             slot_score_bufs: Vec::new(),
             layer_sparsity: vec![0.0; n_layers],
             pool: ThreadPool::new(slot_workers()),
+            faults,
             metrics: EngineMetrics::default(),
             keep_probs: false,
             last_probs: None,
@@ -290,6 +299,25 @@ impl Engine {
         if n == 0 {
             return Ok(Vec::new());
         }
+        // Deterministic fault injection: all draws happen here, on
+        // single-threaded control flow before the per-slot fan-out, so
+        // one seed fixes the whole fault schedule regardless of worker
+        // interleaving. `inject_slot` fails exactly one slot's KV
+        // insert; `inject_exec` fails the runtime execute call.
+        let mut inject_slot: Option<usize> = None;
+        let mut inject_exec = false;
+        if let Some(fp) = self.faults.as_mut() {
+            if fp.trip(FaultSite::TickStall) {
+                std::thread::sleep(std::time::Duration::from_millis(
+                    fp.stall_ms(),
+                ));
+            }
+            if fp.trip(FaultSite::KvAlloc) {
+                inject_slot = Some(fp.pick(n));
+            }
+            inject_exec = fp.trip(FaultSite::RuntimeExecute);
+            self.metrics.faults_injected = fp.injected;
+        }
         let t0 = Instant::now();
         let bb = self.batch_bucket(n)?;
         // +1 headroom: the in-graph insert writes at slot len.
@@ -322,8 +350,28 @@ impl Engine {
         let t_pack = t0.elapsed().as_secs_f64();
 
         let t1 = Instant::now();
-        let out = self.rt.decode(bb, cap, &scratch.k, &scratch.v,
-                                 &scratch.lens, &tokens, &positions)?;
+        let decode_res = if inject_exec {
+            Err(EngineError::RuntimeExecute {
+                detail: "injected fault".into(),
+            }
+            .into())
+        } else {
+            self.rt.decode(bb, cap, &scratch.k, &scratch.v,
+                           &scratch.lens, &tokens, &positions)
+        };
+        let out = match decode_res {
+            Ok(out) => out,
+            Err(e) => {
+                // A failed execute fails one sequence — the longest,
+                // shedding the most pressure — with a typed finish; the
+                // survivors retry next tick instead of the whole tick
+                // erroring out.
+                group.mark_failed(FailureKind::RuntimeExecute);
+                self.metrics.seq_failures += 1;
+                crate::log_warn!("decode execute failed: {e:#}");
+                return Ok(Vec::new());
+            }
+        };
         let t_exec = t1.elapsed().as_secs_f64();
 
         // Per-slot post-decode pipeline: every slot's work (K/V insert
@@ -350,6 +398,7 @@ impl Engine {
                 results[0] = Some(process_slot(
                     view, &mut seqs[0], &mut self.slot_score_bufs[0],
                     out_ref, 0, bb, n_layers, hkv_d, vocab, cmax,
+                    inject_slot == Some(0),
                 ));
             } else {
                 let mut jobs: Vec<Box<dyn FnOnce() + Send + '_>> =
@@ -361,23 +410,50 @@ impl Engine {
                     .zip(results.iter_mut())
                     .enumerate()
                 {
+                    let inject = inject_slot == Some(b);
                     jobs.push(Box::new(move || {
                         *res = Some(process_slot(
                             view, seq, buf, out_ref, b, bb, n_layers,
-                            hkv_d, vocab, cmax,
+                            hkv_d, vocab, cmax, inject,
                         ));
                     }));
                 }
                 self.pool.scoped(jobs);
             }
         }
+        // Per-slot outcomes: a slot that failed (typed error) or whose
+        // worker panicked (the pool caught it; its result cell is still
+        // None) finishes *that sequence* with FinishReason::Error — the
+        // slot and its KV rows are freed at the next reap and every
+        // other sequence proceeds.
         let mut produced = Vec::with_capacity(n);
         for (b, r) in results.into_iter().enumerate() {
-            let o = r
-                .ok_or_else(|| anyhow!("slot {b} worker panicked"))??;
-            produced.push((b, o.token));
-            self.metrics.prune_events += o.prune_events;
-            self.metrics.pruned_tokens += o.pruned_tokens;
+            match r {
+                Some(Ok(o)) => {
+                    produced.push((b, o.token));
+                    self.metrics.prune_events += o.prune_events;
+                    self.metrics.pruned_tokens += o.pruned_tokens;
+                }
+                Some(Err(e)) => {
+                    let kind = if inject_slot == Some(b) {
+                        FailureKind::Injected
+                    } else {
+                        e.downcast_ref::<EngineError>()
+                            .and_then(EngineError::failure_kind)
+                            .unwrap_or(FailureKind::KvAlloc)
+                    };
+                    crate::log_warn!("slot {b} failed ({kind}): {e:#}");
+                    group.seq_mut(b).fail(kind);
+                    self.metrics.seq_failures += 1;
+                }
+                None => {
+                    crate::log_warn!(
+                        "slot {b} worker panicked; failing its sequence"
+                    );
+                    group.seq_mut(b).fail(FailureKind::SlotPanic);
+                    self.metrics.seq_failures += 1;
+                }
+            }
         }
         let t_policy = t2.elapsed().as_secs_f64();
         self.observe_group_sparsity(group);
@@ -452,6 +528,8 @@ struct SlotOutcome {
 /// One slot's complete post-decode work: K/V insert mirror, score
 /// accumulation + sparsity, greedy sampling, multi-round pruning. Runs on
 /// a pool worker; touches only slot-local state (`view`, `seq`, `buf`).
+/// `inject` simulates a KV-alloc failure at the insert seam (the fault
+/// plan decided this slot before the fan-out).
 #[allow(clippy::too_many_arguments)]
 fn process_slot(
     mut view: SlotViewMut<'_>,
@@ -464,7 +542,15 @@ fn process_slot(
     hkv_d: usize,
     vocab: usize,
     cmax: usize,
+    inject: bool,
 ) -> Result<SlotOutcome> {
+    if inject {
+        return Err(EngineError::KvAlloc {
+            seq: seq.id,
+            detail: "injected fault".into(),
+        }
+        .into());
+    }
     // Mirror the in-graph insert host-side.
     let pos = seq.abs_pos as i32;
     for l in 0..n_layers {

@@ -1,0 +1,239 @@
+//! Typed failure semantics for the serving stack.
+//!
+//! Errors crossing the engine/scheduler/server boundary are still
+//! carried by `anyhow` (so call sites and tests keep their `Result`
+//! shapes), but the serving-relevant ones are now a concrete
+//! [`EngineError`] placed at the *root* of the chain, recoverable with
+//! `err.downcast_ref::<EngineError>()`. Two classifications matter:
+//!
+//!   * **retryable** — the request never entered (or never corrupted)
+//!     the engine: admission backpressure ([`EngineError::Overloaded`])
+//!     and shutdown drain ([`EngineError::ShuttingDown`]). Clients may
+//!     resubmit verbatim, optionally after
+//!     [`EngineError::retry_after_ms`].
+//!   * **fatal to the request** — the sequence itself failed
+//!     (allocation, runtime execute, migration, deadline). The sequence
+//!     finishes with `FinishReason::Error(..)` /
+//!     `FinishReason::DeadlineExceeded` and frees its slot and KV rows;
+//!     the rest of the tick proceeds.
+//!
+//! [`FailureKind`] is the compact `Copy` payload embedded in
+//! `FinishReason::Error(..)` so per-sequence finishes stay cheap to
+//! copy and compare.
+
+use std::fmt;
+
+/// Compact classification of *why* a sequence failed, embedded in
+/// `FinishReason::Error(..)`. `Copy` on purpose: finish reasons are
+/// copied around the scheduler and completions freely.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum FailureKind {
+    /// A KV-cache row allocation / insert failed (e.g. capacity
+    /// overflow in the slot's arena).
+    KvAlloc,
+    /// The device runtime failed to execute a decode/prefill step.
+    RuntimeExecute,
+    /// A live per-layer format migration failed under the sequence.
+    Migration,
+    /// The per-slot post-decode worker panicked; the panic was caught
+    /// and converted into a single-sequence failure.
+    SlotPanic,
+    /// A deterministic fault-injection plan tripped at this seam
+    /// (testing only; see [`crate::fault::FaultPlan`]).
+    Injected,
+}
+
+impl FailureKind {
+    /// Stable lower-case label (metrics / log lines).
+    pub fn label(&self) -> &'static str {
+        match self {
+            FailureKind::KvAlloc => "kv_alloc",
+            FailureKind::RuntimeExecute => "runtime_execute",
+            FailureKind::Migration => "migration",
+            FailureKind::SlotPanic => "slot_panic",
+            FailureKind::Injected => "injected",
+        }
+    }
+}
+
+impl fmt::Display for FailureKind {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        f.write_str(self.label())
+    }
+}
+
+/// The typed error taxonomy for the serving stack. Constructed at the
+/// failure seams and carried through `anyhow::Error`, so boundaries
+/// that care (TCP protocol, scheduler, tests) can
+/// `downcast_ref::<EngineError>()` while everything else keeps plain
+/// `Result<_, anyhow::Error>`.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub enum EngineError {
+    /// KV row allocation / insert failed for sequence `seq`.
+    KvAlloc {
+        /// Id of the sequence whose allocation failed.
+        seq: u64,
+        /// Human-readable cause.
+        detail: String,
+    },
+    /// The device runtime failed executing a step.
+    RuntimeExecute {
+        /// Human-readable cause.
+        detail: String,
+    },
+    /// A live layer-format migration failed.
+    Migration {
+        /// Layer whose migration failed.
+        layer: usize,
+        /// Human-readable cause.
+        detail: String,
+    },
+    /// The request's deadline elapsed before it finished.
+    DeadlineExceeded {
+        /// Id of the deadlined sequence.
+        seq: u64,
+    },
+    /// Admission backpressure: the waiting queue is full. Retryable;
+    /// clients should wait `retry_after_ms` before resubmitting.
+    Overloaded {
+        /// Suggested client backoff before resubmitting.
+        retry_after_ms: u64,
+        /// Queue depth observed at rejection time.
+        waiting: usize,
+    },
+    /// The prompt exceeds the largest prefill bucket; not retryable
+    /// against this deployment (the request itself is too large).
+    PromptTooLong {
+        /// Prompt length in tokens.
+        tokens: usize,
+        /// Largest admissible prompt in tokens.
+        max: usize,
+    },
+    /// The server is draining for shutdown and admits no new work.
+    /// Retryable — against another replica, or after a restart.
+    ShuttingDown,
+}
+
+impl EngineError {
+    /// True when resubmitting the identical request can succeed
+    /// (backpressure and drain); false when the request or the engine
+    /// state it touched is the problem.
+    pub fn is_retryable(&self) -> bool {
+        matches!(
+            self,
+            EngineError::Overloaded { .. } | EngineError::ShuttingDown
+        )
+    }
+
+    /// Suggested client backoff, when the error carries one.
+    pub fn retry_after_ms(&self) -> Option<u64> {
+        match self {
+            EngineError::Overloaded { retry_after_ms, .. } => {
+                Some(*retry_after_ms)
+            }
+            _ => None,
+        }
+    }
+
+    /// The per-sequence [`FailureKind`] this error maps to, for the
+    /// variants that fail a *running* sequence (admission-time errors
+    /// return `None` — no sequence ever existed).
+    pub fn failure_kind(&self) -> Option<FailureKind> {
+        match self {
+            EngineError::KvAlloc { .. } => Some(FailureKind::KvAlloc),
+            EngineError::RuntimeExecute { .. } => {
+                Some(FailureKind::RuntimeExecute)
+            }
+            EngineError::Migration { .. } => Some(FailureKind::Migration),
+            _ => None,
+        }
+    }
+}
+
+impl fmt::Display for EngineError {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        match self {
+            EngineError::KvAlloc { seq, detail } => {
+                write!(f, "kv allocation failed for seq {seq}: {detail}")
+            }
+            EngineError::RuntimeExecute { detail } => {
+                write!(f, "runtime execute failed: {detail}")
+            }
+            EngineError::Migration { layer, detail } => {
+                write!(f, "format migration failed at layer {layer}: {detail}")
+            }
+            EngineError::DeadlineExceeded { seq } => {
+                write!(f, "seq {seq} exceeded its deadline")
+            }
+            EngineError::Overloaded { retry_after_ms, waiting } => write!(
+                f,
+                "overloaded: queue full ({waiting} waiting), retry after \
+                 {retry_after_ms} ms"
+            ),
+            EngineError::PromptTooLong { tokens, max } => write!(
+                f,
+                "prompt of {tokens} tokens exceeds the largest prefill \
+                 bucket {max}"
+            ),
+            EngineError::ShuttingDown => {
+                f.write_str("server is draining for shutdown")
+            }
+        }
+    }
+}
+
+impl std::error::Error for EngineError {}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn retryable_classification() {
+        assert!(EngineError::Overloaded { retry_after_ms: 50, waiting: 8 }
+            .is_retryable());
+        assert!(EngineError::ShuttingDown.is_retryable());
+        assert!(!EngineError::PromptTooLong { tokens: 999, max: 192 }
+            .is_retryable());
+        assert!(!EngineError::KvAlloc { seq: 1, detail: "full".into() }
+            .is_retryable());
+        assert!(
+            !EngineError::RuntimeExecute { detail: "pjrt".into() }
+                .is_retryable()
+        );
+        assert!(!EngineError::DeadlineExceeded { seq: 3 }.is_retryable());
+    }
+
+    #[test]
+    fn retry_after_only_on_overload() {
+        let e = EngineError::Overloaded { retry_after_ms: 75, waiting: 2 };
+        assert_eq!(e.retry_after_ms(), Some(75));
+        assert_eq!(EngineError::ShuttingDown.retry_after_ms(), None);
+    }
+
+    #[test]
+    fn failure_kind_mapping() {
+        let e = EngineError::KvAlloc { seq: 0, detail: String::new() };
+        assert_eq!(e.failure_kind(), Some(FailureKind::KvAlloc));
+        let e = EngineError::Migration { layer: 3, detail: String::new() };
+        assert_eq!(e.failure_kind(), Some(FailureKind::Migration));
+        assert_eq!(EngineError::ShuttingDown.failure_kind(), None);
+    }
+
+    #[test]
+    fn survives_an_anyhow_round_trip() {
+        let e: anyhow::Error =
+            EngineError::Overloaded { retry_after_ms: 10, waiting: 1 }.into();
+        let back = e.downcast_ref::<EngineError>().expect("downcasts");
+        assert!(back.is_retryable());
+        assert_eq!(back.retry_after_ms(), Some(10));
+    }
+
+    #[test]
+    fn display_is_informative() {
+        let e = EngineError::PromptTooLong { tokens: 300, max: 192 };
+        let s = e.to_string();
+        assert!(s.contains("300") && s.contains("192"), "{s}");
+        assert_eq!(FailureKind::SlotPanic.to_string(), "slot_panic");
+    }
+}

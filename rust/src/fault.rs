@@ -1,0 +1,154 @@
+//! Deterministic fault injection for the serving stack.
+//!
+//! A [`FaultPlan`] is a seeded coin sequence consulted at the real
+//! failure seams — KV insert, runtime execute, layer migration, tick
+//! pacing, connection handling — so every recovery path in the engine
+//! is drivable from a test, reproducibly. Two properties are load
+//! bearing:
+//!
+//!   * **Determinism.** All draws come from one seeded
+//!     [`Rng`](crate::util::prng::Rng), and every [`FaultPlan::trip`]
+//!     call happens on single-threaded control flow (the engine decides
+//!     *before* fanning out to slot workers which slot, if any, this
+//!     step fails; the TCP accept loop decides per connection). Same
+//!     seed + same request sequence ⇒ same injected faults.
+//!   * **Zero cost when off.** The engine holds `Option<FaultPlan>`;
+//!     with `faults.rate == 0` in the config the plan is `None` and the
+//!     hot path pays one branch per tick.
+//!
+//! Configured through `faults.*` ([`crate::config::FaultsConfig`]) or
+//! the `--fault-seed` / `--fault-rate` CLI flags.
+
+use crate::config::FaultsConfig;
+use crate::util::prng::Rng;
+
+/// A seam where the plan can inject a failure.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum FaultSite {
+    /// Fail one slot's KV insert during the post-decode pipeline.
+    KvAlloc,
+    /// Fail the whole runtime execute call for one step.
+    RuntimeExecute,
+    /// Fail a pending layer-format migration (it retries later).
+    Migration,
+    /// Stall the tick by `stall_ms` before executing (latency fault).
+    TickStall,
+    /// Drop a TCP connection after its first request (peer fault).
+    ConnDrop,
+}
+
+/// Seeded fault plan: one PRNG, one probability per class of seam.
+/// Construct with [`FaultPlan::from_config`]; `None` means injection is
+/// disabled and costs nothing.
+#[derive(Clone, Debug)]
+pub struct FaultPlan {
+    rng: Rng,
+    rate: f64,
+    conn_drop_rate: f64,
+    stall_ms: u64,
+    /// Faults injected so far (mirrored into `EngineMetrics`).
+    pub injected: u64,
+}
+
+impl FaultPlan {
+    /// Build a plan from the config, or `None` when every rate is zero
+    /// (the common production case).
+    pub fn from_config(cfg: &FaultsConfig) -> Option<FaultPlan> {
+        if !cfg.enabled() {
+            return None;
+        }
+        Some(FaultPlan {
+            rng: Rng::new(cfg.seed),
+            rate: cfg.rate,
+            conn_drop_rate: cfg.conn_drop_rate,
+            stall_ms: cfg.stall_ms,
+            injected: 0,
+        })
+    }
+
+    /// Draw the next coin for `site`; true means "inject here". Must
+    /// only be called from single-threaded control flow so the draw
+    /// sequence — and therefore the whole fault schedule — is
+    /// reproducible for a given seed.
+    pub fn trip(&mut self, site: FaultSite) -> bool {
+        let p = match site {
+            FaultSite::ConnDrop => self.conn_drop_rate,
+            _ => self.rate,
+        };
+        // Always consume a draw so enabling one site does not reshuffle
+        // the schedule of the others.
+        let hit = self.rng.bool(p);
+        if hit {
+            self.injected += 1;
+        }
+        hit
+    }
+
+    /// Deterministically pick a victim in `[0, n)` (e.g. which active
+    /// slot receives an injected KV-alloc failure).
+    pub fn pick(&mut self, n: usize) -> usize {
+        debug_assert!(n > 0);
+        self.rng.below(n as u64) as usize
+    }
+
+    /// Stall duration for [`FaultSite::TickStall`] injections.
+    pub fn stall_ms(&self) -> u64 {
+        self.stall_ms
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn cfg(seed: u64, rate: f64) -> FaultsConfig {
+        FaultsConfig { seed, rate, stall_ms: 0, conn_drop_rate: 0.0 }
+    }
+
+    #[test]
+    fn disabled_config_yields_no_plan() {
+        assert!(FaultPlan::from_config(&cfg(1, 0.0)).is_none());
+        let c = FaultsConfig {
+            conn_drop_rate: 0.5,
+            ..cfg(1, 0.0)
+        };
+        assert!(FaultPlan::from_config(&c).is_some());
+    }
+
+    #[test]
+    fn same_seed_same_schedule() {
+        let mut a = FaultPlan::from_config(&cfg(42, 0.3)).unwrap();
+        let mut b = FaultPlan::from_config(&cfg(42, 0.3)).unwrap();
+        for i in 0..200 {
+            let site = match i % 4 {
+                0 => FaultSite::KvAlloc,
+                1 => FaultSite::RuntimeExecute,
+                2 => FaultSite::Migration,
+                _ => FaultSite::TickStall,
+            };
+            assert_eq!(a.trip(site), b.trip(site));
+        }
+        assert_eq!(a.injected, b.injected);
+    }
+
+    #[test]
+    fn rate_one_always_trips_and_counts() {
+        let mut p = FaultPlan::from_config(&cfg(7, 1.0)).unwrap();
+        for _ in 0..32 {
+            assert!(p.trip(FaultSite::KvAlloc));
+        }
+        assert_eq!(p.injected, 32);
+        // conn_drop_rate is 0: that seam never fires, but still draws.
+        assert!(!p.trip(FaultSite::ConnDrop));
+    }
+
+    #[test]
+    fn pick_is_in_range() {
+        let mut p = FaultPlan::from_config(&cfg(9, 1.0)).unwrap();
+        for n in 1..16 {
+            for _ in 0..8 {
+                assert!(p.pick(n) < n);
+            }
+        }
+    }
+}

@@ -111,6 +111,47 @@ pub trait KvStore {
         to: usize,
         dst: &mut [f32],
     );
+
+    /// Serialize the first `len` rows of slot `b` at layer `l` — every
+    /// head's K and V payloads plus any quantization side data — into
+    /// `out` (appending) **at stored precision**: raw mantissa bytes
+    /// and little-endian f32 parameters, no re-encoding. The format is
+    /// private to a (dims, layer format) pair and is the exact inverse
+    /// of [`KvStore::import_rows`], so an export → import round trip
+    /// restores the stored state verbatim and every subsequent
+    /// [`KvStore::read_rows`] is bit-identical — which is what makes
+    /// swap-to-host preemption resume token-identical under greedy
+    /// decode. Appends exactly `len * layer_row_bytes(l)` bytes.
+    fn export_rows(&self, l: usize, b: usize, len: usize, out: &mut Vec<u8>);
+
+    /// Inverse of [`KvStore::export_rows`]: load `len` rows into slot
+    /// `b` of layer `l` from the front of `bytes`, which must carry an
+    /// encoding produced by the same dims and layer format. Returns the
+    /// bytes consumed (`len * layer_row_bytes(l)`).
+    fn import_rows(&mut self, l: usize, b: usize, len: usize, bytes: &[u8])
+        -> usize;
+}
+
+/// Append `src` as little-endian f32 bytes (host-swap serialization).
+fn push_f32s(out: &mut Vec<u8>, src: &[f32]) {
+    for x in src {
+        out.extend_from_slice(&x.to_le_bytes());
+    }
+}
+
+/// Inverse of [`push_f32s`]: fill `dst` from the front of `bytes` and
+/// return the bytes consumed.
+fn pull_f32s(bytes: &[u8], dst: &mut [f32]) -> usize {
+    for (i, x) in dst.iter_mut().enumerate() {
+        let o = i * 4;
+        *x = f32::from_le_bytes([
+            bytes[o],
+            bytes[o + 1],
+            bytes[o + 2],
+            bytes[o + 3],
+        ]);
+    }
+    dst.len() * 4
 }
 
 /// Flat element offset of row (l, b, h, c) in a `[L, B, Hkv, Cmax, D]`
@@ -212,6 +253,28 @@ impl KvStore for DenseF32 {
         let off = dense_off(&self.dims, l, b, h, from);
         let src = if which_v { &self.v } else { &self.k };
         dst[..n].copy_from_slice(&src[off..off + n]);
+    }
+
+    fn export_rows(&self, l: usize, b: usize, len: usize, out: &mut Vec<u8>) {
+        let n = len * self.dims.d_head;
+        for h in 0..self.dims.kv_heads {
+            let off = dense_off(&self.dims, l, b, h, 0);
+            push_f32s(out, &self.k[off..off + n]);
+            push_f32s(out, &self.v[off..off + n]);
+        }
+    }
+
+    fn import_rows(&mut self, l: usize, b: usize, len: usize, bytes: &[u8])
+        -> usize
+    {
+        let n = len * self.dims.d_head;
+        let mut used = 0;
+        for h in 0..self.dims.kv_heads {
+            let off = dense_off(&self.dims, l, b, h, 0);
+            used += pull_f32s(&bytes[used..], &mut self.k[off..off + n]);
+            used += pull_f32s(&bytes[used..], &mut self.v[off..off + n]);
+        }
+        used
     }
 }
 
@@ -342,6 +405,40 @@ impl KvStore for QuantI8 {
                 &mut dst[(c - from) * d..(c - from + 1) * d],
             );
         }
+    }
+
+    fn export_rows(&self, l: usize, b: usize, len: usize, out: &mut Vec<u8>) {
+        let n = len * self.dims.d_head;
+        for h in 0..self.dims.kv_heads {
+            let off = dense_off(&self.dims, l, b, h, 0);
+            let si = quant_idx(&self.dims, l, b, h, 0);
+            out.extend(self.k_q[off..off + n].iter().map(|&x| x as u8));
+            out.extend(self.v_q[off..off + n].iter().map(|&x| x as u8));
+            push_f32s(out, &self.k_s[si..si + len]);
+            push_f32s(out, &self.v_s[si..si + len]);
+        }
+    }
+
+    fn import_rows(&mut self, l: usize, b: usize, len: usize, bytes: &[u8])
+        -> usize
+    {
+        let n = len * self.dims.d_head;
+        let mut used = 0;
+        for h in 0..self.dims.kv_heads {
+            let off = dense_off(&self.dims, l, b, h, 0);
+            let si = quant_idx(&self.dims, l, b, h, 0);
+            for (i, q) in self.k_q[off..off + n].iter_mut().enumerate() {
+                *q = bytes[used + i] as i8;
+            }
+            used += n;
+            for (i, q) in self.v_q[off..off + n].iter_mut().enumerate() {
+                *q = bytes[used + i] as i8;
+            }
+            used += n;
+            used += pull_f32s(&bytes[used..], &mut self.k_s[si..si + len]);
+            used += pull_f32s(&bytes[used..], &mut self.v_s[si..si + len]);
+        }
+        used
     }
 }
 
@@ -489,6 +586,46 @@ impl KvStore for QuantI4 {
                 &mut dst[(c - from) * d..(c - from + 1) * d],
             );
         }
+    }
+
+    fn export_rows(&self, l: usize, b: usize, len: usize, out: &mut Vec<u8>) {
+        let d = self.dims.d_head;
+        let packed = q4_packed_bytes(d);
+        let groups = q4_groups(d);
+        for h in 0..self.dims.kv_heads {
+            let ri = quant_idx(&self.dims, l, b, h, 0);
+            let (po, go) = (ri * packed, ri * groups);
+            out.extend_from_slice(&self.k_q[po..po + len * packed]);
+            out.extend_from_slice(&self.v_q[po..po + len * packed]);
+            push_f32s(out, &self.k_s[go..go + len * groups]);
+            push_f32s(out, &self.v_s[go..go + len * groups]);
+            push_f32s(out, &self.k_z[go..go + len * groups]);
+            push_f32s(out, &self.v_z[go..go + len * groups]);
+        }
+    }
+
+    fn import_rows(&mut self, l: usize, b: usize, len: usize, bytes: &[u8])
+        -> usize
+    {
+        let d = self.dims.d_head;
+        let packed = q4_packed_bytes(d);
+        let groups = q4_groups(d);
+        let mut used = 0;
+        for h in 0..self.dims.kv_heads {
+            let ri = quant_idx(&self.dims, l, b, h, 0);
+            let (po, go) = (ri * packed, ri * groups);
+            let n = len * packed;
+            self.k_q[po..po + n].copy_from_slice(&bytes[used..used + n]);
+            used += n;
+            self.v_q[po..po + n].copy_from_slice(&bytes[used..used + n]);
+            used += n;
+            let g = len * groups;
+            used += pull_f32s(&bytes[used..], &mut self.k_s[go..go + g]);
+            used += pull_f32s(&bytes[used..], &mut self.v_s[go..go + g]);
+            used += pull_f32s(&bytes[used..], &mut self.k_z[go..go + g]);
+            used += pull_f32s(&bytes[used..], &mut self.v_z[go..go + g]);
+        }
+        used
     }
 }
 
@@ -664,6 +801,16 @@ impl KvStore for KvBackend {
         dst: &mut [f32],
     ) {
         self.stores[l].store().read_rows(0, b, h, which_v, from, to, dst);
+    }
+
+    fn export_rows(&self, l: usize, b: usize, len: usize, out: &mut Vec<u8>) {
+        self.stores[l].store().export_rows(0, b, len, out);
+    }
+
+    fn import_rows(&mut self, l: usize, b: usize, len: usize, bytes: &[u8])
+        -> usize
+    {
+        self.stores[l].store_mut().import_rows(0, b, len, bytes)
     }
 }
 
@@ -1070,6 +1217,56 @@ mod tests {
                 let tol = format_tol(fmt, &rows[4][..4]);
                 assert!((a - b).abs() <= tol, "{fmt:?}: {a} vs {b}");
             }
+        }
+    }
+
+    #[test]
+    fn export_import_round_trips_bit_exact_at_stored_precision() {
+        let mut rng = Rng::new(13);
+        for fmt in ALL_FORMATS {
+            let mut src = KvBackend::new(dims(), fmt);
+            let len = 5;
+            for c in 0..len {
+                let kr = vec_f32(&mut rng, 2 * 4, -2.0, 2.0);
+                let vr = vec_f32(&mut rng, 2 * 4, -2.0, 2.0);
+                src.write_row(1, 0, c, &kr, &vr);
+            }
+            let mut buf = Vec::new();
+            src.export_rows(1, 0, len, &mut buf);
+            assert_eq!(buf.len(), len * src.layer_row_bytes(1), "{fmt:?}");
+            let mut dst = KvBackend::new(dims(), fmt);
+            let used = dst.import_rows(1, 0, len, &buf);
+            assert_eq!(used, buf.len(), "{fmt:?}");
+            // Stored state restored verbatim: every read — exact f32 or
+            // dequantized — is bit-identical to the source store's.
+            let mut a = vec![0.0f32; len * 4];
+            let mut b = vec![0.0f32; len * 4];
+            for h in 0..2 {
+                for which_v in [false, true] {
+                    src.read_rows(1, 0, h, which_v, 0, len, &mut a);
+                    dst.read_rows(1, 0, h, which_v, 0, len, &mut b);
+                    assert_eq!(a, b, "{fmt:?} head {h} v={which_v}");
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn export_import_moves_rows_between_slots() {
+        let mut rng = Rng::new(17);
+        for fmt in ALL_FORMATS {
+            let mut s = KvBackend::new(dims(), fmt);
+            let kr = vec_f32(&mut rng, 8, -1.0, 1.0);
+            let vr = vec_f32(&mut rng, 8, -1.0, 1.0);
+            s.write_row(0, 0, 0, &kr, &vr);
+            let mut buf = Vec::new();
+            s.export_rows(0, 0, 1, &mut buf);
+            assert_eq!(s.import_rows(0, 1, 1, &buf), buf.len());
+            assert_eq!(
+                read_row(&s, 0, 0, 0, 0),
+                read_row(&s, 0, 1, 0, 0),
+                "{fmt:?}"
+            );
         }
     }
 

@@ -648,6 +648,89 @@ impl GroupCache {
             .collect()
     }
 
+    /// Live KV bytes of slot `b` alone, priced like
+    /// [`Self::live_bytes`] (each layer at its own stored-format rate).
+    /// The scheduler's swap-vs-recompute cost model compares this — the
+    /// bytes a swap must move — against the tokens a recompute must
+    /// re-prefill.
+    pub fn slot_live_bytes(&self, b: usize) -> usize {
+        (0..self.dims.layers)
+            .map(|l| self.kv.layer_row_bytes(l) * self.len(l, b))
+            .sum()
+    }
+
+    /// Serialize slot `b`'s live state — rows at **stored precision**
+    /// via [`KvStore::export_rows`], plus lens/pos/scores and the
+    /// per-layer formats in force — into a host-side [`HostSlotImage`].
+    /// Read-only: the slot stays resident until the caller clears it.
+    /// Because the row bytes round-trip exactly and
+    /// [`KvStore::read_rows`] is deterministic for a given stored state,
+    /// a later [`Self::restore_from_host`] reproduces the slot's packed
+    /// K/V bit-identically — swap-preempted sequences resume
+    /// token-identical under greedy decode.
+    pub fn evict_to_host(&self, b: usize) -> HostSlotImage {
+        let layers = self.dims.layers;
+        let mut bytes = Vec::with_capacity(layers);
+        let mut lens = Vec::with_capacity(layers);
+        let mut pos = Vec::with_capacity(layers);
+        let mut scores = Vec::with_capacity(layers);
+        for l in 0..layers {
+            let idx = self.lb(l, b);
+            let len = self.lens[idx];
+            let mut buf = Vec::with_capacity(len * self.kv.layer_row_bytes(l));
+            self.kv.export_rows(l, b, len, &mut buf);
+            bytes.push(buf);
+            lens.push(len);
+            pos.push(self.pos[idx].clone());
+            scores.push(self.scores[idx].clone());
+        }
+        HostSlotImage {
+            bytes,
+            lens,
+            pos,
+            scores,
+            formats: self.formats.as_slice().to_vec(),
+        }
+    }
+
+    /// Load a [`HostSlotImage`] back into slot `b`: the inverse of
+    /// [`Self::evict_to_host`]. Validates **before mutating anything**
+    /// that the image matches this cache — same layer count, every
+    /// layer still in the format it was exported at (a live
+    /// [`Self::migrate_layer_format`] while the image was swapped out
+    /// makes the raw bytes unreadable), rows within capacity, payload
+    /// sizes exact — so a failed restore leaves the slot untouched and
+    /// the caller can fall back to recompute. Marks every (layer, slot)
+    /// pair rewritten (delta-pack full re-copy on next pack).
+    pub fn restore_from_host(&mut self, b: usize, img: &HostSlotImage) -> Result<()> {
+        let layers = self.dims.layers;
+        ensure!(b < self.dims.batch, "slot {b} out of range");
+        ensure!(img.formats.len() == layers,
+                "image covers {} layers, cache has {layers}", img.formats.len());
+        for l in 0..layers {
+            ensure!(self.formats.get(l) == img.formats[l],
+                    "layer {l} format changed while swapped out ({} -> {})",
+                    img.formats[l].label(), self.formats.get(l).label());
+            ensure!(img.lens[l] <= self.dims.capacity,
+                    "image rows {} exceed capacity {} at layer {l}",
+                    img.lens[l], self.dims.capacity);
+            let want = img.lens[l] * self.kv.layer_row_bytes(l);
+            ensure!(img.bytes[l].len() == want,
+                    "image payload at layer {l} is {} bytes, expected {want}",
+                    img.bytes[l].len());
+        }
+        for l in 0..layers {
+            let idx = self.lb(l, b);
+            let used = self.kv.import_rows(l, b, img.lens[l], &img.bytes[l]);
+            debug_assert_eq!(used, img.bytes[l].len());
+            self.lens[idx] = img.lens[l];
+            self.pos[idx] = img.pos[l].clone();
+            self.scores[idx] = img.scores[l].clone();
+            self.touch_rewrite(idx);
+        }
+        Ok(())
+    }
+
     /// Retained-slot bitmap for one layer/slot against absolute positions
     /// 0..=max_pos (Figure 3 visualisation).
     pub fn retention_bitmap(&self, l: usize, b: usize, max_pos: usize) -> Vec<bool> {
@@ -658,6 +741,41 @@ impl GroupCache {
             }
         }
         bm
+    }
+}
+
+/// Host-side image of one slot's live KV state across all layers:
+/// row payload at stored precision (f32/q8/q4 byte streams from
+/// [`KvStore::export_rows`]), the bookkeeping that makes the rows
+/// meaningful (lens, pos, scores) and the per-layer formats the bytes
+/// were encoded at. Produced by [`GroupCache::evict_to_host`] when the
+/// scheduler swap-preempts a sequence instead of discarding its cache;
+/// consumed by [`GroupCache::restore_from_host`] on resume.
+#[derive(Clone, Debug)]
+pub struct HostSlotImage {
+    /// Per-layer row payload at stored precision.
+    bytes: Vec<Vec<u8>>,
+    /// Per-layer live-row counts.
+    lens: Vec<usize>,
+    /// Per-layer original absolute positions (length = lens[l]).
+    pos: Vec<Vec<i32>>,
+    /// Per-layer accumulated attention scores (length = lens[l]).
+    scores: Vec<Vec<f32>>,
+    /// Format each layer's bytes were encoded at (restore must match).
+    formats: Vec<KvFormat>,
+}
+
+impl HostSlotImage {
+    /// Total row-payload bytes held — what a swap actually moved
+    /// (the `swap_bytes_out` / `swap_bytes_in` metrics).
+    pub fn payload_bytes(&self) -> usize {
+        self.bytes.iter().map(Vec::len).sum()
+    }
+
+    /// Longest live row across layers (the KV footprint in tokens the
+    /// admission projection uses when re-admitting a swapped sequence).
+    pub fn max_rows(&self) -> usize {
+        self.lens.iter().copied().max().unwrap_or(0)
     }
 }
 
@@ -1343,6 +1461,95 @@ mod tests {
         assert!((c.scores(0, 0)[0] - 0.5).abs() < 1e-6);
         // Slot 1's K data must be the value its own thread wrote.
         assert!((k_at(&c, 0, 1, 0, 0) - 1.0).abs() < 1e-6);
+    }
+
+    #[test]
+    fn evict_restore_round_trips_all_formats() {
+        for fmt in [KvFormat::F32, KvFormat::QuantI8, KvFormat::QuantI4] {
+            let mut c = GroupCache::with_format(dims(), fmt);
+            for t in 0..5 {
+                for l in 0..2 {
+                    c.insert(l, 0, &row(t as f32, 2, 4),
+                             &row(-(t as f32), 2, 4), t)
+                        .unwrap();
+                }
+            }
+            c.accumulate_scores(0, 0, 1.0, &[0.1, 0.2, 0.3, 0.4, 0.5]);
+            // Stored state snapshot through the deterministic read path.
+            let d = c.dims.d_head;
+            let mut before = vec![0.0; 5 * d];
+            c.kv.read_rows(0, 0, 0, false, 0, 5, &mut before);
+            let img = c.evict_to_host(0);
+            assert_eq!(img.payload_bytes(), c.slot_live_bytes(0),
+                       "image carries exactly the slot's stored bytes");
+            assert_eq!(img.max_rows(), 5);
+            c.reset_slot(0);
+            assert_eq!(c.len(0, 0), 0);
+            let e0 = c.slot_epoch(0, 0);
+            c.restore_from_host(0, &img).unwrap();
+            assert_eq!(c.len(0, 0), 5);
+            assert_eq!(c.len(1, 0), 5);
+            assert_eq!(c.pos(0, 0), &[0, 1, 2, 3, 4]);
+            assert!((c.scores(0, 0)[4] - 0.5).abs() < 1e-6);
+            let mut after = vec![0.0; 5 * d];
+            c.kv.read_rows(0, 0, 0, false, 0, 5, &mut after);
+            assert_eq!(before, after,
+                       "restore must be bit-exact at stored precision ({fmt:?})");
+            // Restore is a rewrite: the next delta-pack re-copies it.
+            let e1 = c.slot_epoch(0, 0);
+            assert!(e1.epoch > e0.epoch);
+            assert_eq!(e1.rewrite, e1.epoch, "restore is a rewrite");
+        }
+    }
+
+    #[test]
+    fn evict_restore_can_target_a_different_slot() {
+        let mut c = GroupCache::with_format(dims(), KvFormat::QuantI8);
+        for t in 0..3 {
+            c.insert(0, 0, &row(t as f32, 2, 4), &row(t as f32, 2, 4), t)
+                .unwrap();
+        }
+        let img = c.evict_to_host(0);
+        c.reset_slot(0);
+        c.restore_from_host(1, &img).unwrap();
+        assert_eq!(c.len(0, 1), 3);
+        assert_eq!(c.pos(0, 1), &[0, 1, 2]);
+        // Delta-pack after restore matches a fresh pack (the rewrite
+        // watermark forces a full re-copy of the restored pairs).
+        let mut s = PackScratch::new(&c.dims, 2, 8);
+        c.pack_delta(&mut s).unwrap();
+        assert_matches_fresh_pack(&c, &s);
+    }
+
+    #[test]
+    fn restore_rejects_changed_layer_format() {
+        let mut c = GroupCache::new(dims());
+        c.insert(0, 0, &row(1.0, 2, 4), &row(1.0, 2, 4), 0).unwrap();
+        let img = c.evict_to_host(0);
+        c.migrate_layer_format(0, KvFormat::QuantI8).unwrap();
+        let err = c.restore_from_host(0, &img).unwrap_err();
+        assert!(err.to_string().contains("format changed"), "{err}");
+        // Validation failed before any mutation: the slot still holds
+        // the (migrated) pre-restore row.
+        assert_eq!(c.len(0, 0), 1);
+    }
+
+    #[test]
+    fn slot_live_bytes_sums_to_live_bytes() {
+        let mut c = GroupCache::with_formats(
+            dims(),
+            FormatMap::new(vec![KvFormat::F32, KvFormat::QuantI4]),
+        );
+        for t in 0..3 {
+            for l in 0..2 {
+                c.insert(l, 0, &row(t as f32, 2, 4), &row(t as f32, 2, 4), t)
+                    .unwrap();
+            }
+        }
+        c.insert(0, 1, &row(7.0, 2, 4), &row(7.0, 2, 4), 0).unwrap();
+        assert_eq!(c.slot_live_bytes(0) + c.slot_live_bytes(1),
+                   c.live_bytes());
+        assert!(c.slot_live_bytes(0) > c.slot_live_bytes(1));
     }
 
     #[test]

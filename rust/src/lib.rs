@@ -16,7 +16,9 @@ pub mod attn;
 pub mod bench_support;
 pub mod config;
 pub mod engine;
+pub mod error;
 pub mod eval;
+pub mod fault;
 pub mod kvcache;
 pub mod metrics;
 pub mod model;

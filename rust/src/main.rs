@@ -51,6 +51,11 @@ fn spec() -> ArgSpec {
     .opt("batch", "4", "decode batch size")
     .opt("rate", "4.0", "arrival rate req/s (serve)")
     .opt("seed", "0", "workload seed")
+    .opt("fault-seed", "",
+         "seed for deterministic fault injection (default: config)")
+    .opt("fault-rate", "",
+         "per-site fault probability in [0,1); 0 disables injection \
+          (default: config/0)")
     .flag("verbose", "debug logging")
 }
 
@@ -75,6 +80,12 @@ fn load_cfg(args: &lethe::util::argparse::Args) -> Result<ServingConfig> {
         let mb = args.get_f64("kv-budget-mb")?;
         anyhow::ensure!(mb >= 0.0, "--kv-budget-mb must be >= 0");
         cfg.scheduler.kv_budget_bytes = (mb * 1e6) as usize;
+    }
+    if !args.get("fault-seed").is_empty() {
+        cfg.faults.seed = args.get_usize("fault-seed")? as u64;
+    }
+    if !args.get("fault-rate").is_empty() {
+        cfg.faults.rate = args.get_f64("fault-rate")?;
     }
     cfg.validate()?;
     Ok(cfg)
@@ -172,6 +183,7 @@ fn cmd_generate(args: &lethe::util::argparse::Args) -> Result<()> {
         prompt,
         max_new_tokens: args.get_usize("max-new")?,
         policy: None,
+        deadline_ms: None,
     })?;
     println!("output  : {}", resp.text);
     println!(
@@ -207,6 +219,7 @@ fn cmd_serve(args: &lethe::util::argparse::Args) -> Result<()> {
                 prompt: item.task.prompt.clone(),
                 max_new_tokens: max_new,
                 policy: None,
+                deadline_ms: None,
             })?,
         ));
     }

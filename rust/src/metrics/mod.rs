@@ -43,6 +43,24 @@ pub struct EngineMetrics {
     /// (layer, slot) pairs that needed a full re-copy (cold scratch,
     /// retention, swap, prefill or reset since last sync).
     pub delta_pack_full: u64,
+    /// Faults deliberately injected by the seeded [`crate::fault`] plan
+    /// (mirror of `FaultPlan::injected`; 0 when injection is off).
+    pub faults_injected: u64,
+    /// Sequences that finished with `FinishReason::Error(..)` — a
+    /// per-slot failure (real or injected) isolated to that sequence
+    /// instead of poisoning the whole tick.
+    pub seq_failures: u64,
+    /// Preemptions served by swap-to-host (KV serialized at stored
+    /// precision) instead of drop-and-recompute.
+    pub swap_preemptions: u64,
+    /// Bytes of KV payload swapped out to host buffers.
+    pub swap_bytes_out: u64,
+    /// Bytes of KV payload restored from host buffers on resume.
+    pub swap_bytes_in: u64,
+    /// Requests aborted because their own `deadline_ms` expired.
+    pub deadline_aborts: u64,
+    /// Requests aborted because the shutdown drain window closed.
+    pub drain_aborts: u64,
     pub live_bytes_last: usize,
     /// What `live_bytes_last` would cost at f32 (Table 2's
     /// "f32-equivalent" column; equals `live_bytes_last` on the dense
@@ -121,6 +139,13 @@ impl EngineMetrics {
             ("pack_bytes_copied", Json::from(self.pack_bytes_copied as usize)),
             ("delta_pack_hits", Json::from(self.delta_pack_hits as usize)),
             ("delta_pack_full", Json::from(self.delta_pack_full as usize)),
+            ("faults_injected", Json::from(self.faults_injected as usize)),
+            ("seq_failures", Json::from(self.seq_failures as usize)),
+            ("swap_preemptions", Json::from(self.swap_preemptions as usize)),
+            ("swap_bytes_out", Json::from(self.swap_bytes_out as usize)),
+            ("swap_bytes_in", Json::from(self.swap_bytes_in as usize)),
+            ("deadline_aborts", Json::from(self.deadline_aborts as usize)),
+            ("drain_aborts", Json::from(self.drain_aborts as usize)),
             ("live_bytes_last", Json::from(self.live_bytes_last)),
             ("f32_equivalent_bytes", Json::from(self.f32_equiv_bytes_last)),
             ("kv_format", Json::str(&self.kv_format)),
@@ -166,6 +191,13 @@ mod tests {
         m.rejected = 1;
         m.queue_depth_last = 5;
         m.kv_migrations = 3;
+        m.faults_injected = 7;
+        m.seq_failures = 2;
+        m.swap_preemptions = 4;
+        m.swap_bytes_out = 1024;
+        m.swap_bytes_in = 1024;
+        m.deadline_aborts = 1;
+        m.drain_aborts = 1;
         m.kv_format = "mixed".to_string();
         m.kv_layer_formats = vec![KvFormat::F32, KvFormat::QuantI4];
         m.f32_equiv_bytes_last = 2048;
@@ -190,6 +222,28 @@ mod tests {
             parsed.get("kv_migrations").unwrap().as_usize().unwrap(),
             3
         );
+        assert_eq!(
+            parsed.get("faults_injected").unwrap().as_usize().unwrap(),
+            7
+        );
+        assert_eq!(parsed.get("seq_failures").unwrap().as_usize().unwrap(), 2);
+        assert_eq!(
+            parsed.get("swap_preemptions").unwrap().as_usize().unwrap(),
+            4
+        );
+        assert_eq!(
+            parsed.get("swap_bytes_out").unwrap().as_usize().unwrap(),
+            1024
+        );
+        assert_eq!(
+            parsed.get("swap_bytes_in").unwrap().as_usize().unwrap(),
+            1024
+        );
+        assert_eq!(
+            parsed.get("deadline_aborts").unwrap().as_usize().unwrap(),
+            1
+        );
+        assert_eq!(parsed.get("drain_aborts").unwrap().as_usize().unwrap(), 1);
         assert_eq!(
             parsed.get("capacity_hist").unwrap().as_arr().unwrap().len(),
             2

@@ -33,11 +33,14 @@
 //!   window or group rebuild required.
 
 use std::collections::VecDeque;
-use std::time::Instant;
+use std::time::{Duration, Instant};
 
 use anyhow::Result;
 
-use crate::engine::{DecodeGroup, Engine, SeqPhase, SeqState};
+use crate::engine::{DecodeGroup, Engine, FinishReason, SeqPhase, SeqState};
+use crate::error::{EngineError, FailureKind};
+use crate::fault::FaultSite;
+use crate::kvcache::HostSlotImage;
 use crate::policy::{make_policy, PolicyKind};
 use crate::util::json::Json;
 
@@ -48,6 +51,18 @@ pub struct Request {
     pub max_new_tokens: usize,
     pub policy: PolicyKind,
     pub submitted_at: Instant,
+    /// Wall-clock budget from submission; past it the request finishes
+    /// with [`FinishReason::DeadlineExceeded`] at the next tick
+    /// boundary, wherever it is in the lifecycle. `None` = no deadline.
+    pub deadline_ms: Option<u64>,
+}
+
+impl Request {
+    /// Absolute deadline instant, anchored at submission time.
+    fn deadline(&self) -> Option<Instant> {
+        self.deadline_ms
+            .map(|ms| self.submitted_at + Duration::from_millis(ms))
+    }
 }
 
 #[derive(Debug)]
@@ -90,14 +105,23 @@ enum WaitEntry {
         tokens: Vec<i32>,
         seq: SeqState,
     },
+    /// A swap-preempted sequence: its live KV rows travel with it as a
+    /// host-side image (stored precision), so resume restores the cache
+    /// instead of re-prefilling. Boxed: the image holds the slot's full
+    /// row payload and the queue must stay cheap to rotate.
+    Swapped {
+        image: Box<HostSlotImage>,
+        seq: SeqState,
+    },
 }
 
 impl WaitEntry {
-    /// Rows the entry's prefill would install (admission projection).
+    /// Rows the entry would install on admission (byte projection).
     fn token_count(&self) -> usize {
         match self {
             WaitEntry::Fresh(r) => r.prompt.len(),
             WaitEntry::Resume { tokens, .. } => tokens.len(),
+            WaitEntry::Swapped { image, .. } => image.max_rows(),
         }
     }
 }
@@ -131,11 +155,34 @@ pub struct Scheduler {
     eos: i32,
     n_layers: usize,
     next_stamp: u64,
+    /// Swap-vs-recompute cost knob (`scheduler.
+    /// swap_threshold_bytes_per_token`): a victim is swapped to host
+    /// when its live bytes ≤ resume-tokens × this threshold, i.e. when
+    /// moving its cache costs less than the configured per-token
+    /// recompute price. 0 disables swapping (always recompute).
+    swap_threshold: usize,
+    /// Bounded drain window after [`Scheduler::begin_drain`].
+    drain_window_ms: u64,
+    /// Shutting down: admit nothing, finish (or deadline-out) in-flight.
+    draining: bool,
+    /// When the drain window closes; set by [`Scheduler::begin_drain`].
+    drain_deadline: Option<Instant>,
     pub rejected: u64,
     pub preemptions: u64,
     pub resumes: u64,
     /// Layer formats migrated in place over the scheduler's lifetime.
     pub migrations: u64,
+    /// Preemptions that swapped the victim's KV to host (subset of
+    /// `preemptions`; the rest were recompute-preemptions).
+    pub swap_preemptions: u64,
+    /// Bytes serialized to host by swap-preemptions.
+    pub swap_bytes_out: u64,
+    /// Bytes restored from host on swap resumes.
+    pub swap_bytes_in: u64,
+    /// Sequences finished by their own request deadline.
+    pub deadline_aborts: u64,
+    /// Sequences finished because the shutdown drain window closed.
+    pub drain_aborts: u64,
 }
 
 impl Scheduler {
@@ -157,31 +204,71 @@ impl Scheduler {
             eos: engine.eos_token(),
             n_layers: engine.dims().n_layers,
             next_stamp: 1,
+            swap_threshold: sc.swap_threshold_bytes_per_token,
+            drain_window_ms: sc.drain_window_ms,
+            draining: false,
+            drain_deadline: None,
             rejected: 0,
             preemptions: 0,
             resumes: 0,
             migrations: 0,
+            swap_preemptions: 0,
+            swap_bytes_out: 0,
+            swap_bytes_in: 0,
+            deadline_aborts: 0,
+            drain_aborts: 0,
         }
     }
 
-    /// Admission control: Err when the waiting queue is full or the
-    /// prompt exceeds the largest compiled prefill bucket
-    /// (backpressure / rejection to the caller).
+    /// Admission control. Every rejection is a typed [`EngineError`]
+    /// at the root of the returned chain (downcastable at the TCP
+    /// boundary): [`EngineError::ShuttingDown`] while draining,
+    /// [`EngineError::PromptTooLong`] past the largest compiled prefill
+    /// bucket, [`EngineError::Overloaded`] (with a suggested backoff)
+    /// when the waiting queue is full.
     pub fn submit(&mut self, req: Request) -> Result<()> {
+        if self.draining {
+            self.rejected += 1;
+            return Err(EngineError::ShuttingDown.into());
+        }
         if req.prompt.len() > self.max_prompt_tokens {
             self.rejected += 1;
-            anyhow::bail!(
-                "prompt of {} tokens exceeds the largest prefill bucket {}",
-                req.prompt.len(),
-                self.max_prompt_tokens
-            );
+            return Err(EngineError::PromptTooLong {
+                tokens: req.prompt.len(),
+                max: self.max_prompt_tokens,
+            }
+            .into());
         }
         if self.waiting.len() >= self.max_waiting {
             self.rejected += 1;
-            anyhow::bail!("queue full ({} waiting)", self.waiting.len());
+            return Err(EngineError::Overloaded {
+                retry_after_ms: 100,
+                waiting: self.waiting.len(),
+            }
+            .into());
         }
         self.waiting.push_back(WaitEntry::Fresh(req));
         Ok(())
+    }
+
+    /// Enter graceful-drain mode: stop admitting new work
+    /// ([`EngineError::ShuttingDown`] from [`Scheduler::submit`]) and
+    /// give in-flight sequences `scheduler.drain_window_ms` to finish;
+    /// whatever is still running past the window is finished with
+    /// [`FinishReason::DeadlineExceeded`] (counted in `drain_aborts`).
+    /// Idempotent: the window is anchored at the first call.
+    pub fn begin_drain(&mut self) {
+        if self.draining {
+            return;
+        }
+        self.draining = true;
+        self.drain_deadline =
+            Some(Instant::now() + Duration::from_millis(self.drain_window_ms));
+    }
+
+    /// True once [`Scheduler::begin_drain`] has been called.
+    pub fn draining(&self) -> bool {
+        self.draining
     }
 
     pub fn waiting(&self) -> usize {
@@ -223,6 +310,7 @@ impl Scheduler {
             ("resumes", Json::from(self.resumes as usize)),
             ("kv_migrations", Json::from(self.migrations as usize)),
             ("kv_format", Json::str(&self.kv_format())),
+            ("draining", Json::from(self.draining)),
             ("metrics", engine.metrics.to_json()),
         ])
     }
@@ -236,6 +324,16 @@ impl Scheduler {
     ///   5. reap completions.
     pub fn tick(&mut self, engine: &mut Engine) -> Result<TickReport> {
         let mut report = TickReport::default();
+
+        // Deadlines first, at the tick boundary: a request past its
+        // `deadline_ms` (or caught by a closing drain window) finishes
+        // with DeadlineExceeded wherever it is — decoding (reaped
+        // below like any completion), mid-prefill, or still queued
+        // (completions synthesized here).
+        report
+            .completed
+            .extend(self.enforce_deadlines(Instant::now()));
+        self.group.reap();
 
         // 0. Live per-layer format migration, with hysteresis. This
         // replaces the old idle-only group rebuild: a busy group's
@@ -257,53 +355,80 @@ impl Scheduler {
             }
         }
 
-        // 2. Admission into the prefill lane (slot reservation: jobs +
-        // active never exceed the group size; byte budget projected for
-        // the prompt about to be installed).
+        // 2. Admission (slot reservation: jobs + active never exceed
+        // the group size; byte budget projected for the rows about to
+        // be installed). A swap-preempted entry restores its host image
+        // straight into a free slot — no re-prefill; everything else
+        // enters the chunked-prefill lane.
         while self.can_admit_front() {
             let entry = self.waiting.pop_front().unwrap();
-            let job = self.start_job(entry, engine);
-            self.prefilling.push(job);
+            match entry {
+                WaitEntry::Swapped { image, seq } => {
+                    self.restore_swapped(*image, seq);
+                }
+                entry => {
+                    let job = self.start_job(entry, engine);
+                    self.prefilling.push(job);
+                }
+            }
         }
 
         // 3. Advance one prefill job by one chunk (round-robin so a
-        // short prompt never waits out a long one's whole prefill).
+        // short prompt never waits out a long one's whole prefill). A
+        // runtime failure here fails *that job's sequence* with a typed
+        // finish instead of poisoning the tick.
         if !self.prefilling.is_empty() {
             let idx = self.rr % self.prefilling.len();
             let next = {
                 let job = &self.prefilling[idx];
                 (job.consumed + self.prefill_chunk).min(job.tokens.len())
             };
-            let out =
-                engine.prefill_window(&self.prefilling[idx].tokens[..next])?;
-            report.prefill_chunks += 1;
-            if next == self.prefilling[idx].tokens.len() {
-                let job = self.prefilling.remove(idx);
-                let slot = self
-                    .group
-                    .free_slot()
-                    .expect("prefill job holds a slot reservation");
-                engine.install_prefill(
-                    &mut self.group,
-                    slot,
-                    job.seq,
-                    &job.tokens,
-                    out,
-                    job.resume,
-                )?;
-                self.group.seq_mut(slot).admit_stamp = self.next_stamp;
-                self.next_stamp += 1;
-                if job.resume {
-                    self.resumes += 1;
+            match engine.prefill_window(&self.prefilling[idx].tokens[..next]) {
+                Err(e) => {
+                    let mut job = self.prefilling.remove(idx);
+                    let kind = e
+                        .downcast_ref::<EngineError>()
+                        .and_then(EngineError::failure_kind)
+                        .unwrap_or(FailureKind::RuntimeExecute);
+                    job.seq.fail(kind);
+                    engine.metrics.seq_failures += 1;
+                    report
+                        .completed
+                        .push(Self::completion_of(job.seq, Instant::now()));
+                    self.rr = idx;
                 }
-                report.prefilled += 1;
-                // The job that slid into `idx` is next in the rotation.
-                self.rr = idx;
-            } else {
-                let job = &mut self.prefilling[idx];
-                job.consumed = next;
-                job.seq.phase = SeqPhase::Prefilling { consumed: next };
-                self.rr = idx + 1;
+                Ok(out) => {
+                    report.prefill_chunks += 1;
+                    if next == self.prefilling[idx].tokens.len() {
+                        let job = self.prefilling.remove(idx);
+                        let slot = self
+                            .group
+                            .free_slot()
+                            .expect("prefill job holds a slot reservation");
+                        engine.install_prefill(
+                            &mut self.group,
+                            slot,
+                            job.seq,
+                            &job.tokens,
+                            out,
+                            job.resume,
+                        )?;
+                        self.group.seq_mut(slot).admit_stamp = self.next_stamp;
+                        self.next_stamp += 1;
+                        if job.resume {
+                            self.resumes += 1;
+                        }
+                        report.prefilled += 1;
+                        // The job that slid into `idx` is next in the
+                        // rotation.
+                        self.rr = idx;
+                    } else {
+                        let job = &mut self.prefilling[idx];
+                        job.consumed = next;
+                        job.seq.phase = SeqPhase::Prefilling { consumed: next };
+                        self.rr = idx + 1;
+                    }
+                }
             }
         }
 
@@ -325,20 +450,7 @@ impl Scheduler {
         self.group.reap();
         let now = Instant::now();
         for seq in self.group.done.drain(..) {
-            let sub = seq.submitted_at.unwrap_or(now);
-            report.completed.push(Completion {
-                id: seq.id,
-                prompt_len: seq.prompt_len,
-                ttft: seq
-                    .first_token_at
-                    .map(|t| (t - sub).as_secs_f64())
-                    .unwrap_or(0.0),
-                total: (now - sub).as_secs_f64(),
-                prune_rounds: seq.prune_log.len(),
-                preemptions: seq.preemptions,
-                finish: seq.finished.unwrap(),
-                generated: seq.generated,
-            });
+            report.completed.push(Self::completion_of(seq, now));
         }
 
         // Serving-pressure telemetry travels with the engine metrics.
@@ -346,7 +458,125 @@ impl Scheduler {
         engine.metrics.rejected = self.rejected;
         engine.metrics.preemptions = self.preemptions;
         engine.metrics.resumes = self.resumes;
+        engine.metrics.swap_preemptions = self.swap_preemptions;
+        engine.metrics.swap_bytes_out = self.swap_bytes_out;
+        engine.metrics.swap_bytes_in = self.swap_bytes_in;
+        engine.metrics.deadline_aborts = self.deadline_aborts;
+        engine.metrics.drain_aborts = self.drain_aborts;
         Ok(report)
+    }
+
+    /// Build the caller-facing [`Completion`] record for a finished
+    /// sequence (shared by the reap path, deadline enforcement and
+    /// typed prefill failures).
+    fn completion_of(seq: SeqState, now: Instant) -> Completion {
+        let sub = seq.submitted_at.unwrap_or(now);
+        Completion {
+            id: seq.id,
+            prompt_len: seq.prompt_len,
+            ttft: seq
+                .first_token_at
+                .map(|t| (t - sub).as_secs_f64())
+                .unwrap_or(0.0),
+            total: (now - sub).as_secs_f64(),
+            prune_rounds: seq.prune_log.len(),
+            preemptions: seq.preemptions,
+            finish: seq.finished.unwrap_or(FinishReason::DeadlineExceeded),
+            generated: seq.generated,
+        }
+    }
+
+    /// `Some(true)` when the shutdown drain window has closed on `seq`,
+    /// `Some(false)` when its own request deadline elapsed, `None`
+    /// while it may keep running. Own deadline wins the attribution
+    /// when both have passed.
+    fn expired(&self, deadline: Option<Instant>, now: Instant) -> Option<bool> {
+        if deadline.is_some_and(|d| now >= d) {
+            return Some(false);
+        }
+        if self.draining && self.drain_deadline.is_some_and(|d| now >= d) {
+            return Some(true);
+        }
+        None
+    }
+
+    /// Finish everything past its deadline (or past the closed drain
+    /// window) with [`FinishReason::DeadlineExceeded`], wherever it is
+    /// in the lifecycle. Active decoders are only *marked* — the tick's
+    /// next reap frees their slots and reports them through the normal
+    /// completion path; mid-prefill jobs and queued entries are removed
+    /// here and their completions synthesized and returned.
+    fn enforce_deadlines(&mut self, now: Instant) -> Vec<Completion> {
+        let mut out = Vec::new();
+        for b in 0..self.group.active() {
+            if self.group.seq(b).finished.is_some() {
+                continue;
+            }
+            if let Some(is_drain) = self.expired(self.group.seq(b).deadline, now)
+            {
+                let seq = self.group.seq_mut(b);
+                seq.finished = Some(FinishReason::DeadlineExceeded);
+                seq.phase = SeqPhase::Finished;
+                self.note_abort(is_drain);
+            }
+        }
+        let mut i = 0;
+        while i < self.prefilling.len() {
+            if let Some(is_drain) =
+                self.expired(self.prefilling[i].seq.deadline, now)
+            {
+                let mut job = self.prefilling.remove(i);
+                job.seq.finished = Some(FinishReason::DeadlineExceeded);
+                job.seq.phase = SeqPhase::Finished;
+                self.note_abort(is_drain);
+                out.push(Self::completion_of(job.seq, now));
+            } else {
+                i += 1;
+            }
+        }
+        let entries: Vec<WaitEntry> = self.waiting.drain(..).collect();
+        for entry in entries {
+            let verdict = match &entry {
+                WaitEntry::Fresh(r) => self.expired(r.deadline(), now),
+                WaitEntry::Resume { seq, .. }
+                | WaitEntry::Swapped { seq, .. } => {
+                    self.expired(seq.deadline, now)
+                }
+            };
+            match verdict {
+                None => self.waiting.push_back(entry),
+                Some(is_drain) => {
+                    self.note_abort(is_drain);
+                    out.push(match entry {
+                        WaitEntry::Fresh(r) => Completion {
+                            id: r.id,
+                            prompt_len: r.prompt.len(),
+                            ttft: 0.0,
+                            total: (now - r.submitted_at).as_secs_f64(),
+                            prune_rounds: 0,
+                            preemptions: 0,
+                            finish: FinishReason::DeadlineExceeded,
+                            generated: Vec::new(),
+                        },
+                        WaitEntry::Resume { mut seq, .. }
+                        | WaitEntry::Swapped { mut seq, .. } => {
+                            seq.finished =
+                                Some(FinishReason::DeadlineExceeded);
+                            Self::completion_of(seq, now)
+                        }
+                    });
+                }
+            }
+        }
+        out
+    }
+
+    fn note_abort(&mut self, is_drain: bool) {
+        if is_drain {
+            self.drain_aborts += 1;
+        } else {
+            self.deadline_aborts += 1;
+        }
     }
 
     /// Drive to completion (used by benches and the eval harness).
@@ -372,10 +602,25 @@ impl Scheduler {
         if self.migrate_streak < self.migrate_patience {
             return Ok(0);
         }
+        if let Some(fp) = engine.faults.as_mut() {
+            if fp.trip(FaultSite::Migration) {
+                engine.metrics.faults_injected = fp.injected;
+                // Injected migration failure: skip this round. The
+                // format diff persists, so patience re-arms and the
+                // migration retries — exactly the real-failure path.
+                self.migrate_streak = 0;
+                return Ok(0);
+            }
+        }
         let mut migrated = 0;
         for l in 0..self.n_layers {
-            if self.group.cache.migrate_layer_format(l, want.get(l))? {
-                migrated += 1;
+            // A failed layer migration is non-fatal: the layer keeps
+            // serving in its old format and the persisting diff retries
+            // after another patience window.
+            match self.group.cache.migrate_layer_format(l, want.get(l)) {
+                Ok(true) => migrated += 1,
+                Ok(false) => {}
+                Err(e) => eprintln!("layer {l} migration failed: {e:#}"),
             }
         }
         self.migrations += migrated as u64;
@@ -428,6 +673,7 @@ impl Scheduler {
                     self.eos,
                 );
                 seq.submitted_at = Some(req.submitted_at);
+                seq.deadline = req.deadline();
                 seq.prompt = req.prompt.clone();
                 seq.phase = SeqPhase::Prefilling { consumed: 0 };
                 PrefillJob {
@@ -441,6 +687,15 @@ impl Scheduler {
                 seq.phase = SeqPhase::Prefilling { consumed: 0 };
                 PrefillJob { tokens, consumed: 0, seq, resume: true }
             }
+            // Swapped entries are restored directly in `tick` (phase 2)
+            // and never reach here; if one ever does, degrade to a
+            // recompute resume (the image is dropped).
+            WaitEntry::Swapped { mut seq, .. } => {
+                let mut tokens = seq.prompt.clone();
+                tokens.extend_from_slice(&seq.generated);
+                seq.phase = SeqPhase::Prefilling { consumed: 0 };
+                PrefillJob { tokens, consumed: 0, seq, resume: true }
+            }
         }
     }
 
@@ -449,6 +704,14 @@ impl Scheduler {
     /// still unfinished among the queue's entries). Returns false when
     /// no sequence can be preempted (none resumable within the prefill
     /// buckets).
+    ///
+    /// Per victim, a cost model picks the eviction flavor: when
+    /// `swap_threshold_bytes_per_token` is set and the victim's live
+    /// bytes ≤ resume-tokens × threshold, its KV rows are serialized to
+    /// host at stored precision (swap — resume restores the cache
+    /// bit-exactly, no re-prefill); otherwise the rows are dropped and
+    /// resume re-prefills prompt + generated (recompute). Both flavors
+    /// reconstruct the identical greedy continuation.
     fn preempt_one(&mut self) -> bool {
         let victim = (0..self.group.active())
             .filter(|&b| {
@@ -459,15 +722,69 @@ impl Scheduler {
         let Some(b) = victim else {
             return false;
         };
-        let mut seq = self.group.remove(b);
-        seq.preemptions += 1;
-        let mut tokens = seq.prompt.clone();
-        tokens.extend_from_slice(&seq.generated);
+        let live = self.group.cache.slot_live_bytes(b);
+        let resume_tokens = {
+            let s = self.group.seq(b);
+            s.prompt.len() + s.generated.len()
+        };
+        // saturating_mul: tests force the swap path with usize::MAX.
+        let swap = self.swap_threshold > 0
+            && live <= resume_tokens.saturating_mul(self.swap_threshold);
         self.preemptions += 1;
         // Bypasses max_waiting on purpose: the sequence was already
         // admitted once; backpressure applies to new work only.
-        self.waiting.push_front(WaitEntry::Resume { tokens, seq });
+        if swap {
+            let image = self.group.cache.evict_to_host(b);
+            self.swap_bytes_out += image.payload_bytes() as u64;
+            self.swap_preemptions += 1;
+            let mut seq = self.group.remove(b);
+            seq.preemptions += 1;
+            self.waiting.push_front(WaitEntry::Swapped {
+                image: Box::new(image),
+                seq,
+            });
+        } else {
+            let mut seq = self.group.remove(b);
+            seq.preemptions += 1;
+            let mut tokens = seq.prompt.clone();
+            tokens.extend_from_slice(&seq.generated);
+            self.waiting.push_front(WaitEntry::Resume { tokens, seq });
+        }
         true
+    }
+
+    /// Re-admit a swap-preempted sequence: restore its host image into
+    /// the next free slot and rejoin the decode group mid-stream (no
+    /// re-prefill). If the restore is rejected — a live format
+    /// migration changed a layer while the image was swapped out — fall
+    /// back to recompute by re-queuing prompt + generated as a normal
+    /// resume entry; the continuation is still token-identical, just
+    /// paid for in prefill FLOPs instead of bytes.
+    fn restore_swapped(&mut self, image: HostSlotImage, mut seq: SeqState) {
+        let slot = self
+            .group
+            .free_slot()
+            .expect("can_admit_front guarantees a free slot");
+        match self.group.cache.restore_from_host(slot, &image) {
+            Ok(()) => {
+                self.swap_bytes_in += image.payload_bytes() as u64;
+                seq.phase = SeqPhase::Decoding;
+                seq.admit_stamp = self.next_stamp;
+                self.next_stamp += 1;
+                self.group.install(slot, seq);
+                self.resumes += 1;
+            }
+            Err(e) => {
+                eprintln!(
+                    "swap restore failed for seq {} (falling back to \
+                     recompute): {e:#}",
+                    seq.id
+                );
+                let mut tokens = seq.prompt.clone();
+                tokens.extend_from_slice(&seq.generated);
+                self.waiting.push_front(WaitEntry::Resume { tokens, seq });
+            }
+        }
     }
 }
 
@@ -483,6 +800,7 @@ mod tests {
             max_new_tokens: 4,
             policy: PolicyKind::Lethe,
             submitted_at: Instant::now(),
+            deadline_ms: None,
         }
     }
 
@@ -510,10 +828,19 @@ mod tests {
             eos: 2,
             n_layers: 1,
             next_stamp: 1,
+            swap_threshold: 0,
+            drain_window_ms: 2000,
+            draining: false,
+            drain_deadline: None,
             rejected: 0,
             preemptions: 0,
             resumes: 0,
             migrations: 0,
+            swap_preemptions: 0,
+            swap_bytes_out: 0,
+            swap_bytes_in: 0,
+            deadline_aborts: 0,
+            drain_aborts: 0,
         }
     }
 
@@ -624,5 +951,144 @@ mod tests {
         // Once the in-flight prefill lane drains, the same entry fits.
         s.prefilling.clear();
         assert!(s.can_admit_front());
+    }
+
+    #[test]
+    fn submit_rejections_are_typed_and_downcastable() {
+        let mut s = bare_sched(2, 1, 0);
+        assert!(s.submit(req(1, 3)).is_ok());
+        let err = s.submit(req(2, 3)).unwrap_err();
+        let ee = err.downcast_ref::<EngineError>().expect("typed root");
+        assert!(ee.is_retryable(), "queue-full is retryable");
+        assert_eq!(ee.retry_after_ms(), Some(100));
+        let err = s.submit(req(3, 99)).unwrap_err();
+        let ee = err.downcast_ref::<EngineError>().expect("typed root");
+        assert!(
+            matches!(ee, EngineError::PromptTooLong { tokens: 99, max: 64 }),
+            "{ee:?}"
+        );
+        assert!(!ee.is_retryable(), "an over-long prompt never fits");
+        assert_eq!(s.rejected, 2);
+    }
+
+    #[test]
+    fn swap_preemption_round_trips_through_host() {
+        let mut s = bare_sched(3, 8, 1);
+        s.swap_threshold = usize::MAX; // force the swap path
+        for i in 0..2 {
+            let mut seq = SeqState::new(i, Box::new(FullKv), 1, 8, 2);
+            seq.prompt = vec![1, 3];
+            seq.note_prefilled(2, 10);
+            seq.admit_stamp = i + 1;
+            let slot = s.group.free_slot().unwrap();
+            s.group
+                .cache
+                .insert(0, slot, &[0.5; 4], &[0.25; 4], 0)
+                .unwrap();
+            s.group.install(slot, seq);
+        }
+        // Manual installs above bypassed the stamp counter.
+        s.next_stamp = 3;
+        assert!(s.preempt_one());
+        assert_eq!(s.preemptions, 1);
+        assert_eq!(s.swap_preemptions, 1, "threshold forces swap");
+        assert!(s.swap_bytes_out > 0);
+        assert_eq!(s.group.active(), 1);
+        let WaitEntry::Swapped { image, seq } =
+            s.waiting.pop_front().unwrap()
+        else {
+            panic!("expected a swapped entry at the front");
+        };
+        assert_eq!(seq.id, 1, "youngest stamp is the victim");
+        assert_eq!(seq.preemptions, 1);
+        assert_eq!(image.max_rows(), 1);
+        s.restore_swapped(*image, seq);
+        assert_eq!(s.group.active(), 2);
+        assert_eq!(s.resumes, 1, "swap resume counts as a resume");
+        assert_eq!(s.swap_bytes_in, s.swap_bytes_out);
+        assert_eq!(s.group.seq(1).id, 1);
+        assert_eq!(s.group.seq(1).phase, SeqPhase::Decoding);
+        assert!(s.group.seq(1).admit_stamp > 2, "re-stamped on re-admit");
+        assert_eq!(s.group.cache.len(0, 1), 1, "KV rows restored");
+    }
+
+    #[test]
+    fn recompute_stays_default_without_threshold() {
+        let mut s = bare_sched(3, 8, 1);
+        let mut seq = SeqState::new(1, Box::new(FullKv), 1, 8, 2);
+        seq.prompt = vec![1, 3];
+        seq.note_prefilled(2, 10);
+        seq.admit_stamp = 1;
+        s.group.cache.insert(0, 0, &[0.5; 4], &[0.25; 4], 0).unwrap();
+        s.group.install(0, seq);
+        assert!(s.preempt_one());
+        assert_eq!(s.swap_preemptions, 0, "threshold 0 never swaps");
+        assert!(matches!(
+            s.waiting.front(),
+            Some(WaitEntry::Resume { .. })
+        ));
+    }
+
+    #[test]
+    fn deadlines_abort_work_in_every_lifecycle_stage() {
+        let mut s = bare_sched(2, 8, 0);
+        let mut r = req(1, 3);
+        r.deadline_ms = Some(0);
+        assert!(s.submit(r).is_ok());
+        let mut pseq = SeqState::new(2, Box::new(FullKv), 1, 8, 2);
+        pseq.deadline = Some(Instant::now());
+        s.prefilling.push(PrefillJob {
+            tokens: vec![1; 3],
+            consumed: 0,
+            seq: pseq,
+            resume: false,
+        });
+        let mut aseq = SeqState::new(3, Box::new(FullKv), 1, 8, 2);
+        aseq.note_prefilled(1, 10);
+        aseq.deadline = Some(Instant::now());
+        s.group.install(0, aseq);
+        let done = s.enforce_deadlines(Instant::now());
+        // Queued + mid-prefill completions synthesize here; the active
+        // decoder is marked and flows through the normal reap.
+        assert_eq!(done.len(), 2);
+        assert!(done
+            .iter()
+            .all(|c| c.finish == FinishReason::DeadlineExceeded));
+        assert_eq!(s.deadline_aborts, 3);
+        assert_eq!(s.drain_aborts, 0);
+        assert_eq!(s.waiting(), 0);
+        assert_eq!(s.prefilling(), 0);
+        assert_eq!(
+            s.group.seq(0).finished,
+            Some(FinishReason::DeadlineExceeded)
+        );
+        assert_eq!(s.group.reap(), 1, "marked decoder reaps normally");
+        // No deadline, no abort: a fresh entry stays queued.
+        assert!(s.submit(req(9, 3)).is_ok());
+        assert!(s.enforce_deadlines(Instant::now()).is_empty());
+        assert_eq!(s.waiting(), 1);
+    }
+
+    #[test]
+    fn drain_blocks_admission_and_closes_window() {
+        let mut s = bare_sched(2, 8, 0);
+        assert!(s.submit(req(1, 3)).is_ok());
+        s.drain_window_ms = 0;
+        s.begin_drain();
+        assert!(s.draining());
+        let err = s.submit(req(2, 3)).unwrap_err();
+        assert!(matches!(
+            err.downcast_ref::<EngineError>(),
+            Some(EngineError::ShuttingDown)
+        ));
+        let first = s.drain_deadline;
+        s.begin_drain();
+        assert_eq!(s.drain_deadline, first, "drain window is anchored once");
+        let done = s.enforce_deadlines(Instant::now());
+        assert_eq!(done.len(), 1, "zero-width window aborts queued work");
+        assert_eq!(done[0].finish, FinishReason::DeadlineExceeded);
+        assert_eq!(s.drain_aborts, 1);
+        assert_eq!(s.deadline_aborts, 0);
+        assert!(s.idle(), "drained to idle");
     }
 }

@@ -27,6 +27,10 @@ pub struct GenerateRequest {
     pub max_new_tokens: usize,
     /// None = server default policy.
     pub policy: Option<PolicyKind>,
+    /// Wall-clock completion budget in milliseconds; past it the
+    /// request finishes with `DeadlineExceeded` at the next tick
+    /// boundary. None = no deadline.
+    pub deadline_ms: Option<u64>,
 }
 
 #[derive(Clone, Debug)]
@@ -62,6 +66,10 @@ pub struct Server {
     handle: Option<JoinHandle<()>>,
     next_id: AtomicU64,
     pub tokenizer: Tokenizer,
+    /// Copy of the fault-injection config (the full config moves into
+    /// the engine thread); the TCP front-end builds its connection-drop
+    /// plan from it.
+    pub faults: crate::config::FaultsConfig,
 }
 
 impl Server {
@@ -84,7 +92,13 @@ impl Server {
         boot_rx
             .recv()
             .context("engine thread died during boot")??;
-        Ok(Server { tx, handle: Some(handle), next_id: AtomicU64::new(1), tokenizer })
+        Ok(Server {
+            tx,
+            handle: Some(handle),
+            next_id: AtomicU64::new(1),
+            tokenizer,
+            faults: cfg.faults.clone(),
+        })
     }
 
     /// Submit a request; returns a receiver for the completion.
@@ -140,6 +154,15 @@ impl Drop for Server {
 struct Pending {
     reply: Sender<Result<GenerateResponse>>,
     prompt_tokens: usize,
+}
+
+/// Poison-safe lock: a panic in some other thread while holding the map
+/// must not wedge the serving loop — the plain `HashMap` inside is valid
+/// regardless of where the panicking thread stopped, so recover the guard.
+fn lock_pending(
+    m: &Mutex<std::collections::HashMap<u64, Pending>>,
+) -> std::sync::MutexGuard<'_, std::collections::HashMap<u64, Pending>> {
+    m.lock().unwrap_or_else(|e| e.into_inner())
 }
 
 fn engine_thread(
@@ -208,12 +231,13 @@ fn engine_thread(
                                     .min(engine.cfg.scheduler.max_new_tokens),
                                 policy: req.policy.unwrap_or(default_policy),
                                 submitted_at: Instant::now(),
+                                deadline_ms: req.deadline_ms,
                             };
                             let ptoks = r.prompt.len();
                             if let Err(e) = sched.submit(r) {
                                 let _ = reply.send(Err(e));
                             } else {
-                                pending.lock().unwrap().insert(
+                                lock_pending(&pending).insert(
                                     id,
                                     Pending { reply, prompt_tokens: ptoks },
                                 );
@@ -227,13 +251,19 @@ fn engine_thread(
             }
         }
 
+        // Entering shutdown with work in flight: stop admitting and give
+        // running sequences a bounded drain window to finish.
+        if shutdown && !sched.draining() {
+            sched.begin_drain();
+        }
+
         if sched.idle() {
             continue;
         }
         match sched.tick(&mut engine) {
             Ok(report) => {
                 let kv_format = sched.kv_format();
-                let mut p = pending.lock().unwrap();
+                let mut p = lock_pending(&pending);
                 for c in report.completed {
                     if let Some(entry) = p.remove(&c.id) {
                         let resp = GenerateResponse {
@@ -253,15 +283,23 @@ fn engine_thread(
                 }
             }
             Err(e) => {
+                // A tick error means scheduler/cache state may be
+                // inconsistent. Fail everything in flight, rebuild the
+                // scheduler from scratch, and keep serving — the engine
+                // (weights, executables) is still sound.
                 crate::log_error!("scheduler tick failed: {e:#}");
-                // Fail everything in flight; state may be inconsistent.
-                let mut p = pending.lock().unwrap();
+                let mut p = lock_pending(&pending);
                 for (_, entry) in p.drain() {
                     let _ = entry
                         .reply
                         .send(Err(anyhow::anyhow!("engine error: {e}")));
                 }
-                return;
+                drop(p);
+                let draining = sched.draining();
+                sched = Scheduler::new(&engine, default_policy);
+                if draining {
+                    sched.begin_drain();
+                }
             }
         }
     }

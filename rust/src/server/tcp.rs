@@ -25,25 +25,46 @@
 //! One handler thread per connection (threadpool-bounded); requests on
 //! one connection are pipelined through the engine like any other
 //! client's. Malformed lines get {"ok": false, "error": ...} without
-//! dropping the connection.
+//! dropping the connection. Typed engine rejections additionally carry
+//! `"retryable"` and (for overload) `"retry_after_ms"` so clients can
+//! back off instead of guessing from the message text.
+//!
+//! Hardening: request lines are capped at [`MAX_LINE_BYTES`] (oversized
+//! lines get a typed error and the rest of the line is discarded), and
+//! idle connections are closed after [`IDLE_TIMEOUT_SECS`] without a
+//! complete request line.
 
 use std::io::{BufRead, BufReader, Write};
 use std::net::{TcpListener, TcpStream};
-use std::sync::Arc;
+use std::sync::{Arc, Mutex};
+use std::time::Duration;
 
 use anyhow::{Context, Result};
 
+use crate::error::EngineError;
+use crate::fault::{FaultPlan, FaultSite};
 use crate::policy::PolicyKind;
 use crate::util::json::{parse, Json};
 use crate::util::threadpool::ThreadPool;
 
 use super::{GenerateRequest, GenerateResponse, Server};
 
+/// Upper bound on one newline-delimited request line. Past it the line
+/// is discarded and the client gets a typed, non-retryable error.
+pub const MAX_LINE_BYTES: usize = 64 * 1024;
+
+/// Connections with no complete request line for this long are closed.
+pub const IDLE_TIMEOUT_SECS: u64 = 120;
+
 pub struct TcpFrontend {
     pub addr: std::net::SocketAddr,
     listener: TcpListener,
     server: Arc<Server>,
     pool: ThreadPool,
+    /// Seeded connection-drop plan (`faults.conn_drop_rate`); `None`
+    /// when fault injection is off. Behind a mutex because `serve`
+    /// takes `&self` while drawing mutates the plan's RNG.
+    conn_faults: Mutex<Option<FaultPlan>>,
 }
 
 impl TcpFrontend {
@@ -53,11 +74,13 @@ impl TcpFrontend {
     {
         let listener = TcpListener::bind(addr)
             .with_context(|| format!("binding {addr}"))?;
+        let conn_faults = Mutex::new(FaultPlan::from_config(&server.faults));
         Ok(TcpFrontend {
             addr: listener.local_addr()?,
             listener,
             server,
             pool: ThreadPool::new(workers.max(1)),
+            conn_faults,
         })
     }
 
@@ -67,9 +90,17 @@ impl TcpFrontend {
         let mut served = 0usize;
         for stream in self.listener.incoming() {
             let stream = stream?;
+            // Decide the injected drop on the accept path so the draw
+            // order (and thus the whole plan) stays deterministic.
+            let drop_after_first = self
+                .conn_faults
+                .lock()
+                .unwrap_or_else(|e| e.into_inner())
+                .as_mut()
+                .is_some_and(|fp| fp.trip(FaultSite::ConnDrop));
             let server = Arc::clone(&self.server);
             self.pool.spawn(move || {
-                if let Err(e) = handle_conn(stream, &server) {
+                if let Err(e) = handle_conn(stream, &server, drop_after_first) {
                     crate::log_debug!("connection ended: {e:#}");
                 }
             });
@@ -85,26 +116,139 @@ impl TcpFrontend {
     }
 }
 
-fn handle_conn(stream: TcpStream, server: &Server) -> Result<()> {
+/// One complete read attempt from the connection.
+enum LineRead {
+    /// Peer closed the connection.
+    Eof,
+    /// A complete line (without the trailing newline).
+    Line(String),
+    /// Line exceeded [`MAX_LINE_BYTES`]; the remainder was discarded.
+    Oversized,
+}
+
+fn read_line_capped<R: BufRead>(reader: &mut R) -> std::io::Result<LineRead> {
+    let mut buf: Vec<u8> = Vec::new();
+    loop {
+        let chunk = reader.fill_buf()?;
+        if chunk.is_empty() {
+            return Ok(if buf.is_empty() {
+                LineRead::Eof
+            } else {
+                LineRead::Line(String::from_utf8_lossy(&buf).into_owned())
+            });
+        }
+        if let Some(pos) = chunk.iter().position(|&b| b == b'\n') {
+            buf.extend_from_slice(&chunk[..pos]);
+            reader.consume(pos + 1);
+            return Ok(if buf.len() > MAX_LINE_BYTES {
+                LineRead::Oversized
+            } else {
+                LineRead::Line(String::from_utf8_lossy(&buf).into_owned())
+            });
+        }
+        let n = chunk.len();
+        buf.extend_from_slice(chunk);
+        reader.consume(n);
+        if buf.len() > MAX_LINE_BYTES {
+            drain_to_newline(reader)?;
+            return Ok(LineRead::Oversized);
+        }
+    }
+}
+
+/// Discard input up to and including the next newline (or EOF), so an
+/// oversized line doesn't poison the rest of the connection.
+fn drain_to_newline<R: BufRead>(reader: &mut R) -> std::io::Result<()> {
+    loop {
+        let chunk = reader.fill_buf()?;
+        if chunk.is_empty() {
+            return Ok(());
+        }
+        if let Some(pos) = chunk.iter().position(|&b| b == b'\n') {
+            reader.consume(pos + 1);
+            return Ok(());
+        }
+        let n = chunk.len();
+        reader.consume(n);
+    }
+}
+
+fn handle_conn(
+    stream: TcpStream,
+    server: &Server,
+    drop_after_first: bool,
+) -> Result<()> {
     let peer = stream.peer_addr()?;
     crate::log_debug!("connection from {peer}");
+    stream
+        .set_read_timeout(Some(Duration::from_secs(IDLE_TIMEOUT_SECS)))
+        .context("setting read timeout")?;
     let mut writer = stream.try_clone()?;
-    let reader = BufReader::new(stream);
-    for line in reader.lines() {
-        let line = line?;
+    let mut reader = BufReader::new(stream);
+    loop {
+        let line = match read_line_capped(&mut reader) {
+            Ok(LineRead::Eof) => break,
+            Ok(LineRead::Line(l)) => l,
+            Ok(LineRead::Oversized) => {
+                let reply = Json::obj(vec![
+                    ("ok", Json::from(false)),
+                    (
+                        "error",
+                        Json::str(&format!(
+                            "request line exceeds {MAX_LINE_BYTES} bytes"
+                        )),
+                    ),
+                    ("retryable", Json::from(false)),
+                ]);
+                writeln!(writer, "{reply}")?;
+                continue;
+            }
+            Err(e)
+                if matches!(
+                    e.kind(),
+                    std::io::ErrorKind::WouldBlock
+                        | std::io::ErrorKind::TimedOut
+                ) =>
+            {
+                crate::log_debug!("closing idle connection from {peer}");
+                break;
+            }
+            Err(e) => return Err(e.into()),
+        };
         if line.trim().is_empty() {
             continue;
         }
         let reply = match handle_line(&line, server) {
             Ok(resp) => resp,
-            Err(e) => Json::obj(vec![
-                ("ok", Json::from(false)),
-                ("error", Json::str(&format!("{e:#}"))),
-            ]),
+            Err(e) => error_json(&e),
         };
+        if drop_after_first {
+            // Injected fault: the request was fully processed but the
+            // client never hears back — exercises client-side timeout
+            // handling and server-side cleanup of orphaned replies.
+            crate::log_debug!("fault: dropping connection to {peer}");
+            return Ok(());
+        }
         writeln!(writer, "{reply}")?;
     }
     Ok(())
+}
+
+/// Error reply. When the cause is a typed [`EngineError`], annotate it
+/// with `retryable` (and `retry_after_ms` for overload) so clients can
+/// distinguish back-off-and-retry from give-up.
+fn error_json(e: &anyhow::Error) -> Json {
+    let mut fields = vec![
+        ("ok", Json::from(false)),
+        ("error", Json::str(&format!("{e:#}"))),
+    ];
+    if let Some(ee) = e.downcast_ref::<EngineError>() {
+        fields.push(("retryable", Json::from(ee.is_retryable())));
+        if let Some(ms) = ee.retry_after_ms() {
+            fields.push(("retry_after_ms", Json::from(ms as usize)));
+        }
+    }
+    Json::obj(fields)
 }
 
 fn handle_line(line: &str, server: &Server) -> Result<Json> {
@@ -129,8 +273,17 @@ fn handle_line(line: &str, server: &Server) -> Result<Json> {
         .opt("policy")
         .map(|v| PolicyKind::parse(v.as_str()?))
         .transpose()?;
-    let resp =
-        server.generate(GenerateRequest { prompt, max_new_tokens, policy })?;
+    let deadline_ms = j
+        .opt("deadline_ms")
+        .map(|v| v.as_usize())
+        .transpose()?
+        .map(|v| v as u64);
+    let resp = server.generate(GenerateRequest {
+        prompt,
+        max_new_tokens,
+        policy,
+        deadline_ms,
+    })?;
     Ok(response_json(&resp))
 }
 

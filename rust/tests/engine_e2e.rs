@@ -154,6 +154,7 @@ fn scheduler_continuous_batching_completes_all() {
                     PolicyKind::H2o
                 },
                 submitted_at: std::time::Instant::now(),
+                deadline_ms: None,
             })
             .unwrap();
     }

@@ -34,6 +34,7 @@ fn req(id: u64, prompt: Vec<i32>, max_new: usize, policy: PolicyKind) -> Request
         max_new_tokens: max_new,
         policy,
         submitted_at: Instant::now(),
+        deadline_ms: None,
     }
 }
 
@@ -187,4 +188,78 @@ fn preempted_sequence_resumes_with_identical_tokens() {
     // Telemetry made it into the engine metrics.
     assert!(engine.metrics.preemptions >= 1);
     assert_eq!(engine.metrics.resumes, engine.metrics.preemptions);
+}
+
+/// (c) Swap-to-host preemption is token-identical too: with the swap
+/// threshold forced on, the victim's live KV rows are serialized to a
+/// host buffer at stored precision and restored verbatim on resume —
+/// no recompute — and greedy decode continues exactly as in the
+/// uncontended run.
+#[test]
+fn swap_preempted_sequence_resumes_with_identical_tokens() {
+    let mut cfg = ServingConfig::default();
+    cfg.scheduler.max_batch = 2;
+    // An unbeatable threshold: every preemption takes the swap path.
+    cfg.scheduler.swap_threshold_bytes_per_token = usize::MAX;
+    let Some((mut engine, tok)) = engine_or_skip(cfg) else { return };
+
+    let mut picked = None;
+    for seed in 0..24 {
+        let ta = make_task(&mut Rng::new(seed), 8, 2);
+        let tb = make_task(&mut Rng::new(seed + 100), 8, 2);
+        let pa = tok.encode_prompt(&ta.prompt).unwrap();
+        let pb = tok.encode_prompt(&tb.prompt).unwrap();
+        if pa.len() > 64 || pb.len() > 64 {
+            continue;
+        }
+        let ca = solo_run(&mut engine, pa.clone(), 40, PolicyKind::FullKv);
+        let cb = solo_run(&mut engine, pb.clone(), 16, PolicyKind::FullKv);
+        if ca.generated.len() >= 6 && cb.generated.len() >= 4 {
+            picked = Some((pa, pb, ca, cb));
+            break;
+        }
+    }
+    let Some((pa, pb, solo_a, solo_b)) = picked else {
+        eprintln!("[skip] no task pair with long enough solo runs");
+        return;
+    };
+
+    engine.cfg.scheduler.kv_budget_bytes =
+        (pa.len() + pb.len() + 1) * engine.rt.meta.kv_bytes_per_token();
+    let mut sched = Scheduler::new(&engine, PolicyKind::FullKv);
+    sched.submit(req(0, pa, 40, PolicyKind::FullKv)).unwrap();
+    sched.submit(req(1, pb, 16, PolicyKind::FullKv)).unwrap();
+    let done = sched.run_to_idle(&mut engine).unwrap();
+
+    // The pressure was handled by the swap path, not recompute.
+    assert!(sched.preemptions >= 1, "budget never forced a preemption");
+    assert_eq!(
+        sched.swap_preemptions, sched.preemptions,
+        "the forced threshold must route every preemption through swap"
+    );
+    assert_eq!(sched.resumes, sched.preemptions);
+    assert!(sched.swap_bytes_out > 0, "no KV payload was swapped out");
+    assert_eq!(
+        sched.swap_bytes_in, sched.swap_bytes_out,
+        "restore must bring back exactly the bytes swapped out"
+    );
+
+    assert_eq!(done.len(), 2);
+    for c in &done {
+        assert_ne!(c.finish, FinishReason::Oom);
+    }
+    let a = done.iter().find(|c| c.id == 0).unwrap();
+    let b = done.iter().find(|c| c.id == 1).unwrap();
+    assert!(b.preemptions >= 1, "the younger sequence is the victim");
+    assert_eq!(
+        b.generated, solo_b.generated,
+        "swap-resumed sequence diverged from its uncontended run"
+    );
+    assert_eq!(
+        a.generated, solo_a.generated,
+        "unpreempted sequence diverged from its uncontended run"
+    );
+    // Telemetry made it into the engine metrics.
+    assert!(engine.metrics.swap_preemptions >= 1);
+    assert_eq!(engine.metrics.swap_bytes_in, engine.metrics.swap_bytes_out);
 }

@@ -20,6 +20,7 @@ use std::path::Path;
 
 use lethe::bench_support::run_churn;
 use lethe::config::{MixedKvRule, ServingConfig};
+use lethe::engine::FinishReason;
 use lethe::kvcache::KvFormat;
 use lethe::policy::PolicyKind;
 use lethe::util::prng::Rng;
@@ -119,4 +120,99 @@ fn churn_soak_preempts_resumes_and_migrates_without_oom() {
         stats.interleaved_ticks >= 1,
         "no decode step landed during a chunked prefill"
     );
+}
+
+/// Chaos soak: the same churn shape with seeded fault injection live at
+/// every engine seam (KV-insert alloc, runtime execute, tick stalls)
+/// and swap-to-host preemption forced on. Every request must still
+/// reach exactly one typed completion — an injected failure finishes
+/// its own sequence with `FinishReason::Error(..)` and frees the slot
+/// instead of poisoning the tick or hanging the run.
+///
+/// The fault seed comes from `LETHE_FAULT_SEED` (CI runs a small seed
+/// matrix in release mode), defaulting to 1; the same seed replays the
+/// same fault schedule.
+#[test]
+fn chaos_soak_fault_injection_yields_typed_completions() {
+    let dir = Path::new("artifacts");
+    if !dir.join("model_meta.json").exists() {
+        eprintln!("[skip] run `make artifacts` first");
+        return;
+    }
+    let seed: u64 = std::env::var("LETHE_FAULT_SEED")
+        .ok()
+        .and_then(|s| s.parse().ok())
+        .unwrap_or(1);
+    let mut cfg = ServingConfig::default();
+    cfg.scheduler.max_batch = 4;
+    cfg.scheduler.prefill_chunk = 24;
+    // Make every preemption take the swap-to-host path (no per-token
+    // cost can beat an unbeatable threshold), so serialization/restore
+    // runs under injection too.
+    cfg.scheduler.swap_threshold_bytes_per_token = usize::MAX;
+    cfg.faults.seed = seed;
+    cfg.faults.rate = 0.05;
+    cfg.faults.stall_ms = 1;
+    let rt = lethe::runtime::Runtime::load(dir).expect("runtime loads");
+    let tok = lethe::model::Tokenizer::from_meta(&rt.meta).unwrap();
+    let mut engine = lethe::engine::Engine::new(rt, cfg).unwrap();
+
+    // Mixed-length churn: long multi-hop prompts interleaved with short
+    // ones, over-subscribing the group.
+    let mut rng = Rng::new(11);
+    let tasks: Vec<_> = (0..12)
+        .map(|i| {
+            if i < 2 || i % 2 == 1 {
+                make_task(&mut rng, 12, 3)
+            } else {
+                make_task(&mut rng, 4, 1)
+            }
+        })
+        .collect();
+    // Tight budget (pressure pair + one decode row) so preemption — and
+    // with the threshold above, swap-out/restore — happens under fire.
+    let lens: Vec<usize> = tasks
+        .iter()
+        .map(|t| tok.encode_prompt(&t.prompt).unwrap().len())
+        .collect();
+    let row = engine.rt.meta.kv_bytes_per_token();
+    engine.cfg.scheduler.kv_budget_bytes = (lens[0] + lens[1] + 1) * row;
+
+    let (stats, completions) =
+        run_churn(&mut engine, &tok, PolicyKind::Lethe, &tasks, 16).unwrap();
+
+    // No request is lost: every submitted id reaches exactly one
+    // completion, failed or not.
+    assert_eq!(completions.len(), tasks.len());
+    let mut ids: Vec<u64> = completions.iter().map(|c| c.id).collect();
+    ids.sort_unstable();
+    assert_eq!(ids, (0..tasks.len() as u64).collect::<Vec<_>>());
+
+    // The plan actually fired (rate 0.05 over hundreds of draws).
+    assert!(
+        engine.metrics.faults_injected > 0,
+        "no fault was injected (seed {seed})"
+    );
+
+    // Failure accounting is exact: every Error finish is counted as a
+    // sequence failure and nothing else is.
+    let failed = completions
+        .iter()
+        .filter(|c| matches!(c.finish, FinishReason::Error(_)))
+        .count() as u64;
+    assert_eq!(
+        failed, engine.metrics.seq_failures,
+        "seq_failures must equal Error-finished completions (seed {seed})"
+    );
+
+    // Lifecycle invariants survive the chaos: every preemption swapped
+    // (the threshold forces it), every swapped sequence came back, and
+    // the bytes restored match the bytes swapped out.
+    assert_eq!(stats.resumes, stats.preemptions);
+    assert_eq!(engine.metrics.swap_preemptions, stats.preemptions);
+    assert_eq!(engine.metrics.swap_bytes_in, engine.metrics.swap_bytes_out);
+
+    // Injected faults surface as typed Error finishes, never as
+    // OOM-kills or hangs.
+    assert_eq!(stats.oom_finishes, 0, "faults must surface as Error, not Oom");
 }
