@@ -73,6 +73,20 @@ def build_entry_points(cfg: M.ModelConfig):
             w_specs + [_spec((1, T), jnp.int32), _spec((), jnp.int32)],
             ["logits", "k_all", "v_all", "scores"]))
 
+        # Incremental prefill: the chunk attends over a prior KV window
+        # instead of the engine recomputing the whole consumed prefix.
+        P = M.PREFILL_KV_CAP
+        kvp = _spec((L, 1, hkv, P, dh))
+
+        def prefill_kv_fn(*args):
+            return M.prefill_kv(cfg, wdict(args), args[nw], args[nw + 1],
+                                args[nw + 2], args[nw + 3], args[nw + 4])
+        entries.append((
+            f"prefill_t{T}_kv", prefill_kv_fn,
+            w_specs + [kvp, kvp, _spec((), jnp.int32),
+                       _spec((1, T), jnp.int32), _spec((), jnp.int32)],
+            ["logits", "k_new", "v_new", "scores"]))
+
     for prof in CACHE_PROFILES:
         for C in DECODE_CAPACITIES[prof]:
             for B in DECODE_BATCHES[prof]:
@@ -86,6 +100,41 @@ def build_entry_points(cfg: M.ModelConfig):
                 entries.append((
                     f"decode_b{B}_c{C}", decode_fn,
                     w_specs + [kvb, kvb, lensb, _spec((B,), jnp.int32),
+                               _spec((B,), jnp.int32)],
+                    ["logits", "k_new", "v_new", "probs"]))
+
+                # Kernel-side dequant variants: the KV operands are the
+                # quantized stores' bytes (codes + scales[/zeros]) exactly
+                # as rust/src/kvcache/backend.rs lays them out, so packed
+                # layers upload wire bytes instead of an f32 image.
+                q8c = _spec((L, B, hkv, C, dh), jnp.int8)
+                q8s = _spec((L, B, hkv, C), jnp.float32)
+
+                def decode_q8_fn(*args):
+                    return M.decode_step_q8(
+                        cfg, wdict(args), args[nw], args[nw + 1],
+                        args[nw + 2], args[nw + 3], args[nw + 4],
+                        args[nw + 5], args[nw + 6])
+                entries.append((
+                    f"decode_b{B}_c{C}_q8", decode_q8_fn,
+                    w_specs + [q8c, q8s, q8c, q8s, lensb,
+                               _spec((B,), jnp.int32),
+                               _spec((B,), jnp.int32)],
+                    ["logits", "k_new", "v_new", "probs"]))
+
+                q4c = _spec((L, B, hkv, C, M.q4_packed(dh)), jnp.uint8)
+                q4g = _spec((L, B, hkv, C, M.q4_groups(dh)), jnp.float32)
+
+                def decode_q4_fn(*args):
+                    return M.decode_step_q4(
+                        cfg, wdict(args), args[nw], args[nw + 1],
+                        args[nw + 2], args[nw + 3], args[nw + 4],
+                        args[nw + 5], args[nw + 6], args[nw + 7],
+                        args[nw + 8])
+                entries.append((
+                    f"decode_b{B}_c{C}_q4", decode_q4_fn,
+                    w_specs + [q4c, q4g, q4g, q4c, q4g, q4g, lensb,
+                               _spec((B,), jnp.int32),
                                _spec((B,), jnp.int32)],
                     ["logits", "k_new", "v_new", "probs"]))
     return entries

@@ -181,6 +181,81 @@ def decode_step(cfg: ModelConfig, ws: Dict[str, jax.Array],
     return logits, k_new, v_new, probs
 
 
+# --- kernel-side dequantization (quantized decode entry points) -----------
+
+# Mirror of rust/src/kvcache/quant.rs: group size along the head dim for
+# the group-wise int4 codec, and the derived packed-row geometry.
+Q4_GROUP = 32
+NEG_INF = -1e30
+
+
+def q4_groups(d_head: int) -> int:
+    return -(-d_head // Q4_GROUP)
+
+
+def q4_packed(d_head: int) -> int:
+    return -(-d_head // 2)
+
+
+def dequant_kv_q8(kv_q, kv_s):
+    """Per-row symmetric int8 → f32: `x = code * scale`.
+
+    kv_q [..., C, D] int8, kv_s [..., C] f32. The single f32 multiply is
+    bit-identical to the host path (`quant::dequantize_span`), so the
+    kernel-side-dequant decode step sees exactly the rows the f32 upload
+    image would have carried.
+    """
+    return kv_q.astype(jnp.float32) * kv_s[..., None]
+
+
+def dequant_kv_q4(kv_q, kv_s, kv_z, d_head: int):
+    """Group-wise asymmetric int4 → f32: `x = code * scale + zero`.
+
+    kv_q [..., C, ceil(D/2)] uint8 (two codes per byte, even element in
+    the low nibble — the rust `quantize_row_q4_into` layout), kv_s / kv_z
+    [..., C, G] f32 per-group scale / zero-point. Arithmetic is f32 (the
+    host dequantizer accumulates in f64), so the result matches
+    `quant::dequantize_row_q4` to f32 rounding — well inside
+    `quant::dequant_error_bound`.
+    """
+    lo = jnp.bitwise_and(kv_q, 0x0F).astype(jnp.float32)
+    hi = jnp.right_shift(kv_q, 4).astype(jnp.float32)
+    codes = jnp.stack([lo, hi], axis=-1)
+    codes = codes.reshape(*kv_q.shape[:-1], kv_q.shape[-1] * 2)[..., :d_head]
+    scales = jnp.repeat(kv_s, Q4_GROUP, axis=-1)[..., :d_head]
+    zeros = jnp.repeat(kv_z, Q4_GROUP, axis=-1)[..., :d_head]
+    return codes * scales + zeros
+
+
+def decode_step_q8(cfg: ModelConfig, ws: Dict[str, jax.Array],
+                   k_q, k_s, v_q, v_s, lens, tokens, positions, *,
+                   interpret: bool = True):
+    """[`decode_step`] over q8-stored KV, dequantized in-graph.
+
+    k_q/v_q [L,B,Hkv,C,D] int8; k_s/v_s [L,B,Hkv,C] f32; the rest as in
+    `decode_step`. Uploading codes+scales instead of a dequantized f32
+    image shrinks the per-step KV transfer ~4x (asymptotically in D).
+    """
+    return decode_step(cfg, ws, dequant_kv_q8(k_q, k_s),
+                       dequant_kv_q8(v_q, v_s), lens, tokens, positions,
+                       interpret=interpret)
+
+
+def decode_step_q4(cfg: ModelConfig, ws: Dict[str, jax.Array],
+                   k_q, k_s, k_z, v_q, v_s, v_z, lens, tokens, positions, *,
+                   interpret: bool = True):
+    """[`decode_step`] over group-wise q4-stored KV, dequantized in-graph.
+
+    k_q/v_q [L,B,Hkv,C,ceil(D/2)] uint8; k_s/k_z/v_s/v_z [L,B,Hkv,C,G]
+    f32; the rest as in `decode_step` (~8x smaller KV upload,
+    asymptotically in D).
+    """
+    dh = cfg.d_head
+    return decode_step(cfg, ws, dequant_kv_q4(k_q, k_s, k_z, dh),
+                       dequant_kv_q4(v_q, v_s, v_z, dh), lens, tokens,
+                       positions, interpret=interpret)
+
+
 # --- prefill entry point ---------------------------------------------------
 
 def prefill(cfg: ModelConfig, ws: Dict[str, jax.Array],
@@ -227,6 +302,86 @@ def prefill(cfg: ModelConfig, ws: Dict[str, jax.Array],
     last = jnp.maximum(length - 1, 0)
     logits = rmsnorm(x[:, last, :], ws["ln_f"], cfg.norm_eps) @ ws["lm_head"]
     return logits, k_all, v_all, scores
+
+
+# --- incremental prefill entry point --------------------------------------
+
+# Static capacity of the prior-KV operand window: the largest prefill
+# bucket, so any chunked prompt's consumed prefix fits. Must stay in sync
+# with aot.PREFILL_TS (rust asserts it against meta["prefill_ts"]).
+PREFILL_KV_CAP = 192
+
+
+def prefill_kv(cfg: ModelConfig, ws: Dict[str, jax.Array],
+               prior_k, prior_v, prior_len, tokens, length, *,
+               interpret: bool = True):
+    """One chunk of prompt ingest over an already-computed KV prefix.
+
+    Chunked prefill used to re-run `prefill` over the whole growing prefix
+    (O(consumed^2) per prompt); this entry point attends the T new tokens
+    over the prior rows instead, so each token is computed exactly once.
+
+    prior_k, prior_v [L,1,Hkv,P,D] f32 with P = PREFILL_KV_CAP (rows >=
+    prior_len are dead); prior_len [] i32; tokens [1,T] i32 (PAD beyond
+    `length`); length [] i32 — number of real tokens in this chunk.
+    RoPE positions for the chunk are prior_len + arange(T), matching the
+    absolute positions the prior rows were rotated at.
+    returns (logits [1,V] at the last real chunk token,
+             k_new, v_new [L,1,Hkv,T,D] — rows for this chunk only,
+             scores [L,1,Hq,P+T] f32 — attention mass per key, prior keys
+             first, summed over the valid chunk queries: the RASR
+             *increment* this chunk contributes, Eq. 2)
+    """
+    B, T = tokens.shape
+    assert B == 1
+    P = prior_k.shape[3]
+    hq, hkv, dh = cfg.n_q_heads, cfg.n_kv_heads, cfg.d_head
+    group = cfg.group
+    x = ws["embed"][tokens]                                     # [1,T,d]
+    tpos = jnp.arange(T, dtype=jnp.int32)
+    cos, sin = rope_tables(cfg, prior_len + tpos)               # [T,D/2]
+    qrow_valid = (tpos < length).astype(jnp.float32)            # [T]
+    scale = 1.0 / (dh ** 0.5)
+
+    # Key mask over the concatenated [prior | chunk] axis: a prior key j
+    # is visible iff j < prior_len; a chunk key j is visible to chunk
+    # query q iff j <= q (causal within the chunk) and j < length.
+    jprior = jnp.arange(P, dtype=jnp.int32)
+    prior_ok = jnp.broadcast_to((jprior < prior_len)[None, :], (T, P))
+    new_ok = (tpos[None, :] <= tpos[:, None]) & (tpos[None, :] < length)
+    mask = jnp.concatenate([prior_ok, new_ok], axis=1)          # [T,P+T]
+
+    def layer(x, packed):
+        (ln1, wq, wk, wv, wo, ln2, wg, wu, wd, pk, pv) = packed
+        h = rmsnorm(x, ln1, cfg.norm_eps)
+        q = apply_rope(_split_heads(h @ wq, hq, dh),
+                       cos[None, :, None, :], sin[None, :, None, :])
+        k = apply_rope(_split_heads(h @ wk, hkv, dh),
+                       cos[None, :, None, :], sin[None, :, None, :])
+        v = _split_heads(h @ wv, hkv, dh)
+        qt = q.transpose(0, 2, 1, 3)                            # [1,Hq,T,D]
+        kt = k.transpose(0, 2, 1, 3)                            # [1,Hkv,T,D]
+        vt = v.transpose(0, 2, 1, 3)
+        kcat = jnp.repeat(jnp.concatenate([pk, kt], axis=2), group, axis=1)
+        vcat = jnp.repeat(jnp.concatenate([pv, vt], axis=2), group, axis=1)
+        s = jnp.einsum("bhqd,bhkd->bhqk", qt, kcat) * scale     # [1,Hq,T,P+T]
+        s = jnp.where(mask[None, None, :, :], s, NEG_INF)
+        m = jnp.max(s, axis=-1, keepdims=True)
+        e = jnp.where(mask[None, None, :, :], jnp.exp(s - m), 0.0)
+        probs = e / jnp.maximum(jnp.sum(e, axis=-1, keepdims=True), 1e-30)
+        att = jnp.einsum("bhqk,bhkd->bhqd", probs, vcat)
+        score = jnp.einsum("bhqk,q->bhk", probs, qrow_valid)    # [1,Hq,P+T]
+        x = x + att.transpose(0, 2, 1, 3).reshape(B, T, hq * dh) @ wo
+        x = x + swiglu(rmsnorm(x, ln2, cfg.norm_eps), wg, wu, wd)
+        return x, (kt, vt, score)
+
+    stacked = tuple(ws[n] for n in
+                    ("ln1", "wq", "wk", "wv", "wo", "ln2",
+                     "w_gate", "w_up", "w_down")) + (prior_k, prior_v)
+    x, (k_new, v_new, scores) = jax.lax.scan(layer, x, stacked)
+    last = jnp.maximum(length - 1, 0)
+    logits = rmsnorm(x[:, last, :], ws["ln_f"], cfg.norm_eps) @ ws["lm_head"]
+    return logits, k_new, v_new, scores
 
 
 # --- training-time forward (shares blocks with the serving path) ----------

@@ -67,10 +67,13 @@ def test_bucket_grid_is_complete(meta):
     names = {e["name"] for e in meta["executables"]}
     for t in meta["prefill_ts"]:
         assert f"prefill_t{t}" in names
+        assert f"prefill_t{t}_kv" in names
     for prof, caps in meta["decode_capacities"].items():
         for c in caps:
             for b in meta["decode_batches"][prof]:
                 assert f"decode_b{b}_c{c}" in names, (prof, b, c)
+                assert f"decode_b{b}_c{c}_q8" in names, (prof, b, c)
+                assert f"decode_b{b}_c{c}_q4" in names, (prof, b, c)
 
 
 def test_decode_param_shapes_match_runtime_expectation(meta):
@@ -91,6 +94,51 @@ def test_prefill_outputs_contract(meta):
     by_name = {e["name"]: e for e in meta["executables"]}
     e = by_name["prefill_t64"]
     assert e["outputs"] == ["logits", "k_all", "v_all", "scores"]
+
+
+def test_packed_decode_param_shapes(meta):
+    """Kernel-side-dequant variants take the quantized stores' wire layout:
+    codes + per-row (q8) / per-group (q4) scales, weights first."""
+    cfg = M.ModelConfig()
+    L, hkv, dh = cfg.n_layers, cfg.n_kv_heads, cfg.d_head
+    nw = len(M.WEIGHT_NAMES)
+    by_name = {e["name"]: e for e in meta["executables"]}
+
+    e = by_name["decode_b2_c128_q8"]
+    # weights, k_q, k_s, v_q, v_s, lens, tokens, positions.
+    assert len(e["params"]) == nw + 7
+    assert e["params"][nw]["shape"] == [L, 2, hkv, 128, dh]
+    assert e["params"][nw]["dtype"] == "int8"
+    assert e["params"][nw + 1]["shape"] == [L, 2, hkv, 128]
+    assert e["params"][nw + 1]["dtype"] == "float32"
+    assert e["outputs"] == ["logits", "k_new", "v_new", "probs"]
+
+    e = by_name["decode_b2_c128_q4"]
+    # weights, k_q, k_s, k_z, v_q, v_s, v_z, lens, tokens, positions.
+    assert len(e["params"]) == nw + 9
+    assert e["params"][nw]["shape"] == [L, 2, hkv, 128, M.q4_packed(dh)]
+    assert e["params"][nw]["dtype"] == "uint8"
+    for i in (1, 2):
+        assert e["params"][nw + i]["shape"] == [L, 2, hkv, 128,
+                                                M.q4_groups(dh)]
+        assert e["params"][nw + i]["dtype"] == "float32"
+
+
+def test_prefill_kv_param_shapes(meta):
+    """Incremental prefill takes (prior_k, prior_v, prior_len, tokens,
+    length) after the weights, with a PREFILL_KV_CAP-slot prior window."""
+    cfg = M.ModelConfig()
+    L, hkv, dh = cfg.n_layers, cfg.n_kv_heads, cfg.d_head
+    nw = len(M.WEIGHT_NAMES)
+    by_name = {e["name"]: e for e in meta["executables"]}
+    assert M.PREFILL_KV_CAP == max(meta["prefill_ts"])
+    e = by_name["prefill_t64_kv"]
+    assert len(e["params"]) == nw + 5
+    assert e["params"][nw]["shape"] == [L, 1, hkv, M.PREFILL_KV_CAP, dh]
+    assert e["params"][nw + 2]["shape"] == []
+    assert e["params"][nw + 2]["dtype"] == "int32"
+    assert e["params"][nw + 3]["shape"] == [1, 64]
+    assert e["outputs"] == ["logits", "k_new", "v_new", "scores"]
 
 
 def test_hlo_text_regeneration_is_deterministic():

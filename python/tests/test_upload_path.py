@@ -1,0 +1,230 @@
+"""Upload-path correctness for the new raw-speed entry points (no AOT
+artifacts required — pure JAX):
+
+- decode_step_q8 / decode_step_q4 (kernel-side dequant) must agree with
+  decode_step over the host-dequantized f32 image, within the codec's
+  round-trip error. The rust engine relies on this to swap the f32 upload
+  image for stored codes+scales without changing served tokens.
+- prefill_kv (incremental prefill) chunked over a prompt must agree with
+  whole-prefix prefill: same last-token logits, same K/V rows, and the
+  per-chunk RASR increments must sum to the whole-prefix RASR init.
+"""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from compile import model as M
+from compile import tasks
+
+CFG = M.ModelConfig()
+L, HKV, HQ, D = CFG.n_layers, CFG.n_kv_heads, CFG.n_q_heads, CFG.d_head
+
+
+@pytest.fixture(scope="module")
+def ws():
+    return M.init_weights(CFG, jax.random.PRNGKey(7))
+
+
+def random_tokens(rng, n):
+    return rng.integers(len(tasks.SPECIALS), CFG.vocab_size, size=n,
+                        dtype=np.int32)
+
+
+# --- numpy mirrors of rust/src/kvcache/quant.rs ---------------------------
+
+def quantize_q8(rows):
+    """rows [..., D] -> (codes int8, scales [...]) per-row symmetric."""
+    amax = np.abs(rows).max(axis=-1)
+    scale = amax / 127.0
+    inv = np.where(scale > 0, 1.0 / np.where(scale > 0, scale, 1.0), 0.0)
+    codes = np.clip(np.rint(rows * inv[..., None]), -127, 127).astype(np.int8)
+    return codes, scale.astype(np.float32)
+
+
+def quantize_q4(rows):
+    """rows [..., D] -> (packed uint8 [..., D/2], scales, zeros [..., G])
+    group-wise over a zero-widened range, even element in the low nibble."""
+    G = M.q4_groups(D)
+    g = rows.reshape(*rows.shape[:-1], G, M.Q4_GROUP)
+    lo = np.minimum(g.min(axis=-1), 0.0)
+    hi = np.maximum(g.max(axis=-1), 0.0)
+    scale = ((hi - lo) / 15.0).astype(np.float32)
+    safe = np.where(scale > 0, scale, 1.0)
+    codes = np.clip(np.rint((g - lo[..., None]) / safe[..., None]), 0, 15)
+    codes = codes.astype(np.uint8).reshape(*rows.shape)
+    packed = (codes[..., 0::2] | (codes[..., 1::2] << 4)).astype(np.uint8)
+    return packed, scale, lo.astype(np.float32)
+
+
+def build_cache(rng, C, n):
+    kv = rng.standard_normal((L, 1, HKV, C, D)).astype(np.float32)
+    kv[:, :, :, n:] = 0.0
+    return kv
+
+
+def test_dequant_kv_q4_matches_scalar_reference():
+    rng = np.random.default_rng(0)
+    rows = rng.standard_normal((3, 5, D)).astype(np.float32)
+    packed, scale, zero = quantize_q4(rows)
+    out = np.asarray(M.dequant_kv_q4(
+        jnp.asarray(packed), jnp.asarray(scale), jnp.asarray(zero), D))
+    # Scalar reference, nibble by nibble (even index = low nibble).
+    for idx in np.ndindex(3, 5):
+        for i in range(D):
+            byte = packed[idx][i // 2]
+            code = (byte & 0x0F) if i % 2 == 0 else (byte >> 4)
+            g = i // M.Q4_GROUP
+            want = float(code) * float(scale[idx][g]) + float(zero[idx][g])
+            np.testing.assert_allclose(out[idx][i], want, atol=1e-6)
+    # Round-trip error respects the codec bound: scale/2 per group.
+    err = np.abs(out - rows).reshape(3, 5, M.q4_groups(D), M.Q4_GROUP)
+    bound = scale[..., None] * 0.5 + 1e-6
+    assert np.all(err <= bound)
+
+
+def test_decode_q8_matches_host_dequant_decode(ws):
+    rng = np.random.default_rng(1)
+    C, n = 32, 20
+    kv_k, kv_v = build_cache(rng, C, n), build_cache(rng, C, n)
+    k_q, k_s = quantize_q8(kv_k)
+    v_q, v_s = quantize_q8(kv_v)
+    # The f32 path sees the host-dequantized image — exactly what
+    # PackScratch uploads for a q8 layer today.
+    host_k = k_q.astype(np.float32) * k_s[..., None]
+    host_v = v_q.astype(np.float32) * v_s[..., None]
+    lens = np.full((L, 1), n, np.int32)
+    tok = jnp.asarray([5], jnp.int32)
+    pos = jnp.asarray([n], jnp.int32)
+    ref = M.decode_step(CFG, ws, jnp.asarray(host_k), jnp.asarray(host_v),
+                        jnp.asarray(lens), tok, pos)
+    got = M.decode_step_q8(CFG, ws, jnp.asarray(k_q), jnp.asarray(k_s),
+                           jnp.asarray(v_q), jnp.asarray(v_s),
+                           jnp.asarray(lens), tok, pos)
+    for r, g in zip(ref, got):
+        np.testing.assert_allclose(np.asarray(g), np.asarray(r),
+                                   atol=1e-6, rtol=1e-6)
+
+
+def test_decode_q4_close_to_exact_f32_decode(ws):
+    rng = np.random.default_rng(2)
+    C, n = 32, 20
+    kv_k, kv_v = build_cache(rng, C, n), build_cache(rng, C, n)
+    k_q, k_s, k_z = quantize_q4(kv_k)
+    v_q, v_s, v_z = quantize_q4(kv_v)
+    lens = np.full((L, 1), n, np.int32)
+    tok = jnp.asarray([5], jnp.int32)
+    pos = jnp.asarray([n], jnp.int32)
+    exact, _, _, _ = M.decode_step(
+        CFG, ws, jnp.asarray(kv_k), jnp.asarray(kv_v), jnp.asarray(lens),
+        tok, pos)
+    logits, _, _, probs = M.decode_step_q4(
+        CFG, ws, jnp.asarray(k_q), jnp.asarray(k_s), jnp.asarray(k_z),
+        jnp.asarray(v_q), jnp.asarray(v_s), jnp.asarray(v_z),
+        jnp.asarray(lens), tok, pos)
+    # q4 is lossy; the decode output drifts by O(codec error), not more.
+    assert np.abs(np.asarray(logits) - np.asarray(exact)).max() < 0.5
+    p = np.asarray(probs)
+    assert np.all(p[:, :, :, n + 1:] == 0.0)
+    np.testing.assert_allclose(p.sum(-1), 1.0, atol=1e-4)
+
+
+def test_prefill_kv_chunks_match_whole_prefix_prefill(ws):
+    rng = np.random.default_rng(3)
+    n, chunk = 56, 32
+    toks = random_tokens(rng, n)
+    P = M.PREFILL_KV_CAP
+
+    whole = np.zeros((1, 64), np.int32)
+    whole[0, :n] = toks
+    ref_logits, ref_k, ref_v, ref_scores = M.prefill(
+        CFG, ws, jnp.asarray(whole), jnp.int32(n))
+
+    # Chunk 1 through the classic path (what the engine does for the first
+    # chunk), chunk 2 through prefill_kv over the accumulated prior.
+    c1 = np.zeros((1, chunk), np.int32)
+    c1[0] = toks[:chunk]
+    _, k1, v1, s1 = M.prefill(CFG, ws, jnp.asarray(c1), jnp.int32(chunk))
+
+    prior_k = np.zeros((L, 1, HKV, P, D), np.float32)
+    prior_v = np.zeros((L, 1, HKV, P, D), np.float32)
+    prior_k[:, :, :, :chunk] = np.asarray(k1)
+    prior_v[:, :, :, :chunk] = np.asarray(v1)
+    acc_scores = np.zeros((L, 1, HQ, P), np.float32)
+    acc_scores[..., :chunk] = np.asarray(s1)
+
+    n2 = n - chunk
+    c2 = np.zeros((1, chunk), np.int32)
+    c2[0, :n2] = toks[chunk:]
+    logits, k2, v2, s2 = M.prefill_kv(
+        CFG, ws, jnp.asarray(prior_k), jnp.asarray(prior_v),
+        jnp.int32(chunk), jnp.asarray(c2), jnp.int32(n2))
+    s2 = np.asarray(s2)
+    acc_scores[..., :P] += s2[..., :P]
+    acc_scores[..., chunk:chunk + n2] += s2[..., P:P + n2]
+
+    np.testing.assert_allclose(np.asarray(logits), np.asarray(ref_logits),
+                               atol=5e-4, rtol=5e-4)
+    np.testing.assert_allclose(np.asarray(k2)[:, :, :, :n2],
+                               np.asarray(ref_k)[:, :, :, chunk:n],
+                               atol=5e-5, rtol=5e-5)
+    np.testing.assert_allclose(np.asarray(v2)[:, :, :, :n2],
+                               np.asarray(ref_v)[:, :, :, chunk:n],
+                               atol=5e-5, rtol=5e-5)
+    # Chunk keys past this chunk's real tokens receive no mass, and the
+    # RASR increments accumulate to the whole-prefix init.
+    assert np.all(s2[..., P + n2:] == 0.0)
+    np.testing.assert_allclose(acc_scores[..., :n],
+                               np.asarray(ref_scores)[..., :n],
+                               atol=2e-3, rtol=2e-3)
+    assert np.all(acc_scores[..., n:] == 0.0)
+
+
+def test_prefill_kv_with_empty_prior_matches_prefill(ws):
+    rng = np.random.default_rng(4)
+    n = 24
+    toks = random_tokens(rng, n)
+    padded = np.zeros((1, 32), np.int32)
+    padded[0, :n] = toks
+    ref_logits, ref_k, _, ref_scores = M.prefill(
+        CFG, ws, jnp.asarray(padded), jnp.int32(n))
+    P = M.PREFILL_KV_CAP
+    zk = jnp.zeros((L, 1, HKV, P, D), jnp.float32)
+    logits, k_new, _, scores = M.prefill_kv(
+        CFG, ws, zk, zk, jnp.int32(0), jnp.asarray(padded), jnp.int32(n))
+    np.testing.assert_allclose(np.asarray(logits), np.asarray(ref_logits),
+                               atol=5e-4, rtol=5e-4)
+    np.testing.assert_allclose(np.asarray(k_new)[:, :, :, :n],
+                               np.asarray(ref_k)[:, :, :, :n],
+                               atol=5e-5, rtol=5e-5)
+    s = np.asarray(scores)
+    assert np.all(s[..., :P] == 0.0)  # no prior rows -> no prior mass
+    np.testing.assert_allclose(s[..., P:P + n],
+                               np.asarray(ref_scores)[..., :n],
+                               atol=2e-3, rtol=2e-3)
+
+
+def test_aot_grid_contains_upload_path_variants():
+    """build_entry_points exposes the packed + incremental entry points
+    with the documented operand shapes (pure metadata — no lowering)."""
+    from compile import aot
+
+    entries = {name: specs for name, _, specs, _ in
+               aot.build_entry_points(CFG)}
+    nw = len(M.WEIGHT_NAMES)
+    for prof in aot.CACHE_PROFILES:
+        for C in aot.DECODE_CAPACITIES[prof]:
+            for B in aot.DECODE_BATCHES[prof]:
+                q8 = entries[f"decode_b{B}_c{C}_q8"][nw:]
+                assert [tuple(s.shape) for s in q8[:2]] == [
+                    (L, B, HKV, C, D), (L, B, HKV, C)]
+                assert q8[0].dtype == jnp.int8
+                q4 = entries[f"decode_b{B}_c{C}_q4"][nw:]
+                assert tuple(q4[0].shape) == (L, B, HKV, C, M.q4_packed(D))
+                assert q4[0].dtype == jnp.uint8
+                assert tuple(q4[1].shape) == (L, B, HKV, C, M.q4_groups(D))
+    for T in aot.PREFILL_TS:
+        kv = entries[f"prefill_t{T}_kv"][nw:]
+        assert tuple(kv[0].shape) == (L, 1, HKV, M.PREFILL_KV_CAP, D)
+        assert tuple(kv[3].shape) == (1, T)

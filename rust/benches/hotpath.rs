@@ -15,9 +15,11 @@
 //! Every pure-rust row is also written to `bench_results/hotpath.csv`
 //! via `bench_support::hotpath_csv`.
 
-use lethe::bench_support::{hotpath_csv, try_engine};
+use lethe::bench_support::{hotpath_csv, try_engine, write_bench_json,
+                           BenchJsonRow};
 use lethe::config::{LetheParams, ServingConfig};
-use lethe::kvcache::{CacheDims, GroupCache, KvFormat, PackScratch};
+use lethe::kvcache::{CacheDims, GroupCache, KvFormat, PackScratch,
+                     PackedScratch};
 use lethe::policy::{EvictionPolicy, LayerState, LethePolicy};
 use lethe::runtime::tensors::{HostTensorF32, HostTensorI32};
 use lethe::util::prng::Rng;
@@ -82,6 +84,7 @@ fn main() -> anyhow::Result<()> {
         &s,
         &mut csv,
     );
+    let s_f32_delta = s.clone();
 
     // Quantized (kv.format = "q8") backend: the same per-token paths on
     // int8 storage. Insert pays the per-row quantization; the append-only
@@ -155,6 +158,106 @@ fn main() -> anyhow::Result<()> {
         q4_d.pack_delta(&mut q4_scratch).unwrap();
     });
     emit("q4 dequant pack (append-only step)", &s, &mut csv);
+
+    // Packed delta pack — the raw-speed upload path: the same
+    // append-only step reconciled into the PackedScratch wire image
+    // (stored codes + scales, + zeros for q4) the kernel-side-dequant
+    // `decode_*_q8`/`_q4` executables consume directly, so the host
+    // never materializes the 4·D f32 expansion.
+    let mut q8_p = q_ins.clone();
+    let mut p8 = PackedScratch::new(&dims, 8, 512, KvFormat::QuantI8);
+    q8_p.pack_delta_packed(&mut p8).unwrap(); // cold full sync
+    let s = bench(3, 20, || {
+        for b in 0..8 {
+            for l in 0..4 {
+                q8_p.insert(l, b, &row, &row, tq).unwrap();
+            }
+        }
+        tq += 1;
+        q8_p.pack_delta_packed(&mut p8).unwrap();
+    });
+    emit("q8 packed pack (append-only, wire bytes)", &s, &mut csv);
+    let s_q8_packed = s.clone();
+
+    let mut q4_p = q4_ins.clone();
+    let mut p4 = PackedScratch::new(&dims, 8, 512, KvFormat::QuantI4);
+    q4_p.pack_delta_packed(&mut p4).unwrap(); // cold full sync
+    let s = bench(3, 20, || {
+        for b in 0..8 {
+            for l in 0..4 {
+                q4_p.insert(l, b, &row, &row, t4).unwrap();
+            }
+        }
+        t4 += 1;
+        q4_p.pack_delta_packed(&mut p4).unwrap();
+    });
+    emit("q4 packed pack (append-only, wire bytes)", &s, &mut csv);
+    let s_q4_packed = s.clone();
+
+    // Measured upload bytes per steady-state step (one instrumented
+    // append step per format) → BENCH_hotpath.json. Codes-only
+    // asymptotics are 4x (q8) / 8x (q4); the measured wire ratios at
+    // d_head=32 include the f32 scales (and q4 zero points), landing
+    // near 3.6x / 5.3x.
+    {
+        for b in 0..8 {
+            for l in 0..4 {
+                dcache.insert(l, b, &row, &row, t).unwrap();
+            }
+        }
+        t += 1;
+        let st_f = dcache.pack_delta(&mut scratch).unwrap();
+        for b in 0..8 {
+            for l in 0..4 {
+                q8_p.insert(l, b, &row, &row, tq).unwrap();
+            }
+        }
+        tq += 1;
+        let st_8 = q8_p.pack_delta_packed(&mut p8).unwrap();
+        for b in 0..8 {
+            for l in 0..4 {
+                q4_p.insert(l, b, &row, &row, t4).unwrap();
+            }
+        }
+        t4 += 1;
+        let st_4 = q4_p.pack_delta_packed(&mut p4).unwrap();
+        assert_eq!(
+            st_f.bytes_copied, st_8.bytes_f32_equiv,
+            "f32-equivalent pricing must match the dense step"
+        );
+        println!(
+            "upload bytes/step (32 appended rows): f32 {} | q8 {} \
+             ({:.2}x) | q4 {} ({:.2}x)",
+            st_f.bytes_copied,
+            st_8.bytes_copied,
+            st_f.bytes_copied as f64 / st_8.bytes_copied as f64,
+            st_4.bytes_copied,
+            st_f.bytes_copied as f64 / st_4.bytes_copied as f64,
+        );
+        write_bench_json(
+            "hotpath",
+            &[
+                BenchJsonRow {
+                    name: "delta_pack_step".into(),
+                    kv_format: "f32".into(),
+                    tokens_per_s: 8.0 / s_f32_delta.mean,
+                    upload_bytes_per_step: st_f.bytes_copied,
+                },
+                BenchJsonRow {
+                    name: "delta_pack_step".into(),
+                    kv_format: "q8".into(),
+                    tokens_per_s: 8.0 / s_q8_packed.mean,
+                    upload_bytes_per_step: st_8.bytes_copied,
+                },
+                BenchJsonRow {
+                    name: "delta_pack_step".into(),
+                    kv_format: "q4".into(),
+                    tokens_per_s: 8.0 / s_q4_packed.mean,
+                    upload_bytes_per_step: st_4.bytes_copied,
+                },
+            ],
+        )?;
+    }
 
     let add: Vec<f32> = (0..400).map(|_| rng.f32()).collect();
     let s = bench(3, 20, || {

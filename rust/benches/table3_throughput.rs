@@ -9,8 +9,9 @@
 //!       mechanism (smaller retained cache → smaller capacity bucket →
 //!       less upload + attention per step) measured for real.
 
-use lethe::bench_support::{gen_tasks, kv_configs, print_table, run_tasks,
-                           try_engine, write_csv};
+use lethe::bench_support::{gen_tasks, kv_configs, print_table, run_churn,
+                           run_tasks, try_engine, write_bench_json,
+                           write_csv, BenchJsonRow};
 use lethe::config::ServingConfig;
 use lethe::model::DEEPSEEK_R1_DISTILL;
 use lethe::policy::PolicyKind;
@@ -100,6 +101,7 @@ fn main() -> anyhow::Result<()> {
     let Some((mut engine, tok)) = try_engine(cfg) else { return Ok(()) };
     let mut rows = Vec::new();
     let mut csv = Vec::new();
+    let mut jrows: Vec<BenchJsonRow> = Vec::new();
     for (label, kv) in kv_configs() {
         engine.cfg.kv = kv;
         for kind in [PolicyKind::FullKv, PolicyKind::Lethe] {
@@ -134,6 +136,14 @@ fn main() -> anyhow::Result<()> {
                     engine.metrics.kv_format
                 );
                 row.push(format!("{tput:.0}"));
+                jrows.push(BenchJsonRow {
+                    name: format!("decode_tput_{}_b{}", kind.label(), b),
+                    kv_format: label.to_string(),
+                    tokens_per_s: tput,
+                    upload_bytes_per_step: engine
+                        .metrics
+                        .upload_bytes_last,
+                });
                 csv.push(format!(
                     "{},{},{},{:.1},{:.1},{}",
                     kind.label(),
@@ -157,6 +167,7 @@ fn main() -> anyhow::Result<()> {
         "policy,kv_format,batch,tok_s,delta_hit_pct,pack_bytes",
         &csv,
     )?;
+    write_bench_json("table3", &jrows)?;
 
     // ---- (c) sustained-load serving section ----------------------------
     // The lifecycle path the tables above bypass: the real scheduler
@@ -221,6 +232,54 @@ fn main() -> anyhow::Result<()> {
             churn.interleaved_ticks,
             churn.oom_finishes
         )],
+    )?;
+
+    // ---- (d) incremental vs recompute chunked prefill ------------------
+    // Same scheduler path and chunk grain; the only difference is
+    // `scheduler.incremental_prefill`. The recompute path re-prefills
+    // the grown prefix from position 0 every chunk, so a prompt of n
+    // tokens pushes O(n²/chunk) tokens through the prefill executables;
+    // the incremental path feeds each chunk the accumulated prior KV
+    // and pushes exactly n. `prefill_tokens` makes the asymptotic
+    // difference directly visible; prefill seconds show the win.
+    engine.cfg.scheduler.kv_budget_bytes = 0; // isolate the prefill path
+    engine.cfg.scheduler.prefill_chunk = 16;
+    let supported = engine.supports_incremental_prefill();
+    if !supported {
+        eprintln!(
+            "[note] artifact set has no prefill_t*_kv variants — both \
+             rows below run the recompute path"
+        );
+    }
+    let mut prefill_rows = Vec::new();
+    for (label, incremental) in [("recompute", false), ("incremental", true)]
+    {
+        engine.cfg.scheduler.incremental_prefill = incremental;
+        engine.metrics.reset();
+        let tasks = gen_tasks(7, 8, 24, 4);
+        let (churn, completions) =
+            run_churn(&mut engine, &tok, PolicyKind::Lethe, &tasks, 16)?;
+        let prefill_s: f64 = engine.metrics.prefill_seconds.iter().sum();
+        println!(
+            "prefill[{label}]: {} tokens through prefill executables in \
+             {:.3}s ({} requests, wall {:.2}s)",
+            engine.metrics.prefill_tokens,
+            prefill_s,
+            completions.len(),
+            churn.wall_s
+        );
+        prefill_rows.push(format!(
+            "{label},{},{:.4},{:.3},{}",
+            engine.metrics.prefill_tokens,
+            prefill_s,
+            churn.wall_s,
+            supported && incremental
+        ));
+    }
+    write_csv(
+        "table3_prefill_path.csv",
+        "path,prefill_tokens,prefill_s,wall_s,incremental_active",
+        &prefill_rows,
     )?;
     Ok(())
 }

@@ -15,6 +15,7 @@ use crate::model::Tokenizer;
 use crate::policy::{make_policy, PolicyKind};
 use crate::runtime::Runtime;
 use crate::scheduler::{Completion, Request, Scheduler};
+use crate::util::json::Json;
 use crate::util::prng::Rng;
 use crate::workload::Task;
 
@@ -255,6 +256,54 @@ pub fn hotpath_csv(rows: &[(String, crate::util::stats::Summary)]) -> Result<()>
         })
         .collect();
     write_csv("hotpath.csv", "name,mean_s,p50_s,min_s,max_s", &lines)
+}
+
+/// One row of a machine-readable `BENCH_*.json` result file — the
+/// schema the CI bench-smoke job validates and gates on.
+pub struct BenchJsonRow {
+    /// What was measured (e.g. `"delta_pack_step"`, `"decode_tput"`).
+    pub name: String,
+    /// KV storage label ("f32" | "q8" | "q4" | "mixed").
+    pub kv_format: String,
+    /// Measured throughput in tokens per second.
+    pub tokens_per_s: f64,
+    /// Wire bytes the upload path moved per steady-state decode step.
+    pub upload_bytes_per_step: usize,
+}
+
+/// Write `bench_results/BENCH_{bench}.json`:
+/// `{bench, timestamp, rows: [{name, kv_format, tokens_per_s,
+/// upload_bytes_per_step}]}`. The timestamp comes from the environment
+/// (`LETHE_BENCH_TS`, else `SOURCE_DATE_EPOCH`, else empty) so repeated
+/// CI runs on identical code produce byte-identical artifacts.
+pub fn write_bench_json(bench: &str, rows: &[BenchJsonRow]) -> Result<()> {
+    let ts = std::env::var("LETHE_BENCH_TS")
+        .or_else(|_| std::env::var("SOURCE_DATE_EPOCH"))
+        .unwrap_or_default();
+    let arr: Vec<Json> = rows
+        .iter()
+        .map(|r| {
+            Json::obj(vec![
+                ("name", Json::str(&r.name)),
+                ("kv_format", Json::str(&r.kv_format)),
+                ("tokens_per_s", Json::num(r.tokens_per_s)),
+                (
+                    "upload_bytes_per_step",
+                    Json::from(r.upload_bytes_per_step),
+                ),
+            ])
+        })
+        .collect();
+    let doc = Json::obj(vec![
+        ("bench", Json::str(bench)),
+        ("timestamp", Json::str(&ts)),
+        ("rows", Json::Arr(arr)),
+    ]);
+    std::fs::create_dir_all(RESULTS_DIR)?;
+    let path = format!("{RESULTS_DIR}/BENCH_{bench}.json");
+    std::fs::write(&path, doc.to_string())?;
+    eprintln!("[json] wrote {path}");
+    Ok(())
 }
 
 /// Tasks for a (pairs, hops) workload.

@@ -181,6 +181,13 @@ pub struct SchedulerConfig {
     /// scheduler stops admitting and gives in-flight work this many
     /// milliseconds to finish before deadline-ing it out.
     pub drain_window_ms: u64,
+    /// Serve chunked prefills through the incremental `prefill_t{T}_kv`
+    /// executables when the artifact set carries them: each chunk
+    /// attends over the accumulated prior KV, so a whole prompt costs
+    /// O(n) instead of the recompute path's O(n²/chunk). Off (or with
+    /// an old artifact set) every chunk re-prefills the grown prefix
+    /// from position 0.
+    pub incremental_prefill: bool,
 }
 
 impl Default for SchedulerConfig {
@@ -195,6 +202,7 @@ impl Default for SchedulerConfig {
             migrate_patience: 4,
             swap_threshold_bytes_per_token: 0,
             drain_window_ms: 2000,
+            incremental_prefill: true,
         }
     }
 }
@@ -315,6 +323,11 @@ impl ServingConfig {
                     .as_usize()
                     .context("config key 'drain_window_ms'")?
                     as u64;
+            }
+            if let Some(v) = s.opt("incremental_prefill") {
+                c.scheduler.incremental_prefill = v
+                    .as_bool()
+                    .context("config key 'incremental_prefill'")?;
             }
             if let Some(v) = s.opt("prefill_buckets") {
                 c.scheduler.prefill_buckets = v
@@ -471,11 +484,13 @@ mod tests {
         assert_eq!(c.scheduler.prefill_chunk, 64);
         assert_eq!(c.scheduler.kv_budget_bytes, 0);
         assert_eq!(c.scheduler.migrate_patience, 4);
+        assert!(c.scheduler.incremental_prefill, "incremental by default");
         let c = ServingConfig::from_json(
             &parse(
                 r#"{"scheduler": {"prefill_chunk": 16,
                                   "kv_budget_bytes": 65536,
-                                  "migrate_patience": 2}}"#,
+                                  "migrate_patience": 2,
+                                  "incremental_prefill": false}}"#,
             )
             .unwrap(),
         )
@@ -483,6 +498,11 @@ mod tests {
         assert_eq!(c.scheduler.prefill_chunk, 16);
         assert_eq!(c.scheduler.kv_budget_bytes, 65536);
         assert_eq!(c.scheduler.migrate_patience, 2);
+        assert!(!c.scheduler.incremental_prefill);
+        assert!(ServingConfig::from_json(
+            &parse(r#"{"scheduler": {"incremental_prefill": 3}}"#).unwrap()
+        )
+        .is_err());
         assert!(ServingConfig::from_json(
             &parse(r#"{"scheduler": {"prefill_chunk": 0}}"#).unwrap()
         )

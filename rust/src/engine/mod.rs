@@ -28,7 +28,7 @@ pub mod group;
 use std::collections::HashMap;
 use std::time::Instant;
 
-use anyhow::{anyhow, Result};
+use anyhow::{anyhow, ensure, Result};
 
 pub use group::{DecodeGroup, FinishReason, PruneEvent, SeqPhase, SeqState};
 
@@ -36,13 +36,153 @@ use crate::attn::score::ProbsView;
 use crate::config::ServingConfig;
 use crate::error::{EngineError, FailureKind};
 use crate::fault::{FaultPlan, FaultSite};
-use crate::kvcache::{CacheDims, FormatMap, PackScratch, SlotViewMut};
+use crate::kvcache::{
+    CacheDims, FormatMap, KvFormat, PackScratch, PackedScratch, SlotViewMut,
+};
 use crate::metrics::EngineMetrics;
 use crate::policy::{LayerState, PolicyKind};
 use crate::runtime::registry::{DecodeOut, PrefillOut};
 use crate::runtime::tensors::HostTensorF32;
 use crate::runtime::Runtime;
 use crate::util::threadpool::ThreadPool;
+
+/// One resident upload image: either the f32 expansion every backend can
+/// produce ([`PackScratch`]) or the packed codes + scales wire form a
+/// uniformly quantized group feeds the kernel-side-dequant executables
+/// ([`PackedScratch`]).
+enum UploadImage {
+    F32(PackScratch),
+    Packed(PackedScratch),
+}
+
+impl UploadImage {
+    /// Wire bytes of one full image upload at this variant.
+    fn image_bytes(&self) -> usize {
+        match self {
+            UploadImage::F32(s) => s.image_bytes(),
+            UploadImage::Packed(s) => s.image_bytes(),
+        }
+    }
+
+    /// Does this image already carry the wanted variant (`None` = f32
+    /// expansion, `Some(fmt)` = packed at `fmt`)?
+    fn matches(&self, want: Option<KvFormat>) -> bool {
+        match (self, want) {
+            (UploadImage::F32(_), None) => true,
+            (UploadImage::Packed(s), Some(f)) => s.format() == f,
+            _ => false,
+        }
+    }
+}
+
+/// Double-buffered upload scratch for one (batch, capacity) bucket. Each
+/// step rotates to the *other* buffer before delta-packing, so the image
+/// being reconciled is never the one the previous step handed to the
+/// runtime for upload — the handoff protocol a future async-upload
+/// runtime needs, at the cost of each buffer appending two token rows
+/// per turn instead of one (still O(1) steady-state work, since each
+/// buffer's residency epochs track its own two-step-old image).
+struct UploadScratch {
+    slots: [Option<UploadImage>; 2],
+    cursor: usize,
+}
+
+impl UploadScratch {
+    fn new() -> UploadScratch {
+        UploadScratch { slots: [None, None], cursor: 0 }
+    }
+
+    /// Rotate to the other buffer and return it, (re)allocating when it
+    /// is cold or carries the wrong variant — e.g. a live format
+    /// migration flipped the group between packed and f32 service.
+    fn rotate(
+        &mut self,
+        cd: &CacheDims,
+        bb: usize,
+        cap: usize,
+        want: Option<KvFormat>,
+    ) -> &mut UploadImage {
+        self.cursor ^= 1;
+        let slot = &mut self.slots[self.cursor];
+        if !slot.as_ref().is_some_and(|s| s.matches(want)) {
+            *slot = Some(match want {
+                Some(fmt) => {
+                    UploadImage::Packed(PackedScratch::new(cd, bb, cap, fmt))
+                }
+                None => UploadImage::F32(PackScratch::new(cd, bb, cap)),
+            });
+        }
+        slot.as_mut().unwrap()
+    }
+}
+
+/// Accumulated state of an in-flight incremental (chunked) prefill: the
+/// prior-KV window the next `prefill_t{T}_kv` chunk attends over, the
+/// running RASR attention mass over the consumed prefix, and the latest
+/// chunk's last-position logits. The scheduler holds one per chunked
+/// prefill job between ticks and converts it into a window-shaped
+/// [`PrefillOut`] for [`Engine::install_prefill`] once the final chunk
+/// lands. Compared to the recompute path (each chunk re-prefills the
+/// whole prefix from position 0), total work over an n-token prompt
+/// drops from O(n²/chunk) to O(n).
+pub struct PrefillAcc {
+    /// Prior K window `[L, 1, Hkv, cap, D]`; rows `0..consumed` valid.
+    k: HostTensorF32,
+    /// Prior V window, same shape as `k`.
+    v: HostTensorF32,
+    /// Accumulated attention mass `[L, 1, Hq, cap]` over the prefix.
+    scores: HostTensorF32,
+    /// Logits `[1, V]` at the last consumed position.
+    logits: HostTensorF32,
+    consumed: usize,
+    /// Prior-window capacity = the compiled `PREFILL_KV_CAP`
+    /// (= the largest prefill bucket).
+    cap: usize,
+}
+
+impl PrefillAcc {
+    /// Prompt tokens consumed so far.
+    pub fn consumed(&self) -> usize {
+        self.consumed
+    }
+
+    /// Convert into the window-shaped [`PrefillOut`] that
+    /// [`Engine::install_prefill`] consumes (it reads the first
+    /// `consumed` rows/columns of each carrier).
+    pub fn into_prefill_out(self) -> PrefillOut {
+        PrefillOut {
+            logits: self.logits,
+            k_all: self.k,
+            v_all: self.v,
+            scores: self.scores,
+        }
+    }
+
+    /// Fold a prefill window's K/V rows `0..n` into the prior window at
+    /// row offset `off`. `k_all`/`v_all` are `[L, 1, Hkv, T, D]`, rows
+    /// contiguous, so each (layer, head) moves one contiguous span.
+    fn fold_rows(
+        &mut self,
+        k_all: &HostTensorF32,
+        v_all: &HostTensorF32,
+        n: usize,
+        off: usize,
+    ) {
+        let (layers, hkv, dh) =
+            (self.k.shape[0], self.k.shape[2], self.k.shape[4]);
+        let t = k_all.shape[3];
+        for l in 0..layers {
+            for h in 0..hkv {
+                let src = (l * hkv + h) * t * dh;
+                let dst = (l * hkv + h) * self.cap * dh + off * dh;
+                self.k.data[dst..dst + n * dh]
+                    .copy_from_slice(&k_all.data[src..src + n * dh]);
+                self.v.data[dst..dst + n * dh]
+                    .copy_from_slice(&v_all.data[src..src + n * dh]);
+            }
+        }
+    }
+}
 
 pub struct Engine {
     pub rt: Runtime,
@@ -51,9 +191,12 @@ pub struct Engine {
     pub cmax: usize,
     batch_buckets: Vec<usize>,
     /// Persistent resident upload scratch keyed by (batch, capacity)
-    /// bucket. Each records per-(layer, slot) residency epochs so the
-    /// steady-state step copies only what changed ([`PackScratch`]).
-    scratch: HashMap<(usize, usize), PackScratch>,
+    /// bucket — double-buffered ([`UploadScratch`]): two rotating images
+    /// so the one being delta-packed for step N+1 never aliases the one
+    /// step N handed to the runtime. Each image records per-(layer,
+    /// slot) residency epochs so the steady-state step copies only what
+    /// changed since *its own* last turn.
+    scratch: HashMap<(usize, usize), UploadScratch>,
     /// Per-slot score scratch (index = slot), so the parallel post-decode
     /// pipeline needs no shared mutable buffer.
     slot_score_bufs: Vec<Vec<f32>>,
@@ -196,6 +339,30 @@ impl Engine {
                 self.batch_buckets.last()))
     }
 
+    /// The packed decode variant a step over `group` at bucket
+    /// (`bb`, `cap`) can be served with: `Some(fmt)` when every layer of
+    /// the group stores at the same quantized format *and* the artifact
+    /// set carries the matching kernel-side-dequant executable
+    /// (`decode_b{bb}_c{cap}_q8` / `_q4`). `None` routes the step down
+    /// the f32 expansion path — dense or mixed groups, or artifact sets
+    /// built before the packed variants existed.
+    fn packed_variant(
+        &self,
+        group: &DecodeGroup,
+        bb: usize,
+        cap: usize,
+    ) -> Option<KvFormat> {
+        let fmt = group.cache.format_map().uniform_format()?;
+        let suffix = match fmt {
+            KvFormat::QuantI8 => "q8",
+            KvFormat::QuantI4 => "q4",
+            KvFormat::F32 => return None,
+        };
+        self.rt
+            .has_executable(&format!("decode_b{bb}_c{cap}_{suffix}"))
+            .then_some(fmt)
+    }
+
     /// Prefill a prompt into slot `slot` of the group; returns the first
     /// generated token. This is the monolithic path (benches, eval, the
     /// chunked scheduler's final chunk is [`Engine::prefill_window`] +
@@ -224,6 +391,109 @@ impl Engine {
         self.metrics.prefill_seconds.push(t0.elapsed().as_secs_f64());
         self.metrics.prefill_tokens += prefix.len() as u64;
         Ok(out)
+    }
+
+    /// Whether the artifact set carries the `prefill_t{T}_kv`
+    /// incremental variants for every compiled prefill bucket. Old
+    /// artifact sets don't; the scheduler then falls back to the
+    /// whole-prefix recompute chunking of [`Engine::prefill_window`].
+    pub fn supports_incremental_prefill(&self) -> bool {
+        !self.rt.meta.prefill_ts.is_empty()
+            && self
+                .rt
+                .meta
+                .prefill_ts
+                .iter()
+                .all(|t| self.rt.has_executable(&format!("prefill_t{t}_kv")))
+    }
+
+    /// Run one chunk of an incremental prefill. `acc = None` starts the
+    /// prompt: the chunk runs through the classic bucketed prefill and
+    /// seeds a fresh accumulator. With `Some(acc)` the chunk runs
+    /// through `prefill_t{T}_kv` against the accumulated prior KV —
+    /// O(chunk) work instead of recomputing the whole consumed prefix —
+    /// and the chunk's new K/V rows and score mass fold into the
+    /// accumulator. Greedy-decode equivalence to the monolithic prefill
+    /// is covered by the artifact-gated lifecycle tests and the python
+    /// kernel tests.
+    pub fn prefill_chunk(
+        &mut self,
+        acc: Option<PrefillAcc>,
+        chunk: &[i32],
+    ) -> Result<PrefillAcc> {
+        let cap = self.max_prefill_tokens();
+        let d = self.rt.meta.dims.clone();
+        let (hq, hkv) = (d.n_q_heads, d.n_kv_heads);
+        let n = chunk.len();
+        let Some(mut acc) = acc else {
+            // First chunk: no prior KV yet, the plain bucketed prefill
+            // is exactly this computation (and meters itself).
+            let out = self.prefill_window(chunk)?;
+            let mut acc = PrefillAcc {
+                k: HostTensorF32::zeros(&[
+                    d.n_layers, 1, hkv, cap, d.d_head,
+                ]),
+                v: HostTensorF32::zeros(&[
+                    d.n_layers, 1, hkv, cap, d.d_head,
+                ]),
+                scores: HostTensorF32::zeros(&[d.n_layers, 1, hq, cap]),
+                logits: HostTensorF32::zeros(&[1, d.vocab_size]),
+                consumed: 0,
+                cap,
+            };
+            acc.fold_rows(&out.k_all, &out.v_all, n, 0);
+            let t = out.scores.shape[3];
+            for l in 0..d.n_layers {
+                for h in 0..hq {
+                    let src = (l * hq + h) * t;
+                    let dst = (l * hq + h) * cap;
+                    acc.scores.data[dst..dst + n]
+                        .copy_from_slice(&out.scores.data[src..src + n]);
+                }
+            }
+            acc.logits = out.logits;
+            acc.consumed = n;
+            return Ok(acc);
+        };
+        ensure!(
+            acc.consumed + n <= cap,
+            "incremental prefill overflow: {} consumed + {n} chunk > \
+             prior window {cap}",
+            acc.consumed
+        );
+        let t0 = Instant::now();
+        let bucket = self.rt.prefill_bucket(n)?;
+        let out = self.rt.prefill_kv(
+            bucket,
+            &acc.k,
+            &acc.v,
+            acc.consumed as i32,
+            chunk,
+        )?;
+        self.metrics.prefill_seconds.push(t0.elapsed().as_secs_f64());
+        self.metrics.prefill_tokens += n as u64;
+        acc.fold_rows(&out.k_all, &out.v_all, n, acc.consumed);
+        // scores is [L, 1, Hq, cap + bucket]: mass over the prior keys
+        // in [..cap] (only the consumed columns are live), over the
+        // chunk's own keys in [cap..cap+n] — fold both at their prefix
+        // positions.
+        let tw = out.scores.shape[3];
+        for l in 0..d.n_layers {
+            for h in 0..hq {
+                let src = (l * hq + h) * tw;
+                let dst = (l * hq + h) * cap;
+                for j in 0..acc.consumed {
+                    acc.scores.data[dst + j] += out.scores.data[src + j];
+                }
+                for j in 0..n {
+                    acc.scores.data[dst + acc.consumed + j] +=
+                        out.scores.data[src + cap + j];
+                }
+            }
+        }
+        acc.logits = out.logits;
+        acc.consumed += n;
+        Ok(acc)
     }
 
     /// Install a completed prefill into slot `slot`: load the K/V rows,
@@ -335,11 +605,24 @@ impl Engine {
 
         let d = self.rt.meta.dims.clone();
         let cd = group.cache.dims;
-        let scratch = self
+        // Raw-speed path selection: a uniformly quantized group whose
+        // artifact set carries the matching kernel-side-dequant variant
+        // uploads its stored wire bytes; everything else (dense, mixed,
+        // old artifacts) takes the f32 expansion.
+        let want = self.packed_variant(group, bb, cap);
+        let image = self
             .scratch
             .entry((bb, cap))
-            .or_insert_with(|| PackScratch::new(&cd, bb, cap));
-        let pstats = group.cache.pack_delta(scratch)?;
+            .or_insert_with(UploadScratch::new)
+            .rotate(&cd, bb, cap, want);
+        let (pstats, image_bytes) = match image {
+            UploadImage::F32(s) => {
+                (group.cache.pack_delta(s)?, s.image_bytes())
+            }
+            UploadImage::Packed(s) => {
+                (group.cache.pack_delta_packed(s)?, s.image_bytes())
+            }
+        };
 
         let mut tokens = vec![0i32; bb];
         let mut positions = vec![0i32; bb];
@@ -356,8 +639,14 @@ impl Engine {
             }
             .into())
         } else {
-            self.rt.decode(bb, cap, &scratch.k, &scratch.v,
-                           &scratch.lens, &tokens, &positions)
+            match &*image {
+                UploadImage::F32(s) => self.rt.decode(
+                    bb, cap, &s.k, &s.v, &s.lens, &tokens, &positions,
+                ),
+                UploadImage::Packed(s) => {
+                    self.rt.decode_packed(bb, cap, s, &tokens, &positions)
+                }
+            }
         };
         let out = match decode_res {
             Ok(out) => out,
@@ -462,6 +751,8 @@ impl Engine {
         }
 
         self.metrics.pack_bytes_copied += pstats.bytes_copied as u64;
+        self.metrics.pack_bytes_f32_equiv += pstats.bytes_f32_equiv as u64;
+        self.metrics.upload_bytes_last = image_bytes;
         self.metrics.delta_pack_hits +=
             (pstats.pairs_delta + pstats.pairs_skipped) as u64;
         self.metrics.delta_pack_full += pstats.pairs_full as u64;

@@ -112,6 +112,34 @@ pub trait KvStore {
         dst: &mut [f32],
     );
 
+    /// Copy rows `from..to` of (l, b, h) in **stored packed form** into a
+    /// kernel-side-dequant upload image: quantized codes into
+    /// `codes_dst`, per-row (q8) / per-group (q4) f32 scales into
+    /// `scales_dst`, and — q4 only — zero-points into `zeros_dst` (q8
+    /// passes an empty span). Spans are tightly sized by the caller from
+    /// [`crate::kvcache::quant::packed_codes_per_row`] /
+    /// [`crate::kvcache::quant::packed_scales_per_row`]. Same determinism
+    /// obligation as [`KvStore::read_rows`], dead rows included — the
+    /// packed delta-pack protocol relies on it. Dense f32 layers have no
+    /// packed form: the default implementation panics, and callers must
+    /// route them through the f32 image ([`KvStore::read_rows`]).
+    #[allow(clippy::too_many_arguments)]
+    fn export_packed_rows(
+        &self,
+        l: usize,
+        b: usize,
+        h: usize,
+        which_v: bool,
+        from: usize,
+        to: usize,
+        codes_dst: &mut [u8],
+        scales_dst: &mut [f32],
+        zeros_dst: &mut [f32],
+    ) {
+        let _ = (l, b, h, which_v, from, to, codes_dst, scales_dst, zeros_dst);
+        panic!("this layer's storage has no packed (quantized) form");
+    }
+
     /// Serialize the first `len` rows of slot `b` at layer `l` — every
     /// head's K and V payloads plus any quantization side data — into
     /// `out` (appending) **at stored precision**: raw mantissa bytes
@@ -407,6 +435,36 @@ impl KvStore for QuantI8 {
         }
     }
 
+    #[allow(clippy::too_many_arguments)]
+    fn export_packed_rows(
+        &self,
+        l: usize,
+        b: usize,
+        h: usize,
+        which_v: bool,
+        from: usize,
+        to: usize,
+        codes_dst: &mut [u8],
+        scales_dst: &mut [f32],
+        zeros_dst: &mut [f32],
+    ) {
+        debug_assert!(zeros_dst.is_empty(), "q8 rows carry no zero-points");
+        let _ = zeros_dst;
+        let d = self.dims.d_head;
+        let n = to - from;
+        let off = dense_off(&self.dims, l, b, h, from);
+        let si = quant_idx(&self.dims, l, b, h, from);
+        let (q, s) = if which_v {
+            (&self.v_q, &self.v_s)
+        } else {
+            (&self.k_q, &self.k_s)
+        };
+        for (dst, &src) in codes_dst[..n * d].iter_mut().zip(&q[off..off + n * d]) {
+            *dst = src as u8;
+        }
+        scales_dst[..n].copy_from_slice(&s[si..si + n]);
+    }
+
     fn export_rows(&self, l: usize, b: usize, len: usize, out: &mut Vec<u8>) {
         let n = len * self.dims.d_head;
         for h in 0..self.dims.kv_heads {
@@ -586,6 +644,34 @@ impl KvStore for QuantI4 {
                 &mut dst[(c - from) * d..(c - from + 1) * d],
             );
         }
+    }
+
+    #[allow(clippy::too_many_arguments)]
+    fn export_packed_rows(
+        &self,
+        l: usize,
+        b: usize,
+        h: usize,
+        which_v: bool,
+        from: usize,
+        to: usize,
+        codes_dst: &mut [u8],
+        scales_dst: &mut [f32],
+        zeros_dst: &mut [f32],
+    ) {
+        let packed = q4_packed_bytes(self.dims.d_head);
+        let groups = q4_groups(self.dims.d_head);
+        let n = to - from;
+        let ri = quant_idx(&self.dims, l, b, h, from);
+        let (po, go) = (ri * packed, ri * groups);
+        let (q, s, z) = if which_v {
+            (&self.v_q, &self.v_s, &self.v_z)
+        } else {
+            (&self.k_q, &self.k_s, &self.k_z)
+        };
+        codes_dst[..n * packed].copy_from_slice(&q[po..po + n * packed]);
+        scales_dst[..n * groups].copy_from_slice(&s[go..go + n * groups]);
+        zeros_dst[..n * groups].copy_from_slice(&z[go..go + n * groups]);
     }
 
     fn export_rows(&self, l: usize, b: usize, len: usize, out: &mut Vec<u8>) {
@@ -801,6 +887,24 @@ impl KvStore for KvBackend {
         dst: &mut [f32],
     ) {
         self.stores[l].store().read_rows(0, b, h, which_v, from, to, dst);
+    }
+
+    #[allow(clippy::too_many_arguments)]
+    fn export_packed_rows(
+        &self,
+        l: usize,
+        b: usize,
+        h: usize,
+        which_v: bool,
+        from: usize,
+        to: usize,
+        codes_dst: &mut [u8],
+        scales_dst: &mut [f32],
+        zeros_dst: &mut [f32],
+    ) {
+        self.stores[l].store().export_packed_rows(
+            0, b, h, which_v, from, to, codes_dst, scales_dst, zeros_dst,
+        );
     }
 
     fn export_rows(&self, l: usize, b: usize, len: usize, out: &mut Vec<u8>) {
@@ -1268,6 +1372,75 @@ mod tests {
                 "{fmt:?}"
             );
         }
+    }
+
+    #[test]
+    fn packed_export_dequantizes_to_read_rows() {
+        use crate::kvcache::quant::{
+            dequantize_row_q4, dequantize_span, packed_codes_per_row,
+            packed_scales_per_row,
+        };
+        let mut rng = Rng::new(23);
+        for fmt in [KvFormat::QuantI8, KvFormat::QuantI4] {
+            let mut s = KvBackend::new(dims(), fmt);
+            for c in 0..5 {
+                let kr = vec_f32(&mut rng, 8, -2.0, 2.0);
+                let vr = vec_f32(&mut rng, 8, -2.0, 2.0);
+                s.write_row(1, 0, c, &kr, &vr);
+            }
+            let d = dims().d_head;
+            let db = packed_codes_per_row(d, fmt).unwrap();
+            let g = packed_scales_per_row(d, fmt).unwrap();
+            // Cover live rows, a dead tail, and a mid-range window.
+            for (from, to) in [(0usize, 5usize), (5, 8), (2, 4)] {
+                let n = to - from;
+                let mut codes = vec![0u8; n * db];
+                let mut scales = vec![0f32; n * g];
+                let mut zeros = vec![
+                    0f32;
+                    if fmt == KvFormat::QuantI4 { n * g } else { 0 }
+                ];
+                for which_v in [false, true] {
+                    s.export_packed_rows(
+                        1, 0, 1, which_v, from, to, &mut codes, &mut scales,
+                        &mut zeros,
+                    );
+                    let mut want = vec![0f32; n * d];
+                    s.read_rows(1, 0, 1, which_v, from, to, &mut want);
+                    // Dequantizing the packed export reproduces read_rows
+                    // bit-for-bit — the packed image carries exactly the
+                    // rows the f32 image would have.
+                    let mut got = vec![0f32; n * d];
+                    for r in 0..n {
+                        match fmt {
+                            KvFormat::QuantI8 => dequantize_span(
+                                crate::runtime::tensors::as_i8(
+                                    &codes[r * db..(r + 1) * db],
+                                ),
+                                scales[r],
+                                &mut got[r * d..(r + 1) * d],
+                            ),
+                            KvFormat::QuantI4 => dequantize_row_q4(
+                                &codes[r * db..(r + 1) * db],
+                                &scales[r * g..(r + 1) * g],
+                                &zeros[r * g..(r + 1) * g],
+                                &mut got[r * d..(r + 1) * d],
+                            ),
+                            KvFormat::F32 => unreachable!(),
+                        }
+                    }
+                    assert_eq!(got, want, "{fmt:?} rows {from}..{to}");
+                }
+            }
+        }
+    }
+
+    #[test]
+    #[should_panic(expected = "no packed")]
+    fn dense_layer_has_no_packed_export() {
+        let s = KvBackend::new(dims(), KvFormat::F32);
+        let (mut c, mut sc, mut z) = (vec![0u8; 4], vec![0f32; 1], vec![]);
+        s.export_packed_rows(0, 0, 0, false, 0, 1, &mut c, &mut sc, &mut z);
     }
 
     #[test]

@@ -85,7 +85,7 @@ use std::sync::atomic::{AtomicU64, Ordering};
 
 use anyhow::{ensure, Result};
 
-use crate::runtime::tensors::{HostTensorF32, HostTensorI32};
+use crate::runtime::tensors::{HostTensorF32, HostTensorI32, HostTensorU8};
 
 pub use backend::{DenseF32, KvBackend, KvStore, QuantI4, QuantI8};
 pub use quant::KvFormat;
@@ -591,8 +591,106 @@ impl GroupCache {
                                           &mut scratch.v.data[dst..dst + count]);
                     }
                     // f32 bytes written into the upload scratch (K + V);
-                    // format-independent because the scratch is f32.
+                    // format-independent because the scratch is f32, so
+                    // wire == f32-equivalent on this path.
                     stats.bytes_copied += count * kv_heads * 4 * 2;
+                    stats.bytes_f32_equiv += count * kv_heads * 4 * 2;
+                }
+                scratch.res[ridx] = (st.epoch, len);
+                scratch.lens.data[ridx] = len as i32;
+            }
+        }
+        scratch.cache_id = Some(self.id);
+        Ok(stats)
+    }
+
+    /// Reconcile a persistent [`PackedScratch`] — the quantized layers'
+    /// stored codes + scales (+ zeros for q4), **not** an f32 expansion
+    /// — under exactly the epoch protocol of
+    /// [`GroupCache::pack_delta`]: skip resident pairs, copy only newly
+    /// appended rows after append-only mutation, full C-prefix re-copy
+    /// after a rewrite or on a cold scratch. This is the raw-speed
+    /// upload path for the kernel-side-dequant decode executables
+    /// (`decode_b{B}_c{C}_q8` / `_q4`): the bytes moved per head-row
+    /// are the stored wire bytes (`D + 4` for q8,
+    /// `ceil(D/2) + 8·groups` for q4) instead of the `4·D` f32 image.
+    /// Every layer must store exactly the scratch's format — the
+    /// engine falls back to [`GroupCache::pack_delta`] for dense or
+    /// mixed maps. Errors before mutating anything on a format or
+    /// shape mismatch.
+    pub fn pack_delta_packed(
+        &self,
+        scratch: &mut PackedScratch,
+    ) -> Result<PackStats> {
+        let CacheDims { layers, batch, kv_heads, d_head, .. } = self.dims;
+        let fmt = scratch.fmt;
+        ensure!(self.formats.uniform_format() == Some(fmt),
+                "packed scratch is {} but the cache stores {}",
+                fmt.label(), self.format_label());
+        let (bb, cap) = (scratch.bb, scratch.cap);
+        ensure!(bb <= batch, "batch bucket {bb} > group size {batch}");
+        ensure!(cap <= self.dims.capacity, "bucket {cap} > Cmax");
+        let db = quant::packed_codes_per_row(d_head, fmt)
+            .expect("packed scratch format is quantized");
+        let sg = quant::packed_scales_per_row(d_head, fmt)
+            .expect("packed scratch format is quantized");
+        let zg = if fmt == KvFormat::QuantI4 { sg } else { 0 };
+        let want = vec![layers, bb, kv_heads, cap, db];
+        ensure!(scratch.k_codes.shape == want
+                    && scratch.v_codes.shape == want,
+                "packed scratch shape mismatch: {:?} vs {want:?}",
+                scratch.k_codes.shape);
+        // Residency semantics are identical to pack_delta: unknown (or
+        // mid-error) scratches are cold and fully re-copied.
+        let cold = scratch.cache_id != Some(self.id);
+        scratch.cache_id = None;
+        let mut stats = PackStats::default();
+        for l in 0..layers {
+            for b in 0..bb {
+                let idx = self.lb(l, b);
+                let len = self.lens[idx];
+                ensure!(len <= cap,
+                        "live rows exceed bucket {cap} at ({l},{b})");
+                let st = self.epochs[idx];
+                let ridx = l * bb + b;
+                let (re, rlen) = scratch.res[ridx];
+                let (from, to) = if !cold && re == st.epoch {
+                    stats.pairs_skipped += 1;
+                    (0, 0)
+                } else if !cold && re >= st.rewrite {
+                    stats.pairs_delta += 1;
+                    (rlen, len)
+                } else {
+                    stats.pairs_full += 1;
+                    (0, cap)
+                };
+                if to > from {
+                    let rows = to - from;
+                    for h in 0..kv_heads {
+                        let base = ((l * bb + b) * kv_heads + h) * cap;
+                        let co = (base + from) * db;
+                        let so = (base + from) * sg;
+                        let zo = (base + from) * zg;
+                        let (cn, sn, zn) = (rows * db, rows * sg, rows * zg);
+                        self.kv.export_packed_rows(
+                            l, b, h, false, from, to,
+                            &mut scratch.k_codes.data[co..co + cn],
+                            &mut scratch.k_scales.data[so..so + sn],
+                            &mut scratch.k_zeros.data[zo..zo + zn],
+                        );
+                        self.kv.export_packed_rows(
+                            l, b, h, true, from, to,
+                            &mut scratch.v_codes.data[co..co + cn],
+                            &mut scratch.v_scales.data[so..so + sn],
+                            &mut scratch.v_zeros.data[zo..zo + zn],
+                        );
+                    }
+                    // Wire bytes actually staged (codes + f32 scales and
+                    // zeros, K + V), plus the f32 pricing of the same
+                    // rows for the compression-ratio telemetry.
+                    let wire = db + 4 * (sg + zg);
+                    stats.bytes_copied += rows * kv_heads * wire * 2;
+                    stats.bytes_f32_equiv += rows * kv_heads * d_head * 4 * 2;
                 }
                 scratch.res[ridx] = (st.epoch, len);
                 scratch.lens.data[ridx] = len as i32;
@@ -920,11 +1018,19 @@ impl SlotViewMut<'_> {
     }
 }
 
-/// What one [`GroupCache::pack_delta`] call actually moved.
+/// What one [`GroupCache::pack_delta`] /
+/// [`GroupCache::pack_delta_packed`] call actually moved.
 #[derive(Clone, Copy, Debug, Default)]
 pub struct PackStats {
-    /// Host bytes copied into the scratch (K + V).
+    /// Host bytes copied into the scratch (K + V) **at the scratch's
+    /// wire width**: f32 expansion for [`PackScratch`], stored
+    /// codes + scales for [`PackedScratch`].
     pub bytes_copied: usize,
+    /// The same moved rows priced at dense f32
+    /// (`rows × Hkv × D × 4 × 2`). Equal to `bytes_copied` on the f32
+    /// path; the `bytes_f32_equiv / bytes_copied` ratio is the packed
+    /// path's upload-byte reduction.
+    pub bytes_f32_equiv: usize,
     /// (layer, slot) pairs re-copied in full (rewritten or cold).
     pub pairs_full: usize,
     /// Pairs where only newly appended rows were copied.
@@ -972,7 +1078,117 @@ impl PackScratch {
         (self.bb, self.cap)
     }
 
+    /// Total wire bytes of one full upload image (K + V + lens) — the
+    /// per-step f32 upload cost the benches compare the packed path
+    /// against.
+    pub fn image_bytes(&self) -> usize {
+        self.k.bytes() + self.v.bytes() + self.lens.bytes()
+    }
+
     /// Drop residency; the next pack_delta re-copies everything.
+    pub fn invalidate(&mut self) {
+        self.cache_id = None;
+    }
+}
+
+/// Persistent **packed** upload image for one (batch, capacity) bucket:
+/// the quantized stores' codes + scales (+ zeros for q4), in exactly
+/// the operand layout the kernel-side-dequant decode executables
+/// (`decode_b{B}_c{C}_q8` / `_q4`) take — so a uniformly quantized
+/// group uploads its stored bytes instead of a 4·D f32 expansion.
+/// Maintained by [`GroupCache::pack_delta_packed`] under the same
+/// epoch/residency protocol as [`PackScratch`].
+pub struct PackedScratch {
+    /// Packed K codes: `[L, bb, Hkv, C, D]` u8 holding i8 bit patterns
+    /// for q8; `[L, bb, Hkv, C, ceil(D/2)]` two-nibbles-per-byte for q4.
+    pub k_codes: HostTensorU8,
+    /// K scales: per-row `[L, bb, Hkv, C]` for q8, per-group
+    /// `[L, bb, Hkv, C, G]` for q4.
+    pub k_scales: HostTensorF32,
+    /// K zero points, per-group `[L, bb, Hkv, C, G]` (q4 only; empty
+    /// for q8, whose codec is symmetric).
+    pub k_zeros: HostTensorF32,
+    /// Packed V codes (same layout as `k_codes`).
+    pub v_codes: HostTensorU8,
+    /// V scales (same layout as `k_scales`).
+    pub v_scales: HostTensorF32,
+    /// V zero points (same layout as `k_zeros`).
+    pub v_zeros: HostTensorF32,
+    /// Live-row counts `[L, bb]`.
+    pub lens: HostTensorI32,
+    fmt: KvFormat,
+    bb: usize,
+    cap: usize,
+    /// Which cache (by unique id) the residency describes; None = cold.
+    cache_id: Option<u64>,
+    /// [L * bb] -> (epoch held, rows valid at that epoch).
+    res: Vec<(u64, usize)>,
+}
+
+impl PackedScratch {
+    /// Scratch for a (bb, cap) bucket at packed format `fmt`. Panics on
+    /// [`KvFormat::F32`], which has no packed wire form (use
+    /// [`PackScratch`]).
+    pub fn new(
+        dims: &CacheDims,
+        bb: usize,
+        cap: usize,
+        fmt: KvFormat,
+    ) -> PackedScratch {
+        let db = quant::packed_codes_per_row(dims.d_head, fmt)
+            .expect("PackedScratch requires a quantized format");
+        let sg = quant::packed_scales_per_row(dims.d_head, fmt)
+            .expect("PackedScratch requires a quantized format");
+        let codes = [dims.layers, bb, dims.kv_heads, cap, db];
+        // q8 carries one scale per row: shaped [L, bb, Hkv, C] — the
+        // 4-D operand the q8 executables expect — not a trailing
+        // singleton dim.
+        let scales: Vec<usize> = if fmt == KvFormat::QuantI8 {
+            vec![dims.layers, bb, dims.kv_heads, cap]
+        } else {
+            vec![dims.layers, bb, dims.kv_heads, cap, sg]
+        };
+        let zeros: Vec<usize> = if fmt == KvFormat::QuantI4 {
+            scales.clone()
+        } else {
+            vec![0]
+        };
+        PackedScratch {
+            k_codes: HostTensorU8::zeros(&codes),
+            k_scales: HostTensorF32::zeros(&scales),
+            k_zeros: HostTensorF32::zeros(&zeros),
+            v_codes: HostTensorU8::zeros(&codes),
+            v_scales: HostTensorF32::zeros(&scales),
+            v_zeros: HostTensorF32::zeros(&zeros),
+            lens: HostTensorI32::zeros(&[dims.layers, bb]),
+            fmt,
+            bb,
+            cap,
+            cache_id: None,
+            res: vec![(0, 0); dims.layers * bb],
+        }
+    }
+
+    /// The (batch, capacity) bucket this scratch was sized for.
+    pub fn bucket(&self) -> (usize, usize) {
+        (self.bb, self.cap)
+    }
+
+    /// The packed format the images are encoded at.
+    pub fn format(&self) -> KvFormat {
+        self.fmt
+    }
+
+    /// Total wire bytes of one full upload image (codes + scales +
+    /// zeros + lens, K and V) — the per-step upload cost of the packed
+    /// path the benches report against [`PackScratch::image_bytes`].
+    pub fn image_bytes(&self) -> usize {
+        self.k_codes.bytes() + self.k_scales.bytes() + self.k_zeros.bytes()
+            + self.v_codes.bytes() + self.v_scales.bytes()
+            + self.v_zeros.bytes() + self.lens.bytes()
+    }
+
+    /// Drop residency; the next pack_delta_packed re-copies everything.
     pub fn invalidate(&mut self) {
         self.cache_id = None;
     }
@@ -1171,6 +1387,8 @@ mod tests {
         assert_eq!(st.pairs_skipped, 3);
         assert_eq!(st.pairs_full, 0);
         assert_eq!(st.bytes_copied, 2 * 4 * 4 * 2);
+        assert_eq!(st.bytes_f32_equiv, st.bytes_copied,
+                   "f32 path: wire bytes == f32-equivalent bytes");
         assert_matches_fresh_pack(&c, &s);
 
         // No change at all: pure skip.
@@ -1433,6 +1651,140 @@ mod tests {
         let mut s = PackScratch::new(&c.dims, 2, 8);
         c.pack_delta(&mut s).unwrap();
         assert_matches_fresh_pack(&c, &s);
+    }
+
+    /// Dequantizing the packed image must reproduce the f32 upload
+    /// image bit-exactly: `read_rows` on a quantized store IS
+    /// "dequantize the stored codes", and the packed export carries
+    /// those same codes and scales.
+    fn assert_matches_fresh_pack_packed(c: &GroupCache, s: &PackedScratch) {
+        let (bb, cap) = s.bucket();
+        let d = c.dims.d_head;
+        let shape = [c.dims.layers, bb, c.dims.kv_heads, cap, d];
+        let mut k = HostTensorF32::zeros(&shape);
+        let mut v = HostTensorF32::zeros(&shape);
+        let mut lens = HostTensorI32::zeros(&[c.dims.layers, bb]);
+        c.pack(bb, cap, &mut k, &mut v, &mut lens).unwrap();
+        assert_eq!(lens.data, s.lens.data, "lens diverged from fresh pack");
+        let db = quant::packed_codes_per_row(d, s.format()).unwrap();
+        let sg = quant::packed_scales_per_row(d, s.format()).unwrap();
+        let rows = c.dims.layers * bb * c.dims.kv_heads * cap;
+        let mut out = vec![0.0f32; d];
+        for (codes, scales, zeros, img) in [
+            (&s.k_codes, &s.k_scales, &s.k_zeros, &k),
+            (&s.v_codes, &s.v_scales, &s.v_zeros, &v),
+        ] {
+            for r in 0..rows {
+                match s.format() {
+                    KvFormat::QuantI8 => quant::dequantize_span(
+                        crate::runtime::tensors::as_i8(
+                            &codes.data[r * db..(r + 1) * db]),
+                        scales.data[r],
+                        &mut out,
+                    ),
+                    KvFormat::QuantI4 => quant::dequantize_row_q4(
+                        &codes.data[r * db..(r + 1) * db],
+                        &scales.data[r * sg..(r + 1) * sg],
+                        &zeros.data[r * sg..(r + 1) * sg],
+                        &mut out,
+                    ),
+                    KvFormat::F32 => unreachable!(),
+                }
+                assert_eq!(out, img.data[r * d..(r + 1) * d],
+                           "packed row {r} diverged from fresh pack");
+            }
+        }
+    }
+
+    #[test]
+    fn packed_delta_pack_tracks_epochs_and_prices_wire_bytes() {
+        let mut c = GroupCache::with_format(dims(), KvFormat::QuantI8);
+        for t in 0..3 {
+            for l in 0..2 {
+                c.insert(l, 0, &row(t as f32, 2, 4), &row(t as f32, 2, 4), t)
+                    .unwrap();
+            }
+        }
+        let mut s = PackedScratch::new(&c.dims, 2, 8, KvFormat::QuantI8);
+        let st = c.pack_delta_packed(&mut s).unwrap();
+        assert_eq!(st.pairs_full, 4, "cold sync re-copies every pair");
+        assert_matches_fresh_pack_packed(&c, &s);
+
+        // One append: 1 row * 2 heads * (4 code bytes + 1 f32 scale) * 2
+        // tensors on the wire; the f32-equivalent prices the same rows
+        // at 4 bytes per element.
+        c.insert(0, 0, &row(9.0, 2, 4), &row(9.0, 2, 4), 3).unwrap();
+        let st = c.pack_delta_packed(&mut s).unwrap();
+        assert_eq!(st.pairs_delta, 1);
+        assert_eq!(st.pairs_skipped, 3);
+        assert_eq!(st.pairs_full, 0);
+        assert_eq!(st.bytes_copied, 2 * (4 + 4) * 2);
+        assert_eq!(st.bytes_f32_equiv, 2 * 4 * 4 * 2);
+        assert_matches_fresh_pack_packed(&c, &s);
+
+        // No change at all: pure skip, zero bytes.
+        let st = c.pack_delta_packed(&mut s).unwrap();
+        assert_eq!(st.pairs_skipped, 4);
+        assert_eq!(st.bytes_copied, 0);
+
+        // Retention rewrites exactly the touched pair.
+        c.apply_retention(0, 0, &[0, 2]).unwrap();
+        let st = c.pack_delta_packed(&mut s).unwrap();
+        assert_eq!(st.pairs_full, 1);
+        assert_eq!(st.pairs_skipped, 3);
+        assert_matches_fresh_pack_packed(&c, &s);
+    }
+
+    #[test]
+    fn packed_delta_pack_q4_round_trips_and_survives_rewrites() {
+        let mut c = GroupCache::with_format(dims(), KvFormat::QuantI4);
+        for t in 0..5 {
+            for l in 0..2 {
+                c.insert(l, 0, &row(t as f32, 2, 4), &row(-(t as f32), 2, 4),
+                         t)
+                    .unwrap();
+            }
+        }
+        let mut s = PackedScratch::new(&c.dims, 2, 8, KvFormat::QuantI4);
+        c.pack_delta_packed(&mut s).unwrap();
+        assert_matches_fresh_pack_packed(&c, &s);
+        c.insert(0, 0, &row(9.0, 2, 4), &row(9.0, 2, 4), 5).unwrap();
+        let st = c.pack_delta_packed(&mut s).unwrap();
+        assert_eq!(st.pairs_delta, 1);
+        // 1 row * 2 heads * (2 packed bytes + 8 scale/zero bytes) * 2.
+        assert_eq!(st.bytes_copied, 2 * (2 + 8) * 2);
+        assert_matches_fresh_pack_packed(&c, &s);
+        c.apply_retention(1, 0, &[0, 3]).unwrap();
+        c.swap_slots(0, 1);
+        let st = c.pack_delta_packed(&mut s).unwrap();
+        assert_eq!(st.pairs_full, 4, "swap rewrites both slots, all layers");
+        assert_matches_fresh_pack_packed(&c, &s);
+    }
+
+    #[test]
+    fn packed_delta_pack_rejects_non_uniform_or_wrong_format() {
+        let mut s = PackedScratch::new(&dims(), 2, 8, KvFormat::QuantI8);
+        assert_eq!(s.format(), KvFormat::QuantI8);
+        // Dense cache has no packed wire form.
+        let dense = GroupCache::new(dims());
+        assert!(dense.pack_delta_packed(&mut s).is_err());
+        // Mixed maps fall back to the f32 image too.
+        let mixed = GroupCache::with_formats(
+            dims(),
+            FormatMap::new(vec![KvFormat::QuantI8, KvFormat::QuantI4]),
+        );
+        assert!(mixed.pack_delta_packed(&mut s).is_err());
+        // Uniform-but-different format is rejected as well.
+        let q4 = GroupCache::with_format(dims(), KvFormat::QuantI4);
+        assert!(q4.pack_delta_packed(&mut s).is_err());
+        // The q8 scratch still works against a matching cache.
+        let mut c = GroupCache::with_format(dims(), KvFormat::QuantI8);
+        c.insert(0, 0, &row(1.0, 2, 4), &row(1.0, 2, 4), 0).unwrap();
+        c.pack_delta_packed(&mut s).unwrap();
+        assert_matches_fresh_pack_packed(&c, &s);
+        // image_bytes: codes + scales (+ empty zeros) + lens, K and V.
+        let rows = 2 * 2 * 2 * 8; // L * bb * Hkv * C
+        assert_eq!(s.image_bytes(), rows * (4 + 4) * 2 + 2 * 2 * 4);
     }
 
     #[test]

@@ -182,6 +182,27 @@ pub const fn q4_packed_bytes(d_head: usize) -> usize {
     d_head.div_ceil(2)
 }
 
+/// Packed-upload geometry: bytes of quantized codes per (head, tensor)
+/// row of `d_head` elements — the kernel-side-dequant operand layout
+/// ([`super::PackedScratch`]). `None` for f32, which has no packed image.
+pub fn packed_codes_per_row(d_head: usize, fmt: KvFormat) -> Option<usize> {
+    match fmt {
+        KvFormat::F32 => None,
+        KvFormat::QuantI8 => Some(d_head),
+        KvFormat::QuantI4 => Some(q4_packed_bytes(d_head)),
+    }
+}
+
+/// Packed-upload geometry: f32 scale entries per (head, tensor) row
+/// (q4 additionally carries the same count of zero-points).
+pub fn packed_scales_per_row(d_head: usize, fmt: KvFormat) -> Option<usize> {
+    match fmt {
+        KvFormat::F32 => None,
+        KvFormat::QuantI8 => Some(1),
+        KvFormat::QuantI4 => Some(q4_groups(d_head)),
+    }
+}
+
 /// Group-wise asymmetric int4 quantization of one row into preallocated
 /// spans: `q` holds [`q4_packed_bytes`]`(x.len())` packed codes (element
 /// `i` lives in byte `i / 2`; even `i` = low nibble), `scales`/`zeros`
@@ -366,6 +387,18 @@ mod tests {
         assert_eq!(q4_groups(64), 2);
         assert_eq!(q4_packed_bytes(4), 2);
         assert_eq!(q4_packed_bytes(5), 3);
+    }
+
+    #[test]
+    fn packed_row_geometry_by_format() {
+        assert_eq!(packed_codes_per_row(32, KvFormat::F32), None);
+        assert_eq!(packed_scales_per_row(32, KvFormat::F32), None);
+        assert_eq!(packed_codes_per_row(32, KvFormat::QuantI8), Some(32));
+        assert_eq!(packed_scales_per_row(32, KvFormat::QuantI8), Some(1));
+        assert_eq!(packed_codes_per_row(32, KvFormat::QuantI4), Some(16));
+        assert_eq!(packed_scales_per_row(32, KvFormat::QuantI4), Some(1));
+        assert_eq!(packed_codes_per_row(33, KvFormat::QuantI4), Some(17));
+        assert_eq!(packed_scales_per_row(33, KvFormat::QuantI4), Some(2));
     }
 
     #[test]

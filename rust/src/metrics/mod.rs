@@ -37,6 +37,17 @@ pub struct EngineMetrics {
     /// Host bytes actually copied into upload scratch by delta-pack
     /// (K + V); a full per-step repack would be L·B·Hkv·C·D·8 every step.
     pub pack_bytes_copied: u64,
+    /// What the same delta-packed rows would have cost at dense f32
+    /// (`rows · Hkv · D · 4 · 2`). Equals `pack_bytes_copied` on the f32
+    /// expansion path; on the packed (kernel-side dequant) path the
+    /// `pack_bytes_f32_equiv / pack_bytes_copied` ratio is the measured
+    /// upload-byte reduction.
+    pub pack_bytes_f32_equiv: u64,
+    /// Wire bytes of the full upload image the last decode step handed
+    /// to the runtime (K + V [+ scales/zeros] + lens at the step's
+    /// (batch, capacity) bucket) — the per-step upload cost the
+    /// bench-smoke CI gate compares across KV formats.
+    pub upload_bytes_last: usize,
     /// (layer, slot) pairs served by the delta path (append-only copy or
     /// pure residency skip) instead of a full re-copy.
     pub delta_pack_hits: u64,
@@ -137,6 +148,11 @@ impl EngineMetrics {
             ("queue_depth", Json::from(self.queue_depth_last)),
             ("kv_migrations", Json::from(self.kv_migrations as usize)),
             ("pack_bytes_copied", Json::from(self.pack_bytes_copied as usize)),
+            (
+                "pack_bytes_f32_equiv",
+                Json::from(self.pack_bytes_f32_equiv as usize),
+            ),
+            ("upload_bytes_last", Json::from(self.upload_bytes_last)),
             ("delta_pack_hits", Json::from(self.delta_pack_hits as usize)),
             ("delta_pack_full", Json::from(self.delta_pack_full as usize)),
             ("faults_injected", Json::from(self.faults_injected as usize)),
@@ -185,6 +201,8 @@ mod tests {
         let mut m = EngineMetrics::default();
         m.decode_steps = 3;
         m.pack_bytes_copied = 4096;
+        m.pack_bytes_f32_equiv = 16384;
+        m.upload_bytes_last = 9216;
         m.delta_pack_hits = 12;
         m.preemptions = 2;
         m.resumes = 2;
@@ -209,6 +227,18 @@ mod tests {
         assert_eq!(
             parsed.get("pack_bytes_copied").unwrap().as_usize().unwrap(),
             4096
+        );
+        assert_eq!(
+            parsed
+                .get("pack_bytes_f32_equiv")
+                .unwrap()
+                .as_usize()
+                .unwrap(),
+            16384
+        );
+        assert_eq!(
+            parsed.get("upload_bytes_last").unwrap().as_usize().unwrap(),
+            9216
         );
         assert_eq!(
             parsed.get("delta_pack_hits").unwrap().as_usize().unwrap(),

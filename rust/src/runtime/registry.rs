@@ -12,6 +12,7 @@ use anyhow::{anyhow, Context, Result};
 use xla::{HloModuleProto, PjRtBuffer, PjRtClient, PjRtLoadedExecutable,
           XlaComputation};
 
+use crate::kvcache::{KvFormat, PackedScratch};
 use crate::model::{ModelMeta, Weights};
 use crate::runtime::tensors::{scalar_i32, HostTensorF32, HostTensorI32};
 
@@ -151,6 +152,110 @@ impl Runtime {
         let k_new = HostTensorF32::from_literal(&outs.pop().unwrap())?;
         let logits = HostTensorF32::from_literal(&outs.pop().unwrap())?;
         Ok(DecodeOut { logits, k_new, v_new, probs })
+    }
+
+    /// Whether the manifest carries an executable named `name`. The
+    /// engine probes this before routing a step down the packed or
+    /// incremental path, so old artifact sets (without the `_q8` /
+    /// `_q4` / `_kv` variants) degrade to the f32 / whole-prefix paths
+    /// instead of erroring.
+    pub fn has_executable(&self, name: &str) -> bool {
+        self.meta.executables.contains_key(name)
+    }
+
+    /// Run `decode_b{B}_c{C}_q8` / `_q4` — kernel-side dequant. The KV
+    /// operands are the quantized stores' wire bytes straight from a
+    /// [`PackedScratch`] (codes + scales, + zeros for q4); the
+    /// executable dequantizes on-device, so the host never materializes
+    /// the 4·D f32 image.
+    pub fn decode_packed(
+        &self,
+        batch: usize,
+        capacity: usize,
+        scratch: &PackedScratch,
+        tokens: &[i32],
+        positions: &[i32],
+    ) -> Result<DecodeOut> {
+        let fmt = scratch.format();
+        let name = match fmt {
+            KvFormat::QuantI8 => format!("decode_b{batch}_c{capacity}_q8"),
+            KvFormat::QuantI4 => format!("decode_b{batch}_c{capacity}_q4"),
+            KvFormat::F32 => anyhow::bail!(
+                "decode_packed needs a quantized scratch, got f32"),
+        };
+        let mut extra = Vec::with_capacity(9);
+        match fmt {
+            // q8 codes are i8 on the wire (two's-complement bit
+            // patterns of the stored u8 bytes).
+            KvFormat::QuantI8 => {
+                extra.push(scratch.k_codes.upload_i8(&self.client)?);
+                extra.push(scratch.k_scales.upload(&self.client)?);
+                extra.push(scratch.v_codes.upload_i8(&self.client)?);
+                extra.push(scratch.v_scales.upload(&self.client)?);
+            }
+            KvFormat::QuantI4 => {
+                extra.push(scratch.k_codes.upload(&self.client)?);
+                extra.push(scratch.k_scales.upload(&self.client)?);
+                extra.push(scratch.k_zeros.upload(&self.client)?);
+                extra.push(scratch.v_codes.upload(&self.client)?);
+                extra.push(scratch.v_scales.upload(&self.client)?);
+                extra.push(scratch.v_zeros.upload(&self.client)?);
+            }
+            KvFormat::F32 => unreachable!(),
+        }
+        extra.push(scratch.lens.upload(&self.client)?);
+        extra.push(self.client
+            .buffer_from_host_buffer(tokens, &[batch], None)?);
+        extra.push(self.client
+            .buffer_from_host_buffer(positions, &[batch], None)?);
+        let mut outs = self.run(&name, &extra)?;
+        anyhow::ensure!(outs.len() == 4, "decode returned {}", outs.len());
+        let probs = HostTensorF32::from_literal(&outs.pop().unwrap())?;
+        let v_new = HostTensorF32::from_literal(&outs.pop().unwrap())?;
+        let k_new = HostTensorF32::from_literal(&outs.pop().unwrap())?;
+        let logits = HostTensorF32::from_literal(&outs.pop().unwrap())?;
+        Ok(DecodeOut { logits, k_new, v_new, probs })
+    }
+
+    /// Run `prefill_t{T}_kv` — incremental prefill over a prior prefix.
+    ///
+    /// `prior_k`/`prior_v` are `[L, 1, Hkv, PREFILL_KV_CAP, D]` windows
+    /// holding `prior_len` valid rows; `tokens` is this chunk (padded to
+    /// the bucket). Outputs: `k_all`/`v_all` carry only the **chunk's**
+    /// new rows `[L, 1, Hkv, T, D]`, and `scores` is the concatenated
+    /// `[L, 1, Hq, PREFILL_KV_CAP + T]` attention mass over
+    /// [prior | chunk] keys for RASR accumulation.
+    pub fn prefill_kv(
+        &self,
+        bucket: usize,
+        prior_k: &HostTensorF32,
+        prior_v: &HostTensorF32,
+        prior_len: i32,
+        tokens: &[i32],
+    ) -> Result<PrefillOut> {
+        anyhow::ensure!(
+            tokens.len() <= bucket,
+            "chunk of {} tokens exceeds bucket {bucket}",
+            tokens.len()
+        );
+        let name = format!("prefill_t{bucket}_kv");
+        let mut padded = tokens.to_vec();
+        padded.resize(bucket, 0); // PAD id = 0
+        let extra = vec![
+            prior_k.upload(&self.client)?,
+            prior_v.upload(&self.client)?,
+            scalar_i32(&self.client, prior_len)?,
+            self.client
+                .buffer_from_host_buffer(&padded, &[1, bucket], None)?,
+            scalar_i32(&self.client, tokens.len() as i32)?,
+        ];
+        let mut outs = self.run(&name, &extra)?;
+        anyhow::ensure!(outs.len() == 4, "prefill_kv returned {}", outs.len());
+        let scores = HostTensorF32::from_literal(&outs.pop().unwrap())?;
+        let v_all = HostTensorF32::from_literal(&outs.pop().unwrap())?;
+        let k_all = HostTensorF32::from_literal(&outs.pop().unwrap())?;
+        let logits = HostTensorF32::from_literal(&outs.pop().unwrap())?;
+        Ok(PrefillOut { logits, k_all, v_all, scores })
     }
 
     /// Run `prefill_t{T}`; tokens are padded to the bucket size.

@@ -90,6 +90,60 @@ impl HostTensorI32 {
     }
 }
 
+/// Raw byte carrier for packed (quantized) KV uploads. The same buffer
+/// serves u8 (q4 nibble-packed codes) and i8 (q8 codes, via
+/// [`HostTensorU8::upload_i8`]) operands — the bit pattern is the wire
+/// format, the element type is picked at upload time.
+#[derive(Clone, Debug, PartialEq)]
+pub struct HostTensorU8 {
+    pub shape: Vec<usize>,
+    pub data: Vec<u8>,
+}
+
+impl HostTensorU8 {
+    pub fn zeros(shape: &[usize]) -> Self {
+        let n = shape.iter().product();
+        HostTensorU8 { shape: shape.to_vec(), data: vec![0; n] }
+    }
+
+    pub fn from_vec(shape: &[usize], data: Vec<u8>) -> Result<Self> {
+        ensure!(
+            shape.iter().product::<usize>() == data.len(),
+            "shape {shape:?} != {} elements",
+            data.len()
+        );
+        Ok(HostTensorU8 { shape: shape.to_vec(), data })
+    }
+
+    pub fn numel(&self) -> usize {
+        self.data.len()
+    }
+
+    /// Payload size in bytes (1 byte/element) — the wire bytes the packed
+    /// upload path actually moves.
+    pub fn bytes(&self) -> usize {
+        self.data.len()
+    }
+
+    /// Upload as a u8 operand (q4 packed codes).
+    pub fn upload(&self, client: &PjRtClient) -> Result<PjRtBuffer> {
+        Ok(client.buffer_from_host_buffer(&self.data, &self.shape, None)?)
+    }
+
+    /// Upload the same bytes as an i8 operand (q8 codes are stored as u8
+    /// bit patterns of two's-complement i8).
+    pub fn upload_i8(&self, client: &PjRtClient) -> Result<PjRtBuffer> {
+        Ok(client.buffer_from_host_buffer(as_i8(&self.data), &self.shape, None)?)
+    }
+}
+
+/// Reinterpret unsigned bytes as signed. u8 and i8 have identical size
+/// and alignment; the two's-complement bit pattern IS the q8 wire format.
+pub fn as_i8(bytes: &[u8]) -> &[i8] {
+    // SAFETY: same layout, same length, read-only view.
+    unsafe { std::slice::from_raw_parts(bytes.as_ptr() as *const i8, bytes.len()) }
+}
+
 /// Scalar i32 upload helper.
 pub fn scalar_i32(client: &PjRtClient, v: i32) -> Result<PjRtBuffer> {
     Ok(client.buffer_from_host_buffer(&[v], &[], None)?)
@@ -132,5 +186,15 @@ mod tests {
         let i = HostTensorI32::zeros(&[4]);
         assert_eq!(i.numel(), 4);
         assert_eq!(i.bytes(), 16);
+        let u = HostTensorU8::zeros(&[2, 5]);
+        assert_eq!(u.numel(), 10);
+        assert_eq!(u.bytes(), 10);
+        assert!(HostTensorU8::from_vec(&[3], vec![1, 2]).is_err());
+    }
+
+    #[test]
+    fn u8_as_i8_reinterprets_bit_patterns() {
+        let bytes = [0u8, 1, 127, 128, 255];
+        assert_eq!(as_i8(&bytes), &[0i8, 1, 127, -128, -1]);
     }
 }

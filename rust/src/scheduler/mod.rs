@@ -9,13 +9,16 @@
 //! ```
 //!
 //! * **Chunked prefill** — prompts are consumed `prefill_chunk` tokens
-//!   per tick (one bucketed [`Engine::prefill_window`] run over the
-//!   growing prefix; the compiled kernels take no prior KV, so each
-//!   chunk recomputes the prefix and only the final chunk's outputs are
-//!   installed). A long prompt therefore interleaves with decode steps
-//!   instead of stalling every co-batched decoder, and prefilling
-//!   sequences round-robin so short prompts are never stuck behind a
-//!   long one.
+//!   per tick (one bucketed executable run). With an artifact set that
+//!   carries the `prefill_t{T}_kv` variants (and
+//!   `scheduler.incremental_prefill` on), each chunk attends over the
+//!   accumulated prior KV ([`Engine::prefill_chunk`]) — O(prompt)
+//!   total work; otherwise each chunk recomputes the growing prefix
+//!   from position 0 ([`Engine::prefill_window`]) and only the final
+//!   chunk's outputs are installed. Either way a long prompt
+//!   interleaves with decode steps instead of stalling every
+//!   co-batched decoder, and prefilling sequences round-robin so short
+//!   prompts are never stuck behind a long one.
 //! * **Recompute-preemption** — when the group's live KV bytes exceed
 //!   `scheduler.kv_budget_bytes`, the *youngest* resumable sequence is
 //!   evicted back to the waiting queue; on resume its prompt plus
@@ -37,10 +40,13 @@ use std::time::{Duration, Instant};
 
 use anyhow::Result;
 
-use crate::engine::{DecodeGroup, Engine, FinishReason, SeqPhase, SeqState};
+use crate::engine::{
+    DecodeGroup, Engine, FinishReason, PrefillAcc, SeqPhase, SeqState,
+};
 use crate::error::{EngineError, FailureKind};
 use crate::fault::FaultSite;
 use crate::kvcache::HostSlotImage;
+use crate::runtime::registry::PrefillOut;
 use crate::policy::{make_policy, PolicyKind};
 use crate::util::json::Json;
 
@@ -134,6 +140,10 @@ struct PrefillJob {
     consumed: usize,
     seq: SeqState,
     resume: bool,
+    /// Incremental-prefill accumulator (prior KV + running scores)
+    /// carried between ticks; `None` before the first chunk, and always
+    /// `None` on the recompute path.
+    acc: Option<PrefillAcc>,
 }
 
 pub struct Scheduler {
@@ -148,6 +158,11 @@ pub struct Scheduler {
     kv_budget: usize,
     migrate_patience: usize,
     migrate_streak: usize,
+    /// Serve chunked prefills through the incremental `prefill_t{T}_kv`
+    /// executables (config `scheduler.incremental_prefill` ∧ the
+    /// artifact set carries the variants). Off = whole-prefix recompute
+    /// per chunk.
+    incremental: bool,
     /// Longest admissible prompt (largest compiled prefill bucket).
     max_prompt_tokens: usize,
     /// Longest resumable prefix (prefill bucket ∩ decode capacity).
@@ -199,6 +214,8 @@ impl Scheduler {
             kv_budget: sc.kv_budget_bytes,
             migrate_patience: sc.migrate_patience.max(1),
             migrate_streak: 0,
+            incremental: sc.incremental_prefill
+                && engine.supports_incremental_prefill(),
             max_prompt_tokens: engine.max_prefill_tokens(),
             max_resume_tokens: engine.max_prefill_tokens().min(engine.cmax),
             eos: engine.eos_token(),
@@ -383,7 +400,35 @@ impl Scheduler {
                 let job = &self.prefilling[idx];
                 (job.consumed + self.prefill_chunk).min(job.tokens.len())
             };
-            match engine.prefill_window(&self.prefilling[idx].tokens[..next]) {
+            // Run the chunk. Incremental: only the new tokens go
+            // through `prefill_t{T}_kv` against the job's accumulated
+            // prior KV, and the final chunk converts the accumulator
+            // into the window-shaped install input. Recompute: the
+            // whole grown prefix re-prefills and intermediate chunks'
+            // outputs are discarded. `Ok(Some(out))` = final chunk,
+            // ready to install; `Ok(None)` = job advanced.
+            let step: Result<Option<PrefillOut>> = if self.incremental {
+                let job = &mut self.prefilling[idx];
+                let acc = job.acc.take();
+                engine
+                    .prefill_chunk(acc, &job.tokens[job.consumed..next])
+                    .map(|acc| {
+                        if next == job.tokens.len() {
+                            Some(acc.into_prefill_out())
+                        } else {
+                            job.acc = Some(acc);
+                            None
+                        }
+                    })
+            } else {
+                engine
+                    .prefill_window(&self.prefilling[idx].tokens[..next])
+                    .map(|out| {
+                        (next == self.prefilling[idx].tokens.len())
+                            .then_some(out)
+                    })
+            };
+            match step {
                 Err(e) => {
                     let mut job = self.prefilling.remove(idx);
                     let kind = e
@@ -397,37 +442,37 @@ impl Scheduler {
                         .push(Self::completion_of(job.seq, Instant::now()));
                     self.rr = idx;
                 }
-                Ok(out) => {
+                Ok(Some(out)) => {
                     report.prefill_chunks += 1;
-                    if next == self.prefilling[idx].tokens.len() {
-                        let job = self.prefilling.remove(idx);
-                        let slot = self
-                            .group
-                            .free_slot()
-                            .expect("prefill job holds a slot reservation");
-                        engine.install_prefill(
-                            &mut self.group,
-                            slot,
-                            job.seq,
-                            &job.tokens,
-                            out,
-                            job.resume,
-                        )?;
-                        self.group.seq_mut(slot).admit_stamp = self.next_stamp;
-                        self.next_stamp += 1;
-                        if job.resume {
-                            self.resumes += 1;
-                        }
-                        report.prefilled += 1;
-                        // The job that slid into `idx` is next in the
-                        // rotation.
-                        self.rr = idx;
-                    } else {
-                        let job = &mut self.prefilling[idx];
-                        job.consumed = next;
-                        job.seq.phase = SeqPhase::Prefilling { consumed: next };
-                        self.rr = idx + 1;
+                    let job = self.prefilling.remove(idx);
+                    let slot = self
+                        .group
+                        .free_slot()
+                        .expect("prefill job holds a slot reservation");
+                    engine.install_prefill(
+                        &mut self.group,
+                        slot,
+                        job.seq,
+                        &job.tokens,
+                        out,
+                        job.resume,
+                    )?;
+                    self.group.seq_mut(slot).admit_stamp = self.next_stamp;
+                    self.next_stamp += 1;
+                    if job.resume {
+                        self.resumes += 1;
                     }
+                    report.prefilled += 1;
+                    // The job that slid into `idx` is next in the
+                    // rotation.
+                    self.rr = idx;
+                }
+                Ok(None) => {
+                    report.prefill_chunks += 1;
+                    let job = &mut self.prefilling[idx];
+                    job.consumed = next;
+                    job.seq.phase = SeqPhase::Prefilling { consumed: next };
+                    self.rr = idx + 1;
                 }
             }
         }
@@ -681,11 +726,12 @@ impl Scheduler {
                     consumed: 0,
                     seq,
                     resume: false,
+                    acc: None,
                 }
             }
             WaitEntry::Resume { tokens, mut seq } => {
                 seq.phase = SeqPhase::Prefilling { consumed: 0 };
-                PrefillJob { tokens, consumed: 0, seq, resume: true }
+                PrefillJob { tokens, consumed: 0, seq, resume: true, acc: None }
             }
             // Swapped entries are restored directly in `tick` (phase 2)
             // and never reach here; if one ever does, degrade to a
@@ -694,7 +740,7 @@ impl Scheduler {
                 let mut tokens = seq.prompt.clone();
                 tokens.extend_from_slice(&seq.generated);
                 seq.phase = SeqPhase::Prefilling { consumed: 0 };
-                PrefillJob { tokens, consumed: 0, seq, resume: true }
+                PrefillJob { tokens, consumed: 0, seq, resume: true, acc: None }
             }
         }
     }
@@ -823,6 +869,7 @@ mod tests {
             kv_budget,
             migrate_patience: 1,
             migrate_streak: 0,
+            incremental: false,
             max_prompt_tokens: 64,
             max_resume_tokens: 8,
             eos: 2,
@@ -942,6 +989,7 @@ mod tests {
             consumed: 0,
             seq: SeqState::new(2, Box::new(FullKv), 1, 8, 2),
             resume: false,
+            acc: None,
         });
         assert!(s.submit(req(3, 4)).is_ok());
         assert!(
@@ -1042,6 +1090,7 @@ mod tests {
             consumed: 0,
             seq: pseq,
             resume: false,
+            acc: None,
         });
         let mut aseq = SeqState::new(3, Box::new(FullKv), 1, 8, 2);
         aseq.note_prefilled(1, 10);

@@ -169,3 +169,206 @@ fn delta_pack_residency_survives_cache_swap_between_groups() {
         check_bucket(&b, &scratch).unwrap();
     }
 }
+
+// ---------------------------------------------------------------------
+// Packed-scratch equivalence: the same invariant for the raw-speed
+// upload path. After ANY interleaving of cache ops, a
+// [`GroupCache::pack_delta_packed`]-maintained [`PackedScratch`]
+// (stored codes + scales, the kernel-side-dequant operand image)
+// dequantizes bit-identically to a fresh f32 pack of the same cache —
+// both sides decode the same stored codes, so equality is exact, not
+// bounded.
+
+use lethe::kvcache::quant::{
+    dequantize_row_q4, dequantize_span, packed_codes_per_row,
+    packed_scales_per_row,
+};
+use lethe::kvcache::{KvFormat, PackedScratch};
+use lethe::runtime::tensors::as_i8;
+
+/// Compare one packed scratch against a fresh f32 pack by dequantizing
+/// every live row; Err(msg) on any divergence.
+fn check_bucket_packed(
+    cache: &GroupCache,
+    scratch: &PackedScratch,
+    fmt: KvFormat,
+) -> Result<(), String> {
+    let (bb, c) = scratch.bucket();
+    let shape = [LAYERS, bb, HKV, c, D];
+    let mut k = HostTensorF32::zeros(&shape);
+    let mut v = HostTensorF32::zeros(&shape);
+    let mut lens = HostTensorI32::zeros(&[LAYERS, bb]);
+    cache
+        .pack(bb, c, &mut k, &mut v, &mut lens)
+        .map_err(|e| format!("reference pack failed: {e}"))?;
+    if scratch.lens.data != lens.data {
+        return Err(format!(
+            "lens diverged at bucket ({bb},{c}): {:?} vs {:?}",
+            scratch.lens.data, lens.data
+        ));
+    }
+    let db = packed_codes_per_row(D, fmt).unwrap();
+    let sg = packed_scales_per_row(D, fmt).unwrap();
+    let mut out = vec![0.0f32; D];
+    for l in 0..LAYERS {
+        for b in 0..bb {
+            let live = lens.data[l * bb + b] as usize;
+            for h in 0..HKV {
+                for t in 0..live {
+                    let ri = ((l * bb + b) * HKV + h) * c + t;
+                    for (which, codes, scales, zeros, reference) in [
+                        (
+                            "K",
+                            &scratch.k_codes,
+                            &scratch.k_scales,
+                            &scratch.k_zeros,
+                            &k,
+                        ),
+                        (
+                            "V",
+                            &scratch.v_codes,
+                            &scratch.v_scales,
+                            &scratch.v_zeros,
+                            &v,
+                        ),
+                    ] {
+                        match fmt {
+                            KvFormat::QuantI8 => dequantize_span(
+                                as_i8(&codes.data[ri * db..ri * db + db]),
+                                scales.data[ri],
+                                &mut out,
+                            ),
+                            KvFormat::QuantI4 => dequantize_row_q4(
+                                &codes.data[ri * db..ri * db + db],
+                                &scales.data[ri * sg..ri * sg + sg],
+                                &zeros.data[ri * sg..ri * sg + sg],
+                                &mut out,
+                            ),
+                            KvFormat::F32 => unreachable!(),
+                        }
+                        let off = ri * D;
+                        if out[..] != reference.data[off..off + D] {
+                            return Err(format!(
+                                "{which} row diverged at bucket \
+                                 ({bb},{c}) l={l} b={b} h={h} t={t}"
+                            ));
+                        }
+                    }
+                }
+            }
+        }
+    }
+    Ok(())
+}
+
+#[test]
+fn packed_delta_pack_equals_fresh_pack_under_random_ops() {
+    for fmt in [KvFormat::QuantI8, KvFormat::QuantI4] {
+        check(&format!("packed-delta-pack-{}", fmt.label()), 30, |rng, size| {
+            let mut cache = GroupCache::with_format(dims(), fmt);
+            let buckets: [(usize, usize); 4] =
+                [(1, 16), (2, 32), (3, 16), (3, 32)];
+            let mut scratches: Vec<PackedScratch> = buckets
+                .iter()
+                .map(|&(bb, c)| PackedScratch::new(&dims(), bb, c, fmt))
+                .collect();
+
+            let steps = 4 + size;
+            let mut abs = 0i32;
+            for step in 0..steps {
+                match rng.range(0, 4) {
+                    0 => {
+                        let l = rng.range(0, LAYERS - 1);
+                        let b = rng.range(0, BATCH - 1);
+                        if cache.len(l, b) < CAP {
+                            let kr = vec_f32(rng, HKV * D, -1.0, 1.0);
+                            let vr = vec_f32(rng, HKV * D, -1.0, 1.0);
+                            cache
+                                .insert(l, b, &kr, &vr, abs)
+                                .map_err(|e| e.to_string())?;
+                            abs += 1;
+                        }
+                    }
+                    1 => {
+                        let l = rng.range(0, LAYERS - 1);
+                        let b = rng.range(0, BATCH - 1);
+                        let n = cache.len(l, b);
+                        if n > 0 {
+                            let keep: Vec<usize> = (0..n)
+                                .filter(|_| rng.bool(0.6))
+                                .collect();
+                            cache
+                                .apply_retention(l, b, &keep)
+                                .map_err(|e| e.to_string())?;
+                        }
+                    }
+                    2 => {
+                        let b = rng.range(0, BATCH - 1);
+                        let t = rng.range(1, CAP);
+                        let len = rng.range(1, t);
+                        let k_all = HostTensorF32::from_vec(
+                            &[LAYERS, 1, HKV, t, D],
+                            vec_f32(rng, LAYERS * HKV * t * D, -1.0, 1.0),
+                        )
+                        .map_err(|e| e.to_string())?;
+                        let v_all = HostTensorF32::from_vec(
+                            &[LAYERS, 1, HKV, t, D],
+                            vec_f32(rng, LAYERS * HKV * t * D, -1.0, 1.0),
+                        )
+                        .map_err(|e| e.to_string())?;
+                        cache
+                            .load_prefill(b, &k_all, &v_all, len)
+                            .map_err(|e| e.to_string())?;
+                    }
+                    3 => {
+                        let a = rng.range(0, BATCH - 1);
+                        let b = rng.range(0, BATCH - 1);
+                        cache.swap_slots(a, b);
+                    }
+                    _ => {
+                        cache.reset_slot(rng.range(0, BATCH - 1));
+                    }
+                }
+
+                for (i, &(bb, c)) in buckets.iter().enumerate() {
+                    let fits = (0..bb).all(|b| {
+                        (0..LAYERS).all(|l| cache.len(l, b) <= c)
+                    });
+                    if !fits {
+                        continue;
+                    }
+                    cache
+                        .pack_delta_packed(&mut scratches[i])
+                        .map_err(|e| format!("step {step}: {e}"))?;
+                    check_bucket_packed(&cache, &scratches[i], fmt)
+                        .map_err(|m| format!("step {step}: {m}"))?;
+                }
+            }
+            Ok(())
+        });
+    }
+}
+
+#[test]
+fn packed_residency_survives_cache_swap_between_groups() {
+    // Same owner-change invariant as the f32 scratch: the unique cache
+    // id forces a cold re-sync whenever a different group reconciles
+    // into a shared bucket scratch.
+    let fmt = KvFormat::QuantI8;
+    let mut a = GroupCache::with_format(dims(), fmt);
+    let mut b = GroupCache::with_format(dims(), fmt);
+    let row_a = vec![1.0f32; HKV * D];
+    let row_b = vec![2.0f32; HKV * D];
+    for l in 0..LAYERS {
+        a.insert(l, 0, &row_a, &row_a, 0).unwrap();
+        b.insert(l, 0, &row_b, &row_b, 0).unwrap();
+        b.insert(l, 0, &row_b, &row_b, 1).unwrap();
+    }
+    let mut scratch = PackedScratch::new(&dims(), 2, 16, fmt);
+    for _ in 0..3 {
+        a.pack_delta_packed(&mut scratch).unwrap();
+        check_bucket_packed(&a, &scratch, fmt).unwrap();
+        b.pack_delta_packed(&mut scratch).unwrap();
+        check_bucket_packed(&b, &scratch, fmt).unwrap();
+    }
+}

@@ -263,3 +263,166 @@ fn swap_preempted_sequence_resumes_with_identical_tokens() {
     assert!(engine.metrics.swap_preemptions >= 1);
     assert_eq!(engine.metrics.swap_bytes_in, engine.metrics.swap_bytes_out);
 }
+
+/// (d) Kernel-side dequant: decoding straight from a [`PackedScratch`]
+/// (codes + scales on the wire, dequantized on-device) must agree with
+/// the host-dequant f32 upload path. Both read the same stored codes,
+/// so the residual gap is kernel float-order noise — it must land far
+/// inside the backend's quantization error bound for the same rows.
+#[test]
+fn kernel_dequant_decode_matches_host_dequant_path() {
+    use lethe::kvcache::quant::dequant_error_bound;
+    use lethe::kvcache::{CacheDims, GroupCache, KvFormat, PackedScratch};
+    use lethe::runtime::tensors::{HostTensorF32, HostTensorI32};
+    use lethe::util::proptest::vec_f32;
+
+    let Some((engine, _tok)) = engine_or_skip(ServingConfig::default())
+    else {
+        return;
+    };
+    let rt = &engine.rt;
+    let mut found = None;
+    'probe: for bb in [1usize, 2, 3, 4, 6, 8] {
+        for cap in [32usize, 48, 64, 96, 128, 160, 192, 256, 384, 512] {
+            if rt.has_executable(&format!("decode_b{bb}_c{cap}"))
+                && rt.has_executable(&format!("decode_b{bb}_c{cap}_q8"))
+                && rt.has_executable(&format!("decode_b{bb}_c{cap}_q4"))
+            {
+                found = Some((bb, cap));
+                break 'probe;
+            }
+        }
+    }
+    let Some((bb, cap)) = found else {
+        eprintln!("[skip] artifact set has no packed decode variants");
+        return;
+    };
+
+    let d = rt.meta.dims.clone();
+    let cd = CacheDims {
+        layers: d.n_layers,
+        batch: bb,
+        kv_heads: d.n_kv_heads,
+        capacity: cap,
+        d_head: d.d_head,
+    };
+    let mut rng = Rng::new(7);
+    for fmt in [KvFormat::QuantI8, KvFormat::QuantI4] {
+        let mut cache = GroupCache::with_format(cd, fmt);
+        for b in 0..bb {
+            let len = 3 + (b * 5) % 9;
+            for t in 0..len {
+                for l in 0..d.n_layers {
+                    let kr =
+                        vec_f32(&mut rng, d.n_kv_heads * d.d_head, -1.0, 1.0);
+                    let vr =
+                        vec_f32(&mut rng, d.n_kv_heads * d.d_head, -1.0, 1.0);
+                    cache.insert(l, b, &kr, &vr, t as i32).unwrap();
+                }
+            }
+        }
+
+        // The fallback path's operands: host-dequantized f32 image.
+        let shape = [d.n_layers, bb, d.n_kv_heads, cap, d.d_head];
+        let mut k = HostTensorF32::zeros(&shape);
+        let mut v = HostTensorF32::zeros(&shape);
+        let mut lens = HostTensorI32::zeros(&[d.n_layers, bb]);
+        cache.pack(bb, cap, &mut k, &mut v, &mut lens).unwrap();
+        // The packed path's operands: the stores' wire bytes.
+        let mut ps = PackedScratch::new(&cd, bb, cap, fmt);
+        cache.pack_delta_packed(&mut ps).unwrap();
+        assert_eq!(ps.lens.data, lens.data, "packed lens diverged");
+
+        let vocab = d.vocab_size as i32;
+        let tokens: Vec<i32> = (0..bb as i32).map(|b| (b + 1) % vocab).collect();
+        let positions: Vec<i32> =
+            (0..bb).map(|b| lens.data[b]).collect();
+        let base = rt
+            .decode(bb, cap, &k, &v, &lens, &tokens, &positions)
+            .unwrap();
+        let packed =
+            rt.decode_packed(bb, cap, &ps, &tokens, &positions).unwrap();
+
+        // Tolerance: the largest per-row quantization bound across the
+        // image — a ceiling orders of magnitude above float noise.
+        let bound = k
+            .data
+            .chunks(d.d_head)
+            .chain(v.data.chunks(d.d_head))
+            .map(|row| dequant_error_bound(fmt, row))
+            .fold(1e-5f32, f32::max);
+        let worst = base
+            .logits
+            .data
+            .iter()
+            .zip(&packed.logits.data)
+            .map(|(a, b)| (a - b).abs())
+            .fold(0.0f32, f32::max);
+        assert!(
+            worst <= bound,
+            "{}: packed-decode logit gap {worst} exceeds bound {bound}",
+            fmt.label()
+        );
+        // The appended K/V rows feed the cache on the next step: they
+        // must match too, or the paths drift over a generation.
+        for (out_b, out_p) in [
+            (&base.k_new, &packed.k_new),
+            (&base.v_new, &packed.v_new),
+        ] {
+            let w = out_b
+                .data
+                .iter()
+                .zip(&out_p.data)
+                .map(|(a, b)| (a - b).abs())
+                .fold(0.0f32, f32::max);
+            assert!(
+                w <= bound,
+                "{}: packed-decode k/v_new gap {w} exceeds bound {bound}",
+                fmt.label()
+            );
+        }
+    }
+}
+
+/// (e) Incremental chunked prefill is token-identical to the recompute
+/// baseline, and pushes O(n) rather than O(n²/chunk) tokens through
+/// the prefill executables.
+#[test]
+fn incremental_prefill_is_token_identical_and_linear() {
+    const CHUNK: usize = 24;
+    let mut cfg = ServingConfig::default();
+    cfg.scheduler.max_batch = 2;
+    cfg.scheduler.prefill_chunk = CHUNK;
+    cfg.scheduler.incremental_prefill = false;
+    let Some((mut engine, tok)) = engine_or_skip(cfg) else { return };
+    if !engine.supports_incremental_prefill() {
+        eprintln!("[skip] artifact set has no prefill_t*_kv variants");
+        return;
+    }
+
+    let long = tok
+        .encode_prompt(&make_task(&mut Rng::new(2), 24, 4).prompt)
+        .unwrap();
+    assert!(long.len() > 3 * CHUNK, "prompt must span several chunks");
+
+    // Recompute baseline: each chunk re-prefills the grown prefix.
+    engine.metrics.reset();
+    let base = solo_run(&mut engine, long.clone(), 16, PolicyKind::Lethe);
+    let base_tokens = engine.metrics.prefill_tokens;
+
+    // Incremental path: each chunk feeds the accumulated prior KV.
+    engine.cfg.scheduler.incremental_prefill = true;
+    engine.metrics.reset();
+    let inc = solo_run(&mut engine, long, 16, PolicyKind::Lethe);
+    let inc_tokens = engine.metrics.prefill_tokens;
+
+    assert_eq!(
+        inc.generated, base.generated,
+        "incremental prefill diverged from whole-prefix prefill"
+    );
+    assert!(
+        inc_tokens < base_tokens,
+        "incremental path must push fewer tokens through the prefill \
+         executables ({inc_tokens} vs {base_tokens})"
+    );
+}
