@@ -162,6 +162,25 @@ pub fn run_tasks(
     })
 }
 
+/// Per-decode-group lane accounting for the churn/soak drivers. The
+/// single-scheduler [`run_churn`] fills exactly one lane; multi-group
+/// runs read the supervisor's per-group stats rows through
+/// [`sum_group_rows`]. Either way the soak asserts the same invariant:
+/// per-group counts sum to the run's aggregate.
+#[derive(Clone, Copy, Debug, Default, PartialEq, Eq)]
+pub struct GroupLaneStats {
+    /// Decode-group id the lane belongs to.
+    pub group: usize,
+    /// Completions the lane delivered.
+    pub completions: u64,
+    /// Preemptions charged to the lane.
+    pub preemptions: u64,
+    /// Resumes charged to the lane.
+    pub resumes: u64,
+    /// `FinishReason::Oom` completions in the lane.
+    pub oom_finishes: u64,
+}
+
 /// Lifecycle telemetry from a sustained-load churn run ([`run_churn`]).
 pub struct ChurnStats {
     pub wall_s: f64,
@@ -182,6 +201,10 @@ pub struct ChurnStats {
     pub interleaved_ticks: usize,
     /// Largest waiting-queue depth observed (over-subscription proof).
     pub peak_queue_depth: usize,
+    /// Per-group breakdown; one lane per decode group that served the
+    /// run. Their sums must equal the aggregate fields above (the soak
+    /// asserts it).
+    pub lanes: Vec<GroupLaneStats>,
 }
 
 /// Sustained-load churn driver over the real [`Scheduler`] (the serving
@@ -217,6 +240,7 @@ pub fn run_churn(
         busy_migrations: 0,
         interleaved_ticks: 0,
         peak_queue_depth: 0,
+        lanes: Vec::new(),
     };
     let mut completions = Vec::new();
     while !sched.idle() {
@@ -241,7 +265,50 @@ pub fn run_churn(
     stats.preemptions = sched.preemptions;
     stats.resumes = sched.resumes;
     stats.kv_migrations = sched.migrations;
+    stats.lanes = vec![GroupLaneStats {
+        group: 0,
+        completions: completions.len() as u64,
+        preemptions: stats.preemptions,
+        resumes: stats.resumes,
+        oom_finishes: stats.oom_finishes as u64,
+    }];
     Ok((stats, completions))
+}
+
+/// Sums of the per-group rows in a supervisor `{"stats": true}`
+/// document. The multi-group soak asserts these equal the aggregate
+/// counters reported by the same document — the supervision
+/// bookkeeping must balance across groups, restarts included.
+#[derive(Clone, Copy, Debug, Default, PartialEq, Eq)]
+pub struct GroupRowSums {
+    pub queue_depth: usize,
+    pub active: usize,
+    pub prefilling: usize,
+    pub live_bytes: usize,
+    pub completions: u64,
+    pub preemptions: u64,
+    pub resumes: u64,
+    pub seq_failures: u64,
+    pub rescues: u64,
+    pub restarts: u64,
+}
+
+/// Fold the `groups` array of a stats document into [`GroupRowSums`].
+pub fn sum_group_rows(stats: &Json) -> Result<GroupRowSums> {
+    let mut out = GroupRowSums::default();
+    for row in stats.get("groups")?.as_arr()? {
+        out.queue_depth += row.get("queue_depth")?.as_usize()?;
+        out.active += row.get("active")?.as_usize()?;
+        out.prefilling += row.get("prefilling")?.as_usize()?;
+        out.live_bytes += row.get("live_bytes")?.as_usize()?;
+        out.completions += row.get("completions")?.as_usize()? as u64;
+        out.preemptions += row.get("preemptions")?.as_usize()? as u64;
+        out.resumes += row.get("resumes")?.as_usize()? as u64;
+        out.seq_failures += row.get("seq_failures")?.as_usize()? as u64;
+        out.rescues += row.get("rescues")?.as_usize()? as u64;
+        out.restarts += row.get("restarts")?.as_usize()? as u64;
+    }
+    Ok(out)
 }
 
 /// Write the hotpath microbench rows to `bench_results/hotpath.csv`

@@ -223,12 +223,69 @@ pub struct FaultsConfig {
     /// Per-connection probability of dropping a TCP connection after
     /// its first request, in [0, 1].
     pub conn_drop_rate: f64,
+    /// Per-tick probability of a group-scoped fault (worker panic or
+    /// heartbeat stall), in [0, 1]. Drawn from a per-group plan so the
+    /// engine-seam schedule above is unaffected.
+    pub group_rate: f64,
 }
 
 impl FaultsConfig {
     /// True when any injection seam has a non-zero probability.
     pub fn enabled(&self) -> bool {
-        self.rate > 0.0 || self.conn_drop_rate > 0.0
+        self.rate > 0.0 || self.conn_drop_rate > 0.0 || self.group_rate > 0.0
+    }
+}
+
+/// Multi-group supervision knobs (`serving.*`). The default — one
+/// group, no pooled budget, stall detection off — reproduces the
+/// single-`Scheduler` behaviour exactly.
+#[derive(Clone, Debug, PartialEq)]
+pub struct SupervisorConfig {
+    /// Number of supervised `Scheduler`+`DecodeGroup` workers.
+    pub groups: usize,
+    /// Global live-KV byte pool carved evenly into per-group budgets.
+    /// 0 keeps each group's budget at `scheduler.kv_budget_bytes`.
+    pub kv_pool_bytes: usize,
+    /// A group whose tick overruns this many milliseconds (measured by
+    /// supervisor heartbeats) is declared stalled and quarantined.
+    /// 0 disables stall detection.
+    pub tick_timeout_ms: u64,
+    /// Tick error-rate EMA at which a group is marked `Degraded`
+    /// (deprioritized for placement), in [0, 1].
+    pub degraded_error_rate: f64,
+    /// Tick error-rate EMA at which a group is quarantined and its
+    /// sequences rescued, in [0, 1]. Must be >= `degraded_error_rate`.
+    pub quarantine_error_rate: f64,
+    /// Restart budget: a group restarted more than this many times is
+    /// marked permanently dead.
+    pub max_restarts: u32,
+    /// Base restart backoff; doubles per consecutive restart.
+    pub restart_backoff_ms: u64,
+}
+
+impl Default for SupervisorConfig {
+    fn default() -> Self {
+        SupervisorConfig {
+            groups: 1,
+            kv_pool_bytes: 0,
+            tick_timeout_ms: 0,
+            degraded_error_rate: 0.1,
+            quarantine_error_rate: 0.5,
+            max_restarts: 3,
+            restart_backoff_ms: 100,
+        }
+    }
+}
+
+impl SupervisorConfig {
+    /// Per-group live-KV budget: an even share of `kv_pool_bytes`, or
+    /// the fallback (the scheduler's own budget) when no pool is set.
+    pub fn group_budget_bytes(&self, fallback: usize) -> usize {
+        if self.kv_pool_bytes == 0 {
+            fallback
+        } else {
+            self.kv_pool_bytes / self.groups.max(1)
+        }
     }
 }
 
@@ -243,6 +300,7 @@ pub struct ServingConfig {
     pub scheduler: SchedulerConfig,
     pub kv: KvConfig,
     pub faults: FaultsConfig,
+    pub serving: SupervisorConfig,
 }
 
 impl Default for ServingConfig {
@@ -255,6 +313,7 @@ impl Default for ServingConfig {
             scheduler: SchedulerConfig::default(),
             kv: KvConfig::default(),
             faults: FaultsConfig::default(),
+            serving: SupervisorConfig::default(),
         }
     }
 }
@@ -280,7 +339,7 @@ impl ServingConfig {
         let mut c = ServingConfig::default();
         for (k, _) in j.as_obj()? {
             if !["artifacts_dir", "cache_profile", "lethe", "baseline",
-                 "scheduler", "kv", "faults"]
+                 "scheduler", "kv", "faults", "serving"]
                 .contains(&k.as_str())
             {
                 anyhow::bail!("unknown config section '{k}'");
@@ -384,7 +443,8 @@ impl ServingConfig {
         }
         if let Some(f) = j.opt("faults") {
             for (k, _) in f.as_obj()? {
-                if !["seed", "rate", "stall_ms", "conn_drop_rate"]
+                if !["seed", "rate", "stall_ms", "conn_drop_rate",
+                     "group_rate"]
                     .contains(&k.as_str())
                 {
                     anyhow::bail!("unknown faults key '{k}'");
@@ -402,6 +462,42 @@ impl ServingConfig {
                     as u64;
             }
             get_f64(f, "conn_drop_rate", &mut c.faults.conn_drop_rate)?;
+            get_f64(f, "group_rate", &mut c.faults.group_rate)?;
+        }
+        if let Some(s) = j.opt("serving") {
+            for (k, _) in s.as_obj()? {
+                if !["groups", "kv_pool_bytes", "tick_timeout_ms",
+                     "degraded_error_rate", "quarantine_error_rate",
+                     "max_restarts", "restart_backoff_ms"]
+                    .contains(&k.as_str())
+                {
+                    anyhow::bail!("unknown serving key '{k}'");
+                }
+            }
+            get_usize(s, "groups", &mut c.serving.groups)?;
+            get_usize(s, "kv_pool_bytes", &mut c.serving.kv_pool_bytes)?;
+            if let Some(v) = s.opt("tick_timeout_ms") {
+                c.serving.tick_timeout_ms = v
+                    .as_usize()
+                    .context("config key 'serving.tick_timeout_ms'")?
+                    as u64;
+            }
+            get_f64(s, "degraded_error_rate",
+                    &mut c.serving.degraded_error_rate)?;
+            get_f64(s, "quarantine_error_rate",
+                    &mut c.serving.quarantine_error_rate)?;
+            if let Some(v) = s.opt("max_restarts") {
+                c.serving.max_restarts = v
+                    .as_usize()
+                    .context("config key 'serving.max_restarts'")?
+                    as u32;
+            }
+            if let Some(v) = s.opt("restart_backoff_ms") {
+                c.serving.restart_backoff_ms = v
+                    .as_usize()
+                    .context("config key 'serving.restart_backoff_ms'")?
+                    as u64;
+            }
         }
         c.validate()?;
         Ok(c)
@@ -445,6 +541,24 @@ impl ServingConfig {
         anyhow::ensure!(
             (0.0..=1.0).contains(&self.faults.conn_drop_rate),
             "faults.conn_drop_rate must be in [0, 1]"
+        );
+        anyhow::ensure!(
+            (0.0..=1.0).contains(&self.faults.group_rate),
+            "faults.group_rate must be in [0, 1]"
+        );
+        anyhow::ensure!(self.serving.groups >= 1, "serving.groups >= 1");
+        anyhow::ensure!(
+            (0.0..=1.0).contains(&self.serving.degraded_error_rate),
+            "serving.degraded_error_rate must be in [0, 1]"
+        );
+        anyhow::ensure!(
+            (0.0..=1.0).contains(&self.serving.quarantine_error_rate),
+            "serving.quarantine_error_rate must be in [0, 1]"
+        );
+        anyhow::ensure!(
+            self.serving.quarantine_error_rate
+                >= self.serving.degraded_error_rate,
+            "serving.quarantine_error_rate must be >= degraded_error_rate"
         );
         Ok(())
     }
@@ -552,6 +666,52 @@ mod tests {
             &parse(r#"{"faults": {"probability": 0.5}}"#).unwrap()
         )
         .is_err());
+    }
+
+    #[test]
+    fn serving_knobs_parse_validate_and_default_to_one_group() {
+        let c = ServingConfig::from_json(&parse("{}").unwrap()).unwrap();
+        assert_eq!(c.serving, SupervisorConfig::default());
+        assert_eq!(c.serving.groups, 1);
+        assert_eq!(c.serving.group_budget_bytes(4096), 4096,
+                   "no pool: fall through to the scheduler budget");
+
+        let c = ServingConfig::from_json(
+            &parse(
+                r#"{"serving": {"groups": 3, "kv_pool_bytes": 300000,
+                                "tick_timeout_ms": 250,
+                                "degraded_error_rate": 0.2,
+                                "quarantine_error_rate": 0.6,
+                                "max_restarts": 5,
+                                "restart_backoff_ms": 50},
+                    "faults": {"group_rate": 0.02}}"#,
+            )
+            .unwrap(),
+        )
+        .unwrap();
+        assert_eq!(c.serving.groups, 3);
+        assert_eq!(c.serving.kv_pool_bytes, 300000);
+        assert_eq!(c.serving.group_budget_bytes(4096), 100000,
+                   "pool is carved evenly across groups");
+        assert_eq!(c.serving.tick_timeout_ms, 250);
+        assert_eq!(c.serving.degraded_error_rate, 0.2);
+        assert_eq!(c.serving.quarantine_error_rate, 0.6);
+        assert_eq!(c.serving.max_restarts, 5);
+        assert_eq!(c.serving.restart_backoff_ms, 50);
+        assert_eq!(c.faults.group_rate, 0.02);
+        assert!(c.faults.enabled(), "group_rate alone enables injection");
+
+        for bad in [
+            r#"{"serving": {"groups": 0}}"#,
+            r#"{"serving": {"degraded_error_rate": 1.5}}"#,
+            r#"{"serving": {"degraded_error_rate": 0.6,
+                            "quarantine_error_rate": 0.2}}"#,
+            r#"{"serving": {"workers": 2}}"#,
+            r#"{"faults": {"group_rate": -0.5}}"#,
+        ] {
+            assert!(ServingConfig::from_json(&parse(bad).unwrap()).is_err(),
+                    "should reject {bad}");
+        }
     }
 
     #[test]

@@ -41,6 +41,10 @@ pub enum FailureKind {
     /// A deterministic fault-injection plan tripped at this seam
     /// (testing only; see [`crate::fault::FaultPlan`]).
     Injected,
+    /// The sequence's decode group was quarantined (panic, stall or
+    /// sustained errors) and the sequence could not be rescued onto a
+    /// healthy group.
+    GroupLost,
 }
 
 impl FailureKind {
@@ -52,6 +56,7 @@ impl FailureKind {
             FailureKind::Migration => "migration",
             FailureKind::SlotPanic => "slot_panic",
             FailureKind::Injected => "injected",
+            FailureKind::GroupLost => "group_lost",
         }
     }
 }
@@ -112,6 +117,12 @@ pub enum EngineError {
     /// The server is draining for shutdown and admits no new work.
     /// Retryable — against another replica, or after a restart.
     ShuttingDown,
+    /// No decode group is healthy enough to admit new work (all
+    /// quarantined or dead). Retryable once a group restarts.
+    GroupUnavailable {
+        /// Suggested client backoff before resubmitting.
+        retry_after_ms: u64,
+    },
 }
 
 impl EngineError {
@@ -121,14 +132,17 @@ impl EngineError {
     pub fn is_retryable(&self) -> bool {
         matches!(
             self,
-            EngineError::Overloaded { .. } | EngineError::ShuttingDown
+            EngineError::Overloaded { .. }
+                | EngineError::ShuttingDown
+                | EngineError::GroupUnavailable { .. }
         )
     }
 
     /// Suggested client backoff, when the error carries one.
     pub fn retry_after_ms(&self) -> Option<u64> {
         match self {
-            EngineError::Overloaded { retry_after_ms, .. } => {
+            EngineError::Overloaded { retry_after_ms, .. }
+            | EngineError::GroupUnavailable { retry_after_ms } => {
                 Some(*retry_after_ms)
             }
             _ => None,
@@ -178,6 +192,11 @@ impl fmt::Display for EngineError {
             EngineError::ShuttingDown => {
                 f.write_str("server is draining for shutdown")
             }
+            EngineError::GroupUnavailable { retry_after_ms } => write!(
+                f,
+                "no healthy decode group available, retry after \
+                 {retry_after_ms} ms"
+            ),
         }
     }
 }
@@ -202,6 +221,8 @@ mod tests {
                 .is_retryable()
         );
         assert!(!EngineError::DeadlineExceeded { seq: 3 }.is_retryable());
+        assert!(EngineError::GroupUnavailable { retry_after_ms: 40 }
+            .is_retryable());
     }
 
     #[test]
@@ -209,6 +230,8 @@ mod tests {
         let e = EngineError::Overloaded { retry_after_ms: 75, waiting: 2 };
         assert_eq!(e.retry_after_ms(), Some(75));
         assert_eq!(EngineError::ShuttingDown.retry_after_ms(), None);
+        let e = EngineError::GroupUnavailable { retry_after_ms: 30 };
+        assert_eq!(e.retry_after_ms(), Some(30));
     }
 
     #[test]
@@ -235,5 +258,6 @@ mod tests {
         let s = e.to_string();
         assert!(s.contains("300") && s.contains("192"), "{s}");
         assert_eq!(FailureKind::SlotPanic.to_string(), "slot_panic");
+        assert_eq!(FailureKind::GroupLost.to_string(), "group_lost");
     }
 }

@@ -35,6 +35,12 @@ pub enum FaultSite {
     TickStall,
     /// Drop a TCP connection after its first request (peer fault).
     ConnDrop,
+    /// Panic a supervised decode-group worker mid-tick (the supervisor
+    /// quarantines the group and rescues its sequences).
+    GroupPanic,
+    /// Stall a worker past `serving.tick_timeout_ms` so the supervisor's
+    /// heartbeat watchdog quarantines it as hung.
+    GroupStall,
 }
 
 /// Seeded fault plan: one PRNG, one probability per class of seam.
@@ -45,10 +51,16 @@ pub struct FaultPlan {
     rng: Rng,
     rate: f64,
     conn_drop_rate: f64,
+    group_rate: f64,
     stall_ms: u64,
     /// Faults injected so far (mirrored into `EngineMetrics`).
     pub injected: u64,
 }
+
+/// Seed-spacing constant for [`FaultPlan::for_group`]: a large odd
+/// multiplier keeps per-group schedules decorrelated while staying
+/// deterministic in the base seed.
+const GROUP_SEED_STRIDE: u64 = 0x9e37_79b9_7f4a_7c15;
 
 impl FaultPlan {
     /// Build a plan from the config, or `None` when every rate is zero
@@ -61,6 +73,29 @@ impl FaultPlan {
             rng: Rng::new(cfg.seed),
             rate: cfg.rate,
             conn_drop_rate: cfg.conn_drop_rate,
+            group_rate: cfg.group_rate,
+            stall_ms: cfg.stall_ms,
+            injected: 0,
+        })
+    }
+
+    /// Build the group-scoped plan for worker `group`, or `None` when
+    /// `faults.group_rate` is zero. Each worker draws from its own
+    /// seeded stream (base seed offset by the group id) so the engine
+    /// seams' schedule is untouched and groups fail independently yet
+    /// reproducibly.
+    pub fn for_group(cfg: &FaultsConfig, group: usize) -> Option<FaultPlan> {
+        if cfg.group_rate <= 0.0 {
+            return None;
+        }
+        let seed = cfg
+            .seed
+            .wrapping_add(GROUP_SEED_STRIDE.wrapping_mul(group as u64 + 1));
+        Some(FaultPlan {
+            rng: Rng::new(seed),
+            rate: cfg.rate,
+            conn_drop_rate: cfg.conn_drop_rate,
+            group_rate: cfg.group_rate,
             stall_ms: cfg.stall_ms,
             injected: 0,
         })
@@ -73,6 +108,7 @@ impl FaultPlan {
     pub fn trip(&mut self, site: FaultSite) -> bool {
         let p = match site {
             FaultSite::ConnDrop => self.conn_drop_rate,
+            FaultSite::GroupPanic | FaultSite::GroupStall => self.group_rate,
             _ => self.rate,
         };
         // Always consume a draw so enabling one site does not reshuffle
@@ -102,7 +138,13 @@ mod tests {
     use super::*;
 
     fn cfg(seed: u64, rate: f64) -> FaultsConfig {
-        FaultsConfig { seed, rate, stall_ms: 0, conn_drop_rate: 0.0 }
+        FaultsConfig {
+            seed,
+            rate,
+            stall_ms: 0,
+            conn_drop_rate: 0.0,
+            group_rate: 0.0,
+        }
     }
 
     #[test]
@@ -140,6 +182,37 @@ mod tests {
         assert_eq!(p.injected, 32);
         // conn_drop_rate is 0: that seam never fires, but still draws.
         assert!(!p.trip(FaultSite::ConnDrop));
+    }
+
+    #[test]
+    fn group_sites_draw_from_group_rate_only() {
+        // Engine plan with group_rate 0: group sites never fire but
+        // still consume a draw, so enabling them elsewhere does not
+        // reshuffle this schedule.
+        let mut p = FaultPlan::from_config(&cfg(3, 1.0)).unwrap();
+        assert!(!p.trip(FaultSite::GroupPanic));
+        assert!(!p.trip(FaultSite::GroupStall));
+        assert!(p.trip(FaultSite::KvAlloc));
+
+        // group_rate 1 trips every group draw.
+        let c = FaultsConfig { group_rate: 1.0, ..cfg(3, 0.0) };
+        let mut g = FaultPlan::for_group(&c, 0).unwrap();
+        assert!(g.trip(FaultSite::GroupPanic));
+        assert!(g.trip(FaultSite::GroupStall));
+        assert!(!g.trip(FaultSite::KvAlloc), "rate stays 0 on engine seams");
+    }
+
+    #[test]
+    fn group_plans_are_seeded_per_group_and_deterministic() {
+        let c = FaultsConfig { group_rate: 0.4, ..cfg(11, 0.0) };
+        assert!(FaultPlan::for_group(&cfg(11, 0.5), 0).is_none(),
+                "no group plan when group_rate is 0");
+        let draws = |g: usize| {
+            let mut p = FaultPlan::for_group(&c, g).unwrap();
+            (0..64).map(|_| p.trip(FaultSite::GroupPanic)).collect::<Vec<_>>()
+        };
+        assert_eq!(draws(0), draws(0), "same seed+group => same schedule");
+        assert_ne!(draws(0), draws(1), "groups draw decorrelated streams");
     }
 
     #[test]

@@ -27,6 +27,7 @@ pub mod runtime;
 pub mod scheduler;
 pub mod server;
 pub mod sim;
+pub mod supervisor;
 pub mod util;
 pub mod workload;
 

@@ -72,6 +72,16 @@ pub struct EngineMetrics {
     pub deadline_aborts: u64,
     /// Requests aborted because the shutdown drain window closed.
     pub drain_aborts: u64,
+    /// Quarantined decode groups restarted by the supervisor.
+    pub group_restarts: u64,
+    /// Decode groups moved to `Quarantined` (panic, stall, or sustained
+    /// tick errors).
+    pub group_quarantines: u64,
+    /// Sequences rescued off a quarantined group onto a healthy peer.
+    pub rescued_seqs: u64,
+    /// Host bytes of KV images carried by rescued sequences (subset of
+    /// swap traffic attributable to cross-group rescue).
+    pub rescue_bytes: u64,
     pub live_bytes_last: usize,
     /// What `live_bytes_last` would cost at f32 (Table 2's
     /// "f32-equivalent" column; equals `live_bytes_last` on the dense
@@ -162,6 +172,13 @@ impl EngineMetrics {
             ("swap_bytes_in", Json::from(self.swap_bytes_in as usize)),
             ("deadline_aborts", Json::from(self.deadline_aborts as usize)),
             ("drain_aborts", Json::from(self.drain_aborts as usize)),
+            ("group_restarts", Json::from(self.group_restarts as usize)),
+            (
+                "group_quarantines",
+                Json::from(self.group_quarantines as usize),
+            ),
+            ("rescued_seqs", Json::from(self.rescued_seqs as usize)),
+            ("rescue_bytes", Json::from(self.rescue_bytes as usize)),
             ("live_bytes_last", Json::from(self.live_bytes_last)),
             ("f32_equivalent_bytes", Json::from(self.f32_equiv_bytes_last)),
             ("kv_format", Json::str(&self.kv_format)),
@@ -216,6 +233,10 @@ mod tests {
         m.swap_bytes_in = 1024;
         m.deadline_aborts = 1;
         m.drain_aborts = 1;
+        m.group_restarts = 2;
+        m.group_quarantines = 1;
+        m.rescued_seqs = 3;
+        m.rescue_bytes = 512;
         m.kv_format = "mixed".to_string();
         m.kv_layer_formats = vec![KvFormat::F32, KvFormat::QuantI4];
         m.f32_equiv_bytes_last = 2048;
@@ -274,6 +295,16 @@ mod tests {
             1
         );
         assert_eq!(parsed.get("drain_aborts").unwrap().as_usize().unwrap(), 1);
+        assert_eq!(
+            parsed.get("group_restarts").unwrap().as_usize().unwrap(),
+            2
+        );
+        assert_eq!(
+            parsed.get("group_quarantines").unwrap().as_usize().unwrap(),
+            1
+        );
+        assert_eq!(parsed.get("rescued_seqs").unwrap().as_usize().unwrap(), 3);
+        assert_eq!(parsed.get("rescue_bytes").unwrap().as_usize().unwrap(), 512);
         assert_eq!(
             parsed.get("capacity_hist").unwrap().as_arr().unwrap().len(),
             2

@@ -186,11 +186,319 @@ impl ModelMeta {
     pub fn eos_id(&self) -> Option<i32> {
         self.special_id("<eos>")
     }
+
+    /// Derive the sharded deployment manifest from the flat weight
+    /// layout. `aot.py` stacks every per-layer tensor on axis 0 (shape
+    /// `[n_layers, ...]`), so the partition rule is structural: the
+    /// embedding table forms the `embed` shard, each stacked tensor
+    /// contributes `bytes / n_layers` to every `layer` shard, and the
+    /// unstacked tail (`ln_f`, `lm_head`) forms the `lm_head` shard.
+    pub fn shard_manifest(&self) -> ShardManifest {
+        let l = self.dims.n_layers.max(1);
+        let mut shards = Vec::with_capacity(l + 2);
+        let mut embed = Vec::new();
+        let mut layer = Vec::new();
+        let mut head = Vec::new();
+        for w in &self.weights {
+            if w.name == "embed" {
+                embed.push(w);
+            } else if w.shape.first() == Some(&self.dims.n_layers) {
+                layer.push(w);
+            } else {
+                head.push(w);
+            }
+        }
+        shards.push(ShardSpec::new("embed", ShardKind::Embed, &embed, None));
+        for i in 0..l {
+            shards.push(ShardSpec::layer_slice(i, &layer, l));
+        }
+        shards.push(ShardSpec::new(
+            "lm_head",
+            ShardKind::LmHead,
+            &head,
+            None,
+        ));
+        ShardManifest {
+            model_id: format!(
+                "lethe-{}l-d{}", self.dims.n_layers, self.dims.d_model
+            ),
+            total_layers: self.dims.n_layers,
+            shards,
+        }
+    }
+}
+
+/// Role of a shard in the sharded model manifest.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum ShardKind {
+    /// Token-embedding table.
+    Embed,
+    /// One transformer layer's slice of the stacked layer tensors.
+    Layer,
+    /// Final norm + output projection.
+    LmHead,
+}
+
+impl ShardKind {
+    /// Stable lower-case label used in the manifest JSON.
+    pub fn label(&self) -> &'static str {
+        match self {
+            ShardKind::Embed => "embed",
+            ShardKind::Layer => "layer",
+            ShardKind::LmHead => "lm_head",
+        }
+    }
+}
+
+/// One shard of the model: a unit a future multi-process deployment
+/// loads independently (`id/kind/bytes/hash/layer_range`).
+#[derive(Clone, Debug, PartialEq, Eq)]
+pub struct ShardSpec {
+    /// Stable shard id (`embed`, `layer_3`, `lm_head`).
+    pub id: String,
+    /// Shard role.
+    pub kind: ShardKind,
+    /// Bytes of weight data attributed to this shard.
+    pub bytes: usize,
+    /// Content fingerprint over the contributing weight specs
+    /// (`fnv1a:<16 hex>`). A layout hash, not a payload hash: it pins
+    /// names/shapes/offsets/sizes so mismatched shards are rejected
+    /// before any weight bytes move.
+    pub hash: String,
+    /// Half-open `[start, end)` layer range for `layer` shards.
+    pub layer_range: Option<(usize, usize)>,
+}
+
+/// 64-bit FNV-1a over a byte stream; the manifest fingerprint.
+fn fnv1a(acc: u64, data: &[u8]) -> u64 {
+    let mut h = acc;
+    for &b in data {
+        h ^= b as u64;
+        h = h.wrapping_mul(0x100_0000_01b3);
+    }
+    h
+}
+
+const FNV_OFFSET: u64 = 0xcbf2_9ce4_8422_2325;
+
+fn hash_specs(specs: &[&WeightSpec], salt: usize) -> String {
+    let mut h = fnv1a(FNV_OFFSET, &salt.to_le_bytes());
+    for w in specs {
+        h = fnv1a(h, w.name.as_bytes());
+        for d in &w.shape {
+            h = fnv1a(h, &d.to_le_bytes());
+        }
+        h = fnv1a(h, &w.offset.to_le_bytes());
+        h = fnv1a(h, &w.bytes.to_le_bytes());
+    }
+    format!("fnv1a:{h:016x}")
+}
+
+impl ShardSpec {
+    fn new(
+        id: &str,
+        kind: ShardKind,
+        specs: &[&WeightSpec],
+        layer_range: Option<(usize, usize)>,
+    ) -> ShardSpec {
+        ShardSpec {
+            id: id.to_string(),
+            kind,
+            bytes: specs.iter().map(|w| w.bytes).sum(),
+            hash: hash_specs(specs, usize::MAX),
+            layer_range,
+        }
+    }
+
+    /// The per-layer shard: layer `i`'s axis-0 slice of every stacked
+    /// tensor (each contributes `bytes / total` — tensors are stacked
+    /// uniformly, so the slice size is exact).
+    fn layer_slice(i: usize, stacked: &[&WeightSpec], total: usize) -> ShardSpec {
+        ShardSpec {
+            id: format!("layer_{i}"),
+            kind: ShardKind::Layer,
+            bytes: stacked.iter().map(|w| w.bytes / total).sum(),
+            hash: hash_specs(stacked, i),
+            layer_range: Some((i, i + 1)),
+        }
+    }
+
+    /// Manifest-row JSON (`id/kind/bytes/hash/layer_range`).
+    pub fn to_json(&self) -> Json {
+        let mut fields = vec![
+            ("id", Json::str(&self.id)),
+            ("kind", Json::str(self.kind.label())),
+            ("bytes", Json::num(self.bytes as f64)),
+            ("hash", Json::str(&self.hash)),
+        ];
+        if let Some((s, e)) = self.layer_range {
+            fields.push((
+                "layer_range",
+                Json::Arr(vec![Json::num(s as f64), Json::num(e as f64)]),
+            ));
+        }
+        Json::obj(fields)
+    }
+}
+
+/// The sharded model manifest: what each worker (or, later, each
+/// process) needs to load exactly its slice of the model.
+#[derive(Clone, Debug, PartialEq, Eq)]
+pub struct ShardManifest {
+    /// Deployment-stable model identifier derived from the dims.
+    pub model_id: String,
+    /// Total transformer layers across the `layer` shards.
+    pub total_layers: usize,
+    /// Shards in load order: embed, layer_0..layer_{L-1}, lm_head.
+    pub shards: Vec<ShardSpec>,
+}
+
+impl ShardManifest {
+    /// Total bytes across all shards.
+    pub fn total_bytes(&self) -> usize {
+        self.shards.iter().map(|s| s.bytes).sum()
+    }
+
+    /// Order-sensitive digest over the shard hashes. Every worker
+    /// reports its manifest fingerprint at boot; the supervisor rejects
+    /// a worker whose layout disagrees with the probe's (a torn or
+    /// mismatched artifact directory).
+    pub fn fingerprint(&self) -> String {
+        let mut h = fnv1a(FNV_OFFSET, self.model_id.as_bytes());
+        h = fnv1a(h, &self.total_layers.to_le_bytes());
+        for s in &self.shards {
+            h = fnv1a(h, s.hash.as_bytes());
+        }
+        format!("fnv1a:{h:016x}")
+    }
+
+    /// Full manifest JSON (stats endpoint / future deployment tooling).
+    pub fn to_json(&self) -> Json {
+        Json::obj(vec![
+            ("model_id", Json::str(&self.model_id)),
+            ("total_layers", Json::num(self.total_layers as f64)),
+            ("total_bytes", Json::num(self.total_bytes() as f64)),
+            (
+                "shards",
+                Json::Arr(self.shards.iter().map(|s| s.to_json()).collect()),
+            ),
+        ])
+    }
 }
 
 #[cfg(test)]
 mod tests {
     use super::*;
+
+    /// Synthetic meta mirroring aot.py's layout: embed, stacked layer
+    /// tensors (axis-0 length L), then ln_f / lm_head.
+    fn synthetic_meta(n_layers: usize) -> ModelMeta {
+        let d = 8usize;
+        let vocab = 16usize;
+        let mut weights = Vec::new();
+        let mut off = 0usize;
+        let mut push = |name: &str, shape: Vec<usize>| {
+            let bytes = shape.iter().product::<usize>() * 4;
+            weights.push(WeightSpec {
+                name: name.to_string(),
+                shape,
+                offset: off,
+                bytes,
+            });
+            off += bytes;
+        };
+        push("embed", vec![vocab, d]);
+        push("ln1", vec![n_layers, d]);
+        push("wq", vec![n_layers, d, d]);
+        push("ln_f", vec![d]);
+        push("lm_head", vec![d, vocab]);
+        ModelMeta {
+            dir: PathBuf::from("unused"),
+            dims: ModelDims {
+                vocab_size: vocab,
+                d_model: d,
+                n_layers,
+                n_q_heads: 2,
+                n_kv_heads: 1,
+                d_head: 4,
+                d_ff: 16,
+                param_count: 0,
+                weights_source: "synthetic".to_string(),
+            },
+            specials: vec![],
+            chars: String::new(),
+            weights,
+            executables: BTreeMap::new(),
+            cache_profiles: BTreeMap::new(),
+            decode_capacities: BTreeMap::new(),
+            decode_batches: BTreeMap::new(),
+            prefill_ts: vec![],
+        }
+    }
+
+    #[test]
+    fn shard_manifest_partitions_embed_layers_and_head() {
+        let meta = synthetic_meta(4);
+        let m = meta.shard_manifest();
+        assert_eq!(m.total_layers, 4);
+        assert_eq!(m.shards.len(), 1 + 4 + 1);
+        assert_eq!(m.shards[0].id, "embed");
+        assert_eq!(m.shards[0].kind, ShardKind::Embed);
+        assert_eq!(m.shards[0].bytes, 16 * 8 * 4);
+        assert_eq!(m.shards[0].layer_range, None);
+        for (i, s) in m.shards[1..5].iter().enumerate() {
+            assert_eq!(s.id, format!("layer_{i}"));
+            assert_eq!(s.kind, ShardKind::Layer);
+            // Per-layer slice of ln1 [4,8] + wq [4,8,8], f32.
+            assert_eq!(s.bytes, (8 + 8 * 8) * 4);
+            assert_eq!(s.layer_range, Some((i, i + 1)));
+        }
+        let head = &m.shards[5];
+        assert_eq!(head.id, "lm_head");
+        assert_eq!(head.kind, ShardKind::LmHead);
+        assert_eq!(head.bytes, (8 + 8 * 16) * 4);
+        // No weight byte is lost or double-counted by the partition.
+        assert_eq!(
+            m.total_bytes(),
+            meta.weights.iter().map(|w| w.bytes).sum::<usize>()
+        );
+    }
+
+    #[test]
+    fn shard_hashes_are_deterministic_and_distinct() {
+        let a = synthetic_meta(4).shard_manifest();
+        let b = synthetic_meta(4).shard_manifest();
+        assert_eq!(a, b, "same layout => identical manifest");
+        for s in &a.shards {
+            assert!(s.hash.starts_with("fnv1a:") && s.hash.len() == 22,
+                    "bad hash {}", s.hash);
+        }
+        // Each layer slice hashes distinctly (salted by layer index),
+        // and a different layout changes every layer hash.
+        assert_ne!(a.shards[1].hash, a.shards[2].hash);
+        let c = synthetic_meta(5).shard_manifest();
+        assert_ne!(a.shards[1].hash, c.shards[1].hash);
+        assert_ne!(a.model_id, c.model_id);
+        // The whole-manifest fingerprint follows the same rules.
+        assert_eq!(a.fingerprint(), b.fingerprint());
+        assert_ne!(a.fingerprint(), c.fingerprint());
+        assert!(a.fingerprint().starts_with("fnv1a:"));
+    }
+
+    #[test]
+    fn shard_manifest_json_shape() {
+        let m = synthetic_meta(2).shard_manifest();
+        let j = m.to_json();
+        assert_eq!(j.get("model_id").unwrap().as_str().unwrap(), "lethe-2l-d8");
+        assert_eq!(j.get("total_layers").unwrap().as_usize().unwrap(), 2);
+        let shards = j.get("shards").unwrap().as_arr().unwrap();
+        assert_eq!(shards.len(), 4);
+        assert_eq!(shards[1].get("kind").unwrap().as_str().unwrap(), "layer");
+        let r = shards[1].get("layer_range").unwrap().as_arr().unwrap();
+        assert_eq!(r[0].as_usize().unwrap(), 0);
+        assert_eq!(r[1].as_usize().unwrap(), 1);
+        assert!(shards[0].opt("layer_range").is_none());
+    }
 
     /// Integration-style: parses the real artifact manifest if present
     /// (`make artifacts`), otherwise skipped.

@@ -132,6 +132,54 @@ impl WaitEntry {
     }
 }
 
+/// A unit of work exported from a quarantined scheduler for rescue onto
+/// a healthy peer ([`Scheduler::export_for_rescue`] →
+/// [`Scheduler::admit_rescued`]). Mirrors the internal queue entries:
+/// fresh requests transfer verbatim, mid-prefill and recompute-resume
+/// work carries its re-prefill prefix, and active decoders travel as
+/// host-side KV images so the continuation restores bit-exactly (the
+/// receiving group falls back to recompute when its layer formats have
+/// since diverged — still token-identical under greedy decode).
+pub enum RescueEntry {
+    /// A request that had not started prefilling.
+    Fresh(Request),
+    /// A sequence that resumes by re-prefilling `tokens`
+    /// (prompt + generated so far).
+    Resume {
+        /// The resume prefill input.
+        tokens: Vec<i32>,
+        /// The sequence's carried state.
+        seq: SeqState,
+    },
+    /// An active decoder exported at stored precision.
+    Swapped {
+        /// Host-side image of the sequence's live KV rows.
+        image: Box<HostSlotImage>,
+        /// The sequence's carried state.
+        seq: SeqState,
+    },
+}
+
+impl RescueEntry {
+    /// Request id the entry belongs to.
+    pub fn id(&self) -> u64 {
+        match self {
+            RescueEntry::Fresh(r) => r.id,
+            RescueEntry::Resume { seq, .. }
+            | RescueEntry::Swapped { seq, .. } => seq.id,
+        }
+    }
+
+    /// Host bytes the entry carries (non-zero only for swapped images);
+    /// feeds the supervisor's `rescue_bytes` counter.
+    pub fn payload_bytes(&self) -> usize {
+        match self {
+            RescueEntry::Swapped { image, .. } => image.payload_bytes(),
+            _ => 0,
+        }
+    }
+}
+
 /// One chunk-wise prefill in flight. Holds a slot reservation (jobs +
 /// active decoders never exceed the group size) but no cache rows until
 /// the final chunk installs.
@@ -198,6 +246,9 @@ pub struct Scheduler {
     pub deadline_aborts: u64,
     /// Sequences finished because the shutdown drain window closed.
     pub drain_aborts: u64,
+    /// EMA of recent tick wall time (ms); drives the adaptive
+    /// [`EngineError::Overloaded`] backoff hint. 0 until the first tick.
+    tick_ms_ema: f64,
 }
 
 impl Scheduler {
@@ -234,7 +285,17 @@ impl Scheduler {
             swap_bytes_in: 0,
             deadline_aborts: 0,
             drain_aborts: 0,
+            tick_ms_ema: 0.0,
         }
+    }
+
+    /// Adaptive backoff hint for [`EngineError::Overloaded`]: the time
+    /// to drain the current queue at the recently observed tick pace
+    /// (queue depth × tick-latency EMA, floored at 1 ms/tick before the
+    /// first measurement), clamped to a sane client range.
+    fn overload_retry_after_ms(&self) -> u64 {
+        let est = self.waiting.len() as f64 * self.tick_ms_ema.max(1.0);
+        (est as u64).clamp(25, 5000)
     }
 
     /// Admission control. Every rejection is a typed [`EngineError`]
@@ -259,7 +320,7 @@ impl Scheduler {
         if self.waiting.len() >= self.max_waiting {
             self.rejected += 1;
             return Err(EngineError::Overloaded {
-                retry_after_ms: 100,
+                retry_after_ms: self.overload_retry_after_ms(),
                 waiting: self.waiting.len(),
             }
             .into());
@@ -340,6 +401,7 @@ impl Scheduler {
     ///   4. run one decode step over the co-batched group,
     ///   5. reap completions.
     pub fn tick(&mut self, engine: &mut Engine) -> Result<TickReport> {
+        let tick_start = Instant::now();
         let mut report = TickReport::default();
 
         // Deadlines first, at the tick boundary: a request past its
@@ -508,6 +570,12 @@ impl Scheduler {
         engine.metrics.swap_bytes_in = self.swap_bytes_in;
         engine.metrics.deadline_aborts = self.deadline_aborts;
         engine.metrics.drain_aborts = self.drain_aborts;
+        let ms = tick_start.elapsed().as_secs_f64() * 1e3;
+        self.tick_ms_ema = if self.tick_ms_ema == 0.0 {
+            ms
+        } else {
+            0.8 * self.tick_ms_ema + 0.2 * ms
+        };
         Ok(report)
     }
 
@@ -799,6 +867,82 @@ impl Scheduler {
         true
     }
 
+    /// Export every unit of in-flight work for rescue onto a healthy
+    /// peer, draining this scheduler to idle. Resumable active decoders
+    /// leave as [`RescueEntry::Swapped`] host images (token-identical
+    /// restore), mid-prefill jobs and queued resumes as
+    /// [`RescueEntry::Resume`] recompute prefixes, and queued requests
+    /// verbatim. Sequences that cannot re-enter any group (prefix past
+    /// the resume line) — and finished-but-unreaped ones — come back as
+    /// completions: the former typed
+    /// [`FinishReason::Error`]`(`[`FailureKind::GroupLost`]`)`, the
+    /// latter with their real finish.
+    pub fn export_for_rescue(&mut self) -> (Vec<RescueEntry>, Vec<Completion>) {
+        let mut entries = Vec::new();
+        let mut completed = Vec::new();
+        let now = Instant::now();
+        self.group.reap();
+        for seq in self.group.done.drain(..) {
+            completed.push(Self::completion_of(seq, now));
+        }
+        while self.group.active() > 0 {
+            let b = self.group.active() - 1;
+            let resumable = {
+                let s = self.group.seq(b);
+                s.prompt.len() + s.generated.len() <= self.max_resume_tokens
+            };
+            if resumable {
+                let image = self.group.cache.evict_to_host(b);
+                self.swap_bytes_out += image.payload_bytes() as u64;
+                let mut seq = self.group.remove(b);
+                seq.preemptions += 1;
+                entries.push(RescueEntry::Swapped {
+                    image: Box::new(image),
+                    seq,
+                });
+            } else {
+                let mut seq = self.group.remove(b);
+                seq.fail(FailureKind::GroupLost);
+                completed.push(Self::completion_of(seq, now));
+            }
+        }
+        for job in self.prefilling.drain(..) {
+            entries.push(RescueEntry::Resume {
+                tokens: job.tokens,
+                seq: job.seq,
+            });
+        }
+        for entry in self.waiting.drain(..) {
+            entries.push(match entry {
+                WaitEntry::Fresh(r) => RescueEntry::Fresh(r),
+                WaitEntry::Resume { tokens, seq } => {
+                    RescueEntry::Resume { tokens, seq }
+                }
+                WaitEntry::Swapped { image, seq } => {
+                    RescueEntry::Swapped { image, seq }
+                }
+            });
+        }
+        (entries, completed)
+    }
+
+    /// Admit a rescued unit of work from a quarantined peer. Bypasses
+    /// `max_waiting` on purpose — the work was already admitted once;
+    /// backpressure applies to new requests only. Swapped images
+    /// restore directly on the next tick (or degrade to recompute if
+    /// this group's layer formats have diverged).
+    pub fn admit_rescued(&mut self, entry: RescueEntry) {
+        self.waiting.push_back(match entry {
+            RescueEntry::Fresh(r) => WaitEntry::Fresh(r),
+            RescueEntry::Resume { tokens, seq } => {
+                WaitEntry::Resume { tokens, seq }
+            }
+            RescueEntry::Swapped { image, seq } => {
+                WaitEntry::Swapped { image, seq }
+            }
+        });
+    }
+
     /// Re-admit a swap-preempted sequence: restore its host image into
     /// the next free slot and rejoin the decode group mid-stream (no
     /// re-prefill). If the restore is rejected — a live format
@@ -888,6 +1032,7 @@ mod tests {
             swap_bytes_in: 0,
             deadline_aborts: 0,
             drain_aborts: 0,
+            tick_ms_ema: 0.0,
         }
     }
 
@@ -1008,7 +1153,9 @@ mod tests {
         let err = s.submit(req(2, 3)).unwrap_err();
         let ee = err.downcast_ref::<EngineError>().expect("typed root");
         assert!(ee.is_retryable(), "queue-full is retryable");
-        assert_eq!(ee.retry_after_ms(), Some(100));
+        // No tick has run yet: the EMA floor (1 ms/tick × depth 1)
+        // clamps to the 25 ms minimum.
+        assert_eq!(ee.retry_after_ms(), Some(25));
         let err = s.submit(req(3, 99)).unwrap_err();
         let ee = err.downcast_ref::<EngineError>().expect("typed root");
         assert!(
@@ -1017,6 +1164,101 @@ mod tests {
         );
         assert!(!ee.is_retryable(), "an over-long prompt never fits");
         assert_eq!(s.rejected, 2);
+    }
+
+    #[test]
+    fn overload_backoff_scales_with_queue_and_tick_pace() {
+        let mut s = bare_sched(2, 1, 0);
+        assert!(s.submit(req(1, 3)).is_ok());
+        // Slow ticks (8 ms EMA): one queued entry => 8 ms, floored at 25.
+        s.tick_ms_ema = 8.0;
+        assert_eq!(s.overload_retry_after_ms(), 25);
+        // Deep queue at the same pace scales linearly: 1 × 40 ms = 40.
+        s.tick_ms_ema = 40.0;
+        let err = s.submit(req(2, 3)).unwrap_err();
+        let ee = err.downcast_ref::<EngineError>().unwrap();
+        assert_eq!(ee.retry_after_ms(), Some(40));
+        // Pathological pace clamps at the 5 s ceiling.
+        s.tick_ms_ema = 1e9;
+        assert_eq!(s.overload_retry_after_ms(), 5000);
+    }
+
+    #[test]
+    fn rescue_export_drains_every_lane_and_round_trips() {
+        let mut s = bare_sched(4, 8, 0);
+        // One active decoder with live KV rows (resumable).
+        let mut seq = SeqState::new(1, Box::new(FullKv), 1, 8, 2);
+        seq.prompt = vec![1, 3];
+        seq.note_prefilled(2, 10);
+        s.group.cache.insert(0, 0, &[0.5; 4], &[0.25; 4], 0).unwrap();
+        s.group.install(0, seq);
+        // One mid-prefill job.
+        let mut pseq = SeqState::new(2, Box::new(FullKv), 1, 8, 2);
+        pseq.phase = SeqPhase::Prefilling { consumed: 4 };
+        s.prefilling.push(PrefillJob {
+            tokens: vec![1; 6],
+            consumed: 4,
+            seq: pseq,
+            resume: false,
+            acc: None,
+        });
+        // One queued fresh request.
+        assert!(s.submit(req(3, 3)).is_ok());
+
+        let (entries, completed) = s.export_for_rescue();
+        assert!(s.idle(), "export drains the scheduler");
+        assert!(completed.is_empty());
+        assert_eq!(entries.len(), 3);
+        let ids: Vec<u64> = entries.iter().map(|e| e.id()).collect();
+        assert_eq!(ids, vec![1, 2, 3]);
+        assert!(
+            matches!(&entries[0], RescueEntry::Swapped { .. }),
+            "resumable decoder leaves as a host image"
+        );
+        assert!(entries[0].payload_bytes() > 0);
+        assert!(matches!(
+            &entries[1],
+            RescueEntry::Resume { tokens, .. } if tokens.len() == 6
+        ));
+        assert!(matches!(&entries[2], RescueEntry::Fresh(_)));
+
+        // Round-trip onto a healthy peer; the swapped image restores
+        // with its KV rows intact on the peer's next admission pass.
+        let mut peer = bare_sched(4, 0, 0); // max_waiting 0: rescue bypasses
+        for e in entries {
+            peer.admit_rescued(e);
+        }
+        assert_eq!(peer.waiting(), 3);
+        assert!(peer.can_admit_front());
+        let WaitEntry::Swapped { image, seq } =
+            peer.waiting.pop_front().unwrap()
+        else {
+            panic!("swapped entry survives the transfer");
+        };
+        assert_eq!(seq.preemptions, 1, "rescue counts as a preemption");
+        peer.restore_swapped(*image, seq);
+        assert_eq!(peer.group.active(), 1);
+        assert_eq!(peer.group.cache.len(0, 0), 1, "KV rows transferred");
+    }
+
+    #[test]
+    fn rescue_export_fails_over_long_sequences_typed() {
+        let mut s = bare_sched(3, 8, 0);
+        let mut seq = SeqState::new(7, Box::new(FullKv), 1, 64, 2);
+        seq.prompt = vec![1, 3];
+        seq.note_prefilled(2, 10);
+        // Past max_resume_tokens (8 in bare_sched): unrescuable.
+        seq.generated = vec![10; 20];
+        s.group.cache.insert(0, 0, &[0.5; 4], &[0.25; 4], 0).unwrap();
+        s.group.install(0, seq);
+        let (entries, completed) = s.export_for_rescue();
+        assert!(entries.is_empty());
+        assert_eq!(completed.len(), 1);
+        assert_eq!(completed[0].id, 7);
+        assert_eq!(
+            completed[0].finish,
+            FinishReason::Error(FailureKind::GroupLost)
+        );
     }
 
     #[test]

@@ -1,25 +1,23 @@
 //! Request router / front door. Clients submit text prompts and receive
-//! completions over channels; a dedicated engine thread owns the PJRT
-//! runtime (it is not Sync) and runs the scheduler loop. This is the L3
-//! "serving system" shell: validation, routing, per-request policy
-//! override, graceful shutdown, latency accounting.
+//! completions over channels. Since the multi-group refactor the serving
+//! core behind this facade is the [`crate::supervisor`]: N fault-isolated
+//! decode-group workers (each owning its own PJRT runtime + engine — the
+//! engine is not `Sync`) under one supervisor thread that places
+//! requests, watches group health, and rescues sequences off quarantined
+//! groups. With `serving.groups = 1` (the default) the behaviour is the
+//! previous single-engine-thread server, unchanged.
 
 pub mod tcp;
 
 use std::sync::atomic::{AtomicU64, Ordering};
-use std::sync::mpsc::{self, Receiver, Sender};
-use std::sync::{Arc, Mutex};
-use std::thread::JoinHandle;
-use std::time::Instant;
+use std::sync::mpsc::Receiver;
 
-use anyhow::{Context, Result};
+use anyhow::Result;
 
 use crate::config::ServingConfig;
-use crate::engine::Engine;
 use crate::model::Tokenizer;
 use crate::policy::PolicyKind;
-use crate::runtime::Runtime;
-use crate::scheduler::{Request, Scheduler};
+use crate::supervisor::Supervisor;
 
 #[derive(Clone, Debug)]
 pub struct GenerateRequest {
@@ -43,62 +41,49 @@ pub struct GenerateResponse {
     pub ttft_s: f64,
     pub total_s: f64,
     pub prune_rounds: usize,
-    /// How many times the sequence was recompute-preempted under load
-    /// (each resume re-prefilled prompt + generated; the continuation is
-    /// the uncontended one).
+    /// How many times the sequence was preempted under load or rescued
+    /// across groups (each resume reconstructs the uncontended
+    /// continuation).
     pub preemptions: u32,
     /// KV storage the request was served on ("f32" | "q8" | "q4", or
     /// "mixed" when a per-layer format map was active).
     pub kv_format: String,
 }
 
-enum Msg {
-    Generate(GenerateRequest, Sender<Result<GenerateResponse>>),
-    /// Serving-pressure snapshot (queue depth, preempt/resume counters,
-    /// live migrations, engine metrics) — the `{"stats": true}` query.
-    Stats(Sender<crate::util::json::Json>),
-    Shutdown,
-}
-
-/// Handle to the serving thread.
+/// Handle to the serving core.
 pub struct Server {
-    tx: Sender<Msg>,
-    handle: Option<JoinHandle<()>>,
+    sup: Option<Supervisor>,
     next_id: AtomicU64,
     pub tokenizer: Tokenizer,
     /// Copy of the fault-injection config (the full config moves into
-    /// the engine thread); the TCP front-end builds its connection-drop
+    /// the supervisor); the TCP front-end builds its connection-drop
     /// plan from it.
     pub faults: crate::config::FaultsConfig,
 }
 
 impl Server {
-    /// Boot the engine thread: loads artifacts, warms the executables for
-    /// the configured profile, then serves until shutdown.
+    /// Boot the serving core: `serving.groups` decode-group workers
+    /// (each loading artifacts and warming the configured profile's
+    /// executables) under one supervisor. Returns once every group is
+    /// up; fails fast if any worker fails to boot or its shard-manifest
+    /// fingerprint disagrees with the probe's.
     pub fn start(cfg: ServingConfig, default_policy: PolicyKind) -> Result<Server> {
-        let rt_probe = crate::model::ModelMeta::load(
+        let probe = crate::model::ModelMeta::load(
             std::path::Path::new(&cfg.artifacts_dir),
         )?;
-        let tokenizer = Tokenizer::from_meta(&rt_probe)?;
-        let (tx, rx) = mpsc::channel::<Msg>();
-        let cfg2 = cfg.clone();
-        let (boot_tx, boot_rx) = mpsc::channel::<Result<()>>();
-        let handle = std::thread::Builder::new()
-            .name("lethe-engine".into())
-            .spawn(move || {
-                engine_thread(cfg2, default_policy, rx, boot_tx);
-            })
-            .context("spawning engine thread")?;
-        boot_rx
-            .recv()
-            .context("engine thread died during boot")??;
+        let tokenizer = Tokenizer::from_meta(&probe)?;
+        let faults = cfg.faults.clone();
+        let sup = Supervisor::start(cfg, default_policy)?;
         Ok(Server {
-            tx,
-            handle: Some(handle),
+            sup: Some(sup),
             next_id: AtomicU64::new(1),
             tokenizer,
-            faults: cfg.faults.clone(),
+            faults,
         })
+    }
+
+    fn sup(&self) -> &Supervisor {
+        self.sup.as_ref().expect("supervisor lives until drop")
     }
 
     /// Submit a request; returns a receiver for the completion.
@@ -106,28 +91,29 @@ impl Server {
         &self,
         req: GenerateRequest,
     ) -> Result<Receiver<Result<GenerateResponse>>> {
-        let (tx, rx) = mpsc::channel();
-        self.tx
-            .send(Msg::Generate(req, tx))
-            .map_err(|_| anyhow::anyhow!("server is shut down"))?;
-        Ok(rx)
+        self.sup().submit(req)
     }
 
     /// Convenience: synchronous request/response.
     pub fn generate(&self, req: GenerateRequest) -> Result<GenerateResponse> {
         let rx = self.submit(req)?;
-        rx.recv().context("engine thread dropped the request")?
+        rx.recv()
+            .map_err(|_| anyhow::anyhow!("serving core dropped the request"))?
     }
 
-    /// Serving-pressure snapshot from the engine thread: queue depth,
-    /// rejected/preemption/resume counts, live KV migrations, and the
-    /// full engine metrics object.
+    /// Serving-pressure snapshot: aggregate queue/preemption/migration
+    /// counters in the original single-scheduler shape, plus per-group
+    /// health rows (`groups`), supervision counters and the sharded
+    /// model manifest (`model`).
     pub fn stats(&self) -> Result<crate::util::json::Json> {
-        let (tx, rx) = mpsc::channel();
-        self.tx
-            .send(Msg::Stats(tx))
-            .map_err(|_| anyhow::anyhow!("server is shut down"))?;
-        rx.recv().context("engine thread dropped the stats query")
+        self.sup().stats()
+    }
+
+    /// Operational control: fence decode group `g` off, rescue its
+    /// in-flight sequences onto healthy groups, and let it restart
+    /// with backoff. Returns false when `g` is unknown or not serving.
+    pub fn quarantine_group(&self, g: usize) -> Result<bool> {
+        self.sup().quarantine_group(g)
     }
 
     pub fn next_request_id(&self) -> u64 {
@@ -135,172 +121,16 @@ impl Server {
     }
 
     pub fn shutdown(mut self) {
-        let _ = self.tx.send(Msg::Shutdown);
-        if let Some(h) = self.handle.take() {
-            let _ = h.join();
+        if let Some(s) = self.sup.take() {
+            s.shutdown();
         }
     }
 }
 
 impl Drop for Server {
     fn drop(&mut self) {
-        let _ = self.tx.send(Msg::Shutdown);
-        if let Some(h) = self.handle.take() {
-            let _ = h.join();
-        }
-    }
-}
-
-struct Pending {
-    reply: Sender<Result<GenerateResponse>>,
-    prompt_tokens: usize,
-}
-
-/// Poison-safe lock: a panic in some other thread while holding the map
-/// must not wedge the serving loop — the plain `HashMap` inside is valid
-/// regardless of where the panicking thread stopped, so recover the guard.
-fn lock_pending(
-    m: &Mutex<std::collections::HashMap<u64, Pending>>,
-) -> std::sync::MutexGuard<'_, std::collections::HashMap<u64, Pending>> {
-    m.lock().unwrap_or_else(|e| e.into_inner())
-}
-
-fn engine_thread(
-    cfg: ServingConfig,
-    default_policy: PolicyKind,
-    rx: Receiver<Msg>,
-    boot_tx: Sender<Result<()>>,
-) {
-    let boot = (|| -> Result<(Engine, Tokenizer)> {
-        let rt = Runtime::load(std::path::Path::new(&cfg.artifacts_dir))?;
-        let tok = Tokenizer::from_meta(&rt.meta)?;
-        Ok((Engine::new(rt, cfg.clone())?, tok))
-    })();
-    let (mut engine, tok) = match boot {
-        Ok(v) => {
-            let _ = boot_tx.send(Ok(()));
-            v
-        }
-        Err(e) => {
-            let _ = boot_tx.send(Err(e));
-            return;
-        }
-    };
-
-    let mut sched = Scheduler::new(&engine, default_policy);
-    let pending: Arc<Mutex<std::collections::HashMap<u64, Pending>>> =
-        Arc::new(Mutex::new(std::collections::HashMap::new()));
-    let mut next_id = 1u64;
-    let mut shutdown = false;
-
-    while !(shutdown && sched.idle()) {
-        // Drain incoming messages; block only when fully idle.
-        loop {
-            let msg = if sched.idle() && !shutdown {
-                match rx.recv() {
-                    Ok(m) => m,
-                    Err(_) => {
-                        shutdown = true;
-                        break;
-                    }
-                }
-            } else {
-                match rx.try_recv() {
-                    Ok(m) => m,
-                    Err(_) => break,
-                }
-            };
-            match msg {
-                Msg::Shutdown => {
-                    shutdown = true;
-                    break;
-                }
-                Msg::Stats(reply) => {
-                    let _ = reply.send(sched.stats_json(&engine));
-                }
-                Msg::Generate(req, reply) => {
-                    let id = next_id;
-                    next_id += 1;
-                    match tok.encode_prompt(&req.prompt) {
-                        Ok(prompt) => {
-                            let r = Request {
-                                id,
-                                prompt,
-                                max_new_tokens: req
-                                    .max_new_tokens
-                                    .min(engine.cfg.scheduler.max_new_tokens),
-                                policy: req.policy.unwrap_or(default_policy),
-                                submitted_at: Instant::now(),
-                                deadline_ms: req.deadline_ms,
-                            };
-                            let ptoks = r.prompt.len();
-                            if let Err(e) = sched.submit(r) {
-                                let _ = reply.send(Err(e));
-                            } else {
-                                lock_pending(&pending).insert(
-                                    id,
-                                    Pending { reply, prompt_tokens: ptoks },
-                                );
-                            }
-                        }
-                        Err(e) => {
-                            let _ = reply.send(Err(e));
-                        }
-                    }
-                }
-            }
-        }
-
-        // Entering shutdown with work in flight: stop admitting and give
-        // running sequences a bounded drain window to finish.
-        if shutdown && !sched.draining() {
-            sched.begin_drain();
-        }
-
-        if sched.idle() {
-            continue;
-        }
-        match sched.tick(&mut engine) {
-            Ok(report) => {
-                let kv_format = sched.kv_format();
-                let mut p = lock_pending(&pending);
-                for c in report.completed {
-                    if let Some(entry) = p.remove(&c.id) {
-                        let resp = GenerateResponse {
-                            id: c.id,
-                            text: tok.decode(&c.generated),
-                            finish: format!("{:?}", c.finish),
-                            prompt_tokens: entry.prompt_tokens,
-                            generated_tokens: c.generated.len(),
-                            ttft_s: c.ttft,
-                            total_s: c.total,
-                            prune_rounds: c.prune_rounds,
-                            preemptions: c.preemptions,
-                            kv_format: kv_format.clone(),
-                        };
-                        let _ = entry.reply.send(Ok(resp));
-                    }
-                }
-            }
-            Err(e) => {
-                // A tick error means scheduler/cache state may be
-                // inconsistent. Fail everything in flight, rebuild the
-                // scheduler from scratch, and keep serving — the engine
-                // (weights, executables) is still sound.
-                crate::log_error!("scheduler tick failed: {e:#}");
-                let mut p = lock_pending(&pending);
-                for (_, entry) in p.drain() {
-                    let _ = entry
-                        .reply
-                        .send(Err(anyhow::anyhow!("engine error: {e}")));
-                }
-                drop(p);
-                let draining = sched.draining();
-                sched = Scheduler::new(&engine, default_policy);
-                if draining {
-                    sched.begin_drain();
-                }
-            }
+        if let Some(s) = self.sup.take() {
+            s.shutdown();
         }
     }
 }

@@ -14,12 +14,20 @@
 //! how often the sequence was recompute-preempted under load.
 //!
 //! A `{"stats": true}` line returns the serving-pressure snapshot
-//! instead of a completion:
+//! instead of a completion. Aggregate counters keep the original
+//! single-scheduler shape; `groups` adds one health row per supervised
+//! decode group and `model` the sharded model manifest:
 //!
 //!   -> {"stats": true}
 //!   <- {"ok": true, "stats": {"queue_depth": 0, "active": 1,
 //!       "prefilling": 0, "rejected": 0, "preemptions": 2,
 //!       "resumes": 2, "kv_migrations": 4, "kv_format": "mixed",
+//!       "draining": false,
+//!       "groups": [{"id": 0, "health": "healthy", "live_bytes": 4096,
+//!                   "queue_depth": 0, "seq_failures": 0, "rescues": 0,
+//!                   "restarts": 0, ...}],
+//!       "model": {"model_id": "lethe-4l-d64", "total_layers": 4,
+//!                 "shards": [{"id": "embed", ...}]},
 //!       "metrics": {...}}}
 //!
 //! One handler thread per connection (threadpool-bounded); requests on

@@ -1,0 +1,1488 @@
+//! Supervised multi-group serving core.
+//!
+//! One supervisor thread owns `serving.groups` decode-group workers.
+//! Each worker is a thread that boots its own PJRT [`Runtime`] +
+//! [`Engine`] (the engine is not `Sync`) and runs a private
+//! [`Scheduler`] loop, so a fault in one group — a panicked tick, a
+//! hung runtime call, a burst of tick errors — never touches its
+//! peers. The supervisor is the only router: it encodes prompts,
+//! places each request on the group with the most KV headroom, and
+//! fans completions back to the per-request reply channels.
+//!
+//! # Health machine
+//!
+//! ```text
+//! Healthy ──ema ≥ degraded──► Degraded ──ema ≥ quarantine──► Quarantined
+//!    ▲                           │ ema decays                    │
+//!    └────── Booted(ok) ◄── restart (backoff, capped) ◄──────────┘
+//!                                                             │ budget
+//!                                                             ▼ spent
+//!                                                            Dead
+//! ```
+//!
+//! Three signals drive a group into `Quarantined`:
+//!
+//!   * **Error EMA** — every tick updates an exponential moving
+//!     average of the group's tick-error rate; past
+//!     `serving.degraded_error_rate` the group is deprioritized for
+//!     placement, past `serving.quarantine_error_rate` it is
+//!     quarantined.
+//!   * **Panic** — a worker catches its own tick panic
+//!     (`catch_unwind`), exports what it can for rescue, and reports
+//!     [`Event::Panicked`].
+//!   * **Stall** — each worker stamps a shared [`Heartbeat`] around
+//!     its tick; the supervisor's watchdog quarantines a group whose
+//!     tick has overrun `serving.tick_timeout_ms`.
+//!
+//! # Rescue
+//!
+//! Quarantining a group invalidates its *lease* (a shared epoch
+//! counter) so the worker exits at the next checkpoint, then rescues
+//! its in-flight sequences onto healthy groups:
+//!
+//!   1. sequences the worker exported travel as
+//!      [`RescueEntry`] units — active decoders as `HostSlotImage`s
+//!      (bit-exact restore), queued/mid-prefill work as recompute
+//!      prefixes — and re-enter a healthy peer token-identically
+//!      (greedy decode is deterministic);
+//!   2. pending requests the worker could *not* export (it was hung or
+//!      mid-panic) are shadow-resubmitted from the supervisor's own
+//!      copy of the request — same tokens from scratch, still
+//!      token-identical;
+//!   3. only when no healthy-or-degraded group exists does a sequence
+//!      finish with `FinishReason::Error(FailureKind::GroupLost)`.
+//!
+//! The quarantined group then restarts with exponential backoff
+//! (`serving.restart_backoff_ms` doubling per consecutive restart) up
+//! to `serving.max_restarts`, after which it is permanently `Dead`.
+//! At boot every worker loads the sharded model manifest
+//! ([`crate::model::ShardManifest`]) and reports its fingerprint; a
+//! worker whose layout disagrees with the supervisor's probe is
+//! rejected before serving anything.
+//!
+//! With the default config (one group, no pool, stall detection off)
+//! the behaviour — admission, scheduling, fault semantics, stats —
+//! reproduces the previous single-`Scheduler` server exactly.
+
+use std::collections::HashMap;
+use std::panic::{catch_unwind, AssertUnwindSafe};
+use std::sync::atomic::{AtomicBool, AtomicU64, Ordering};
+use std::sync::mpsc::{self, Receiver, RecvTimeoutError, Sender};
+use std::sync::Arc;
+use std::thread::JoinHandle;
+use std::time::{Duration, Instant};
+
+use anyhow::{Context, Result};
+
+use crate::config::ServingConfig;
+use crate::engine::{Engine, FinishReason};
+use crate::error::{EngineError, FailureKind};
+use crate::fault::{FaultPlan, FaultSite};
+use crate::metrics::EngineMetrics;
+use crate::model::{ModelMeta, Tokenizer};
+use crate::policy::PolicyKind;
+use crate::runtime::Runtime;
+use crate::scheduler::{Completion, Request, RescueEntry, Scheduler};
+use crate::server::{GenerateRequest, GenerateResponse};
+use crate::util::json::Json;
+
+/// Lifecycle state of one supervised decode group.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum GroupHealth {
+    /// Serving normally; preferred placement target.
+    Healthy,
+    /// Tick-error EMA past `serving.degraded_error_rate`: still
+    /// serving, deprioritized for placement.
+    Degraded,
+    /// Fenced off (panic, stall, or sustained errors); sequences
+    /// rescued; restart pending.
+    Quarantined,
+    /// Restart budget exhausted; never restarted again.
+    Dead,
+}
+
+impl GroupHealth {
+    /// Stable lower-case label (stats rows / log lines).
+    pub fn label(&self) -> &'static str {
+        match self {
+            GroupHealth::Healthy => "healthy",
+            GroupHealth::Degraded => "degraded",
+            GroupHealth::Quarantined => "quarantined",
+            GroupHealth::Dead => "dead",
+        }
+    }
+}
+
+/// Classify a tick-error EMA against the configured thresholds.
+fn classify(ema: f64, degraded: f64, quarantine: f64) -> GroupHealth {
+    if ema >= quarantine {
+        GroupHealth::Quarantined
+    } else if ema >= degraded {
+        GroupHealth::Degraded
+    } else {
+        GroupHealth::Healthy
+    }
+}
+
+/// Exponential restart backoff: `base << restarts`, shift-capped so a
+/// long-dying group cannot overflow.
+fn backoff_ms(base_ms: u64, restarts: u32) -> u64 {
+    base_ms.max(1).saturating_mul(1u64 << restarts.min(16))
+}
+
+/// Placement: pick the group with the most KV headroom among the
+/// healthy ones, falling back to degraded ones; quarantined and dead
+/// groups are never targets. `budget` 0 means "unlimited", in which
+/// case the groups tie on headroom and the fewest-assigned-requests /
+/// lowest-id tiebreaks decide. Candidates: `(health, budget,
+/// live_bytes, assigned_requests)` per group, indexed by group id.
+fn pick_target(groups: &[(GroupHealth, usize, usize, usize)]) -> Option<usize> {
+    for want in [GroupHealth::Healthy, GroupHealth::Degraded] {
+        let best = groups
+            .iter()
+            .enumerate()
+            .filter(|(_, (h, ..))| *h == want)
+            // max_by_key takes the *last* max; reverse the id so ties
+            // land on the lowest group id.
+            .max_by_key(|(g, (_, budget, live, assigned))| {
+                let headroom = budget.saturating_sub(*live);
+                (headroom, usize::MAX - assigned, usize::MAX - g)
+            })
+            .map(|(g, _)| g);
+        if best.is_some() {
+            return best;
+        }
+    }
+    None
+}
+
+/// Shared per-group heartbeat: the worker stamps it around every tick;
+/// the supervisor's watchdog reads it to detect a hung tick without
+/// touching the worker thread.
+struct Heartbeat {
+    /// Time origin; both sides measure against it.
+    epoch: Instant,
+    /// Milliseconds-since-epoch at the last `enter`.
+    ms: AtomicU64,
+    /// True while the worker is inside a tick.
+    in_tick: AtomicBool,
+}
+
+impl Heartbeat {
+    fn new() -> Heartbeat {
+        Heartbeat {
+            epoch: Instant::now(),
+            ms: AtomicU64::new(0),
+            in_tick: AtomicBool::new(false),
+        }
+    }
+
+    fn now_ms(&self) -> u64 {
+        self.epoch.elapsed().as_millis() as u64
+    }
+
+    fn enter(&self) {
+        self.ms.store(self.now_ms(), Ordering::Release);
+        self.in_tick.store(true, Ordering::Release);
+    }
+
+    fn exit(&self) {
+        self.in_tick.store(false, Ordering::Release);
+    }
+
+    /// True when the worker has been inside one tick for longer than
+    /// `timeout_ms`.
+    fn stalled(&self, timeout_ms: u64) -> bool {
+        self.in_tick.load(Ordering::Acquire)
+            && self.now_ms().saturating_sub(self.ms.load(Ordering::Acquire))
+                > timeout_ms
+    }
+}
+
+/// Cumulative counters a worker snapshots after every tick; the
+/// supervisor applies per-tick *deltas* to its aggregate
+/// [`EngineMetrics`], so totals survive group restarts (each fresh
+/// engine restarts its own counters from zero).
+macro_rules! counters {
+    ($($name:ident),* $(,)?) => {
+        #[derive(Clone, Copy, Debug, Default)]
+        struct CounterSnap {
+            $($name: u64,)*
+        }
+
+        impl CounterSnap {
+            /// Field-wise `self − prev`, saturating (a restarted
+            /// engine's counters legitimately go backwards).
+            fn delta(self, prev: CounterSnap) -> CounterSnap {
+                CounterSnap {
+                    $($name: self.$name.saturating_sub(prev.$name),)*
+                }
+            }
+
+            /// Add this delta into the aggregate metrics.
+            fn apply(self, m: &mut EngineMetrics) {
+                $(m.$name = m.$name.saturating_add(self.$name);)*
+            }
+        }
+    };
+}
+
+counters!(
+    decode_steps,
+    decode_tokens,
+    prefill_tokens,
+    prune_events,
+    pruned_tokens,
+    ooms,
+    kv_migrations,
+    faults_injected,
+    seq_failures,
+    rejected,
+    preemptions,
+    resumes,
+    swap_preemptions,
+    swap_bytes_out,
+    swap_bytes_in,
+    deadline_aborts,
+    drain_aborts,
+);
+
+impl CounterSnap {
+    fn capture(sched: &Scheduler, engine: &Engine) -> CounterSnap {
+        let m = &engine.metrics;
+        CounterSnap {
+            decode_steps: m.decode_steps,
+            decode_tokens: m.decode_tokens,
+            prefill_tokens: m.prefill_tokens,
+            prune_events: m.prune_events,
+            pruned_tokens: m.pruned_tokens,
+            ooms: m.ooms,
+            kv_migrations: m.kv_migrations,
+            faults_injected: m.faults_injected,
+            seq_failures: m.seq_failures,
+            rejected: sched.rejected,
+            preemptions: sched.preemptions,
+            resumes: sched.resumes,
+            swap_preemptions: sched.swap_preemptions,
+            swap_bytes_out: sched.swap_bytes_out,
+            swap_bytes_in: sched.swap_bytes_in,
+            deadline_aborts: sched.deadline_aborts,
+            drain_aborts: sched.drain_aborts,
+        }
+    }
+}
+
+/// Client-side messages into the supervisor.
+enum SupMsg {
+    Generate(GenerateRequest, Sender<Result<GenerateResponse>>),
+    Stats(Sender<Json>),
+    /// Operational control: fence group `g` off and rescue its work
+    /// (drain-for-maintenance; also the lifecycle tests' fault lever).
+    Quarantine(usize, Sender<bool>),
+    Shutdown,
+}
+
+/// Per-tick report from a worker.
+struct TickUpdate {
+    /// This tick returned an error (the scheduler was rebuilt and its
+    /// work exported in `rescued`).
+    errored: bool,
+    completions: Vec<Completion>,
+    kv_format: String,
+    delta: CounterSnap,
+    live_bytes: usize,
+    queue_depth: usize,
+    active: usize,
+    prefilling: usize,
+    /// Work exported for rescue by an errored tick.
+    rescued: Vec<RescueEntry>,
+}
+
+/// Worker → supervisor events. Every event is tagged with the worker's
+/// lease epoch; events from a superseded incarnation are dropped.
+enum Event {
+    /// Boot finished; `Ok` carries the worker's manifest fingerprint.
+    Booted(Result<String>),
+    Ticked(Box<TickUpdate>),
+    /// `Scheduler::submit` rejected request `id` (typed error).
+    Rejected { id: u64, err: anyhow::Error },
+    /// The tick panicked; the worker exported what it could and exited.
+    Panicked {
+        rescued: Vec<RescueEntry>,
+        completions: Vec<Completion>,
+    },
+    /// Clean exit after a drain.
+    Exited,
+}
+
+/// Envelope on the supervisor's single input channel (std `mpsc` has
+/// no `select`, so client messages and worker events share one queue).
+enum SupIn {
+    Client(SupMsg),
+    Event { group: usize, epoch: u64, ev: Event },
+}
+
+/// Supervisor → worker commands.
+enum WorkerCmd {
+    Submit(Request),
+    Rescue(RescueEntry),
+    Drain,
+}
+
+/// Per-group cumulative counters kept on the supervisor side (they
+/// survive worker restarts; the stats endpoint reports them per row).
+#[derive(Clone, Copy, Debug, Default)]
+struct GroupStats {
+    seq_failures: u64,
+    rescues: u64,
+    completions: u64,
+    preemptions: u64,
+    resumes: u64,
+    swap_preemptions: u64,
+}
+
+/// Supervisor-side state for one decode group.
+struct GroupSlot {
+    tx: Option<Sender<WorkerCmd>>,
+    /// Currently valid lease epoch; bumping it fences the live worker.
+    lease: Arc<AtomicU64>,
+    /// Epoch of the worker incarnation the supervisor considers
+    /// current (== `lease` except transiently during quarantine).
+    epoch: u64,
+    hb: Arc<Heartbeat>,
+    health: GroupHealth,
+    /// Worker thread believed to be running.
+    live: bool,
+    /// Tick-error EMA (the health signal).
+    err_ema: f64,
+    restarts: u32,
+    /// When the pending restart fires; `None` = no restart scheduled.
+    restart_at: Option<Instant>,
+    /// Per-group live-KV byte budget (0 = unlimited).
+    budget: usize,
+    // Gauges from the last accepted Ticked event.
+    live_bytes: usize,
+    queue_depth: usize,
+    active: usize,
+    prefilling: usize,
+    kv_format: String,
+    stats: GroupStats,
+}
+
+impl GroupSlot {
+    fn row_json(&self, id: usize, assigned: usize) -> Json {
+        Json::obj(vec![
+            ("id", Json::from(id)),
+            ("health", Json::str(self.health.label())),
+            ("live_bytes", Json::from(self.live_bytes)),
+            ("queue_depth", Json::from(self.queue_depth)),
+            ("active", Json::from(self.active)),
+            ("prefilling", Json::from(self.prefilling)),
+            ("assigned", Json::from(assigned)),
+            ("kv_format", Json::str(&self.kv_format)),
+            ("seq_failures", Json::from(self.stats.seq_failures as usize)),
+            ("rescues", Json::from(self.stats.rescues as usize)),
+            ("restarts", Json::from(self.restarts as usize)),
+            ("completions", Json::from(self.stats.completions as usize)),
+            ("preemptions", Json::from(self.stats.preemptions as usize)),
+            ("resumes", Json::from(self.stats.resumes as usize)),
+            (
+                "swap_preemptions",
+                Json::from(self.stats.swap_preemptions as usize),
+            ),
+        ])
+    }
+}
+
+/// A submitted request the supervisor is still waiting on.
+struct Pending {
+    reply: Sender<Result<GenerateResponse>>,
+    prompt_tokens: usize,
+    /// Supervisor-side copy for shadow re-submission when the owning
+    /// group dies without exporting the sequence (same tokens, same
+    /// greedy continuation).
+    shadow: Request,
+    /// Group currently serving the request.
+    group: usize,
+}
+
+/// Handle to the supervisor thread (the server's serving core).
+pub struct Supervisor {
+    tx: Sender<SupIn>,
+    handle: Option<JoinHandle<()>>,
+}
+
+impl Supervisor {
+    /// Boot `serving.groups` workers (each loading runtime + engine +
+    /// manifest) and the supervisor loop; returns once every group is
+    /// up or the first one fails.
+    pub fn start(
+        cfg: ServingConfig,
+        default_policy: PolicyKind,
+    ) -> Result<Supervisor> {
+        let (tx, rx) = mpsc::channel::<SupIn>();
+        let (boot_tx, boot_rx) = mpsc::channel::<Result<()>>();
+        let events = tx.clone();
+        let handle = std::thread::Builder::new()
+            .name("lethe-supervisor".into())
+            .spawn(move || {
+                supervisor_thread(cfg, default_policy, rx, events, boot_tx);
+            })
+            .context("spawning supervisor thread")?;
+        boot_rx
+            .recv()
+            .context("supervisor thread died during boot")??;
+        Ok(Supervisor { tx, handle: Some(handle) })
+    }
+
+    /// Submit a request; returns a receiver for the completion.
+    pub fn submit(
+        &self,
+        req: GenerateRequest,
+    ) -> Result<Receiver<Result<GenerateResponse>>> {
+        let (tx, rx) = mpsc::channel();
+        self.tx
+            .send(SupIn::Client(SupMsg::Generate(req, tx)))
+            .map_err(|_| anyhow::anyhow!("server is shut down"))?;
+        Ok(rx)
+    }
+
+    /// Aggregate + per-group serving-pressure snapshot.
+    pub fn stats(&self) -> Result<Json> {
+        let (tx, rx) = mpsc::channel();
+        self.tx
+            .send(SupIn::Client(SupMsg::Stats(tx)))
+            .map_err(|_| anyhow::anyhow!("server is shut down"))?;
+        rx.recv().context("supervisor dropped the stats query")
+    }
+
+    /// Fence group `g` off and rescue its in-flight work onto healthy
+    /// peers (it restarts with backoff like any quarantined group).
+    /// Returns false when `g` is unknown or not currently serving.
+    pub fn quarantine_group(&self, g: usize) -> Result<bool> {
+        let (tx, rx) = mpsc::channel();
+        self.tx
+            .send(SupIn::Client(SupMsg::Quarantine(g, tx)))
+            .map_err(|_| anyhow::anyhow!("server is shut down"))?;
+        rx.recv().context("supervisor dropped the quarantine request")
+    }
+
+    /// Drain every group and stop the supervisor.
+    pub fn shutdown(mut self) {
+        let _ = self.tx.send(SupIn::Client(SupMsg::Shutdown));
+        if let Some(h) = self.handle.take() {
+            let _ = h.join();
+        }
+    }
+}
+
+impl Drop for Supervisor {
+    fn drop(&mut self) {
+        let _ = self.tx.send(SupIn::Client(SupMsg::Shutdown));
+        if let Some(h) = self.handle.take() {
+            let _ = h.join();
+        }
+    }
+}
+
+// ---------------------------------------------------------------------
+// Worker side
+// ---------------------------------------------------------------------
+
+/// Downgrade swapped rescue images to recompute prefixes. Used after an
+/// errored tick: the cache may hold rows the failed step half-wrote, so
+/// the safe export is the token prefix (still token-identical under
+/// greedy decode, paid in prefill FLOPs).
+fn downgrade_swapped(entries: Vec<RescueEntry>) -> Vec<RescueEntry> {
+    entries
+        .into_iter()
+        .map(|e| match e {
+            RescueEntry::Swapped { seq, .. } => {
+                let mut tokens = seq.prompt.clone();
+                tokens.extend_from_slice(&seq.generated);
+                RescueEntry::Resume { tokens, seq }
+            }
+            e => e,
+        })
+        .collect()
+}
+
+struct Worker {
+    group: usize,
+    epoch: u64,
+    cfg: ServingConfig,
+    default_policy: PolicyKind,
+    rx: Receiver<WorkerCmd>,
+    out: Sender<SupIn>,
+    lease: Arc<AtomicU64>,
+    hb: Arc<Heartbeat>,
+}
+
+impl Worker {
+    fn send(&self, ev: Event) {
+        let _ = self.out.send(SupIn::Event {
+            group: self.group,
+            epoch: self.epoch,
+            ev,
+        });
+    }
+
+    fn leased(&self) -> bool {
+        self.lease.load(Ordering::Acquire) == self.epoch
+    }
+
+    /// Thread body: boot, then the scheduler loop until drain, lease
+    /// loss, or panic.
+    fn run(self) {
+        let boot = (|| -> Result<(Engine, String)> {
+            let rt =
+                Runtime::load(std::path::Path::new(&self.cfg.artifacts_dir))?;
+            let fp = rt.meta.shard_manifest().fingerprint();
+            Ok((Engine::new(rt, self.cfg.clone())?, fp))
+        })();
+        let mut engine = match boot {
+            Ok((engine, fp)) => {
+                self.send(Event::Booted(Ok(fp)));
+                engine
+            }
+            Err(e) => {
+                self.send(Event::Booted(Err(e)));
+                return;
+            }
+        };
+
+        let mut sched = Scheduler::new(&engine, self.default_policy);
+        // Group-scoped fault plan (panic/stall seams); independent of
+        // the engine-seam plan the engine itself owns.
+        let mut gplan = FaultPlan::for_group(&self.cfg.faults, self.group);
+        let stall_sleep_ms =
+            (self.cfg.serving.tick_timeout_ms.saturating_mul(3)).max(50);
+        let mut last_snap = CounterSnap::default();
+        let mut shutdown = false;
+
+        loop {
+            // Command pump; blocks in short slices when idle so a lease
+            // loss is noticed promptly.
+            loop {
+                if !self.leased() {
+                    return;
+                }
+                let cmd = if sched.idle() && !shutdown {
+                    match self.rx.recv_timeout(Duration::from_millis(50)) {
+                        Ok(c) => c,
+                        Err(RecvTimeoutError::Timeout) => continue,
+                        Err(RecvTimeoutError::Disconnected) => {
+                            shutdown = true;
+                            break;
+                        }
+                    }
+                } else {
+                    match self.rx.try_recv() {
+                        Ok(c) => c,
+                        Err(_) => break,
+                    }
+                };
+                match cmd {
+                    WorkerCmd::Submit(r) => {
+                        let id = r.id;
+                        if let Err(err) = sched.submit(r) {
+                            self.send(Event::Rejected { id, err });
+                        }
+                    }
+                    WorkerCmd::Rescue(e) => sched.admit_rescued(e),
+                    WorkerCmd::Drain => {
+                        shutdown = true;
+                        break;
+                    }
+                }
+            }
+
+            if shutdown && !sched.draining() {
+                sched.begin_drain();
+            }
+            if sched.idle() {
+                if shutdown {
+                    self.send(Event::Exited);
+                    return;
+                }
+                continue;
+            }
+
+            // Injected stall: hold the heartbeat inside a fake tick
+            // long enough for the watchdog to fire, then honour the
+            // lease it will have revoked.
+            if let Some(p) = gplan.as_mut() {
+                if p.trip(FaultSite::GroupStall) {
+                    engine.metrics.faults_injected =
+                        engine.metrics.faults_injected.saturating_add(1);
+                    self.hb.enter();
+                    std::thread::sleep(Duration::from_millis(stall_sleep_ms));
+                    self.hb.exit();
+                    if !self.leased() {
+                        return;
+                    }
+                }
+            }
+            let panic_now = gplan
+                .as_mut()
+                .is_some_and(|p| p.trip(FaultSite::GroupPanic));
+
+            self.hb.enter();
+            let ticked = catch_unwind(AssertUnwindSafe(|| {
+                if panic_now {
+                    panic!("injected: group panic");
+                }
+                sched.tick(&mut engine)
+            }));
+            self.hb.exit();
+
+            match ticked {
+                Ok(Ok(report)) => {
+                    let snap = CounterSnap::capture(&sched, &engine);
+                    let delta = snap.delta(last_snap);
+                    last_snap = snap;
+                    self.send(Event::Ticked(Box::new(TickUpdate {
+                        errored: false,
+                        completions: report.completed,
+                        kv_format: sched.kv_format(),
+                        delta,
+                        live_bytes: sched.group.cache.live_bytes(),
+                        queue_depth: sched.waiting(),
+                        active: sched.active(),
+                        prefilling: sched.prefilling(),
+                        rescued: Vec::new(),
+                    })));
+                }
+                Ok(Err(e)) => {
+                    // The tick failed wholesale: scheduler/cache state
+                    // is suspect. Export everything as recompute
+                    // prefixes, hand it to the supervisor (which may
+                    // rescue it right back here if this group stays
+                    // below the quarantine line), and keep serving on a
+                    // rebuilt scheduler.
+                    crate::log_error!(
+                        "group {}: tick failed: {e:#}",
+                        self.group
+                    );
+                    let (entries, completions) = sched.export_for_rescue();
+                    let rescued = downgrade_swapped(entries);
+                    let snap = CounterSnap::capture(&sched, &engine);
+                    let delta = snap.delta(last_snap);
+                    last_snap = snap;
+                    let draining = sched.draining();
+                    sched = Scheduler::new(&engine, self.default_policy);
+                    if draining {
+                        sched.begin_drain();
+                    }
+                    self.send(Event::Ticked(Box::new(TickUpdate {
+                        errored: true,
+                        completions,
+                        kv_format: sched.kv_format(),
+                        delta,
+                        live_bytes: 0,
+                        queue_depth: 0,
+                        active: 0,
+                        prefilling: 0,
+                        rescued,
+                    })));
+                }
+                Err(_panic) => {
+                    // Export under a guard: the panic may have torn the
+                    // very state the export walks.
+                    let (rescued, completions) =
+                        catch_unwind(AssertUnwindSafe(|| {
+                            sched.export_for_rescue()
+                        }))
+                        .unwrap_or_default();
+                    self.send(Event::Panicked { rescued, completions });
+                    return;
+                }
+            }
+        }
+    }
+}
+
+// ---------------------------------------------------------------------
+// Supervisor side
+// ---------------------------------------------------------------------
+
+struct SupState {
+    cfg: ServingConfig,
+    default_policy: PolicyKind,
+    events: Sender<SupIn>,
+    tok: Tokenizer,
+    /// Fingerprint every worker must match (from the probe's manifest).
+    expected_fp: String,
+    /// Probe manifest (the stats endpoint's `model` object).
+    manifest: Json,
+    slots: Vec<GroupSlot>,
+    pending: HashMap<u64, Pending>,
+    /// Aggregate metrics across groups and restarts (delta-applied).
+    metrics: EngineMetrics,
+    next_id: u64,
+    shutdown: bool,
+    shutdown_deadline: Option<Instant>,
+}
+
+fn supervisor_thread(
+    cfg: ServingConfig,
+    default_policy: PolicyKind,
+    rx: Receiver<SupIn>,
+    events: Sender<SupIn>,
+    boot_tx: Sender<Result<()>>,
+) {
+    let probe = (|| -> Result<SupState> {
+        let meta =
+            ModelMeta::load(std::path::Path::new(&cfg.artifacts_dir))?;
+        let tok = Tokenizer::from_meta(&meta)?;
+        let manifest = meta.shard_manifest();
+        Ok(SupState {
+            expected_fp: manifest.fingerprint(),
+            manifest: manifest.to_json(),
+            tok,
+            slots: Vec::new(),
+            pending: HashMap::new(),
+            metrics: EngineMetrics::default(),
+            next_id: 1,
+            shutdown: false,
+            shutdown_deadline: None,
+            cfg,
+            default_policy,
+            events,
+        })
+    })();
+    let mut st = match probe {
+        Ok(st) => st,
+        Err(e) => {
+            let _ = boot_tx.send(Err(e));
+            return;
+        }
+    };
+
+    // Spawn every group, then hold the boot barrier: all workers up,
+    // fingerprints agreeing, before the server opens for business.
+    let n = st.cfg.serving.groups.max(1);
+    for g in 0..n {
+        let mut slot = GroupSlot {
+            tx: None,
+            lease: Arc::new(AtomicU64::new(1)),
+            epoch: 1,
+            hb: Arc::new(Heartbeat::new()),
+            health: GroupHealth::Quarantined,
+            live: false,
+            err_ema: 0.0,
+            restarts: 0,
+            restart_at: None,
+            budget: st
+                .cfg
+                .serving
+                .group_budget_bytes(st.cfg.scheduler.kv_budget_bytes),
+            live_bytes: 0,
+            queue_depth: 0,
+            active: 0,
+            prefilling: 0,
+            kv_format: String::new(),
+            stats: GroupStats::default(),
+        };
+        if let Err(e) = st.spawn_worker(g, &mut slot) {
+            let _ = boot_tx.send(Err(e));
+            return;
+        }
+        st.slots.push(slot);
+    }
+    let mut booted = 0usize;
+    while booted < n {
+        let Ok(msg) = rx.recv() else {
+            let _ = boot_tx
+                .send(Err(anyhow::anyhow!("supervisor channel closed at boot")));
+            return;
+        };
+        match msg {
+            SupIn::Event { group, epoch, ev } => {
+                if st.slots[group].epoch != epoch {
+                    continue;
+                }
+                match ev {
+                    Event::Booted(Ok(fp)) if fp == st.expected_fp => {
+                        st.slots[group].health = GroupHealth::Healthy;
+                        booted += 1;
+                    }
+                    Event::Booted(Ok(fp)) => {
+                        let _ = boot_tx.send(Err(anyhow::anyhow!(
+                            "group {group}: manifest fingerprint {fp} \
+                             disagrees with probe {}",
+                            st.expected_fp
+                        )));
+                        st.fence_all();
+                        return;
+                    }
+                    Event::Booted(Err(e)) => {
+                        let _ = boot_tx.send(
+                            Err(e).context(format!("group {group} boot")),
+                        );
+                        st.fence_all();
+                        return;
+                    }
+                    // Nothing else can arrive before the first submit.
+                    _ => {}
+                }
+            }
+            // Clients cannot reach us before boot_tx resolves; drop.
+            SupIn::Client(_) => {}
+        }
+    }
+    let _ = boot_tx.send(Ok(()));
+
+    // Main loop: pump one message (bounded wait so the watchdog and
+    // restart timers run even when idle), then supervise.
+    loop {
+        match rx.recv_timeout(Duration::from_millis(20)) {
+            Ok(msg) => {
+                st.handle(msg);
+                while let Ok(m) = rx.try_recv() {
+                    st.handle(m);
+                }
+            }
+            Err(RecvTimeoutError::Timeout) => {}
+            Err(RecvTimeoutError::Disconnected) => st.begin_shutdown(),
+        }
+        st.supervise();
+        if st.shutdown {
+            let groups_done = st.slots.iter().all(|s| !s.live);
+            let expired = st
+                .shutdown_deadline
+                .is_some_and(|d| Instant::now() >= d);
+            if groups_done || expired {
+                break;
+            }
+        }
+    }
+
+    // Fail whatever is still pending, typed, and fence any straggler.
+    for (_, p) in st.pending.drain() {
+        let _ = p.reply.send(Err(EngineError::ShuttingDown.into()));
+    }
+    st.fence_all();
+    // Worker handles are detached on purpose: a truly hung worker
+    // would otherwise wedge shutdown; the lease fence guarantees it
+    // can never touch shared state again.
+}
+
+impl SupState {
+    /// Spawn (or respawn) group `g`'s worker into `slot`.
+    fn spawn_worker(&self, g: usize, slot: &mut GroupSlot) -> Result<()> {
+        let (tx, rx) = mpsc::channel::<WorkerCmd>();
+        let mut wcfg = self.cfg.clone();
+        wcfg.scheduler.kv_budget_bytes = slot.budget;
+        // Decorrelate the engine-seam fault schedule per group (group
+        // 0 keeps the configured seed, preserving single-group runs).
+        wcfg.faults.seed = wcfg.faults.seed.wrapping_add(g as u64);
+        let worker = Worker {
+            group: g,
+            epoch: slot.epoch,
+            cfg: wcfg,
+            default_policy: self.default_policy,
+            rx,
+            out: self.events.clone(),
+            lease: Arc::clone(&slot.lease),
+            hb: Arc::clone(&slot.hb),
+        };
+        std::thread::Builder::new()
+            .name(format!("lethe-group-{g}"))
+            .spawn(move || worker.run())
+            .with_context(|| format!("spawning group {g} worker"))?;
+        slot.tx = Some(tx);
+        slot.live = true;
+        Ok(())
+    }
+
+    /// Revoke every group's lease (shutdown / aborted boot).
+    fn fence_all(&mut self) {
+        for s in &mut self.slots {
+            s.epoch += 1;
+            s.lease.store(s.epoch, Ordering::Release);
+            s.tx = None;
+        }
+    }
+
+    fn begin_shutdown(&mut self) {
+        if self.shutdown {
+            return;
+        }
+        self.shutdown = true;
+        for s in &mut self.slots {
+            s.restart_at = None;
+            if let Some(tx) = &s.tx {
+                let _ = tx.send(WorkerCmd::Drain);
+            }
+        }
+        self.shutdown_deadline = Some(
+            Instant::now()
+                + Duration::from_millis(
+                    self.cfg.scheduler.drain_window_ms + 3000,
+                ),
+        );
+    }
+
+    fn handle(&mut self, msg: SupIn) {
+        match msg {
+            SupIn::Client(SupMsg::Shutdown) => self.begin_shutdown(),
+            SupIn::Client(SupMsg::Stats(reply)) => {
+                let _ = reply.send(self.stats_json());
+            }
+            SupIn::Client(SupMsg::Quarantine(g, reply)) => {
+                let ok = g < self.slots.len()
+                    && self.slots[g].live
+                    && matches!(
+                        self.slots[g].health,
+                        GroupHealth::Healthy | GroupHealth::Degraded
+                    );
+                if ok {
+                    crate::log_error!("group {g}: operator quarantine");
+                    self.quarantine(g, Vec::new());
+                }
+                let _ = reply.send(ok);
+            }
+            SupIn::Client(SupMsg::Generate(req, reply)) => {
+                self.place(req, reply);
+            }
+            SupIn::Event { group, epoch, ev } => {
+                if self.slots[group].epoch == epoch {
+                    self.on_event(group, ev);
+                }
+            }
+        }
+    }
+
+    /// Requests currently assigned to group `g`.
+    fn assigned(&self, g: usize) -> usize {
+        self.pending.values().filter(|p| p.group == g).count()
+    }
+
+    fn placement_view(&self) -> Vec<(GroupHealth, usize, usize, usize)> {
+        (0..self.slots.len())
+            .map(|g| {
+                let s = &self.slots[g];
+                (s.health, s.budget, s.live_bytes, self.assigned(g))
+            })
+            .collect()
+    }
+
+    /// Backoff hint for `GroupUnavailable`: time until the nearest
+    /// scheduled restart, or one base backoff when none is scheduled.
+    fn unavailable_retry_ms(&self) -> u64 {
+        let now = Instant::now();
+        self.slots
+            .iter()
+            .filter_map(|s| s.restart_at)
+            .map(|at| at.saturating_duration_since(now).as_millis() as u64)
+            .min()
+            .unwrap_or(self.cfg.serving.restart_backoff_ms)
+            .clamp(25, 5000)
+    }
+
+    /// Admission: encode, clamp, place on the group with the most KV
+    /// headroom, and remember the shadow copy for rescue.
+    fn place(
+        &mut self,
+        req: GenerateRequest,
+        reply: Sender<Result<GenerateResponse>>,
+    ) {
+        if self.shutdown {
+            let _ = reply.send(Err(EngineError::ShuttingDown.into()));
+            return;
+        }
+        let prompt = match self.tok.encode_prompt(&req.prompt) {
+            Ok(p) => p,
+            Err(e) => {
+                let _ = reply.send(Err(e));
+                return;
+            }
+        };
+        let Some(g) = pick_target(&self.placement_view()) else {
+            let _ = reply.send(Err(EngineError::GroupUnavailable {
+                retry_after_ms: self.unavailable_retry_ms(),
+            }
+            .into()));
+            return;
+        };
+        let id = self.next_id;
+        self.next_id += 1;
+        let r = Request {
+            id,
+            prompt,
+            max_new_tokens: req
+                .max_new_tokens
+                .min(self.cfg.scheduler.max_new_tokens),
+            policy: req.policy.unwrap_or(self.default_policy),
+            submitted_at: Instant::now(),
+            deadline_ms: req.deadline_ms,
+        };
+        let pending = Pending {
+            reply,
+            prompt_tokens: r.prompt.len(),
+            shadow: r.clone(),
+            group: g,
+        };
+        let sent = self.slots[g]
+            .tx
+            .as_ref()
+            .is_some_and(|tx| tx.send(WorkerCmd::Submit(r)).is_ok());
+        if sent {
+            self.pending.insert(id, pending);
+        } else {
+            let _ = pending.reply.send(Err(EngineError::GroupUnavailable {
+                retry_after_ms: self.unavailable_retry_ms(),
+            }
+            .into()));
+        }
+    }
+
+    fn on_event(&mut self, g: usize, ev: Event) {
+        match ev {
+            Event::Booted(Ok(fp)) if fp == self.expected_fp => {
+                let s = &mut self.slots[g];
+                s.health = GroupHealth::Healthy;
+                s.err_ema = 0.0;
+                crate::log_error!(
+                    "group {g}: restarted (attempt {})",
+                    s.restarts
+                );
+            }
+            Event::Booted(Ok(_)) | Event::Booted(Err(_)) => {
+                if let Event::Booted(Err(e)) = ev {
+                    crate::log_error!("group {g}: reboot failed: {e:#}");
+                } else {
+                    crate::log_error!(
+                        "group {g}: reboot rejected: manifest mismatch"
+                    );
+                }
+                self.slots[g].live = false;
+                self.schedule_restart(g);
+            }
+            Event::Exited => {
+                self.slots[g].live = false;
+            }
+            Event::Rejected { id, err } => {
+                if let Some(p) = self.pending.remove(&id) {
+                    let _ = p.reply.send(Err(err));
+                }
+            }
+            Event::Panicked { rescued, completions } => {
+                crate::log_error!("group {g}: worker panicked mid-tick");
+                self.deliver(g, completions);
+                self.slots[g].live = false;
+                self.quarantine(g, rescued);
+            }
+            Event::Ticked(t) => {
+                let t = *t;
+                let s = &mut self.slots[g];
+                s.live_bytes = t.live_bytes;
+                s.queue_depth = t.queue_depth;
+                s.active = t.active;
+                s.prefilling = t.prefilling;
+                s.kv_format = t.kv_format;
+                s.stats.completions += t.completions.len() as u64;
+                s.stats.seq_failures += t.delta.seq_failures;
+                s.stats.preemptions += t.delta.preemptions;
+                s.stats.resumes += t.delta.resumes;
+                s.stats.swap_preemptions += t.delta.swap_preemptions;
+                t.delta.apply(&mut self.metrics);
+                // EMA update; quarantine only from a serving state (a
+                // group already being fenced reports no valid events).
+                s.err_ema = if t.errored {
+                    0.7 * s.err_ema + 0.3
+                } else {
+                    0.7 * s.err_ema
+                };
+                let health = classify(
+                    s.err_ema,
+                    self.cfg.serving.degraded_error_rate,
+                    self.cfg.serving.quarantine_error_rate,
+                );
+                self.deliver(g, t.completions);
+                if health == GroupHealth::Quarantined {
+                    crate::log_error!(
+                        "group {g}: tick-error EMA {:.2} past the \
+                         quarantine line",
+                        self.slots[g].err_ema
+                    );
+                    self.quarantine(g, t.rescued);
+                } else {
+                    self.slots[g].health = health;
+                    for e in t.rescued {
+                        self.rescue_entry(e, g);
+                    }
+                }
+            }
+        }
+    }
+
+    /// Route a finished batch to its reply channels.
+    fn deliver(&mut self, g: usize, completions: Vec<Completion>) {
+        let kv_format = self.slots[g].kv_format.clone();
+        for c in completions {
+            let Some(p) = self.pending.remove(&c.id) else {
+                continue;
+            };
+            let resp = GenerateResponse {
+                id: c.id,
+                text: self.tok.decode(&c.generated),
+                finish: format!("{:?}", c.finish),
+                prompt_tokens: p.prompt_tokens,
+                generated_tokens: c.generated.len(),
+                ttft_s: c.ttft,
+                total_s: c.total,
+                prune_rounds: c.prune_rounds,
+                preemptions: c.preemptions,
+                kv_format: kv_format.clone(),
+            };
+            let _ = p.reply.send(Ok(resp));
+        }
+    }
+
+    /// Fence group `g`, rescue everything it was serving, and schedule
+    /// its restart (or declare it dead past the restart budget).
+    /// `exported` is whatever the worker managed to hand over; pending
+    /// requests not covered by it are shadow-resubmitted from the
+    /// supervisor's own request copies.
+    fn quarantine(&mut self, g: usize, exported: Vec<RescueEntry>) {
+        {
+            let s = &mut self.slots[g];
+            if matches!(
+                s.health,
+                GroupHealth::Quarantined | GroupHealth::Dead
+            ) && s.tx.is_none()
+            {
+                return; // already fenced
+            }
+            self.metrics.group_quarantines += 1;
+            s.health = GroupHealth::Quarantined;
+            s.err_ema = 0.0;
+            s.epoch += 1;
+            s.lease.store(s.epoch, Ordering::Release);
+            s.tx = None;
+            s.live = false;
+            s.live_bytes = 0;
+            s.queue_depth = 0;
+            s.active = 0;
+            s.prefilling = 0;
+        }
+        let mut covered = Vec::new();
+        for e in exported {
+            covered.push(e.id());
+            self.rescue_entry(e, g);
+        }
+        let orphans: Vec<u64> = self
+            .pending
+            .iter()
+            .filter(|&(id, p)| p.group == g && !covered.contains(id))
+            .map(|(id, _)| *id)
+            .collect();
+        for id in orphans {
+            let shadow = self.pending[&id].shadow.clone();
+            self.rescue_entry(RescueEntry::Fresh(shadow), g);
+        }
+        self.schedule_restart(g);
+    }
+
+    fn schedule_restart(&mut self, g: usize) {
+        let s = &mut self.slots[g];
+        if self.shutdown {
+            return;
+        }
+        if s.restarts >= self.cfg.serving.max_restarts {
+            crate::log_error!(
+                "group {g}: restart budget spent ({}); marking dead",
+                s.restarts
+            );
+            s.health = GroupHealth::Dead;
+            s.restart_at = None;
+            return;
+        }
+        let delay =
+            backoff_ms(self.cfg.serving.restart_backoff_ms, s.restarts);
+        s.restart_at = Some(Instant::now() + Duration::from_millis(delay));
+    }
+
+    /// Move one rescued unit onto the best healthy group (which may be
+    /// `from` itself after a below-threshold errored tick). When no
+    /// group can take it, the request finishes typed:
+    /// `Error(GroupLost)` with whatever text it had produced.
+    fn rescue_entry(&mut self, e: RescueEntry, from: usize) {
+        let id = e.id();
+        let bytes = e.payload_bytes() as u64;
+        if !self.pending.contains_key(&id) {
+            return; // completed or failed while the rescue was in flight
+        }
+        let target = pick_target(&self.placement_view());
+        let sent = target.is_some_and(|t| {
+            self.slots[t]
+                .tx
+                .as_ref()
+                .is_some_and(|tx| tx.send(WorkerCmd::Rescue(e)).is_ok())
+        });
+        // `e` moved into the channel on success; on failure the typed
+        // finish below reconstructs its text from the shadow copy.
+        if sent {
+            let t = target.unwrap();
+            let p = self.pending.get_mut(&id).unwrap();
+            p.group = t;
+            self.metrics.rescued_seqs += 1;
+            self.metrics.rescue_bytes += bytes;
+            self.slots[from].stats.rescues += 1;
+            return;
+        }
+        let p = self.pending.remove(&id).unwrap();
+        let resp = GenerateResponse {
+            id,
+            text: String::new(),
+            finish: format!(
+                "{:?}",
+                FinishReason::Error(FailureKind::GroupLost)
+            ),
+            prompt_tokens: p.prompt_tokens,
+            generated_tokens: 0,
+            ttft_s: 0.0,
+            total_s: p.shadow.submitted_at.elapsed().as_secs_f64(),
+            prune_rounds: 0,
+            preemptions: 0,
+            kv_format: String::new(),
+        };
+        let _ = p.reply.send(Ok(resp));
+    }
+
+    /// Watchdog + restart timers; runs every loop iteration.
+    fn supervise(&mut self) {
+        let timeout = self.cfg.serving.tick_timeout_ms;
+        for g in 0..self.slots.len() {
+            let stalled = timeout > 0
+                && self.slots[g].live
+                && matches!(
+                    self.slots[g].health,
+                    GroupHealth::Healthy | GroupHealth::Degraded
+                )
+                && self.slots[g].hb.stalled(timeout);
+            if stalled {
+                crate::log_error!(
+                    "group {g}: tick overran {timeout} ms; quarantining"
+                );
+                self.quarantine(g, Vec::new());
+            }
+        }
+        for g in 0..self.slots.len() {
+            let due = self.slots[g]
+                .restart_at
+                .is_some_and(|at| Instant::now() >= at);
+            if !due || self.shutdown {
+                continue;
+            }
+            self.slots[g].restart_at = None;
+            self.slots[g].restarts += 1;
+            self.metrics.group_restarts += 1;
+            let mut slot = std::mem::replace(
+                &mut self.slots[g],
+                GroupSlot {
+                    tx: None,
+                    lease: Arc::new(AtomicU64::new(0)),
+                    epoch: 0,
+                    hb: Arc::new(Heartbeat::new()),
+                    health: GroupHealth::Dead,
+                    live: false,
+                    err_ema: 0.0,
+                    restarts: 0,
+                    restart_at: None,
+                    budget: 0,
+                    live_bytes: 0,
+                    queue_depth: 0,
+                    active: 0,
+                    prefilling: 0,
+                    kv_format: String::new(),
+                    stats: GroupStats::default(),
+                },
+            );
+            // Fresh heartbeat so a stall from the dead incarnation
+            // cannot re-trip the watchdog.
+            slot.hb = Arc::new(Heartbeat::new());
+            let spawned = self.spawn_worker(g, &mut slot);
+            self.slots[g] = slot;
+            if let Err(e) = spawned {
+                crate::log_error!("group {g}: respawn failed: {e:#}");
+                self.slots[g].live = false;
+                self.schedule_restart(g);
+            }
+            // Health stays Quarantined until Booted(Ok) flips it.
+        }
+    }
+
+    /// The `{"stats": true}` document: the single-scheduler shape
+    /// (aggregated), plus per-group rows, supervision counters and the
+    /// shard manifest.
+    fn stats_json(&mut self) -> Json {
+        let queue: usize = self.slots.iter().map(|s| s.queue_depth).sum();
+        let prefilling: usize =
+            self.slots.iter().map(|s| s.prefilling).sum();
+        let active: usize = self.slots.iter().map(|s| s.active).sum();
+        let live: usize = self.slots.iter().map(|s| s.live_bytes).sum();
+        let fmt = {
+            let mut fmts: Vec<&str> = self
+                .slots
+                .iter()
+                .filter(|s| !s.kv_format.is_empty())
+                .map(|s| s.kv_format.as_str())
+                .collect();
+            fmts.sort_unstable();
+            fmts.dedup();
+            match fmts.as_slice() {
+                [] => self.cfg.kv.format.label().to_string(),
+                [one] => one.to_string(),
+                _ => "mixed".to_string(),
+            }
+        };
+        self.metrics.queue_depth_last = queue;
+        self.metrics.live_bytes_last = live;
+        let rows: Vec<Json> = (0..self.slots.len())
+            .map(|g| self.slots[g].row_json(g, self.assigned(g)))
+            .collect();
+        Json::obj(vec![
+            ("queue_depth", Json::from(queue)),
+            ("prefilling", Json::from(prefilling)),
+            ("active", Json::from(active)),
+            ("rejected", Json::from(self.metrics.rejected as usize)),
+            ("preemptions", Json::from(self.metrics.preemptions as usize)),
+            ("resumes", Json::from(self.metrics.resumes as usize)),
+            (
+                "kv_migrations",
+                Json::from(self.metrics.kv_migrations as usize),
+            ),
+            ("kv_format", Json::str(&fmt)),
+            ("draining", Json::from(self.shutdown)),
+            ("groups", Json::Arr(rows)),
+            ("model", self.manifest.clone()),
+            ("metrics", self.metrics.to_json()),
+        ])
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn backoff_doubles_and_saturates() {
+        assert_eq!(backoff_ms(100, 0), 100);
+        assert_eq!(backoff_ms(100, 1), 200);
+        assert_eq!(backoff_ms(100, 3), 800);
+        assert_eq!(backoff_ms(0, 0), 1, "zero base still waits");
+        // Shift-capped: huge restart counts neither overflow nor wrap.
+        assert_eq!(backoff_ms(100, 64), 100 * (1 << 16));
+        assert!(backoff_ms(u64::MAX, 16) == u64::MAX, "saturates");
+    }
+
+    #[test]
+    fn health_classification_thresholds() {
+        assert_eq!(classify(0.0, 0.1, 0.5), GroupHealth::Healthy);
+        assert_eq!(classify(0.09, 0.1, 0.5), GroupHealth::Healthy);
+        assert_eq!(classify(0.1, 0.1, 0.5), GroupHealth::Degraded);
+        assert_eq!(classify(0.49, 0.1, 0.5), GroupHealth::Degraded);
+        assert_eq!(classify(0.5, 0.1, 0.5), GroupHealth::Quarantined);
+        assert_eq!(GroupHealth::Dead.label(), "dead");
+    }
+
+    #[test]
+    fn ema_reaches_quarantine_under_sustained_errors() {
+        // The worker-side update: errored → 0.7e + 0.3, ok → 0.7e.
+        let mut ema: f64 = 0.0;
+        let mut ticks = 0;
+        while ema < 0.5 {
+            ema = 0.7 * ema + 0.3;
+            ticks += 1;
+            assert!(ticks < 10, "sustained errors must cross the line");
+        }
+        assert_eq!(ticks, 3, "three consecutive errored ticks quarantine");
+        // One error among many healthy ticks only degrades transiently.
+        let mut ema = 0.3f64;
+        for _ in 0..8 {
+            ema *= 0.7;
+        }
+        assert!(ema < 0.1, "healthy ticks decay back below degraded");
+    }
+
+    #[test]
+    fn placement_prefers_healthy_max_headroom() {
+        use GroupHealth::*;
+        // (health, budget, live_bytes, assigned)
+        let groups = vec![
+            (Healthy, 1000, 800, 0), // headroom 200
+            (Healthy, 1000, 100, 5), // headroom 900 ← winner
+            (Degraded, 1000, 0, 0),  // more headroom but degraded
+            (Quarantined, 1000, 0, 0),
+        ];
+        assert_eq!(pick_target(&groups), Some(1));
+        // No healthy group: degraded beats nothing; dead/quarantined
+        // are never picked.
+        let groups = vec![
+            (Quarantined, 1000, 0, 0),
+            (Degraded, 1000, 500, 0),
+            (Dead, 1000, 0, 0),
+        ];
+        assert_eq!(pick_target(&groups), Some(1));
+        assert_eq!(
+            pick_target(&[(Dead, 0, 0, 0), (Quarantined, 0, 0, 0)]),
+            None
+        );
+        // Unlimited budget: fewest assigned requests wins, then the
+        // lowest group id.
+        let groups =
+            vec![(Healthy, 0, 0, 2), (Healthy, 0, 0, 1), (Healthy, 0, 0, 1)];
+        assert_eq!(pick_target(&groups), Some(1));
+    }
+
+    #[test]
+    fn counter_deltas_saturate_across_restarts() {
+        let a = CounterSnap { decode_steps: 10, resumes: 2, ..Default::default() };
+        let b = CounterSnap { decode_steps: 14, resumes: 2, ..Default::default() };
+        let d = b.delta(a);
+        assert_eq!(d.decode_steps, 4);
+        assert_eq!(d.resumes, 0);
+        // A fresh engine's counters restart from zero: the delta
+        // saturates instead of wrapping.
+        let fresh = CounterSnap { decode_steps: 1, ..Default::default() };
+        assert_eq!(fresh.delta(b).decode_steps, 0);
+        let mut m = EngineMetrics::default();
+        d.apply(&mut m);
+        d.apply(&mut m);
+        assert_eq!(m.decode_steps, 8, "deltas accumulate");
+    }
+
+    #[test]
+    fn heartbeat_stall_detection() {
+        let hb = Heartbeat::new();
+        assert!(!hb.stalled(0), "not in a tick, never stalled");
+        hb.enter();
+        std::thread::sleep(Duration::from_millis(5));
+        assert!(hb.stalled(1), "tick older than the timeout");
+        assert!(!hb.stalled(10_000), "young tick is fine");
+        hb.exit();
+        assert!(!hb.stalled(1), "exit clears the stall");
+    }
+
+    #[test]
+    fn downgrade_turns_images_into_recompute_prefixes() {
+        use crate::policy::FullKv;
+        let mut seq =
+            crate::engine::SeqState::new(9, Box::new(FullKv), 1, 8, 2);
+        seq.prompt = vec![1, 3];
+        seq.generated = vec![7];
+        let entries = vec![RescueEntry::Resume {
+            tokens: vec![1, 3],
+            seq,
+        }];
+        let out = downgrade_swapped(entries);
+        assert!(
+            matches!(&out[0], RescueEntry::Resume { tokens, .. }
+                     if tokens == &vec![1, 3]),
+            "non-swapped entries pass through untouched"
+        );
+    }
+}

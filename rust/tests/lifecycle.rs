@@ -5,14 +5,16 @@
 //! `src/scheduler/mod.rs`.
 
 use std::path::Path;
-use std::time::Instant;
+use std::time::{Duration, Instant};
 
+use lethe::bench_support::sum_group_rows;
 use lethe::config::ServingConfig;
 use lethe::engine::{Engine, FinishReason};
 use lethe::model::Tokenizer;
 use lethe::policy::PolicyKind;
 use lethe::runtime::Runtime;
 use lethe::scheduler::{Completion, Request, Scheduler};
+use lethe::server::{GenerateRequest, Server};
 use lethe::util::prng::Rng;
 use lethe::workload::make_task;
 
@@ -424,5 +426,123 @@ fn incremental_prefill_is_token_identical_and_linear() {
         inc_tokens < base_tokens,
         "incremental path must push fewer tokens through the prefill \
          executables ({inc_tokens} vs {base_tokens})"
+    );
+}
+
+/// (f) Cross-group rescue is token-identical: a request in flight on a
+/// decode group that gets quarantined is rescued onto the healthy peer
+/// and finishes with exactly the text of an uncontended run (rescue
+/// replays the same tokens; greedy decode is deterministic). The
+/// quarantined group then restarts with backoff and returns to
+/// `healthy` without disturbing the peer.
+#[test]
+fn rescued_sequence_continues_token_identically_across_groups() {
+    // Uncontended baseline on a plain single engine.
+    let Some((mut engine, tok)) = engine_or_skip(ServingConfig::default())
+    else {
+        return;
+    };
+    let mut picked = None;
+    for seed in 0..24 {
+        let t = make_task(&mut Rng::new(seed), 8, 2);
+        let p = tok.encode_prompt(&t.prompt).unwrap();
+        if p.len() > 64 {
+            continue;
+        }
+        let c = solo_run(&mut engine, p.clone(), 40, PolicyKind::FullKv);
+        if c.generated.len() >= 6 {
+            picked = Some((t, c));
+            break;
+        }
+    }
+    let Some((task, solo)) = picked else {
+        eprintln!("[skip] no task with a long enough solo run");
+        return;
+    };
+    let solo_text = tok.decode(&solo.generated);
+    drop(engine);
+
+    // Two supervised groups. A small prefill chunk stretches the
+    // request across many ticks so the quarantine lands mid-flight
+    // (any interleaving is safe: the supervisor shadow-resubmits work
+    // its worker could not export).
+    let mut cfg = ServingConfig::default();
+    cfg.scheduler.prefill_chunk = 8;
+    cfg.serving.groups = 2;
+    cfg.serving.restart_backoff_ms = 50;
+    let server = Server::start(cfg, PolicyKind::FullKv).unwrap();
+
+    // Placement at idle is deterministic: equal headroom and zero
+    // assigned requests tie-break to the lowest id, so the request
+    // lands on group 0 — which we immediately fence.
+    let rx = server
+        .submit(GenerateRequest {
+            prompt: task.prompt.clone(),
+            max_new_tokens: 40,
+            policy: None,
+            deadline_ms: None,
+        })
+        .unwrap();
+    assert!(
+        server.quarantine_group(0).unwrap(),
+        "group 0 must be serving when the quarantine lands"
+    );
+
+    let resp = rx
+        .recv_timeout(Duration::from_secs(180))
+        .expect("rescued request never completed")
+        .expect("rescued request failed");
+    assert_eq!(
+        resp.text, solo_text,
+        "rescued run diverged from the uncontended run"
+    );
+    assert_eq!(resp.generated_tokens, solo.generated.len());
+
+    // The rescue is visible in the supervision counters, and the
+    // per-group rows balance against them.
+    let stats = server.stats().unwrap();
+    let m = stats.get("metrics").unwrap();
+    let mg = |k: &str| m.get(k).unwrap().as_usize().unwrap() as u64;
+    assert!(mg("rescued_seqs") >= 1, "no rescue was counted");
+    assert!(mg("group_quarantines") >= 1, "no quarantine was counted");
+    let sums = sum_group_rows(&stats).unwrap();
+    assert_eq!(sums.rescues, mg("rescued_seqs"));
+    assert_eq!(sums.completions, 1, "exactly one completion delivered");
+    let rows = stats.get("groups").unwrap().as_arr().unwrap();
+    assert_eq!(rows.len(), 2);
+    assert!(
+        rows[0].get("rescues").unwrap().as_usize().unwrap() >= 1,
+        "the rescue must be charged to the fenced group"
+    );
+
+    // The fenced group restarts with backoff and reports healthy again;
+    // the peer was never disturbed.
+    let deadline = Instant::now() + Duration::from_secs(60);
+    loop {
+        let s = server.stats().unwrap();
+        let row = &s.get("groups").unwrap().as_arr().unwrap()[0];
+        let health = row.get("health").unwrap().as_str().unwrap().to_string();
+        if health == "healthy"
+            && row.get("restarts").unwrap().as_usize().unwrap() >= 1
+        {
+            break;
+        }
+        assert!(
+            Instant::now() < deadline,
+            "group 0 never restarted (health {health})"
+        );
+        std::thread::sleep(Duration::from_millis(25));
+    }
+    let resp2 = server
+        .generate(GenerateRequest {
+            prompt: task.prompt.clone(),
+            max_new_tokens: 40,
+            policy: None,
+            deadline_ms: None,
+        })
+        .expect("serving continues after the restart");
+    assert_eq!(
+        resp2.text, solo_text,
+        "post-restart serving diverged from the uncontended run"
     );
 }

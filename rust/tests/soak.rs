@@ -17,12 +17,16 @@
 //! suite in release mode so this exercises the optimized scheduler.
 
 use std::path::Path;
+use std::time::{Duration, Instant};
 
-use lethe::bench_support::run_churn;
+use lethe::bench_support::{
+    run_churn, sum_group_rows, write_bench_json, BenchJsonRow,
+};
 use lethe::config::{MixedKvRule, ServingConfig};
 use lethe::engine::FinishReason;
 use lethe::kvcache::KvFormat;
 use lethe::policy::PolicyKind;
+use lethe::server::{GenerateRequest, Server};
 use lethe::util::prng::Rng;
 use lethe::workload::make_task;
 
@@ -120,6 +124,21 @@ fn churn_soak_preempts_resumes_and_migrates_without_oom() {
         stats.interleaved_ticks >= 1,
         "no decode step landed during a chunked prefill"
     );
+
+    // Group-aware accounting: the single-scheduler run fills exactly
+    // one lane, and the lane sums reproduce the aggregates (the same
+    // invariant the multi-group soak asserts over supervisor rows).
+    assert_eq!(stats.lanes.len(), 1);
+    let completions_sum: u64 =
+        stats.lanes.iter().map(|l| l.completions).sum();
+    let preemptions_sum: u64 =
+        stats.lanes.iter().map(|l| l.preemptions).sum();
+    let resumes_sum: u64 = stats.lanes.iter().map(|l| l.resumes).sum();
+    let oom_sum: u64 = stats.lanes.iter().map(|l| l.oom_finishes).sum();
+    assert_eq!(completions_sum, completions.len() as u64);
+    assert_eq!(preemptions_sum, stats.preemptions);
+    assert_eq!(resumes_sum, stats.resumes);
+    assert_eq!(oom_sum, stats.oom_finishes as u64);
 }
 
 /// Chaos soak: the same churn shape with seeded fault injection live at
@@ -215,4 +234,234 @@ fn chaos_soak_fault_injection_yields_typed_completions() {
     // Injected faults surface as typed Error finishes, never as
     // OOM-kills or hangs.
     assert_eq!(stats.oom_finishes, 0, "faults must surface as Error, not Oom");
+}
+
+/// Multi-group chaos soak: three supervised decode groups under seeded
+/// group-level fault injection (`faults.group_rate` arms the GroupPanic
+/// and GroupStall seams) with stall detection on. Asserts the
+/// supervision acceptance criteria in one sustained run:
+///
+///   * every submitted request reaches **exactly one** typed completion
+///     — rescued across groups, typed-failed, or typed-rejected, never
+///     lost, hung, or OOM-killed;
+///   * the per-group stats rows sum to the aggregate supervision
+///     counters (the bookkeeping balances across groups and restarts);
+///   * a quarantined group restarts with backoff and returns to
+///     `healthy` while its peers keep serving (forced deterministically
+///     via the operator-quarantine lever, independent of the seed's
+///     fault schedule).
+///
+/// The fault seed comes from `LETHE_FAULT_SEED` (CI runs a seed matrix
+/// in release mode). Emits `bench_results/BENCH_table3.json` with the
+/// run's throughput + rescue counters for the robustness trail.
+#[test]
+fn multi_group_chaos_soak_rescues_and_restarts() {
+    let dir = Path::new("artifacts");
+    if !dir.join("model_meta.json").exists() {
+        eprintln!("[skip] run `make artifacts` first");
+        return;
+    }
+    let seed: u64 = std::env::var("LETHE_FAULT_SEED")
+        .ok()
+        .and_then(|s| s.parse().ok())
+        .unwrap_or(1);
+    let mut cfg = ServingConfig::default();
+    cfg.scheduler.max_batch = 4;
+    cfg.scheduler.prefill_chunk = 24;
+    cfg.serving.groups = 3;
+    cfg.serving.tick_timeout_ms = 250;
+    // The soak is about recovery, not permanent death: a generous
+    // restart budget with a short base backoff keeps every group
+    // cycling through quarantine → restart → healthy under fire.
+    cfg.serving.max_restarts = 100;
+    cfg.serving.restart_backoff_ms = 50;
+    cfg.faults.seed = seed;
+    cfg.faults.group_rate = 0.02;
+    let server = Server::start(cfg, PolicyKind::Lethe).unwrap();
+
+    // Mixed-length churn across the groups.
+    let mut rng = Rng::new(13);
+    let tasks: Vec<_> = (0..18)
+        .map(|i| {
+            if i % 3 == 0 {
+                make_task(&mut rng, 12, 3)
+            } else {
+                make_task(&mut rng, 4, 1)
+            }
+        })
+        .collect();
+    let t0 = Instant::now();
+    let rxs: Vec<_> = tasks
+        .iter()
+        .map(|t| {
+            server
+                .submit(GenerateRequest {
+                    prompt: t.prompt.clone(),
+                    max_new_tokens: 16,
+                    policy: None,
+                    deadline_ms: None,
+                })
+                .unwrap()
+        })
+        .collect();
+
+    // Every request reaches exactly one typed completion: the reply
+    // channel yields one result and then disconnects (the supervisor
+    // dropped its sender).
+    let mut ok_responses = Vec::new();
+    for (i, rx) in rxs.into_iter().enumerate() {
+        let res = rx
+            .recv_timeout(Duration::from_secs(180))
+            .unwrap_or_else(|e| panic!("request {i} never completed: {e}"));
+        match res {
+            Ok(resp) => {
+                assert_ne!(
+                    resp.finish, "Oom",
+                    "request {i}: chaos must never surface as an OOM-kill"
+                );
+                ok_responses.push(resp);
+            }
+            Err(e) => {
+                // Typed rejection (queue pressure / no serving group).
+                let typed = e.downcast_ref::<lethe::error::EngineError>();
+                assert!(
+                    typed.is_some(),
+                    "request {i}: untyped error {e:#}"
+                );
+            }
+        }
+        assert!(
+            rx.recv_timeout(Duration::from_secs(1)).is_err(),
+            "request {i} completed more than once"
+        );
+    }
+    let wall_s = t0.elapsed().as_secs_f64();
+    assert!(
+        !ok_responses.is_empty(),
+        "no request survived the chaos run (seed {seed})"
+    );
+
+    // Per-group rows sum to the aggregate counters — the supervision
+    // bookkeeping balances across groups, rescues and restarts.
+    let stats = server.stats().unwrap();
+    let sums = sum_group_rows(&stats).unwrap();
+    let m = stats.get("metrics").unwrap();
+    let mg = |k: &str| m.get(k).unwrap().as_usize().unwrap() as u64;
+    assert_eq!(sums.preemptions, mg("preemptions"));
+    assert_eq!(sums.resumes, mg("resumes"));
+    assert_eq!(sums.seq_failures, mg("seq_failures"));
+    assert_eq!(sums.rescues, mg("rescued_seqs"));
+    assert_eq!(sums.restarts, mg("group_restarts"));
+    assert_eq!(
+        sums.queue_depth,
+        stats.get("queue_depth").unwrap().as_usize().unwrap()
+    );
+    assert_eq!(
+        stats.get("groups").unwrap().as_arr().unwrap().len(),
+        3,
+        "stats must report one row per configured group"
+    );
+
+    // Deterministic quarantine → restart-with-backoff → healthy cycle,
+    // independent of the seed's fault schedule: fence a serving group
+    // via the operator lever and watch it come back. Groups fenced by
+    // the chaos schedule may still be mid-restart, so poll for one
+    // that is currently healthy.
+    let deadline = Instant::now() + Duration::from_secs(60);
+    let serving = loop {
+        let s = server.stats().unwrap();
+        let found = s
+            .get("groups")
+            .unwrap()
+            .as_arr()
+            .unwrap()
+            .iter()
+            .position(|r| {
+                r.get("health").unwrap().as_str().unwrap() == "healthy"
+            });
+        if let Some(g) = found {
+            break g;
+        }
+        assert!(
+            Instant::now() < deadline,
+            "no group returned to healthy after the run"
+        );
+        std::thread::sleep(Duration::from_millis(25));
+    };
+    let quarantines_before = mg("group_quarantines");
+    assert!(
+        server.quarantine_group(serving).unwrap(),
+        "operator quarantine of a healthy group must be accepted"
+    );
+    let deadline = Instant::now() + Duration::from_secs(60);
+    loop {
+        let s = server.stats().unwrap();
+        let row = &s.get("groups").unwrap().as_arr().unwrap()[serving];
+        let health = row.get("health").unwrap().as_str().unwrap().to_string();
+        let restarts = row.get("restarts").unwrap().as_usize().unwrap();
+        if health == "healthy" && restarts >= 1 {
+            let q = s
+                .get("metrics")
+                .unwrap()
+                .get("group_quarantines")
+                .unwrap()
+                .as_usize()
+                .unwrap() as u64;
+            assert!(q > quarantines_before, "quarantine was not counted");
+            break;
+        }
+        assert!(
+            Instant::now() < deadline,
+            "group {serving} never restarted (health {health}, \
+             {restarts} restarts)"
+        );
+        std::thread::sleep(Duration::from_millis(25));
+    }
+
+    // Peers kept serving through the cycle: a fresh request completes
+    // (retrying the typed retryable rejections the chaos schedule can
+    // still produce).
+    let mut attempts = 0;
+    let resp = loop {
+        match server.generate(GenerateRequest {
+            prompt: tasks[0].prompt.clone(),
+            max_new_tokens: 8,
+            policy: None,
+            deadline_ms: None,
+        }) {
+            Ok(r) => break r,
+            Err(e) => {
+                attempts += 1;
+                assert!(
+                    attempts < 10,
+                    "serving never resumed after the cycle: {e:#}"
+                );
+                std::thread::sleep(Duration::from_millis(100));
+            }
+        }
+    };
+    assert_ne!(resp.finish, "Oom");
+
+    // Robustness trail: BENCH_table3.json with the run's throughput and
+    // rescue traffic.
+    let gen_tokens: usize =
+        ok_responses.iter().map(|r| r.generated_tokens).sum();
+    let kv_format = stats
+        .get("kv_format")
+        .unwrap()
+        .as_str()
+        .unwrap()
+        .to_string();
+    write_bench_json(
+        "table3",
+        &[BenchJsonRow {
+            name: format!("multi_group_chaos_seed{seed}"),
+            kv_format,
+            tokens_per_s: gen_tokens as f64 / wall_s.max(1e-9),
+            upload_bytes_per_step: mg("rescue_bytes") as usize,
+        }],
+    )
+    .unwrap();
+
+    drop(server); // graceful drain
 }
