@@ -242,18 +242,21 @@ fn main() -> anyhow::Result<()> {
                     kv_format: "f32".into(),
                     tokens_per_s: 8.0 / s_f32_delta.mean,
                     upload_bytes_per_step: st_f.bytes_copied,
+                    extra: Vec::new(),
                 },
                 BenchJsonRow {
                     name: "delta_pack_step".into(),
                     kv_format: "q8".into(),
                     tokens_per_s: 8.0 / s_q8_packed.mean,
                     upload_bytes_per_step: st_8.bytes_copied,
+                    extra: Vec::new(),
                 },
                 BenchJsonRow {
                     name: "delta_pack_step".into(),
                     kv_format: "q4".into(),
                     tokens_per_s: 8.0 / s_q4_packed.mean,
                     upload_bytes_per_step: st_4.bytes_copied,
+                    extra: Vec::new(),
                 },
             ],
         )?;

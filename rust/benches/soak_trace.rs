@@ -1,0 +1,213 @@
+//! Trace-driven multi-tenant soak bench: replay the pinned mixed-tenant
+//! trace (interactive short-prompt + batch long-reasoning,
+//! `workload::trace::pinned`) through the deterministic virtual-time
+//! scheduler twin (`sim::replay`) and emit the SLO trail the CI
+//! `bench-soak` job gates on:
+//!
+//!   * `sim_soak_g{1,3}_<class>` — per-class p50/p95/p99 TTFT/TPOT/e2e,
+//!     SLO attainment, goodput and preemption-fairness counters for the
+//!     1-group and 3-group replays;
+//!   * `sim_soak_g{1,3}_aggregate` — makespan, tokens/s, preemption and
+//!     swap totals, deadline aborts, plus the trace fingerprint (the CI
+//!     gate refuses to compare runs of different traces);
+//!   * `swap_sweep_thr<T>` — the `swap_threshold_bytes_per_token` sweep
+//!     under a budget that binds, the data behind the tuned 4096
+//!     default in `SchedulerConfig`;
+//!   * `real_soak_<class>` — the same trace through the real scheduler
+//!     (`bench_support::replay_trace`) when AOT artifacts are present;
+//!     skipped with a notice otherwise (CI has no artifacts, so the
+//!     gate reads only the `sim_*` rows).
+//!
+//! Everything lands in `bench_results/BENCH_soak.json` via
+//! `write_bench_json`; the committed reference lives in
+//! `rust/bench_baselines/BENCH_soak.json`.
+
+use lethe::bench_support::{
+    replay_trace, try_engine, write_bench_json, BenchJsonRow,
+};
+use lethe::config::ServingConfig;
+use lethe::policy::PolicyKind;
+use lethe::sim::replay::{replay, ReplayConfig, ReplayReport};
+use lethe::util::json::Json;
+use lethe::workload::slo::{summarize, table, ClassSlo};
+use lethe::workload::trace::{generate, pinned, trace_fingerprint};
+
+/// Per-class rows + one aggregate row for a replay under `tag`.
+fn report_rows(
+    tag: &str,
+    rep: &ReplayReport,
+    fingerprint: u64,
+) -> (Vec<ClassSlo>, Vec<BenchJsonRow>) {
+    let slos = summarize(&rep.outcomes, rep.makespan_s);
+    let mut rows: Vec<BenchJsonRow> = slos
+        .iter()
+        .map(|s| BenchJsonRow {
+            name: format!("{tag}_{}", s.class),
+            kv_format: "sim".into(),
+            tokens_per_s: rep.tokens_per_s(),
+            upload_bytes_per_step: 0,
+            extra: s.to_fields(),
+        })
+        .collect();
+    rows.push(BenchJsonRow {
+        name: format!("{tag}_aggregate"),
+        kv_format: "sim".into(),
+        tokens_per_s: rep.tokens_per_s(),
+        upload_bytes_per_step: 0,
+        extra: vec![
+            ("makespan_s".to_string(), Json::num(rep.makespan_s)),
+            (
+                "generated_tokens".to_string(),
+                Json::from(rep.generated_tokens as usize),
+            ),
+            (
+                "prefill_tokens".to_string(),
+                Json::from(rep.prefill_tokens as usize),
+            ),
+            (
+                "preemptions".to_string(),
+                Json::from(rep.preemptions as usize),
+            ),
+            (
+                "swap_preemptions".to_string(),
+                Json::from(rep.swap_preemptions as usize),
+            ),
+            (
+                "swap_bytes_out".to_string(),
+                Json::from(rep.swap_bytes_out as usize),
+            ),
+            (
+                "deadline_aborts".to_string(),
+                Json::from(rep.deadline_aborts as usize),
+            ),
+            ("ticks".to_string(), Json::from(rep.ticks as usize)),
+            (
+                "trace_fingerprint".to_string(),
+                Json::str(&format!("{fingerprint:016x}")),
+            ),
+        ],
+    });
+    (slos, rows)
+}
+
+fn main() -> anyhow::Result<()> {
+    let spec = pinned();
+    let trace = generate(&spec);
+    let fp = trace_fingerprint(&trace);
+    println!(
+        "=== soak trace: {} requests over {:.0}s, fingerprint {fp:016x} ===",
+        trace.len(),
+        spec.horizon_s
+    );
+
+    let mut rows: Vec<BenchJsonRow> = Vec::new();
+
+    // --- 1-group and 3-group virtual replays ----------------------------
+    let rep1 = replay(&trace, &ReplayConfig::default());
+    let (slos1, r1) = report_rows("sim_soak_g1", &rep1, fp);
+    println!("\n--- 1 group ({:.1} virtual s) ---", rep1.makespan_s);
+    print!("{}", table(&slos1));
+    rows.extend(r1);
+
+    let rep3 = replay(
+        &trace,
+        &ReplayConfig { groups: 3, ..ReplayConfig::default() },
+    );
+    let (slos3, r3) = report_rows("sim_soak_g3", &rep3, fp);
+    println!("\n--- 3 groups ({:.1} virtual s) ---", rep3.makespan_s);
+    print!("{}", table(&slos3));
+    rows.extend(r3);
+
+    // --- swap-threshold sweep (the data behind the 4096 default) --------
+    // A budget that binds on this trace, so the swap-vs-recompute split
+    // actually matters; threshold 0 is recompute-only, 65536 swaps
+    // everything the sim's byte rate can express.
+    println!("\n--- swap_threshold_bytes_per_token sweep (budget 192KiB) ---");
+    println!(
+        "{:>9} {:>8} {:>6} {:>10} {:>10} {:>9} {:>8}",
+        "threshold", "preempt", "swap", "prefill_tk", "swap_bytes",
+        "inter p95", "tok/s"
+    );
+    for thr in [0usize, 256, 1024, 4096, 16384, 65536] {
+        let cfg = ReplayConfig {
+            kv_budget_bytes: 192 * 1024,
+            swap_threshold_bytes_per_token: thr,
+            ..ReplayConfig::default()
+        };
+        let rep = replay(&trace, &cfg);
+        let slos = summarize(&rep.outcomes, rep.makespan_s);
+        let inter_p95 = slos
+            .iter()
+            .find(|s| s.class == "interactive")
+            .map_or(0.0, |s| s.ttft.p95);
+        println!(
+            "{:>9} {:>8} {:>6} {:>10} {:>10} {:>8.0}ms {:>8.1}",
+            thr,
+            rep.preemptions,
+            rep.swap_preemptions,
+            rep.prefill_tokens,
+            rep.swap_bytes_out,
+            inter_p95 * 1e3,
+            rep.tokens_per_s()
+        );
+        rows.push(BenchJsonRow {
+            name: format!("swap_sweep_thr{thr}"),
+            kv_format: "sim".into(),
+            tokens_per_s: rep.tokens_per_s(),
+            upload_bytes_per_step: 0,
+            extra: vec![
+                ("threshold".to_string(), Json::from(thr)),
+                (
+                    "preemptions".to_string(),
+                    Json::from(rep.preemptions as usize),
+                ),
+                (
+                    "swap_preemptions".to_string(),
+                    Json::from(rep.swap_preemptions as usize),
+                ),
+                (
+                    "prefill_tokens".to_string(),
+                    Json::from(rep.prefill_tokens as usize),
+                ),
+                (
+                    "swap_bytes_out".to_string(),
+                    Json::from(rep.swap_bytes_out as usize),
+                ),
+                (
+                    "interactive_ttft_p95_s".to_string(),
+                    Json::num(inter_p95),
+                ),
+            ],
+        });
+    }
+
+    // --- real-scheduler replay (artifact-gated) -------------------------
+    if let Some((mut engine, tok)) = try_engine(ServingConfig::default()) {
+        let (outcomes, makespan_s) = replay_trace(
+            &mut engine,
+            &tok,
+            PolicyKind::Lethe,
+            &trace,
+            0.1,
+        )?;
+        let slos = summarize(&outcomes, makespan_s);
+        println!("\n--- real scheduler ({makespan_s:.1}s wall, 10x compressed) ---");
+        print!("{}", table(&slos));
+        let gen_tokens: usize = slos
+            .iter()
+            .map(|s| (s.goodput_tok_s * makespan_s) as usize)
+            .sum();
+        for s in &slos {
+            rows.push(BenchJsonRow {
+                name: format!("real_soak_{}", s.class),
+                kv_format: engine.metrics.kv_format.clone(),
+                tokens_per_s: gen_tokens as f64 / makespan_s.max(1e-9),
+                upload_bytes_per_step: 0,
+                extra: s.to_fields(),
+            });
+        }
+    }
+
+    write_bench_json("soak", &rows)?;
+    Ok(())
+}

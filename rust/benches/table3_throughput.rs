@@ -143,6 +143,7 @@ fn main() -> anyhow::Result<()> {
                     upload_bytes_per_step: engine
                         .metrics
                         .upload_bytes_last,
+                    extra: Vec::new(),
                 });
                 csv.push(format!(
                     "{},{},{},{:.1},{:.1},{}",

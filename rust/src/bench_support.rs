@@ -228,6 +228,7 @@ pub fn run_churn(
             policy,
             submitted_at: std::time::Instant::now(),
             deadline_ms: None,
+            class: String::new(),
         })?;
     }
     let t0 = std::time::Instant::now();
@@ -273,6 +274,112 @@ pub fn run_churn(
         oom_finishes: stats.oom_finishes as u64,
     }];
     Ok((stats, completions))
+}
+
+/// Open-loop trace replay over the real [`Scheduler`]: each
+/// [`TraceRequest`](crate::workload::trace::TraceRequest) is submitted
+/// at its arrival instant (wall clock, anchored at the first tick) with
+/// its tenant class and deadline attached, and every terminal outcome
+/// folds into a [`RequestOutcome`](crate::workload::slo::RequestOutcome)
+/// for [`crate::workload::slo::summarize`].
+///
+/// `time_scale` compresses the trace clock (0.1 replays a 25 s trace in
+/// ~2.5 s); deadlines scale by the same factor so SLO semantics are
+/// preserved under compression. Requests the admission queue rejects
+/// are recorded as aborted outcomes rather than failing the replay —
+/// under open-loop load, rejection IS a service outcome.
+///
+/// The artifact-gated soak path and the `real_*` rows of
+/// `BENCH_soak.json` run through here; the CI-gated numbers come from
+/// the deterministic virtual-time twin in [`crate::sim::replay`].
+pub fn replay_trace(
+    engine: &mut Engine,
+    tok: &Tokenizer,
+    policy: PolicyKind,
+    trace: &[crate::workload::trace::TraceRequest],
+    time_scale: f64,
+) -> Result<(Vec<crate::workload::slo::RequestOutcome>, f64)> {
+    use crate::workload::slo::RequestOutcome;
+    let scale_deadline = |d: Option<u64>| {
+        d.map(|ms| ((ms as f64 * time_scale).round() as u64).max(1))
+    };
+    let mut sched = Scheduler::new(engine, policy);
+    let t0 = std::time::Instant::now();
+    let mut next = 0usize;
+    let mut completions: Vec<Completion> = Vec::new();
+    while next < trace.len() || !sched.idle() {
+        let now = t0.elapsed().as_secs_f64();
+        while next < trace.len()
+            && trace[next].arrival_s * time_scale <= now
+        {
+            let r = &trace[next];
+            next += 1;
+            let req = Request {
+                id: r.id,
+                prompt: tok.encode_prompt(&r.task.prompt)?,
+                max_new_tokens: r.max_new_tokens,
+                policy,
+                submitted_at: std::time::Instant::now(),
+                deadline_ms: scale_deadline(r.deadline_ms),
+                class: r.class.clone(),
+            };
+            // A typed admission rejection (queue full) is a service
+            // outcome, not a replay failure: the request simply never
+            // completes and folds in as aborted below.
+            let _ = sched.submit(req);
+        }
+        if sched.idle() {
+            if next >= trace.len() {
+                break;
+            }
+            // Idle gap before the next arrival: yield instead of
+            // spinning the tick loop on an empty core.
+            std::thread::sleep(std::time::Duration::from_micros(200));
+            continue;
+        }
+        completions.extend(sched.tick(engine)?.completed);
+    }
+    let makespan_s = t0.elapsed().as_secs_f64();
+    let by_id: std::collections::HashMap<u64, &Completion> =
+        completions.iter().map(|c| (c.id, c)).collect();
+    let outcomes = trace
+        .iter()
+        .map(|r| match by_id.get(&r.id) {
+            Some(c) => RequestOutcome {
+                class: r.class.clone(),
+                ttft_s: c.ttft,
+                tpot_s: c.tpot,
+                e2e_s: c.total,
+                generated: c.generated.len(),
+                ok: matches!(
+                    c.finish,
+                    FinishReason::Eos | FinishReason::Length
+                ),
+                deadline_ms: scale_deadline(r.deadline_ms),
+                preemptions: c.preemptions as u64,
+                // Swap/rescue attribution is aggregate-only on the
+                // single-scheduler path; the sim twin carries them
+                // per request.
+                swaps: 0,
+                rescues: 0,
+            },
+            // Rejected at admission (or lost): an aborted outcome with
+            // zero service.
+            None => RequestOutcome {
+                class: r.class.clone(),
+                ttft_s: 0.0,
+                tpot_s: 0.0,
+                e2e_s: 0.0,
+                generated: 0,
+                ok: false,
+                deadline_ms: scale_deadline(r.deadline_ms),
+                preemptions: 0,
+                swaps: 0,
+                rescues: 0,
+            },
+        })
+        .collect();
+    Ok((outcomes, makespan_s))
 }
 
 /// Sums of the per-group rows in a supervisor `{"stats": true}`
@@ -336,6 +443,11 @@ pub struct BenchJsonRow {
     pub tokens_per_s: f64,
     /// Wire bytes the upload path moved per steady-state decode step.
     pub upload_bytes_per_step: usize,
+    /// Row-specific extra fields spliced verbatim into the JSON object
+    /// (the soak rows carry per-class SLO fields here — see
+    /// [`crate::workload::slo::ClassSlo::to_fields`]). Keys must not
+    /// collide with the four fixed fields above.
+    pub extra: Vec<(String, Json)>,
 }
 
 /// Write `bench_results/BENCH_{bench}.json`:
@@ -350,7 +462,7 @@ pub fn write_bench_json(bench: &str, rows: &[BenchJsonRow]) -> Result<()> {
     let arr: Vec<Json> = rows
         .iter()
         .map(|r| {
-            Json::obj(vec![
+            let mut fields = vec![
                 ("name", Json::str(&r.name)),
                 ("kv_format", Json::str(&r.kv_format)),
                 ("tokens_per_s", Json::num(r.tokens_per_s)),
@@ -358,7 +470,11 @@ pub fn write_bench_json(bench: &str, rows: &[BenchJsonRow]) -> Result<()> {
                     "upload_bytes_per_step",
                     Json::from(r.upload_bytes_per_step),
                 ),
-            ])
+            ];
+            for (k, v) in &r.extra {
+                fields.push((k.as_str(), v.clone()));
+            }
+            Json::obj(fields)
         })
         .collect();
     let doc = Json::obj(vec![

@@ -175,7 +175,12 @@ pub struct SchedulerConfig {
     /// verbatim) instead of recompute-preempted when its live KV bytes
     /// are at most `resume_tokens * swap_threshold_bytes_per_token`.
     /// 0 disables swapping entirely (recompute only, the PR-5
-    /// behaviour).
+    /// behaviour). The 4096 default comes from the soak-trace sweep in
+    /// `benches/soak_trace.rs` (`swap_sweep_*` rows of
+    /// `BENCH_soak.json`): on the pinned mixed-tenant trace it keeps
+    /// interactive p95 TTFT at the recompute-path level while cutting
+    /// re-prefill work; pushing the threshold to "always swap" buys no
+    /// further goodput and inflates swap traffic.
     pub swap_threshold_bytes_per_token: usize,
     /// Graceful-shutdown drain window: after shutdown is requested the
     /// scheduler stops admitting and gives in-flight work this many
@@ -200,7 +205,7 @@ impl Default for SchedulerConfig {
             prefill_chunk: 64,
             kv_budget_bytes: 0,
             migrate_patience: 4,
-            swap_threshold_bytes_per_token: 0,
+            swap_threshold_bytes_per_token: 4096,
             drain_window_ms: 2000,
             incremental_prefill: true,
         }
@@ -629,17 +634,18 @@ mod tests {
 
     #[test]
     fn faults_and_resilience_knobs_parse_and_validate() {
-        // Defaults: injection off, swap off, 2 s drain window.
+        // Defaults: injection off, swap at the sweep-tuned 4096 B/token
+        // threshold (see `SchedulerConfig` docs), 2 s drain window.
         let c = ServingConfig::from_json(&parse("{}").unwrap()).unwrap();
         assert!(!c.faults.enabled());
-        assert_eq!(c.scheduler.swap_threshold_bytes_per_token, 0);
+        assert_eq!(c.scheduler.swap_threshold_bytes_per_token, 4096);
         assert_eq!(c.scheduler.drain_window_ms, 2000);
 
         let c = ServingConfig::from_json(
             &parse(
                 r#"{"faults": {"seed": 9, "rate": 0.05, "stall_ms": 3,
                                "conn_drop_rate": 0.1},
-                    "scheduler": {"swap_threshold_bytes_per_token": 4096,
+                    "scheduler": {"swap_threshold_bytes_per_token": 0,
                                   "drain_window_ms": 500}}"#,
             )
             .unwrap(),
@@ -650,7 +656,10 @@ mod tests {
         assert_eq!(c.faults.stall_ms, 3);
         assert_eq!(c.faults.conn_drop_rate, 0.1);
         assert!(c.faults.enabled());
-        assert_eq!(c.scheduler.swap_threshold_bytes_per_token, 4096);
+        assert_eq!(
+            c.scheduler.swap_threshold_bytes_per_token, 0,
+            "swap stays explicitly disableable"
+        );
         assert_eq!(c.scheduler.drain_window_ms, 500);
 
         // Out-of-range rates and unknown keys are rejected.

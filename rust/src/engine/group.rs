@@ -99,11 +99,19 @@ pub struct SeqState {
     /// Wall-clock bookkeeping for latency metrics (set by the server).
     pub submitted_at: Option<std::time::Instant>,
     pub first_token_at: Option<std::time::Instant>,
+    /// The instant the sequence actually finished (EOS / length cap /
+    /// failure / deadline mark) — stamped where the terminal event
+    /// happens, not at the tick boundary that reaps it, so TTFT/TPOT
+    /// and e2e latency are measured at token granularity.
+    pub finished_at: Option<std::time::Instant>,
     /// Absolute completion deadline (from the request's `deadline_ms`);
     /// the scheduler finishes the sequence with
     /// [`FinishReason::DeadlineExceeded`] at the first tick boundary
     /// past it. `None` = no deadline.
     pub deadline: Option<std::time::Instant>,
+    /// Tenant-class label carried from the request for per-class SLO
+    /// accounting; empty = unclassified.
+    pub class: String,
 }
 
 impl SeqState {
@@ -133,7 +141,9 @@ impl SeqState {
             preemptions: 0,
             submitted_at: None,
             first_token_at: None,
+            finished_at: None,
             deadline: None,
+            class: String::new(),
         }
     }
 
@@ -142,6 +152,9 @@ impl SeqState {
     pub fn fail(&mut self, kind: FailureKind) {
         self.finished = Some(FinishReason::Error(kind));
         self.phase = SeqPhase::Finished;
+        if self.finished_at.is_none() {
+            self.finished_at = Some(std::time::Instant::now());
+        }
     }
 
     /// Record prefill completion + the first generated token.
@@ -172,6 +185,9 @@ impl SeqState {
         }
         if self.finished.is_some() {
             self.phase = SeqPhase::Finished;
+            if self.finished_at.is_none() {
+                self.finished_at = Some(std::time::Instant::now());
+            }
         }
     }
 
@@ -283,6 +299,9 @@ impl DecodeGroup {
         {
             self.seqs[b].finished = Some(FinishReason::Oom);
             self.seqs[b].phase = SeqPhase::Finished;
+            if self.seqs[b].finished_at.is_none() {
+                self.seqs[b].finished_at = Some(std::time::Instant::now());
+            }
         }
     }
 

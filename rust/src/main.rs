@@ -184,6 +184,7 @@ fn cmd_generate(args: &lethe::util::argparse::Args) -> Result<()> {
         max_new_tokens: args.get_usize("max-new")?,
         policy: None,
         deadline_ms: None,
+        class: None,
     })?;
     println!("output  : {}", resp.text);
     println!(
@@ -220,6 +221,7 @@ fn cmd_serve(args: &lethe::util::argparse::Args) -> Result<()> {
                 max_new_tokens: max_new,
                 policy: None,
                 deadline_ms: None,
+                class: None,
             })?,
         ));
     }

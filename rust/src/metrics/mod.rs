@@ -6,7 +6,115 @@ use std::collections::BTreeMap;
 
 use crate::kvcache::KvFormat;
 use crate::util::json::Json;
-use crate::util::stats::Summary;
+use crate::util::stats::{P2Quantile, Summary};
+
+/// Streaming per-tenant-class SLO accounting. One track per distinct
+/// [`crate::scheduler::Completion::class`] label (empty labels fold
+/// into `"default"`). Latency percentiles are P² streaming estimates
+/// ([`P2Quantile`]): O(1) memory per (class, metric, quantile)
+/// regardless of how many requests the soak replays.
+pub struct ClassTrack {
+    pub class: String,
+    /// Terminal outcomes folded in (completed + aborted).
+    pub requests: u64,
+    /// Finished with `Eos` or `Length`.
+    pub completed: u64,
+    /// Finished with `Oom`, `DeadlineExceeded`, or `Error(..)`.
+    pub aborted: u64,
+    /// Output tokens across completed-or-aborted requests.
+    pub generated_tokens: u64,
+    /// Preempt-and-resume round trips summed over requests.
+    pub preemptions: u64,
+    ttft: [P2Quantile; 3],
+    tpot: [P2Quantile; 3],
+    e2e: [P2Quantile; 3],
+}
+
+/// The three quantiles every latency track estimates.
+const TRACK_QS: [f64; 3] = [0.50, 0.95, 0.99];
+
+fn track_quantiles() -> [P2Quantile; 3] {
+    [
+        P2Quantile::new(TRACK_QS[0]),
+        P2Quantile::new(TRACK_QS[1]),
+        P2Quantile::new(TRACK_QS[2]),
+    ]
+}
+
+impl ClassTrack {
+    pub fn new(class: &str) -> ClassTrack {
+        ClassTrack {
+            class: class.to_string(),
+            requests: 0,
+            completed: 0,
+            aborted: 0,
+            generated_tokens: 0,
+            preemptions: 0,
+            ttft: track_quantiles(),
+            tpot: track_quantiles(),
+            e2e: track_quantiles(),
+        }
+    }
+
+    fn record(&mut self, c: &crate::scheduler::Completion) {
+        use crate::engine::FinishReason;
+        self.requests += 1;
+        match c.finish {
+            FinishReason::Eos | FinishReason::Length => self.completed += 1,
+            _ => self.aborted += 1,
+        }
+        self.generated_tokens += c.generated.len() as u64;
+        self.preemptions += c.preemptions as u64;
+        // TTFT only once a first token exists; TPOT only once the
+        // inter-token gap is defined (≥ 2 tokens). E2E always.
+        if !c.generated.is_empty() {
+            for q in &mut self.ttft {
+                q.push(c.ttft);
+            }
+        }
+        if c.generated.len() >= 2 {
+            for q in &mut self.tpot {
+                q.push(c.tpot);
+            }
+        }
+        for q in &mut self.e2e {
+            q.push(c.total);
+        }
+    }
+
+    pub fn ttft_p(&self, i: usize) -> f64 {
+        self.ttft[i].value()
+    }
+    pub fn tpot_p(&self, i: usize) -> f64 {
+        self.tpot[i].value()
+    }
+    pub fn e2e_p(&self, i: usize) -> f64 {
+        self.e2e[i].value()
+    }
+
+    pub fn to_json(&self) -> Json {
+        Json::obj(vec![
+            ("class", Json::str(&self.class)),
+            ("requests", Json::from(self.requests as usize)),
+            ("completed", Json::from(self.completed as usize)),
+            ("aborted", Json::from(self.aborted as usize)),
+            (
+                "generated_tokens",
+                Json::from(self.generated_tokens as usize),
+            ),
+            ("preemptions", Json::from(self.preemptions as usize)),
+            ("ttft_p50_s", Json::num(self.ttft[0].value())),
+            ("ttft_p95_s", Json::num(self.ttft[1].value())),
+            ("ttft_p99_s", Json::num(self.ttft[2].value())),
+            ("tpot_p50_s", Json::num(self.tpot[0].value())),
+            ("tpot_p95_s", Json::num(self.tpot[1].value())),
+            ("tpot_p99_s", Json::num(self.tpot[2].value())),
+            ("e2e_p50_s", Json::num(self.e2e[0].value())),
+            ("e2e_p95_s", Json::num(self.e2e[1].value())),
+            ("e2e_p99_s", Json::num(self.e2e[2].value())),
+        ])
+    }
+}
 
 #[derive(Default)]
 pub struct EngineMetrics {
@@ -96,6 +204,11 @@ pub struct EngineMetrics {
     pub kv_layer_formats: Vec<KvFormat>,
     /// decode capacity bucket -> steps run at that bucket.
     pub capacity_hist: BTreeMap<usize, u64>,
+    /// Per-tenant-class SLO tracks, first-seen order. Fed by
+    /// [`EngineMetrics::record_completion`] — the scheduler folds every
+    /// tick's completions in once, so the tracks cover terminal
+    /// outcomes exactly (including deadline aborts).
+    pub classes: Vec<ClassTrack>,
 }
 
 impl EngineMetrics {
@@ -124,6 +237,22 @@ impl EngineMetrics {
         } else {
             self.decode_tokens as f64 / secs
         }
+    }
+
+    /// Fold one terminal outcome into its tenant class's streaming SLO
+    /// track (empty class labels fold into `"default"`).
+    pub fn record_completion(&mut self, c: &crate::scheduler::Completion) {
+        let label = if c.class.is_empty() { "default" } else { &c.class };
+        let track = match
+            self.classes.iter_mut().find(|t| t.class == label)
+        {
+            Some(t) => t,
+            None => {
+                self.classes.push(ClassTrack::new(label));
+                self.classes.last_mut().unwrap()
+            }
+        };
+        track.record(c);
     }
 
     pub fn phase_summaries(&self) -> Option<(Summary, Summary, Summary)> {
@@ -194,6 +323,12 @@ impl EngineMetrics {
             ("decode_tput_tok_s", Json::num(self.decode_tput())),
             ("step_seconds_mean", Json::num(self.step_seconds_mean())),
             ("capacity_hist", Json::Arr(caps)),
+            (
+                "classes",
+                Json::Arr(
+                    self.classes.iter().map(|t| t.to_json()).collect(),
+                ),
+            ),
         ])
     }
 }
@@ -201,6 +336,80 @@ impl EngineMetrics {
 #[cfg(test)]
 mod tests {
     use super::*;
+    use crate::engine::FinishReason;
+    use crate::scheduler::Completion;
+
+    fn done(class: &str, n_tok: usize, ttft: f64, total: f64,
+            finish: FinishReason) -> Completion {
+        let tpot = if n_tok >= 2 {
+            (total - ttft) / (n_tok - 1) as f64
+        } else {
+            0.0
+        };
+        Completion {
+            id: 1,
+            generated: vec![7; n_tok],
+            finish,
+            prompt_len: 4,
+            ttft,
+            tpot,
+            total,
+            prune_rounds: 0,
+            preemptions: 1,
+            class: class.to_string(),
+        }
+    }
+
+    #[test]
+    fn class_tracks_split_by_label_and_classify_outcomes() {
+        let mut m = EngineMetrics::default();
+        m.record_completion(&done("interactive", 4, 0.1, 0.5,
+                                  FinishReason::Eos));
+        m.record_completion(&done("interactive", 0, 0.0, 2.5,
+                                  FinishReason::DeadlineExceeded));
+        m.record_completion(&done("batch", 8, 0.4, 2.0,
+                                  FinishReason::Length));
+        m.record_completion(&done("", 2, 0.2, 0.4, FinishReason::Eos));
+        assert_eq!(m.classes.len(), 3);
+        let inter = &m.classes[0];
+        assert_eq!(inter.class, "interactive");
+        assert_eq!((inter.requests, inter.completed, inter.aborted),
+                   (2, 1, 1));
+        assert_eq!(inter.generated_tokens, 4);
+        assert_eq!(inter.preemptions, 2);
+        // The aborted-before-first-token request must not drag TTFT to
+        // zero: only the one real first token feeds the track.
+        assert!((inter.ttft_p(0) - 0.1).abs() < 1e-9);
+        // Both e2e samples feed in; p99 of {0.5, 2.5} is the max.
+        assert!((inter.e2e_p(2) - 2.5).abs() < 1e-9);
+        assert_eq!(m.classes[1].class, "batch");
+        assert!((m.classes[1].tpot_p(0) - (2.0 - 0.4) / 7.0).abs() < 1e-9);
+        assert_eq!(m.classes[2].class, "default",
+                   "empty labels fold into a default track");
+    }
+
+    #[test]
+    fn class_tracks_serialize_into_metrics_json() {
+        let mut m = EngineMetrics::default();
+        m.record_completion(&done("interactive", 3, 0.2, 0.8,
+                                  FinishReason::Eos));
+        let parsed =
+            crate::util::json::parse(&m.to_json().to_string()).unwrap();
+        let classes = parsed.get("classes").unwrap().as_arr().unwrap();
+        assert_eq!(classes.len(), 1);
+        let c = &classes[0];
+        assert_eq!(c.get("class").unwrap().as_str().unwrap(),
+                   "interactive");
+        assert_eq!(c.get("requests").unwrap().as_usize().unwrap(), 1);
+        assert_eq!(c.get("completed").unwrap().as_usize().unwrap(), 1);
+        for key in ["ttft_p50_s", "ttft_p95_s", "ttft_p99_s",
+                    "tpot_p50_s", "tpot_p95_s", "tpot_p99_s",
+                    "e2e_p50_s", "e2e_p95_s", "e2e_p99_s"] {
+            assert!(c.get(key).is_some(), "missing {key}");
+        }
+        assert!((c.get("e2e_p50_s").unwrap().as_f64().unwrap() - 0.8)
+            .abs() < 1e-9);
+    }
 
     #[test]
     fn throughput_accounts_all_phases() {

@@ -61,6 +61,10 @@ pub struct Request {
     /// with [`FinishReason::DeadlineExceeded`] at the next tick
     /// boundary, wherever it is in the lifecycle. `None` = no deadline.
     pub deadline_ms: Option<u64>,
+    /// Tenant-class label for per-class SLO accounting (latency
+    /// percentiles, attainment, preemption fairness in
+    /// [`crate::metrics::EngineMetrics`]); empty = unclassified.
+    pub class: String,
 }
 
 impl Request {
@@ -79,11 +83,20 @@ pub struct Completion {
     pub prompt_len: usize,
     /// Seconds from submission to first token (TTFT).
     pub ttft: f64,
-    /// Seconds from submission to completion.
+    /// Seconds per output token after the first (TPOT):
+    /// `(finish − first token) / (generated − 1)`; 0 for fewer than
+    /// two tokens. Finish is the terminal-event instant
+    /// (`SeqState::finished_at`), not the reaping tick boundary.
+    pub tpot: f64,
+    /// Seconds from submission to completion (terminal event, token
+    /// granularity).
     pub total: f64,
     pub prune_rounds: usize,
     /// How many times the sequence was preempted and resumed.
     pub preemptions: u32,
+    /// Tenant-class label carried from the request (empty =
+    /// unclassified).
+    pub class: String,
 }
 
 /// Outcome of one scheduler tick.
@@ -560,6 +573,12 @@ impl Scheduler {
             report.completed.push(Self::completion_of(seq, now));
         }
 
+        // Per-class SLO accounting: every completion this tick folds
+        // into the streaming per-class latency tracks exactly once.
+        for c in &report.completed {
+            engine.metrics.record_completion(c);
+        }
+
         // Serving-pressure telemetry travels with the engine metrics.
         engine.metrics.queue_depth_last = self.waiting.len();
         engine.metrics.rejected = self.rejected;
@@ -584,6 +603,17 @@ impl Scheduler {
     /// typed prefill failures).
     fn completion_of(seq: SeqState, now: Instant) -> Completion {
         let sub = seq.submitted_at.unwrap_or(now);
+        // End at the terminal event (EOS/length/failure/deadline mark),
+        // not the tick boundary that happens to reap the slot — the
+        // difference is a whole tick of slack that would otherwise
+        // pollute every TTFT/TPOT/e2e percentile.
+        let end = seq.finished_at.unwrap_or(now);
+        let tpot = match (seq.first_token_at, seq.generated.len()) {
+            (Some(ft), n) if n >= 2 => {
+                (end - ft).as_secs_f64() / (n - 1) as f64
+            }
+            _ => 0.0,
+        };
         Completion {
             id: seq.id,
             prompt_len: seq.prompt_len,
@@ -591,11 +621,13 @@ impl Scheduler {
                 .first_token_at
                 .map(|t| (t - sub).as_secs_f64())
                 .unwrap_or(0.0),
-            total: (now - sub).as_secs_f64(),
+            tpot,
+            total: (end - sub).as_secs_f64(),
             prune_rounds: seq.prune_log.len(),
             preemptions: seq.preemptions,
             finish: seq.finished.unwrap_or(FinishReason::DeadlineExceeded),
             generated: seq.generated,
+            class: seq.class,
         }
     }
 
@@ -630,6 +662,7 @@ impl Scheduler {
                 let seq = self.group.seq_mut(b);
                 seq.finished = Some(FinishReason::DeadlineExceeded);
                 seq.phase = SeqPhase::Finished;
+                seq.finished_at = Some(now);
                 self.note_abort(is_drain);
             }
         }
@@ -641,6 +674,7 @@ impl Scheduler {
                 let mut job = self.prefilling.remove(i);
                 job.seq.finished = Some(FinishReason::DeadlineExceeded);
                 job.seq.phase = SeqPhase::Finished;
+                job.seq.finished_at = Some(now);
                 self.note_abort(is_drain);
                 out.push(Self::completion_of(job.seq, now));
             } else {
@@ -665,16 +699,19 @@ impl Scheduler {
                             id: r.id,
                             prompt_len: r.prompt.len(),
                             ttft: 0.0,
+                            tpot: 0.0,
                             total: (now - r.submitted_at).as_secs_f64(),
                             prune_rounds: 0,
                             preemptions: 0,
                             finish: FinishReason::DeadlineExceeded,
                             generated: Vec::new(),
+                            class: r.class,
                         },
                         WaitEntry::Resume { mut seq, .. }
                         | WaitEntry::Swapped { mut seq, .. } => {
                             seq.finished =
                                 Some(FinishReason::DeadlineExceeded);
+                            seq.finished_at = Some(now);
                             Self::completion_of(seq, now)
                         }
                     });
@@ -787,6 +824,7 @@ impl Scheduler {
                 );
                 seq.submitted_at = Some(req.submitted_at);
                 seq.deadline = req.deadline();
+                seq.class = req.class.clone();
                 seq.prompt = req.prompt.clone();
                 seq.phase = SeqPhase::Prefilling { consumed: 0 };
                 PrefillJob {
@@ -991,6 +1029,7 @@ mod tests {
             policy: PolicyKind::Lethe,
             submitted_at: Instant::now(),
             deadline_ms: None,
+            class: String::new(),
         }
     }
 

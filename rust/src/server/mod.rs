@@ -29,6 +29,10 @@ pub struct GenerateRequest {
     /// request finishes with `DeadlineExceeded` at the next tick
     /// boundary. None = no deadline.
     pub deadline_ms: Option<u64>,
+    /// Tenant-class label for per-class SLO accounting (e.g.
+    /// "interactive" / "batch-reasoning"); folded into the per-class
+    /// latency tracks in `{"stats": true}`. None = "default".
+    pub class: Option<String>,
 }
 
 #[derive(Clone, Debug)]
@@ -39,6 +43,9 @@ pub struct GenerateResponse {
     pub prompt_tokens: usize,
     pub generated_tokens: usize,
     pub ttft_s: f64,
+    /// Seconds per output token after the first (0 for fewer than two
+    /// generated tokens) — the decode-side SLO dimension next to TTFT.
+    pub tpot_s: f64,
     pub total_s: f64,
     pub prune_rounds: usize,
     /// How many times the sequence was preempted under load or rescued

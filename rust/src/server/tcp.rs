@@ -2,16 +2,20 @@
 //! [`super::Server`], so external clients can drive the engine:
 //!
 //!   -> {"prompt": "ab:12;cd:ab?cd>", "max_new_tokens": 32,
-//!       "policy": "lethe"}
+//!       "policy": "lethe", "class": "interactive"}
 //!   <- {"ok": true, "text": "ab>12.", "finish": "Eos",
 //!       "prompt_tokens": 18, "generated_tokens": 7,
-//!       "ttft_s": 0.01, "total_s": 0.05, "prune_rounds": 0,
-//!       "preemptions": 0, "kv_format": "f32"}
+//!       "ttft_s": 0.01, "tpot_s": 0.006, "total_s": 0.05,
+//!       "prune_rounds": 0, "preemptions": 0, "kv_format": "f32"}
 //!
 //! `kv_format` reports the storage the request was served on: "f32",
 //! "q8", "q4", or "mixed" when a per-layer format map
 //! (`kv.layer_formats` / `kv.mixed`) was active; `preemptions` counts
-//! how often the sequence was recompute-preempted under load.
+//! how often the sequence was recompute-preempted under load. `tpot_s`
+//! is seconds per output token after the first (0 for single-token
+//! completions). The optional `class` labels the request's tenant
+//! class for the per-class SLO tracks in `{"stats": true}` (omitted =
+//! "default").
 //!
 //! A `{"stats": true}` line returns the serving-pressure snapshot
 //! instead of a completion. Aggregate counters keep the original
@@ -286,11 +290,16 @@ fn handle_line(line: &str, server: &Server) -> Result<Json> {
         .map(|v| v.as_usize())
         .transpose()?
         .map(|v| v as u64);
+    let class = j
+        .opt("class")
+        .map(|v| v.as_str().map(|s| s.to_string()))
+        .transpose()?;
     let resp = server.generate(GenerateRequest {
         prompt,
         max_new_tokens,
         policy,
         deadline_ms,
+        class,
     })?;
     Ok(response_json(&resp))
 }
@@ -304,6 +313,7 @@ fn response_json(r: &GenerateResponse) -> Json {
         ("prompt_tokens", Json::from(r.prompt_tokens)),
         ("generated_tokens", Json::from(r.generated_tokens)),
         ("ttft_s", Json::num(r.ttft_s)),
+        ("tpot_s", Json::num(r.tpot_s)),
         ("total_s", Json::num(r.total_s)),
         ("prune_rounds", Json::from(r.prune_rounds)),
         ("preemptions", Json::from(r.preemptions as usize)),

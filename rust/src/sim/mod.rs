@@ -19,6 +19,7 @@
 //! matches the paper's reported tok/s (Table 3 col 1); everything else is
 //! predicted, not fitted.
 
+pub mod replay;
 pub mod trace;
 
 use crate::model::ArchSpec;

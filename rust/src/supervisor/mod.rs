@@ -1017,6 +1017,7 @@ impl SupState {
             policy: req.policy.unwrap_or(self.default_policy),
             submitted_at: Instant::now(),
             deadline_ms: req.deadline_ms,
+            class: req.class.clone().unwrap_or_default(),
         };
         let pending = Pending {
             reply,
@@ -1122,6 +1123,11 @@ impl SupState {
     fn deliver(&mut self, g: usize, completions: Vec<Completion>) {
         let kv_format = self.slots[g].kv_format.clone();
         for c in completions {
+            // Aggregate per-class SLO tracks live on the supervisor's
+            // metrics (worker-side tracks are per group); every
+            // delivered completion folds in exactly once, whether or
+            // not a reply channel is still waiting for it.
+            self.metrics.record_completion(&c);
             let Some(p) = self.pending.remove(&c.id) else {
                 continue;
             };
@@ -1132,6 +1138,7 @@ impl SupState {
                 prompt_tokens: p.prompt_tokens,
                 generated_tokens: c.generated.len(),
                 ttft_s: c.ttft,
+                tpot_s: c.tpot,
                 total_s: c.total,
                 prune_rounds: c.prune_rounds,
                 preemptions: c.preemptions,
@@ -1244,6 +1251,7 @@ impl SupState {
             prompt_tokens: p.prompt_tokens,
             generated_tokens: 0,
             ttft_s: 0.0,
+            tpot_s: 0.0,
             total_s: p.shadow.submitted_at.elapsed().as_secs_f64(),
             prune_rounds: 0,
             preemptions: 0,

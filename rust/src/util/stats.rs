@@ -133,6 +133,125 @@ impl LatencyHistogram {
     }
 }
 
+/// Streaming quantile estimator — the P² algorithm (Jain & Chlamtac,
+/// CACM 1985). Five markers track (min, p/2, p, (1+p)/2, max); each
+/// observation nudges the middle markers toward their ideal positions
+/// with a piecewise-parabolic height adjustment. O(1) memory per
+/// tracked quantile, which is what lets [`crate::metrics`] keep
+/// per-tenant-class latency percentiles alive across an unbounded soak
+/// without retaining every sample. Exact (nearest-rank on the sorted
+/// prefix) until five observations have arrived.
+#[derive(Clone, Debug)]
+pub struct P2Quantile {
+    /// Target quantile in (0, 1), e.g. 0.95.
+    p: f64,
+    /// Marker heights.
+    q: [f64; 5],
+    /// Actual marker positions (1-based ranks).
+    n: [f64; 5],
+    /// Desired marker positions.
+    np: [f64; 5],
+    /// Desired-position increments per observation.
+    dn: [f64; 5],
+    count: u64,
+}
+
+impl P2Quantile {
+    pub fn new(p: f64) -> P2Quantile {
+        assert!(p > 0.0 && p < 1.0, "quantile must be in (0,1), got {p}");
+        P2Quantile {
+            p,
+            q: [0.0; 5],
+            n: [1.0, 2.0, 3.0, 4.0, 5.0],
+            np: [1.0, 1.0 + 2.0 * p, 1.0 + 4.0 * p, 3.0 + 2.0 * p, 5.0],
+            dn: [0.0, p / 2.0, p, (1.0 + p) / 2.0, 1.0],
+            count: 0,
+        }
+    }
+
+    pub fn count(&self) -> u64 {
+        self.count
+    }
+
+    /// Piecewise-parabolic (falling back to linear) height update for
+    /// marker `i` moved by `d` (±1).
+    fn adjust(&mut self, i: usize, d: f64) {
+        let parabolic = self.q[i]
+            + d / (self.n[i + 1] - self.n[i - 1])
+                * ((self.n[i] - self.n[i - 1] + d)
+                    * (self.q[i + 1] - self.q[i])
+                    / (self.n[i + 1] - self.n[i])
+                    + (self.n[i + 1] - self.n[i] - d)
+                        * (self.q[i] - self.q[i - 1])
+                        / (self.n[i] - self.n[i - 1]));
+        self.q[i] = if self.q[i - 1] < parabolic && parabolic < self.q[i + 1]
+        {
+            parabolic
+        } else {
+            // Linear fallback keeps marker heights monotone.
+            let j = if d > 0.0 { i + 1 } else { i - 1 };
+            self.q[i] + d * (self.q[j] - self.q[i]) / (self.n[j] - self.n[i])
+        };
+        self.n[i] += d;
+    }
+
+    pub fn push(&mut self, x: f64) {
+        self.count += 1;
+        if self.count <= 5 {
+            self.q[self.count as usize - 1] = x;
+            if self.count == 5 {
+                self.q.sort_by(|a, b| a.partial_cmp(b).unwrap());
+            }
+            return;
+        }
+        // Locate the cell and bump extreme markers.
+        let k = if x < self.q[0] {
+            self.q[0] = x;
+            0
+        } else if x < self.q[1] {
+            0
+        } else if x < self.q[2] {
+            1
+        } else if x < self.q[3] {
+            2
+        } else if x <= self.q[4] {
+            3
+        } else {
+            self.q[4] = x;
+            3
+        };
+        for i in (k + 1)..5 {
+            self.n[i] += 1.0;
+        }
+        for i in 0..5 {
+            self.np[i] += self.dn[i];
+        }
+        // Nudge interior markers toward their desired positions.
+        for i in 1..4 {
+            let d = self.np[i] - self.n[i];
+            if (d >= 1.0 && self.n[i + 1] - self.n[i] > 1.0)
+                || (d <= -1.0 && self.n[i - 1] - self.n[i] < -1.0)
+            {
+                self.adjust(i, d.signum());
+            }
+        }
+    }
+
+    /// Current estimate: exact nearest-rank while fewer than five
+    /// observations have arrived, the middle marker afterwards.
+    pub fn value(&self) -> f64 {
+        if self.count == 0 {
+            return 0.0;
+        }
+        if self.count < 5 {
+            let mut s: Vec<f64> = self.q[..self.count as usize].to_vec();
+            s.sort_by(|a, b| a.partial_cmp(b).unwrap());
+            return percentile_sorted(&s, self.p * 100.0);
+        }
+        self.q[2]
+    }
+}
+
 /// Criterion-substitute measurement: `warmup` untimed runs, then time
 /// `iters` runs of `f`, returning per-iteration seconds.
 pub fn bench<F: FnMut()>(warmup: usize, iters: usize, mut f: F) -> Summary {
@@ -196,6 +315,49 @@ mod tests {
         }
         assert!(h.quantile_us(0.5) <= h.quantile_us(0.99));
         assert_eq!(h.count(), 1000);
+    }
+
+    #[test]
+    fn p2_exact_below_five_samples() {
+        let mut est = P2Quantile::new(0.5);
+        for x in [3.0, 1.0, 2.0] {
+            est.push(x);
+        }
+        assert_eq!(est.value(), 2.0);
+        assert_eq!(est.count(), 3);
+    }
+
+    #[test]
+    fn p2_tracks_exact_percentile_on_random_inputs() {
+        // Property: on random samples the streaming estimate stays
+        // close to the exact nearest-rank percentile of the full sort.
+        crate::util::proptest::check("p2-vs-sort", 30, |rng, size| {
+            let n = 200 + size % 800;
+            let p = *rng.choose(&[0.5, 0.9, 0.95, 0.99]);
+            let mut est = P2Quantile::new(p);
+            let mut xs = Vec::with_capacity(n);
+            for _ in 0..n {
+                // Mix of scales so the parabolic update is exercised
+                // away from the uniform easy case.
+                let x = rng.f64() + if rng.bool(0.1) { 5.0 * rng.f64() } else { 0.0 };
+                est.push(x);
+                xs.push(x);
+            }
+            xs.sort_by(|a, b| a.partial_cmp(b).unwrap());
+            let exact = percentile_sorted(&xs, p * 100.0);
+            let got = est.value();
+            let span = xs[xs.len() - 1] - xs[0];
+            if (got - exact).abs() > 0.12 * span.max(1e-12) {
+                return Err(format!(
+                    "p={p} n={n}: estimate {got} vs exact {exact} \
+                     (span {span})"
+                ));
+            }
+            if got < xs[0] || got > xs[xs.len() - 1] {
+                return Err(format!("estimate {got} outside sample range"));
+            }
+            Ok(())
+        });
     }
 
     #[test]

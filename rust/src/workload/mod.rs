@@ -9,6 +9,9 @@
 
 use crate::util::prng::Rng;
 
+pub mod slo;
+pub mod trace;
+
 pub const KEY_LETTERS: &[u8] = b"abcdefghijklmnopqrstuvwxyz";
 
 /// One reasoning task (see tasks.py for the grammar).

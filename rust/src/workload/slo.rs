@@ -1,0 +1,340 @@
+//! SLO accounting over replayed traces: fold per-request latency
+//! observations into per-tenant-class percentiles, attainment rates,
+//! goodput and preemption-fairness counters — the row schema behind
+//! `BENCH_soak.json` and the soak harness's human-readable table.
+//!
+//! Definitions (also documented in `docs/ARCHITECTURE.md`):
+//!
+//! * **TTFT** — submit → first generated token, seconds.
+//! * **TPOT** — `(finish − first token) / (generated − 1)`; `0` for
+//!   single-token completions.
+//! * **e2e** — submit → finish, seconds.
+//! * Percentiles are **nearest-rank** on the exact sorted sample
+//!   ([`crate::util::stats::percentile_sorted`]); the streaming
+//!   estimates in [`crate::metrics`] use the P² estimator and converge
+//!   to these.
+//! * **Attainment** — fraction of a class's requests that finished
+//!   (not aborted) with `e2e ≤ deadline`; requests without a deadline
+//!   count as attained. Monotone non-decreasing in the deadline
+//!   (property-tested).
+//! * **Goodput** — generated tokens from *successful* completions per
+//!   second of makespan (aborted work contributes nothing).
+
+use crate::util::json::Json;
+use crate::util::stats::percentile_sorted;
+
+/// Per-request observation fed into the accounting, backend-agnostic:
+/// the sim replayer and the real-`Supervisor` replay both produce it.
+#[derive(Clone, Debug)]
+pub struct RequestOutcome {
+    pub class: String,
+    /// Seconds, submit → first token (0 when no token was produced).
+    pub ttft_s: f64,
+    /// Seconds per output token after the first; 0 for < 2 tokens.
+    pub tpot_s: f64,
+    /// Seconds, submit → finish (however it finished).
+    pub e2e_s: f64,
+    /// Generated tokens delivered.
+    pub generated: usize,
+    /// Finished successfully (EOS / length), as opposed to a deadline
+    /// abort, drain abort or failure.
+    pub ok: bool,
+    pub deadline_ms: Option<u64>,
+    /// Times this request was preempted (recompute or swap).
+    pub preemptions: u64,
+    /// Times this request was swapped to host rather than recomputed.
+    pub swaps: u64,
+    /// Times this request was rescued across groups.
+    pub rescues: u64,
+}
+
+impl RequestOutcome {
+    /// Did this request meet its SLO? No-deadline requests are
+    /// attained by definition (best effort has no bar to miss).
+    pub fn attained(&self) -> bool {
+        match self.deadline_ms {
+            None => self.ok,
+            Some(d) => self.ok && self.e2e_s <= d as f64 / 1e3,
+        }
+    }
+}
+
+/// Nearest-rank p50/p95/p99 triple of one latency dimension.
+#[derive(Clone, Copy, Debug, Default)]
+pub struct Percentiles {
+    pub p50: f64,
+    pub p95: f64,
+    pub p99: f64,
+}
+
+impl Percentiles {
+    /// Exact triple over the (unsorted) sample; zeros when empty.
+    pub fn of(xs: &[f64]) -> Percentiles {
+        if xs.is_empty() {
+            return Percentiles::default();
+        }
+        let mut s = xs.to_vec();
+        s.sort_by(|a, b| a.total_cmp(b));
+        Percentiles {
+            p50: percentile_sorted(&s, 50.0),
+            p95: percentile_sorted(&s, 95.0),
+            p99: percentile_sorted(&s, 99.0),
+        }
+    }
+}
+
+/// Fraction of observations at or under `deadline_s`. Standalone so
+/// the monotonicity property ("a looser deadline never lowers
+/// attainment") is testable in isolation.
+pub fn attainment(e2e_s: &[f64], deadline_s: f64) -> f64 {
+    if e2e_s.is_empty() {
+        return 1.0;
+    }
+    e2e_s.iter().filter(|&&x| x <= deadline_s).count() as f64
+        / e2e_s.len() as f64
+}
+
+/// Aggregated SLO report for one tenant class.
+#[derive(Clone, Debug)]
+pub struct ClassSlo {
+    pub class: String,
+    /// Requests observed (every terminal outcome counts).
+    pub n: usize,
+    /// Successful completions (EOS / length).
+    pub completed: usize,
+    /// Aborted or failed requests (`n − completed`).
+    pub aborted: usize,
+    pub ttft: Percentiles,
+    pub tpot: Percentiles,
+    pub e2e: Percentiles,
+    /// SLO-attainment rate in [0, 1].
+    pub attainment: f64,
+    /// Generated tokens from successful completions / makespan.
+    pub goodput_tok_s: f64,
+    /// Preemption-fairness counters: how much disruption this class
+    /// absorbed relative to its peers.
+    pub preemptions: u64,
+    pub swaps: u64,
+    pub rescues: u64,
+}
+
+impl ClassSlo {
+    /// The class's row as `(key, value)` pairs, ready to splice into a
+    /// `BenchJsonRow`'s `extra` fields.
+    pub fn to_fields(&self) -> Vec<(String, Json)> {
+        vec![
+            ("class".to_string(), Json::str(&self.class)),
+            ("requests".to_string(), Json::from(self.n)),
+            ("completed".to_string(), Json::from(self.completed)),
+            ("aborted".to_string(), Json::from(self.aborted)),
+            ("ttft_p50_s".to_string(), Json::num(self.ttft.p50)),
+            ("ttft_p95_s".to_string(), Json::num(self.ttft.p95)),
+            ("ttft_p99_s".to_string(), Json::num(self.ttft.p99)),
+            ("tpot_p50_s".to_string(), Json::num(self.tpot.p50)),
+            ("tpot_p95_s".to_string(), Json::num(self.tpot.p95)),
+            ("tpot_p99_s".to_string(), Json::num(self.tpot.p99)),
+            ("e2e_p50_s".to_string(), Json::num(self.e2e.p50)),
+            ("e2e_p95_s".to_string(), Json::num(self.e2e.p95)),
+            ("e2e_p99_s".to_string(), Json::num(self.e2e.p99)),
+            ("slo_attainment".to_string(), Json::num(self.attainment)),
+            ("goodput_tok_s".to_string(), Json::num(self.goodput_tok_s)),
+            ("preemptions".to_string(), Json::from(self.preemptions as usize)),
+            ("swaps".to_string(), Json::from(self.swaps as usize)),
+            ("rescues".to_string(), Json::from(self.rescues as usize)),
+        ]
+    }
+}
+
+/// Group outcomes by class (first-seen order) and summarize each.
+/// `makespan_s` is the wall/virtual span the replay took; it
+/// denominates goodput.
+pub fn summarize(
+    outcomes: &[RequestOutcome],
+    makespan_s: f64,
+) -> Vec<ClassSlo> {
+    let mut order: Vec<String> = Vec::new();
+    for o in outcomes {
+        if !order.contains(&o.class) {
+            order.push(o.class.clone());
+        }
+    }
+    order
+        .into_iter()
+        .map(|class| {
+            let of: Vec<&RequestOutcome> =
+                outcomes.iter().filter(|o| o.class == class).collect();
+            let completed = of.iter().filter(|o| o.ok).count();
+            let ttft: Vec<f64> = of.iter().map(|o| o.ttft_s).collect();
+            let tpot: Vec<f64> = of
+                .iter()
+                .filter(|o| o.generated >= 2)
+                .map(|o| o.tpot_s)
+                .collect();
+            let e2e: Vec<f64> = of.iter().map(|o| o.e2e_s).collect();
+            let good_tokens: usize =
+                of.iter().filter(|o| o.ok).map(|o| o.generated).sum();
+            ClassSlo {
+                n: of.len(),
+                completed,
+                aborted: of.len() - completed,
+                ttft: Percentiles::of(&ttft),
+                tpot: Percentiles::of(&tpot),
+                e2e: Percentiles::of(&e2e),
+                attainment: if of.is_empty() {
+                    1.0
+                } else {
+                    of.iter().filter(|o| o.attained()).count() as f64
+                        / of.len() as f64
+                },
+                goodput_tok_s: if makespan_s > 0.0 {
+                    good_tokens as f64 / makespan_s
+                } else {
+                    0.0
+                },
+                preemptions: of.iter().map(|o| o.preemptions).sum(),
+                swaps: of.iter().map(|o| o.swaps).sum(),
+                rescues: of.iter().map(|o| o.rescues).sum(),
+                class,
+            }
+        })
+        .collect()
+}
+
+/// Human-readable per-class table (the soak bench prints this next to
+/// the JSON trail).
+pub fn table(slos: &[ClassSlo]) -> String {
+    let mut out = String::new();
+    out.push_str(&format!(
+        "{:<18} {:>5} {:>5} {:>9} {:>9} {:>9} {:>9} {:>7} {:>9} {:>6} {:>5}\n",
+        "class", "n", "ok", "ttft p50", "ttft p95", "tpot p50", "e2e p95",
+        "attain", "goodput", "preem", "swap"
+    ));
+    for s in slos {
+        out.push_str(&format!(
+            "{:<18} {:>5} {:>5} {:>8.0}ms {:>8.0}ms {:>8.1}ms {:>8.2}s \
+             {:>6.1}% {:>5.1}t/s {:>6} {:>5}\n",
+            s.class,
+            s.n,
+            s.completed,
+            s.ttft.p50 * 1e3,
+            s.ttft.p95 * 1e3,
+            s.tpot.p50 * 1e3,
+            s.e2e.p95,
+            s.attainment * 100.0,
+            s.goodput_tok_s,
+            s.preemptions,
+            s.swaps,
+        ));
+    }
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::proptest::check;
+
+    fn outcome(class: &str, ttft: f64, e2e: f64, gen: usize) -> RequestOutcome {
+        RequestOutcome {
+            class: class.to_string(),
+            ttft_s: ttft,
+            tpot_s: if gen >= 2 {
+                (e2e - ttft) / (gen - 1) as f64
+            } else {
+                0.0
+            },
+            e2e_s: e2e,
+            generated: gen,
+            ok: true,
+            deadline_ms: Some(1000),
+            preemptions: 0,
+            swaps: 0,
+            rescues: 0,
+        }
+    }
+
+    #[test]
+    fn attainment_is_monotone_in_deadline() {
+        check("slo-attainment-monotone", 40, |rng, size| {
+            let n = 5 + size;
+            let e2e: Vec<f64> = (0..n).map(|_| rng.f64() * 10.0).collect();
+            let mut d1 = rng.f64() * 10.0;
+            let mut d2 = rng.f64() * 10.0;
+            if d1 > d2 {
+                std::mem::swap(&mut d1, &mut d2);
+            }
+            let (a1, a2) = (attainment(&e2e, d1), attainment(&e2e, d2));
+            if a1 > a2 {
+                return Err(format!(
+                    "attainment({d1})={a1} > attainment({d2})={a2}"
+                ));
+            }
+            if !(0.0..=1.0).contains(&a1) {
+                return Err(format!("attainment {a1} out of [0,1]"));
+            }
+            Ok(())
+        });
+    }
+
+    #[test]
+    fn summarize_groups_by_class_and_matches_exact_percentiles() {
+        let mut outcomes = Vec::new();
+        for i in 1..=100 {
+            outcomes.push(outcome("a", i as f64 / 1000.0, i as f64 / 100.0, 10));
+        }
+        outcomes.push(outcome("b", 0.5, 2.0, 1));
+        let slos = summarize(&outcomes, 10.0);
+        assert_eq!(slos.len(), 2);
+        let a = &slos[0];
+        assert_eq!(a.class, "a");
+        assert_eq!(a.n, 100);
+        assert_eq!(a.completed, 100);
+        // Nearest-rank over 1..=100 ms.
+        assert!((a.ttft.p50 - 0.050).abs() < 1e-12);
+        assert!((a.ttft.p95 - 0.095).abs() < 1e-12);
+        assert!((a.ttft.p99 - 0.099).abs() < 1e-12);
+        // Deadline 1000 ms: e2e runs 0.01..=1.0 s, all attained.
+        assert!((a.attainment - 1.0).abs() < 1e-12);
+        // 100 ok requests × 10 tokens over 10 s.
+        assert!((a.goodput_tok_s - 100.0).abs() < 1e-9);
+        let b = &slos[1];
+        assert_eq!(b.n, 1);
+        // Single-token request contributes no TPOT sample.
+        assert_eq!(b.tpot.p50, 0.0);
+        // e2e 2.0 s > 1.0 s deadline: missed.
+        assert_eq!(b.attainment, 0.0);
+    }
+
+    #[test]
+    fn aborted_requests_hurt_attainment_and_goodput() {
+        let mut o = outcome("a", 0.1, 0.2, 50);
+        o.ok = false;
+        let slos = summarize(&[o], 1.0);
+        assert_eq!(slos[0].completed, 0);
+        assert_eq!(slos[0].aborted, 1);
+        // Fast but aborted: not attained, no goodput.
+        assert_eq!(slos[0].attainment, 0.0);
+        assert_eq!(slos[0].goodput_tok_s, 0.0);
+    }
+
+    #[test]
+    fn no_deadline_counts_as_attained_when_ok() {
+        let mut o = outcome("a", 5.0, 50.0, 10);
+        o.deadline_ms = None;
+        assert!(o.attained());
+        o.ok = false;
+        assert!(!o.attained());
+    }
+
+    #[test]
+    fn table_renders_one_line_per_class() {
+        let slos = summarize(
+            &[outcome("a", 0.1, 0.5, 4), outcome("b", 0.2, 0.9, 8)],
+            1.0,
+        );
+        let t = table(&slos);
+        assert_eq!(t.lines().count(), 3);
+        assert!(t.contains("attain"));
+        assert!(t.contains('a') && t.contains('b'));
+    }
+}

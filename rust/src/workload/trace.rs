@@ -1,0 +1,333 @@
+//! Seeded multi-tenant request traces for the soak harness.
+//!
+//! A [`TraceSpec`] describes a set of tenant classes — each with its
+//! own arrival process, prompt/decode length distributions and
+//! `deadline_ms` — and expands deterministically into a merged,
+//! arrival-ordered request list. Every class draws from its own
+//! forked PRNG stream, so the trace is a pure function of
+//! `(seed, spec)`: the same seed reproduces the trace byte-for-byte
+//! (asserted via [`trace_fingerprint`]) and different seeds produce
+//! disjoint arrival schedules. That reproducibility is what lets CI
+//! replay the [`pinned`] trace and compare SLO numbers against the
+//! committed `BENCH_soak.json` baseline.
+
+use crate::util::prng::Rng;
+use crate::workload::{make_task, Task};
+
+/// Arrival process of one tenant class.
+#[derive(Clone, Debug)]
+pub enum ArrivalProcess {
+    /// Homogeneous Poisson arrivals at `rate` requests/second.
+    Poisson {
+        /// Mean arrival intensity (req/s).
+        rate: f64,
+    },
+    /// Two-state on-off (Markov-modulated Poisson) process: bursts of
+    /// Poisson arrivals at `rate_on` whose lengths are exponential
+    /// with mean `mean_on_s`, separated by silent gaps with mean
+    /// `mean_off_s`. This is the "batch long-reasoning tenant wakes
+    /// up and floods the queue" shape the KV budget has to survive.
+    OnOff {
+        /// Arrival intensity during a burst (req/s).
+        rate_on: f64,
+        /// Mean burst length in seconds.
+        mean_on_s: f64,
+        /// Mean silent-gap length in seconds.
+        mean_off_s: f64,
+    },
+}
+
+/// One tenant class: who arrives, how often, and with what work.
+#[derive(Clone, Debug)]
+pub struct TenantClass {
+    /// Stable class label carried through scheduling, metrics and the
+    /// bench rows (e.g. `"interactive"`).
+    pub name: String,
+    pub arrival: ArrivalProcess,
+    /// Inclusive range of `n_pairs` for [`make_task`] (prompt length).
+    pub pairs: (usize, usize),
+    /// Inclusive range of reasoning `hops`.
+    pub hops: (usize, usize),
+    /// Inclusive range of `max_new_tokens` (decode length).
+    pub max_new: (usize, usize),
+    /// Per-request end-to-end deadline; `None` = best-effort.
+    pub deadline_ms: Option<u64>,
+}
+
+/// A reproducible multi-tenant trace description.
+#[derive(Clone, Debug)]
+pub struct TraceSpec {
+    /// Root seed; each class forks its own stream from it.
+    pub seed: u64,
+    /// Arrival horizon in seconds (no arrivals at or past it).
+    pub horizon_s: f64,
+    pub classes: Vec<TenantClass>,
+}
+
+/// One generated request of the trace, arrival-ordered.
+#[derive(Clone, Debug)]
+pub struct TraceRequest {
+    /// 1-based id in merged arrival order.
+    pub id: u64,
+    /// Index into [`TraceSpec::classes`].
+    pub class_idx: usize,
+    /// Class label (copy of the class name, for row emission).
+    pub class: String,
+    pub arrival_s: f64,
+    pub task: Task,
+    pub max_new_tokens: usize,
+    pub deadline_ms: Option<u64>,
+}
+
+impl TraceRequest {
+    /// Prompt length in tokens under the char-level tokenizer (the
+    /// prompt grammar is pure ASCII, so bytes == chars == tokens).
+    /// The sim replayer costs prefill with this; the real replay path
+    /// re-encodes through the model tokenizer.
+    pub fn prompt_tokens(&self) -> usize {
+        self.task.prompt.len()
+    }
+
+    /// Canonical one-line serialization: every field that can affect a
+    /// replay, with the arrival rendered as exact f64 bits. Two traces
+    /// are byte-identical iff their canonical lines all match.
+    pub fn canonical(&self) -> String {
+        format!(
+            "{}|{}|{}|{:016x}|{}|{}|{:?}",
+            self.id,
+            self.class_idx,
+            self.class,
+            self.arrival_s.to_bits(),
+            self.task.prompt,
+            self.max_new_tokens,
+            self.deadline_ms,
+        )
+    }
+}
+
+/// Per-class arrival schedule: draws from `rng` only, one well-defined
+/// draw order (phase length → inter-arrival → task sizes → task), so
+/// the stream is reproducible and mirrorable.
+fn class_requests(
+    rng: &mut Rng,
+    class_idx: usize,
+    class: &TenantClass,
+    horizon_s: f64,
+) -> Vec<TraceRequest> {
+    let mut out = Vec::new();
+    let mut emit = |rng: &mut Rng, t: f64| {
+        let pairs = rng.range(class.pairs.0, class.pairs.1);
+        let hops = rng.range(class.hops.0, class.hops.1).min(pairs);
+        let max_new = rng.range(class.max_new.0, class.max_new.1);
+        out.push(TraceRequest {
+            id: 0, // assigned after the merge sort
+            class_idx,
+            class: class.name.clone(),
+            arrival_s: t,
+            task: make_task(rng, pairs, hops),
+            max_new_tokens: max_new,
+            deadline_ms: class.deadline_ms,
+        });
+    };
+    match class.arrival {
+        ArrivalProcess::Poisson { rate } => {
+            let mut t = 0.0;
+            loop {
+                t += rng.exponential(rate);
+                if t >= horizon_s {
+                    break;
+                }
+                emit(rng, t);
+            }
+        }
+        ArrivalProcess::OnOff { rate_on, mean_on_s, mean_off_s } => {
+            let mut t = 0.0;
+            while t < horizon_s {
+                let on_end = t + rng.exponential(1.0 / mean_on_s);
+                loop {
+                    let dt = rng.exponential(rate_on);
+                    if t + dt >= on_end || t + dt >= horizon_s {
+                        break;
+                    }
+                    t += dt;
+                    emit(rng, t);
+                }
+                t = on_end + rng.exponential(1.0 / mean_off_s);
+            }
+        }
+    }
+    out
+}
+
+/// Expand a spec into the merged, arrival-ordered request list.
+///
+/// Each class forks its own PRNG stream from the root seed (stream
+/// order = class order), so adding draws to one class never perturbs
+/// another, and the merge is a stable sort on `(arrival_s, class_idx)`.
+pub fn generate(spec: &TraceSpec) -> Vec<TraceRequest> {
+    let mut root = Rng::new(spec.seed);
+    let mut all: Vec<TraceRequest> = Vec::new();
+    for (ci, class) in spec.classes.iter().enumerate() {
+        let mut stream = root.fork();
+        all.extend(class_requests(&mut stream, ci, class, spec.horizon_s));
+    }
+    all.sort_by(|a, b| {
+        a.arrival_s
+            .total_cmp(&b.arrival_s)
+            .then(a.class_idx.cmp(&b.class_idx))
+    });
+    for (i, r) in all.iter_mut().enumerate() {
+        r.id = i as u64 + 1;
+    }
+    all
+}
+
+/// FNV-1a 64-bit over the canonical serialization — the trace's
+/// identity for reproducibility assertions and the bench rows.
+pub fn trace_fingerprint(trace: &[TraceRequest]) -> u64 {
+    let mut h: u64 = 0xcbf2_9ce4_8422_2325;
+    for r in trace {
+        for b in r.canonical().as_bytes() {
+            h ^= *b as u64;
+            h = h.wrapping_mul(0x0000_0100_0000_01b3);
+        }
+        h ^= b'\n' as u64;
+        h = h.wrapping_mul(0x0000_0100_0000_01b3);
+    }
+    h
+}
+
+/// Root seed of the pinned CI trace. Changing it (or [`pinned`])
+/// invalidates `rust/bench_baselines/BENCH_soak.json` — regenerate the
+/// baseline in the same commit.
+pub const PINNED_SEED: u64 = 0x1e7e_50a4;
+
+/// The pinned two-tenant trace CI replays for the perf trajectory:
+/// an interactive short-prompt class with a tight deadline under
+/// steady Poisson arrivals, plus a batch long-reasoning class that
+/// arrives in on-off bursts with long decodes and no deadline.
+pub fn pinned() -> TraceSpec {
+    TraceSpec {
+        seed: PINNED_SEED,
+        horizon_s: 25.0,
+        classes: vec![
+            TenantClass {
+                name: "interactive".to_string(),
+                arrival: ArrivalProcess::Poisson { rate: 6.0 },
+                pairs: (3, 5),
+                hops: (1, 1),
+                max_new: (8, 16),
+                deadline_ms: Some(2500),
+            },
+            TenantClass {
+                name: "batch-reasoning".to_string(),
+                arrival: ArrivalProcess::OnOff {
+                    rate_on: 4.0,
+                    mean_on_s: 5.0,
+                    mean_off_s: 4.0,
+                },
+                pairs: (10, 16),
+                hops: (3, 4),
+                max_new: (48, 96),
+                deadline_ms: None,
+            },
+        ],
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn same_seed_is_byte_identical() {
+        let a = generate(&pinned());
+        let b = generate(&pinned());
+        assert_eq!(a.len(), b.len());
+        for (x, y) in a.iter().zip(&b) {
+            assert_eq!(x.canonical(), y.canonical());
+        }
+        assert_eq!(trace_fingerprint(&a), trace_fingerprint(&b));
+    }
+
+    #[test]
+    fn disjoint_seeds_give_disjoint_arrival_schedules() {
+        let mut spec_a = pinned();
+        spec_a.seed = 1;
+        let mut spec_b = pinned();
+        spec_b.seed = 2;
+        let a = generate(&spec_a);
+        let b = generate(&spec_b);
+        assert_ne!(trace_fingerprint(&a), trace_fingerprint(&b));
+        // No arrival instant is shared bit-for-bit between the seeds:
+        // the exponential draws come from decorrelated streams.
+        let set_a: std::collections::HashSet<u64> =
+            a.iter().map(|r| r.arrival_s.to_bits()).collect();
+        assert!(
+            b.iter().all(|r| !set_a.contains(&r.arrival_s.to_bits())),
+            "seed-2 trace shares an arrival instant with seed-1"
+        );
+    }
+
+    #[test]
+    fn merged_trace_is_ordered_with_sequential_ids() {
+        let tr = generate(&pinned());
+        assert!(!tr.is_empty());
+        assert!(tr.windows(2).all(|w| w[0].arrival_s <= w[1].arrival_s));
+        for (i, r) in tr.iter().enumerate() {
+            assert_eq!(r.id, i as u64 + 1);
+            assert!(r.arrival_s < 25.0);
+            assert!(r.max_new_tokens >= 8);
+        }
+    }
+
+    #[test]
+    fn pinned_trace_mixes_both_tenant_classes() {
+        let tr = generate(&pinned());
+        let interactive =
+            tr.iter().filter(|r| r.class == "interactive").count();
+        let batch =
+            tr.iter().filter(|r| r.class == "batch-reasoning").count();
+        assert!(interactive > 50, "interactive count {interactive}");
+        assert!(batch > 10, "batch count {batch}");
+        // Deadlines ride with the class.
+        assert!(tr
+            .iter()
+            .filter(|r| r.class == "interactive")
+            .all(|r| r.deadline_ms == Some(2500)));
+        assert!(tr
+            .iter()
+            .filter(|r| r.class == "batch-reasoning")
+            .all(|r| r.deadline_ms.is_none()));
+        // Long-reasoning prompts really are longer.
+        let avg = |name: &str| {
+            let xs: Vec<usize> = tr
+                .iter()
+                .filter(|r| r.class == name)
+                .map(|r| r.prompt_tokens())
+                .collect();
+            xs.iter().sum::<usize>() as f64 / xs.len() as f64
+        };
+        assert!(avg("batch-reasoning") > 2.0 * avg("interactive"));
+    }
+
+    #[test]
+    fn class_streams_are_independent_of_each_other() {
+        // Dropping the second class must not change the first class's
+        // schedule: streams are forked up front, not interleaved.
+        let full = generate(&pinned());
+        let mut solo_spec = pinned();
+        solo_spec.classes.truncate(1);
+        let solo = generate(&solo_spec);
+        let full_interactive: Vec<&TraceRequest> = full
+            .iter()
+            .filter(|r| r.class == "interactive")
+            .collect();
+        assert_eq!(full_interactive.len(), solo.len());
+        for (a, b) in full_interactive.iter().zip(&solo) {
+            assert_eq!(a.arrival_s.to_bits(), b.arrival_s.to_bits());
+            assert_eq!(a.task.prompt, b.task.prompt);
+            assert_eq!(a.max_new_tokens, b.max_new_tokens);
+        }
+    }
+}

@@ -155,6 +155,7 @@ fn scheduler_continuous_batching_completes_all() {
                 },
                 submitted_at: std::time::Instant::now(),
                 deadline_ms: None,
+                class: String::new(),
             })
             .unwrap();
     }

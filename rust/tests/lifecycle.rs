@@ -37,6 +37,7 @@ fn req(id: u64, prompt: Vec<i32>, max_new: usize, policy: PolicyKind) -> Request
         policy,
         submitted_at: Instant::now(),
         deadline_ms: None,
+        class: String::new(),
     }
 }
 
@@ -157,7 +158,9 @@ fn preempted_sequence_resumes_with_identical_tokens() {
 
     // Contended run: a KV byte budget that fits both prompts but not
     // their growth, so the younger sequence (B) gets recompute-
-    // preempted and later resumed.
+    // preempted and later resumed. Swap is explicitly disabled — this
+    // test pins the recompute path; (c) below pins the swap path.
+    engine.cfg.scheduler.swap_threshold_bytes_per_token = 0;
     engine.cfg.scheduler.kv_budget_bytes =
         (pa.len() + pb.len() + 1) * engine.rt.meta.kv_bytes_per_token();
     let mut sched = Scheduler::new(&engine, PolicyKind::FullKv);
@@ -481,6 +484,7 @@ fn rescued_sequence_continues_token_identically_across_groups() {
             max_new_tokens: 40,
             policy: None,
             deadline_ms: None,
+            class: None,
         })
         .unwrap();
     assert!(
@@ -539,6 +543,7 @@ fn rescued_sequence_continues_token_identically_across_groups() {
             max_new_tokens: 40,
             policy: None,
             deadline_ms: None,
+            class: None,
         })
         .expect("serving continues after the restart");
     assert_eq!(
