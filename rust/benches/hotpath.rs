@@ -15,13 +15,14 @@
 //! Every pure-rust row is also written to `bench_results/hotpath.csv`
 //! via `bench_support::hotpath_csv`.
 
-use lethe::bench_support::{hotpath_csv, try_engine, write_bench_json,
-                           BenchJsonRow};
+use lethe::bench_support::{gen_tasks, hotpath_csv, run_tasks, try_engine,
+                           write_bench_json, BenchJsonRow};
 use lethe::config::{LetheParams, ServingConfig};
 use lethe::kvcache::{CacheDims, GroupCache, KvFormat, PackScratch,
                      PackedScratch};
-use lethe::policy::{EvictionPolicy, LayerState, LethePolicy};
+use lethe::policy::{EvictionPolicy, LayerState, LethePolicy, PolicyKind};
 use lethe::runtime::tensors::{HostTensorF32, HostTensorI32};
+use lethe::util::json::Json;
 use lethe::util::prng::Rng;
 use lethe::util::stats::{bench, bench_row, Summary};
 
@@ -199,6 +200,7 @@ fn main() -> anyhow::Result<()> {
     // asymptotics are 4x (q8) / 8x (q4); the measured wire ratios at
     // d_head=32 include the f32 scales (and q4 zero points), landing
     // near 3.6x / 5.3x.
+    let mut json_rows: Vec<BenchJsonRow> = Vec::new();
     {
         for b in 0..8 {
             for l in 0..4 {
@@ -234,32 +236,27 @@ fn main() -> anyhow::Result<()> {
             st_4.bytes_copied,
             st_f.bytes_copied as f64 / st_4.bytes_copied as f64,
         );
-        write_bench_json(
-            "hotpath",
-            &[
-                BenchJsonRow {
-                    name: "delta_pack_step".into(),
-                    kv_format: "f32".into(),
-                    tokens_per_s: 8.0 / s_f32_delta.mean,
-                    upload_bytes_per_step: st_f.bytes_copied,
-                    extra: Vec::new(),
-                },
-                BenchJsonRow {
-                    name: "delta_pack_step".into(),
-                    kv_format: "q8".into(),
-                    tokens_per_s: 8.0 / s_q8_packed.mean,
-                    upload_bytes_per_step: st_8.bytes_copied,
-                    extra: Vec::new(),
-                },
-                BenchJsonRow {
-                    name: "delta_pack_step".into(),
-                    kv_format: "q4".into(),
-                    tokens_per_s: 8.0 / s_q4_packed.mean,
-                    upload_bytes_per_step: st_4.bytes_copied,
-                    extra: Vec::new(),
-                },
-            ],
-        )?;
+        json_rows.push(BenchJsonRow {
+            name: "delta_pack_step".into(),
+            kv_format: "f32".into(),
+            tokens_per_s: 8.0 / s_f32_delta.mean,
+            upload_bytes_per_step: st_f.bytes_copied,
+            extra: Vec::new(),
+        });
+        json_rows.push(BenchJsonRow {
+            name: "delta_pack_step".into(),
+            kv_format: "q8".into(),
+            tokens_per_s: 8.0 / s_q8_packed.mean,
+            upload_bytes_per_step: st_8.bytes_copied,
+            extra: Vec::new(),
+        });
+        json_rows.push(BenchJsonRow {
+            name: "delta_pack_step".into(),
+            kv_format: "q4".into(),
+            tokens_per_s: 8.0 / s_q4_packed.mean,
+            upload_bytes_per_step: st_4.bytes_copied,
+            extra: Vec::new(),
+        });
     }
 
     let add: Vec<f32> = (0..400).map(|_| rng.f32()).collect();
@@ -317,35 +314,107 @@ fn main() -> anyhow::Result<()> {
     hotpath_csv(&csv)?;
 
     // --- PJRT decode per bucket -------------------------------------------
-    let cfg = ServingConfig::default();
-    let Some((engine, _tok)) = try_engine(cfg) else { return Ok(()) };
-    let meta = &engine.rt.meta;
-    let d = meta.dims.clone();
-    for &(bb, cap) in &[(1usize, 128usize), (1, 512), (4, 128), (8, 128),
-                        (8, 512)] {
-        if !meta
-            .executables
-            .contains_key(&format!("decode_b{bb}_c{cap}"))
-        {
-            continue;
+    if let Some((engine, _tok)) = try_engine(ServingConfig::default()) {
+        let meta = &engine.rt.meta;
+        let d = meta.dims.clone();
+        for &(bb, cap) in &[(1usize, 128usize), (1, 512), (4, 128), (8, 128),
+                            (8, 512)] {
+            if !meta
+                .executables
+                .contains_key(&format!("decode_b{bb}_c{cap}"))
+            {
+                continue;
+            }
+            let kv = HostTensorF32::zeros(&[d.n_layers, bb, d.n_kv_heads, cap,
+                                            d.d_head]);
+            let mut lens = HostTensorI32::zeros(&[d.n_layers, bb]);
+            for x in lens.data.iter_mut() {
+                *x = (cap / 2) as i32;
+            }
+            let tokens = vec![5i32; bb];
+            let positions = vec![(cap / 2) as i32; bb];
+            let s = bench(3, 20, || {
+                std::hint::black_box(
+                    engine
+                        .rt
+                        .decode(bb, cap, &kv, &kv, &lens, &tokens, &positions)
+                        .unwrap(),
+                );
+            });
+            println!("{}", bench_row(&format!("decode exec b{bb} c{cap}"), &s));
         }
-        let kv = HostTensorF32::zeros(&[d.n_layers, bb, d.n_kv_heads, cap,
-                                        d.d_head]);
-        let mut lens = HostTensorI32::zeros(&[d.n_layers, bb]);
-        for x in lens.data.iter_mut() {
-            *x = (cap / 2) as i32;
-        }
-        let tokens = vec![5i32; bb];
-        let positions = vec![(cap / 2) as i32; bb];
-        let s = bench(3, 20, || {
-            std::hint::black_box(
-                engine
-                    .rt
-                    .decode(bb, cap, &kv, &kv, &lens, &tokens, &positions)
-                    .unwrap(),
-            );
-        });
-        println!("{}", bench_row(&format!("decode exec b{bb} c{cap}"), &s));
     }
+
+    // --- pipelined decode step --------------------------------------------
+    // End-to-end Engine::step walls, serial vs pipelined, on the same
+    // closed-loop workload. The serial-equivalent cost of a pipelined
+    // step is its own measured components (pack + exec + policy — each
+    // overlapped step still performs all three); overlap efficiency is
+    // the fraction of the theoretically hideable time — min(exec,
+    // policy) — the pipeline actually hid. CI gates this row at >= 0.5.
+    {
+        let tasks = gen_tasks(0x9a7, 8, 6, 2);
+        let mut serial_tps = 0.0;
+        let mut serial_step = 0.0;
+        let mut scfg = ServingConfig::default();
+        scfg.engine.pipeline_decode = false;
+        if let Some((mut e, tok)) = try_engine(scfg) {
+            let r = run_tasks(&mut e, &tok, PolicyKind::Lethe, &tasks, 4, 48)?;
+            serial_tps = r.gen_tokens as f64 / r.wall_s;
+            serial_step = e.metrics.step_seconds.mean();
+        }
+        if let Some((mut e, tok)) =
+            try_engine(ServingConfig::default())
+        {
+            let r = run_tasks(&mut e, &tok, PolicyKind::Lethe, &tasks, 4, 48)?;
+            let m = &e.metrics;
+            let (pack, exec, policy, step) = (
+                m.pack_seconds.mean(),
+                m.exec_seconds.mean(),
+                m.policy_seconds.mean(),
+                m.step_seconds.mean(),
+            );
+            let serial_equiv = pack + exec + policy;
+            let hideable = exec.min(policy);
+            let eff = if hideable > 0.0 {
+                ((serial_equiv - step) / hideable).max(0.0)
+            } else {
+                0.0
+            };
+            let tps = r.gen_tokens as f64 / r.wall_s;
+            println!(
+                "pipeline overlap: step {:.3}ms (serial {:.3}ms, \
+                 components {:.3}ms = pack {:.3} + exec {:.3} + policy \
+                 {:.3}) | efficiency {:.2} | overlapped {}/{} steps | \
+                 {:.1} tok/s vs {:.1} serial",
+                step * 1e3, serial_step * 1e3, serial_equiv * 1e3,
+                pack * 1e3, exec * 1e3, policy * 1e3, eff,
+                m.pipeline_overlapped_steps, m.decode_steps, tps, serial_tps,
+            );
+            json_rows.push(BenchJsonRow {
+                name: "pipeline_overlap".into(),
+                kv_format: "f32".into(),
+                tokens_per_s: tps,
+                upload_bytes_per_step: 0,
+                extra: vec![
+                    ("step_s_mean".into(), Json::num(step)),
+                    ("serial_step_s_mean".into(), Json::num(serial_step)),
+                    ("serial_equiv_s_mean".into(), Json::num(serial_equiv)),
+                    ("pack_s_mean".into(), Json::num(pack)),
+                    ("exec_s_mean".into(), Json::num(exec)),
+                    ("policy_s_mean".into(), Json::num(policy)),
+                    ("overlap_efficiency".into(), Json::num(eff)),
+                    (
+                        "overlapped_steps".into(),
+                        Json::from(m.pipeline_overlapped_steps as usize),
+                    ),
+                    ("decode_steps".into(), Json::from(m.decode_steps as usize)),
+                    ("serial_tokens_per_s".into(), Json::num(serial_tps)),
+                ],
+            });
+        }
+    }
+
+    write_bench_json("hotpath", &json_rows)?;
     Ok(())
 }

@@ -260,7 +260,7 @@ fn main() -> anyhow::Result<()> {
         let tasks = gen_tasks(7, 8, 24, 4);
         let (churn, completions) =
             run_churn(&mut engine, &tok, PolicyKind::Lethe, &tasks, 16)?;
-        let prefill_s: f64 = engine.metrics.prefill_seconds.iter().sum();
+        let prefill_s: f64 = engine.metrics.prefill_seconds.sum();
         println!(
             "prefill[{label}]: {} tokens through prefill executables in \
              {:.3}s ({} requests, wall {:.2}s)",

@@ -212,6 +212,28 @@ impl Default for SchedulerConfig {
     }
 }
 
+/// Engine execution knobs (`engine.*`).
+#[derive(Clone, Debug, PartialEq)]
+pub struct EngineConfig {
+    /// Software-pipeline the decode loop: after a step's critical lane
+    /// (KV mirror insert + sampling), pack and submit the *next* step's
+    /// device execute on the async runtime seam, then run the deferred
+    /// policy lane (RASR scoring, sparsity EMA, retention planning)
+    /// concurrently with it. Fingerprint-validated so output stays
+    /// token-identical to serial decode under greedy sampling; the
+    /// engine drains to serial at every boundary where deferred work
+    /// can change layout or control flow. Disable with `--no-pipeline`
+    /// (or `"engine": {"pipeline_decode": false}`) to force the fully
+    /// serial step.
+    pub pipeline_decode: bool,
+}
+
+impl Default for EngineConfig {
+    fn default() -> Self {
+        EngineConfig { pipeline_decode: true }
+    }
+}
+
 /// Deterministic fault-injection knobs (`faults.*`). All rates default
 /// to zero, which disables injection entirely — the engine then holds
 /// no [`crate::fault::FaultPlan`] and the hot path pays one branch per
@@ -304,6 +326,7 @@ pub struct ServingConfig {
     pub baseline: BaselineParams,
     pub scheduler: SchedulerConfig,
     pub kv: KvConfig,
+    pub engine: EngineConfig,
     pub faults: FaultsConfig,
     pub serving: SupervisorConfig,
 }
@@ -317,6 +340,7 @@ impl Default for ServingConfig {
             baseline: BaselineParams::default(),
             scheduler: SchedulerConfig::default(),
             kv: KvConfig::default(),
+            engine: EngineConfig::default(),
             faults: FaultsConfig::default(),
             serving: SupervisorConfig::default(),
         }
@@ -344,7 +368,7 @@ impl ServingConfig {
         let mut c = ServingConfig::default();
         for (k, _) in j.as_obj()? {
             if !["artifacts_dir", "cache_profile", "lethe", "baseline",
-                 "scheduler", "kv", "faults", "serving"]
+                 "scheduler", "kv", "engine", "faults", "serving"]
                 .contains(&k.as_str())
             {
                 anyhow::bail!("unknown config section '{k}'");
@@ -444,6 +468,18 @@ impl ServingConfig {
                 }
                 get_f64(m, "threshold", &mut rule.threshold)?;
                 c.kv.mixed = Some(rule);
+            }
+        }
+        if let Some(e) = j.opt("engine") {
+            for (k, _) in e.as_obj()? {
+                if !["pipeline_decode"].contains(&k.as_str()) {
+                    anyhow::bail!("unknown engine key '{k}'");
+                }
+            }
+            if let Some(v) = e.opt("pipeline_decode") {
+                c.engine.pipeline_decode = v
+                    .as_bool()
+                    .context("config key 'engine.pipeline_decode'")?;
             }
         }
         if let Some(f) = j.opt("faults") {
@@ -721,6 +757,25 @@ mod tests {
             assert!(ServingConfig::from_json(&parse(bad).unwrap()).is_err(),
                     "should reject {bad}");
         }
+    }
+
+    #[test]
+    fn engine_pipeline_knob_parses_and_defaults_on() {
+        let c = ServingConfig::from_json(&parse("{}").unwrap()).unwrap();
+        assert!(c.engine.pipeline_decode, "pipelining is on by default");
+        let c = ServingConfig::from_json(
+            &parse(r#"{"engine": {"pipeline_decode": false}}"#).unwrap(),
+        )
+        .unwrap();
+        assert!(!c.engine.pipeline_decode);
+        assert!(ServingConfig::from_json(
+            &parse(r#"{"engine": {"pipeline_decode": 1}}"#).unwrap()
+        )
+        .is_err());
+        assert!(ServingConfig::from_json(
+            &parse(r#"{"engine": {"pipelined": true}}"#).unwrap()
+        )
+        .is_err());
     }
 
     #[test]

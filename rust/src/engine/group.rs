@@ -335,6 +335,35 @@ impl DecodeGroup {
         seq
     }
 
+    /// FNV-1a digest of the group's batch composition: which sequences
+    /// sit in which slots and how far each has decoded. The pipelined
+    /// engine stamps this at decode-submit time and compares at wait
+    /// time — any reap/install/remove/preemption (or an accepted token
+    /// the submit did not see) between the two changes the digest, and
+    /// a mismatch discards the in-flight result and reruns the step
+    /// serially. Combined with [`crate::kvcache::GroupCache`]'s layout
+    /// fingerprint this is the safety net that makes pre-submission
+    /// heuristics (`may_prune` etc.) allowed to be wrong.
+    pub fn composition_fingerprint(&self) -> u64 {
+        const FNV_OFFSET: u64 = 0xcbf2_9ce4_8422_2325;
+        const FNV_PRIME: u64 = 0x0000_0100_0000_01b3;
+        let mut h = FNV_OFFSET;
+        let mut eat = |h: &mut u64, bytes: &[u8]| {
+            for &b in bytes {
+                *h ^= b as u64;
+                *h = h.wrapping_mul(FNV_PRIME);
+            }
+        };
+        eat(&mut h, &(self.seqs.len() as u64).to_le_bytes());
+        for s in &self.seqs {
+            eat(&mut h, &s.id.to_le_bytes());
+            eat(&mut h, &(s.abs_pos as u64).to_le_bytes());
+            eat(&mut h, &s.last_token.to_le_bytes());
+            eat(&mut h, &(s.steps as u64).to_le_bytes());
+        }
+        h
+    }
+
     /// Remove finished sequences, keeping slots front-packed; returns how
     /// many were reaped. Cache rows for removed slots are recycled via
     /// swap-with-last.

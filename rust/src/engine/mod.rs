@@ -13,11 +13,26 @@
 //!      append-only steps copy (or, on the quantized `kv.format = "q8"`
 //!      backend, dequantize) one token row per (layer, slot) instead
 //!      of the whole C-prefix — then uploads + runs `decode_b{B}_c{C}`,
-//!   3. fans the per-slot post-decode work (host-side K/V insert mirror,
-//!      RASR score accumulation Eq. 5, sparsity tracking Eq. 1, greedy
-//!      sampling, and multi-round policy pruning) out across the worker
-//!      pool — each slot's state is disjoint, so slots proceed in
+//!   3. fans the per-slot post-decode work out across the worker pool in
+//!      two lanes: the **critical lane** (host-side K/V insert mirror +
+//!      NaN-safe greedy sampling — everything the next step's upload
+//!      image depends on) and the **deferred policy lane** (RASR score
+//!      accumulation Eq. 5, sparsity tracking Eq. 1, multi-round policy
+//!      pruning) — each slot's state is disjoint, so slots proceed in
 //!      parallel with per-slot scratch buffers.
+//!
+//! With `engine.pipeline_decode` (the default) the step is software
+//! pipelined: right after the critical lane, the next step's image is
+//! delta-packed into the *other* scratch buffer and its execute is
+//! pre-submitted on the async runtime seam ([`Runtime::decode_submit`]),
+//! so the device runs step t+1 while step t's deferred policy lane is
+//! still working. The pipeline drains to the serial path at every
+//! boundary where deferred work can change layout or control flow — a
+//! due prune round (each policy's `may_prune` promise), a finishing
+//! sequence, a capacity-bucket or packed-variant flip, any injected or
+//! real fault — and every landed result is re-validated against the
+//! group's composition and cache-layout fingerprints before being
+//! applied, so greedy decode stays token-identical to the serial path.
 //!
 //! FullKV never prunes, so step 1 eventually finds no capacity bucket —
 //! that error is surfaced as an OOM on the sequence, mirroring the
@@ -37,11 +52,12 @@ use crate::config::ServingConfig;
 use crate::error::{EngineError, FailureKind};
 use crate::fault::{FaultPlan, FaultSite};
 use crate::kvcache::{
-    CacheDims, FormatMap, KvFormat, PackScratch, PackedScratch, SlotViewMut,
+    CacheDims, FormatMap, KvFormat, PackScratch, PackStats, PackedScratch,
+    SlotViewMut,
 };
 use crate::metrics::EngineMetrics;
 use crate::policy::{LayerState, PolicyKind};
-use crate::runtime::registry::{DecodeOut, PrefillOut};
+use crate::runtime::registry::{DecodeHandle, DecodeOut, PrefillOut};
 use crate::runtime::tensors::HostTensorF32;
 use crate::runtime::Runtime;
 use crate::util::threadpool::ThreadPool;
@@ -114,6 +130,67 @@ impl UploadScratch {
         }
         slot.as_mut().unwrap()
     }
+}
+
+/// Next step's fault triple, pre-drawn at the end of the current step.
+///
+/// The pipelined path must decide whether to pre-submit step t+1's
+/// execute *before* step t returns, and an injected fault at any seam
+/// forces t+1 down the serial path — so every successful step draws the
+/// next step's whole triple early, and the serial path consumes the
+/// same stash, keeping the seeded RNG stream advancing at identical
+/// points in both modes. One seed ⇒ one fault schedule, pipelined or
+/// not (the serial-vs-pipelined lockstep property test leans on this).
+struct StashedFaults {
+    /// Cache generation the triple was drawn against; a stale stash
+    /// (the caller swapped groups since) is discarded — identically in
+    /// both modes, since the stash protocol is one shared code path.
+    cache_id: u64,
+    stall: bool,
+    /// Raw victim draw for a KV-alloc injection, reduced modulo the
+    /// live batch size at consume time ([`FaultPlan::pick_raw`] — one
+    /// fixed-width draw keeps the stream batch-size independent).
+    kv_raw: Option<u64>,
+    exec: bool,
+}
+
+/// An execute pre-submitted for the *next* step at the end of this one
+/// (`engine.pipeline_decode`). While this exists the runtime and the
+/// upload-scratch map are off limits — the executor thread reads the
+/// submitted image through raw pointers until [`Engine::sync_runtime`]
+/// lands it.
+struct PendingDecode {
+    handle: DecodeHandle,
+    /// Group composition at submit
+    /// ([`DecodeGroup::composition_fingerprint`]).
+    comp_fp: u64,
+    /// Cache layout at submit
+    /// ([`crate::kvcache::GroupCache::layout_fingerprint`]). The
+    /// deferred policy lane runs *after* the submit, but score
+    /// accumulation leaves lens and epochs untouched — so the
+    /// fingerprint moves only when something that actually invalidates
+    /// the submitted image happened (a prune the `may_prune` gate
+    /// missed, a migration, a swap/restore, a prefill install).
+    layout_fp: u64,
+    cache_id: u64,
+    n: usize,
+    bb: usize,
+    cap: usize,
+    want: Option<KvFormat>,
+}
+
+/// A landed pre-submitted execute awaiting validation by the next
+/// [`Engine::step`] call (same fields as [`PendingDecode`], with the
+/// handle resolved into its result).
+struct ResolvedDecode {
+    out: Result<DecodeOut>,
+    comp_fp: u64,
+    layout_fp: u64,
+    cache_id: u64,
+    n: usize,
+    bb: usize,
+    cap: usize,
+    want: Option<KvFormat>,
 }
 
 /// Accumulated state of an in-flight incremental (chunked) prefill: the
@@ -213,6 +290,22 @@ pub struct Engine {
     /// draws happen on single-threaded control flow *before* the
     /// per-slot fan-out, so a seed fully determines the fault schedule.
     pub faults: Option<FaultPlan>,
+    /// `engine.pipeline_decode`: pre-submit the next step's execute at
+    /// the end of each step so the device runs concurrently with the
+    /// deferred policy lane. Off (`--no-pipeline`) every step runs the
+    /// serial pack → execute → policy path.
+    pipeline: bool,
+    /// In-flight pre-submitted execute for the next step.
+    pending: Option<PendingDecode>,
+    /// Landed-but-unvalidated pre-submitted result, kept between
+    /// [`Engine::sync_runtime`] and the next [`Engine::step`].
+    resolved: Option<ResolvedDecode>,
+    /// Pre-drawn fault triple for the next step (see
+    /// [`Engine::take_step_faults`]).
+    fault_stash: Option<StashedFaults>,
+    /// The previous step already recorded why this step runs serially
+    /// (a pre-submit refusal); suppresses the `"cold"` drain note.
+    drain_prenoted: bool,
     pub metrics: EngineMetrics,
     /// When set, [`Engine::step`] keeps a copy of the raw per-head
     /// attention probs `[L, B, Hq, C]` of the last step — the Figures 1
@@ -228,7 +321,8 @@ impl Engine {
             .decode_capacities
             .get(&cfg.cache_profile)
             .ok_or_else(|| anyhow!("profile '{}' not compiled",
-                                   cfg.cache_profile))?;
+                                   cfg.cache_profile))?
+            .clone();
         let cmax = *caps.iter().max().unwrap();
         let batch_buckets = rt.batch_buckets(&cfg.cache_profile);
         let n_layers = rt.meta.dims.n_layers;
@@ -247,6 +341,14 @@ impl Engine {
             ));
         }
         let faults = FaultPlan::from_config(&cfg.faults);
+        let mut metrics = EngineMetrics::default();
+        // Pre-seed the capacity histogram with every compiled bucket so
+        // the steady-state step's entry() never allocates a map node;
+        // zero-count buckets stay out of the serialized JSON.
+        for &c in &caps {
+            metrics.capacity_hist.insert(c, 0);
+        }
+        let pipeline = cfg.engine.pipeline_decode;
         Ok(Engine {
             rt,
             cfg,
@@ -257,10 +359,42 @@ impl Engine {
             layer_sparsity: vec![0.0; n_layers],
             pool: ThreadPool::new(slot_workers()),
             faults,
-            metrics: EngineMetrics::default(),
+            pipeline,
+            pending: None,
+            resolved: None,
+            fault_stash: None,
+            drain_prenoted: false,
+            metrics,
             keep_probs: false,
             last_probs: None,
         })
+    }
+
+    /// Land any in-flight pre-submitted execute. Must run before every
+    /// runtime entry and before anything moves or mutates the upload
+    /// scratch: the executor thread reads the submitted image (and the
+    /// runtime's executable registry) through raw pointers until the
+    /// wait returns. The landed result is kept for the next
+    /// [`Engine::step`] to validate against the live group's
+    /// fingerprints and either apply or discard.
+    pub fn sync_runtime(&mut self) {
+        if let Some(p) = self.pending.take() {
+            let (out, exec_seconds) = p.handle.wait();
+            // Device time is accounted when the execute lands, whether
+            // or not the result survives validation — the hardware was
+            // busy either way.
+            self.metrics.exec_seconds.push(exec_seconds);
+            self.resolved = Some(ResolvedDecode {
+                out,
+                comp_fp: p.comp_fp,
+                layout_fp: p.layout_fp,
+                cache_id: p.cache_id,
+                n: p.n,
+                bb: p.bb,
+                cap: p.cap,
+                want: p.want,
+            });
+        }
     }
 
     pub fn dims(&self) -> &crate::model::meta::ModelDims {
@@ -385,6 +519,7 @@ impl Engine {
     /// intermediate chunks bound the per-tick stall (one executable run)
     /// and only the final chunk's outputs are installed.
     pub fn prefill_window(&mut self, prefix: &[i32]) -> Result<PrefillOut> {
+        self.sync_runtime();
         let t0 = Instant::now();
         let bucket = self.rt.prefill_bucket(prefix.len())?;
         let out = self.rt.prefill(bucket, prefix)?;
@@ -421,6 +556,7 @@ impl Engine {
         acc: Option<PrefillAcc>,
         chunk: &[i32],
     ) -> Result<PrefillAcc> {
+        self.sync_runtime();
         let cap = self.max_prefill_tokens();
         let d = self.rt.meta.dims.clone();
         let (hq, hkv) = (d.n_q_heads, d.n_kv_heads);
@@ -562,33 +698,109 @@ impl Engine {
         self.rt.meta.prefill_ts.iter().copied().max().unwrap_or(0)
     }
 
+    /// This step's fault triple `(stall, kv_raw, exec)`. Every
+    /// successful step pre-draws the *next* step's triple at its end
+    /// ([`Engine::draw_fault_triple`]) — before the pipeline decides
+    /// whether to pre-submit — and this consumes the stash, falling
+    /// back to a fresh draw when none fits (cold start, early-returned
+    /// previous step, or a stale stash from a swapped group). Both
+    /// decode modes share this exact path, so a seed yields one fault
+    /// schedule whether pipelining is on or off.
+    fn take_step_faults(&mut self, cache_id: u64) -> (bool, Option<u64>, bool) {
+        if self.faults.is_none() {
+            return (false, None, false);
+        }
+        if let Some(s) = self.fault_stash.take() {
+            if s.cache_id == cache_id {
+                return (s.stall, s.kv_raw, s.exec);
+            }
+            // Stale: its draws are already consumed — identically in
+            // both modes — so just fall through to a fresh triple.
+        }
+        let fp = self.faults.as_mut().unwrap();
+        let stall = fp.trip(FaultSite::TickStall);
+        let kv_raw = fp.trip(FaultSite::KvAlloc).then(|| fp.pick_raw());
+        let exec = fp.trip(FaultSite::RuntimeExecute);
+        self.metrics.faults_injected = fp.injected;
+        (stall, kv_raw, exec)
+    }
+
+    /// Pre-draw the next step's fault triple into the stash (the
+    /// end-of-step half of the protocol above).
+    fn draw_fault_triple(&mut self, cache_id: u64) {
+        let Some(fp) = self.faults.as_mut() else { return };
+        let stall = fp.trip(FaultSite::TickStall);
+        let kv_raw = fp.trip(FaultSite::KvAlloc).then(|| fp.pick_raw());
+        let exec = fp.trip(FaultSite::RuntimeExecute);
+        self.metrics.faults_injected = fp.injected;
+        self.fault_stash =
+            Some(StashedFaults { cache_id, stall, kv_raw, exec });
+    }
+
     /// One decode step over all active sequences. Returns per-slot newly
     /// generated tokens (empty when the step OOMed).
+    ///
+    /// Under `engine.pipeline_decode` the fast path applies the execute
+    /// pre-submitted by the previous step (validated against the live
+    /// group's fingerprints); the serial path below is the drain target
+    /// and stays the single source of truth for what a step means.
     pub fn step(&mut self, group: &mut DecodeGroup) -> Result<Vec<(usize, i32)>> {
+        let t0 = Instant::now();
+        // Land any in-flight pre-submitted execute before touching the
+        // runtime or the upload scratch.
+        self.sync_runtime();
         let n = group.active();
         if n == 0 {
+            self.resolved = None;
             return Ok(Vec::new());
         }
-        // Deterministic fault injection: all draws happen here, on
-        // single-threaded control flow before the per-slot fan-out, so
-        // one seed fixes the whole fault schedule regardless of worker
-        // interleaving. `inject_slot` fails exactly one slot's KV
-        // insert; `inject_exec` fails the runtime execute call.
-        let mut inject_slot: Option<usize> = None;
-        let mut inject_exec = false;
-        if let Some(fp) = self.faults.as_mut() {
-            if fp.trip(FaultSite::TickStall) {
-                std::thread::sleep(std::time::Duration::from_millis(
-                    fp.stall_ms(),
-                ));
-            }
-            if fp.trip(FaultSite::KvAlloc) {
-                inject_slot = Some(fp.pick(n));
-            }
-            inject_exec = fp.trip(FaultSite::RuntimeExecute);
-            self.metrics.faults_injected = fp.injected;
+        // Deterministic fault injection: the triple is consumed here on
+        // single-threaded control flow before any fan-out, so one seed
+        // fixes the whole schedule regardless of worker interleaving —
+        // and regardless of pipelining (see `take_step_faults`).
+        // `kv_raw` fails exactly one slot's KV insert; `inject_exec`
+        // fails the runtime execute call.
+        let (stall, kv_raw, inject_exec) =
+            self.take_step_faults(group.cache.cache_id());
+        let mut stall_secs = 0.0;
+        if stall {
+            let ms = self.faults.as_ref().map_or(0, FaultPlan::stall_ms);
+            stall_secs = ms as f64 / 1e3;
+            std::thread::sleep(std::time::Duration::from_millis(ms));
         }
-        let t0 = Instant::now();
+        let inject_slot = kv_raw.map(|r| (r % n as u64) as usize);
+
+        // Pipelined fast path: a pre-run execute for exactly this group
+        // state, with no fault due this step, is applied directly — the
+        // device already ran it while the previous step's policy lane
+        // was still working.
+        let mut noted = false;
+        if let Some(r) = self.resolved.take() {
+            let faulted = stall || inject_slot.is_some() || inject_exec;
+            if !faulted
+                && r.cache_id == group.cache.cache_id()
+                && r.n == n
+                && r.comp_fp == group.composition_fingerprint()
+                && r.layout_fp == group.cache.layout_fingerprint()
+            {
+                return self.apply_resolved(group, r, t0, stall_secs);
+            }
+            // Anything the deferred lane or the caller changed that the
+            // submitted image can't reflect — or a fault due this step
+            // (blast-radius rule: faults always take the serial path) —
+            // discards the speculative result; the serial body below
+            // re-runs the step and stays token-identical.
+            self.metrics
+                .note_drain(if faulted { "fault" } else { "composition" });
+            noted = true;
+        }
+        if self.pipeline {
+            if !noted && !self.drain_prenoted {
+                self.metrics.note_drain("cold");
+            }
+            self.drain_prenoted = false;
+        }
+
         let bb = self.batch_bucket(n)?;
         // +1 headroom: the in-graph insert writes at slot len.
         let need = group.cache.max_len() + 1;
@@ -603,13 +815,13 @@ impl Engine {
             }
         };
 
-        let d = self.rt.meta.dims.clone();
         let cd = group.cache.dims;
         // Raw-speed path selection: a uniformly quantized group whose
         // artifact set carries the matching kernel-side-dequant variant
         // uploads its stored wire bytes; everything else (dense, mixed,
         // old artifacts) takes the f32 expansion.
         let want = self.packed_variant(group, bb, cap);
+        let t_pack = Instant::now();
         let image = self
             .scratch
             .entry((bb, cap))
@@ -630,7 +842,7 @@ impl Engine {
             tokens[b] = group.seq(b).last_token;
             positions[b] = group.seq(b).abs_pos as i32;
         }
-        let t_pack = t0.elapsed().as_secs_f64();
+        let t_pack = t_pack.elapsed().as_secs_f64();
 
         let t1 = Instant::now();
         let decode_res = if inject_exec {
@@ -648,6 +860,7 @@ impl Engine {
                 }
             }
         };
+        self.note_pack(pstats, image_bytes, t_pack);
         let out = match decode_res {
             Ok(out) => out,
             Err(e) => {
@@ -661,21 +874,78 @@ impl Engine {
                 return Ok(Vec::new());
             }
         };
-        let t_exec = t1.elapsed().as_secs_f64();
+        self.metrics.exec_seconds.push(t1.elapsed().as_secs_f64());
+        self.post_decode(
+            group, out, n, bb, cap, want, inject_slot, false, t0, stall_secs,
+        )
+    }
 
-        // Per-slot post-decode pipeline: every slot's work (K/V insert
-        // mirror, Eq. 5 score accumulation, Eq. 1 sparsity, sampling,
-        // multi-round pruning) touches only that slot's state, so slots
-        // run concurrently on the worker pool.
-        let t2 = Instant::now();
+    /// Apply a validated pre-run execute as this step's result.
+    fn apply_resolved(
+        &mut self,
+        group: &mut DecodeGroup,
+        r: ResolvedDecode,
+        t0: Instant,
+        stall_secs: f64,
+    ) -> Result<Vec<(usize, i32)>> {
+        let out = match r.out {
+            Ok(out) => out,
+            Err(e) => {
+                // The pre-run execute itself failed: surface it exactly
+                // like a serial execute failure (one sequence fails,
+                // survivors retry) and restart the pipeline cold.
+                self.metrics.note_drain("exec_err");
+                self.drain_prenoted = true;
+                group.mark_failed(FailureKind::RuntimeExecute);
+                self.metrics.seq_failures += 1;
+                crate::log_warn!("decode execute failed: {e:#}");
+                return Ok(Vec::new());
+            }
+        };
+        self.post_decode(
+            group, out, r.n, r.bb, r.cap, r.want, None, true, t0, stall_secs,
+        )
+    }
+
+    /// Shared post-execute tail of one decode step: the critical lane
+    /// (host K/V mirror insert + NaN-safe greedy sampling), the next
+    /// step's fault pre-draw and optional pre-submit, then the deferred
+    /// policy lane (Eq. 5 score accumulation, Eq. 1 sparsity,
+    /// multi-round pruning) — which, when a pre-submit happened, runs
+    /// concurrently with the next step's execute on the device.
+    #[allow(clippy::too_many_arguments)]
+    fn post_decode(
+        &mut self,
+        group: &mut DecodeGroup,
+        out: DecodeOut,
+        n: usize,
+        bb: usize,
+        cap: usize,
+        want: Option<KvFormat>,
+        inject_slot: Option<usize>,
+        overlapped: bool,
+        t0: Instant,
+        stall_secs: f64,
+    ) -> Result<Vec<(usize, i32)>> {
+        let d = self.rt.meta.dims.clone();
         let hkv_d = d.n_kv_heads * d.d_head;
         let vocab = d.vocab_size;
         let n_layers = d.n_layers;
         let cmax = self.cmax;
+        // Keep the per-slot scratch high-water bounded by the live
+        // group's slot count (a rebuild to a smaller group releases the
+        // excess), growing to the active batch as before.
+        if self.slot_score_bufs.len() > group.group_size() {
+            self.slot_score_bufs.truncate(group.group_size());
+        }
         if self.slot_score_bufs.len() < n {
             self.slot_score_bufs.resize_with(n, Vec::new);
         }
-        let mut results: Vec<Option<Result<SlotOutcome>>> =
+
+        // Critical lane: everything the next step's upload image
+        // depends on, fanned out per slot (disjoint state).
+        let t_crit = Instant::now();
+        let mut crit: Vec<Option<Result<i32>>> =
             std::iter::repeat_with(|| None).take(n).collect();
         {
             let (seqs, cache) = group.seqs_and_cache_mut();
@@ -684,11 +954,60 @@ impl Engine {
             if n == 1 {
                 // No point paying thread hand-off for one slot.
                 let view = views.into_iter().next().unwrap();
-                results[0] = Some(process_slot(
-                    view, &mut seqs[0], &mut self.slot_score_bufs[0],
-                    out_ref, 0, bb, n_layers, hkv_d, vocab, cmax,
-                    inject_slot == Some(0),
+                crit[0] = Some(critical_slot(
+                    view, &mut seqs[0], out_ref, 0, bb, n_layers, hkv_d,
+                    vocab, inject_slot == Some(0),
                 ));
+            } else {
+                let mut jobs: Vec<Box<dyn FnOnce() + Send + '_>> =
+                    Vec::with_capacity(n);
+                for (b, ((view, seq), res)) in views
+                    .into_iter()
+                    .zip(seqs.iter_mut())
+                    .zip(crit.iter_mut())
+                    .enumerate()
+                {
+                    let inject = inject_slot == Some(b);
+                    jobs.push(Box::new(move || {
+                        *res = Some(critical_slot(
+                            view, seq, out_ref, b, bb, n_layers, hkv_d,
+                            vocab, inject,
+                        ));
+                    }));
+                }
+                self.pool.scoped(jobs);
+            }
+        }
+        let t_crit = t_crit.elapsed().as_secs_f64();
+
+        // Every successful step pre-draws the next step's fault triple
+        // here — the draw point must not depend on pipelining — and
+        // then decides whether the next execute can be pre-submitted.
+        self.draw_fault_triple(group.cache.cache_id());
+        let crit_ok = crit.iter().all(|r| matches!(r, Some(Ok(_))));
+        self.maybe_submit_next(group, n, bb, cap, want, crit_ok);
+
+        // Deferred policy lane: nothing the submitted image needs
+        // happens here (score accumulation leaves lens and epochs
+        // untouched; the submit gate vouched no prune is due), so this
+        // overlaps the in-flight execute. Slots whose critical lane
+        // failed are skipped — same as the old single-pass behavior,
+        // where a failed insert aborted the slot before its policies.
+        let t_def = Instant::now();
+        let mut defr: Vec<Option<Result<(u64, u64)>>> =
+            std::iter::repeat_with(|| None).take(n).collect();
+        {
+            let (seqs, cache) = group.seqs_and_cache_mut();
+            let views = cache.slot_views_mut(n);
+            let out_ref = &out;
+            if n == 1 {
+                if matches!(crit[0], Some(Ok(_))) {
+                    let view = views.into_iter().next().unwrap();
+                    defr[0] = Some(deferred_slot(
+                        view, &mut seqs[0], &mut self.slot_score_bufs[0],
+                        out_ref, 0, cmax,
+                    ));
+                }
             } else {
                 let mut jobs: Vec<Box<dyn FnOnce() + Send + '_>> =
                     Vec::with_capacity(n);
@@ -696,34 +1015,41 @@ impl Engine {
                     .into_iter()
                     .zip(seqs.iter_mut())
                     .zip(self.slot_score_bufs.iter_mut())
-                    .zip(results.iter_mut())
+                    .zip(defr.iter_mut())
                     .enumerate()
                 {
-                    let inject = inject_slot == Some(b);
+                    if !matches!(crit[b], Some(Ok(_))) {
+                        continue;
+                    }
                     jobs.push(Box::new(move || {
-                        *res = Some(process_slot(
-                            view, seq, buf, out_ref, b, bb, n_layers,
-                            hkv_d, vocab, cmax, inject,
+                        *res = Some(deferred_slot(
+                            view, seq, buf, out_ref, b, cmax,
                         ));
                     }));
                 }
-                self.pool.scoped(jobs);
+                if !jobs.is_empty() {
+                    self.pool.scoped(jobs);
+                }
             }
         }
-        // Per-slot outcomes: a slot that failed (typed error) or whose
-        // worker panicked (the pool caught it; its result cell is still
-        // None) finishes *that sequence* with FinishReason::Error — the
-        // slot and its KV rows are freed at the next reap and every
-        // other sequence proceeds.
+        let t_def = t_def.elapsed().as_secs_f64();
+
+        // Per-slot outcomes: a slot that failed in either lane (typed
+        // error) or whose worker panicked (the pool caught it; its
+        // result cell is still None) finishes *that sequence* with
+        // FinishReason::Error — the slot and its KV rows are freed at
+        // the next reap and every other sequence proceeds.
         let mut produced = Vec::with_capacity(n);
-        for (b, r) in results.into_iter().enumerate() {
-            match r {
-                Some(Ok(o)) => {
-                    produced.push((b, o.token));
-                    self.metrics.prune_events += o.prune_events;
-                    self.metrics.pruned_tokens += o.pruned_tokens;
+        for (b, (c, dr)) in
+            crit.into_iter().zip(defr.into_iter()).enumerate()
+        {
+            match (c, dr) {
+                (Some(Ok(token)), Some(Ok((events, pruned)))) => {
+                    produced.push((b, token));
+                    self.metrics.prune_events += events;
+                    self.metrics.pruned_tokens += pruned;
                 }
-                Some(Err(e)) => {
+                (Some(Err(e)), _) | (Some(Ok(_)), Some(Err(e))) => {
                     let kind = if inject_slot == Some(b) {
                         FailureKind::Injected
                     } else {
@@ -735,7 +1061,7 @@ impl Engine {
                     group.seq_mut(b).fail(kind);
                     self.metrics.seq_failures += 1;
                 }
-                None => {
+                _ => {
                     crate::log_warn!(
                         "slot {b} worker panicked; failing its sequence"
                     );
@@ -744,23 +1070,14 @@ impl Engine {
                 }
             }
         }
-        let t_policy = t2.elapsed().as_secs_f64();
         self.observe_group_sparsity(group);
         if self.keep_probs {
             self.last_probs = Some(out.probs.clone());
         }
 
-        self.metrics.pack_bytes_copied += pstats.bytes_copied as u64;
-        self.metrics.pack_bytes_f32_equiv += pstats.bytes_f32_equiv as u64;
-        self.metrics.upload_bytes_last = image_bytes;
-        self.metrics.delta_pack_hits +=
-            (pstats.pairs_delta + pstats.pairs_skipped) as u64;
-        self.metrics.delta_pack_full += pstats.pairs_full as u64;
         self.metrics.decode_steps += 1;
         self.metrics.decode_tokens += n as u64;
-        self.metrics.pack_seconds.push(t_pack);
-        self.metrics.exec_seconds.push(t_exec);
-        self.metrics.policy_seconds.push(t_policy);
+        self.metrics.policy_seconds.push(t_crit + t_def);
         self.metrics.live_bytes_last = group.cache.live_bytes();
         self.metrics.f32_equiv_bytes_last = group.cache.f32_equivalent_bytes();
         // Only re-materialize the format snapshot when the served map
@@ -772,8 +1089,160 @@ impl Engine {
             self.metrics.kv_layer_formats =
                 group.cache.format_map().as_slice().to_vec();
         }
+        // Pre-seeded at boot, so this never allocates in steady state.
         *self.metrics.capacity_hist.entry(cap).or_insert(0) += 1;
+        if overlapped {
+            self.metrics.pipeline_overlapped_steps += 1;
+        }
+        // Honest per-step wall: includes the wait that landed the
+        // pre-submitted execute (top of step), excludes injected stall.
+        self.metrics
+            .step_seconds
+            .push((t0.elapsed().as_secs_f64() - stall_secs).max(0.0));
         Ok(produced)
+    }
+
+    /// Why the next step cannot be pre-submitted — the drain boundaries
+    /// where deferred work can change layout or control flow — or
+    /// `None` when the pipeline can keep going.
+    fn submit_gate(
+        &self,
+        group: &DecodeGroup,
+        n: usize,
+        bb: usize,
+        cap: usize,
+        want: Option<KvFormat>,
+        crit_ok: bool,
+    ) -> Option<&'static str> {
+        if !crit_ok || (0..n).any(|b| group.seq(b).is_done()) {
+            // A finishing (or failing) sequence changes the batch
+            // composition before the next step runs.
+            return Some("finish");
+        }
+        if self
+            .fault_stash
+            .as_ref()
+            .is_some_and(|s| s.stall || s.exec || s.kv_raw.is_some())
+        {
+            // Blast-radius rule: a fault due next step runs serially.
+            return Some("fault");
+        }
+        let need = group.cache.max_len() + 1;
+        match self.rt.capacity_bucket(&self.cfg.cache_profile, need) {
+            Ok(c) if c == cap => {}
+            _ => return Some("capacity_flip"),
+        }
+        if self.packed_variant(group, bb, cap) != want {
+            return Some("variant_flip");
+        }
+        // The deferred lane below runs the policies at exactly the live
+        // lengths visible here; `may_prune` is each policy's promise
+        // that `plan` stays a pure no-op under these lengths, so the
+        // image about to be packed cannot be invalidated. A missed
+        // promise is still caught by the layout fingerprint at wait
+        // time — this gate is a perf heuristic, not the safety net.
+        let layers = group.cache.dims.layers;
+        for b in 0..n {
+            let seq = group.seq(b);
+            for l in 0..layers {
+                let len = group.cache.len(l, b);
+                if len > 0 && seq.policy.may_prune(l, len, self.cmax) {
+                    return Some("policy_due");
+                }
+            }
+        }
+        None
+    }
+
+    /// Pack the next step's image into the *other* scratch buffer and
+    /// pre-submit its execute on the async runtime seam — unless a
+    /// drain boundary is due ([`Engine::submit_gate`]); then record why
+    /// and leave the next step to the serial path.
+    fn maybe_submit_next(
+        &mut self,
+        group: &DecodeGroup,
+        n: usize,
+        bb: usize,
+        cap: usize,
+        want: Option<KvFormat>,
+        crit_ok: bool,
+    ) {
+        if !self.pipeline {
+            return;
+        }
+        if let Some(reason) =
+            self.submit_gate(group, n, bb, cap, want, crit_ok)
+        {
+            self.metrics.note_drain(reason);
+            self.drain_prenoted = true;
+            return;
+        }
+        let cd = group.cache.dims;
+        let t_pack = Instant::now();
+        let image = self
+            .scratch
+            .entry((bb, cap))
+            .or_insert_with(UploadScratch::new)
+            .rotate(&cd, bb, cap, want);
+        let packed = match image {
+            UploadImage::F32(s) => {
+                group.cache.pack_delta(s).map(|p| (p, s.image_bytes()))
+            }
+            UploadImage::Packed(s) => group
+                .cache
+                .pack_delta_packed(s)
+                .map(|p| (p, s.image_bytes())),
+        };
+        let (pstats, image_bytes) = match packed {
+            Ok(x) => x,
+            Err(e) => {
+                // Only a scratch/dims mismatch can land here; the
+                // serial path will surface it properly next step.
+                crate::log_warn!("pipeline pre-pack failed: {e:#}");
+                self.metrics.note_drain("cold");
+                self.drain_prenoted = true;
+                return;
+            }
+        };
+        let mut tokens = vec![0i32; bb];
+        let mut positions = vec![0i32; bb];
+        for b in 0..n {
+            tokens[b] = group.seq(b).last_token;
+            positions[b] = group.seq(b).abs_pos as i32;
+        }
+        let handle = match &*image {
+            UploadImage::F32(s) => self.rt.decode_submit(
+                bb, cap, &s.k, &s.v, &s.lens, tokens, positions,
+            ),
+            UploadImage::Packed(s) => {
+                self.rt.decode_packed_submit(bb, cap, s, tokens, positions)
+            }
+        };
+        self.note_pack(pstats, image_bytes, t_pack.elapsed().as_secs_f64());
+        self.pending = Some(PendingDecode {
+            handle,
+            comp_fp: group.composition_fingerprint(),
+            layout_fp: group.cache.layout_fingerprint(),
+            cache_id: group.cache.cache_id(),
+            n,
+            bb,
+            cap,
+            want,
+        });
+        self.drain_prenoted = false;
+    }
+
+    /// Fold one delta-pack's stats into the metrics (shared by the
+    /// serial path and the pipelined pre-submit — pack work is always
+    /// accounted by the step that performed it).
+    fn note_pack(&mut self, pstats: PackStats, image_bytes: usize, secs: f64) {
+        self.metrics.pack_bytes_copied += pstats.bytes_copied as u64;
+        self.metrics.pack_bytes_f32_equiv += pstats.bytes_f32_equiv as u64;
+        self.metrics.upload_bytes_last = image_bytes;
+        self.metrics.delta_pack_hits +=
+            (pstats.pairs_delta + pstats.pairs_skipped) as u64;
+        self.metrics.delta_pack_full += pstats.pairs_full as u64;
+        self.metrics.pack_seconds.push(secs);
     }
 
     /// Run each layer's retention plan for one slot (the serial entry
@@ -800,6 +1269,16 @@ impl Engine {
     }
 }
 
+impl Drop for Engine {
+    fn drop(&mut self) {
+        // A pre-submitted execute holds raw pointers into the upload
+        // scratch; land it before the scratch map is freed.
+        if let Some(p) = self.pending.take() {
+            let _ = p.handle.wait();
+        }
+    }
+}
+
 /// Worker count for the per-slot post-decode pipeline. Capped: slots are
 /// short CPU-bound jobs and the PJRT exec phase owns the machine anyway.
 fn slot_workers() -> usize {
@@ -809,32 +1288,25 @@ fn slot_workers() -> usize {
         .clamp(1, 8)
 }
 
-/// Everything one slot's post-decode job reports back to the step.
-struct SlotOutcome {
-    token: i32,
-    prune_events: u64,
-    pruned_tokens: u64,
-}
-
-/// One slot's complete post-decode work: K/V insert mirror, score
-/// accumulation + sparsity, greedy sampling, multi-round pruning. Runs on
-/// a pool worker; touches only slot-local state (`view`, `seq`, `buf`).
-/// `inject` simulates a KV-alloc failure at the insert seam (the fault
-/// plan decided this slot before the fan-out).
+/// One slot's **critical lane**: mirror the in-graph K/V insert
+/// host-side and greedily sample the next token — exactly the state the
+/// next step's upload image and token feed depend on, so it runs before
+/// the pipelined pre-submit. Runs on a pool worker; touches only
+/// slot-local state (`view`, `seq`). `inject` simulates a KV-alloc
+/// failure at the insert seam (the fault plan decided this slot before
+/// the fan-out).
 #[allow(clippy::too_many_arguments)]
-fn process_slot(
+fn critical_slot(
     mut view: SlotViewMut<'_>,
     seq: &mut group::SeqState,
-    score_buf: &mut Vec<f32>,
     out: &DecodeOut,
     b: usize,
     bb: usize,
     n_layers: usize,
     hkv_d: usize,
     vocab: usize,
-    cmax: usize,
     inject: bool,
-) -> Result<SlotOutcome> {
+) -> Result<i32> {
     if inject {
         return Err(EngineError::KvAlloc {
             seq: seq.id,
@@ -853,22 +1325,41 @@ fn process_slot(
             pos,
         )?;
     }
-    // Score accumulation (Eq. 5) + sparsity tracking (Eq. 1).
+    // Sample + bookkeeping.
+    let logits = &out.logits.data[b * vocab..(b + 1) * vocab];
+    let token = argmax(logits);
+    seq.note_token(token);
+    Ok(token)
+}
+
+/// One slot's **deferred policy lane**: RASR score accumulation (Eq. 5),
+/// sparsity tracking (Eq. 1), and multi-round pruning; returns (prune
+/// events, pruned tokens). Nothing the next step's upload image needs
+/// happens here — score accumulation leaves lens and epochs untouched —
+/// so under `engine.pipeline_decode` this lane runs while the
+/// pre-submitted next execute is already on the device. Neither lane
+/// reads what the other writes (scores/sparsity never look at the
+/// sampled token or step count until `policy_pass`, which runs last in
+/// both the split and the old fused order), so the lane split is
+/// output-identical to the old single-pass slot job.
+fn deferred_slot(
+    mut view: SlotViewMut<'_>,
+    seq: &mut group::SeqState,
+    score_buf: &mut Vec<f32>,
+    out: &DecodeOut,
+    b: usize,
+    cmax: usize,
+) -> Result<(u64, u64)> {
     let gamma = seq.policy.gamma();
     let pv = ProbsView::new(&out.probs);
-    for l in 0..n_layers {
+    for l in 0..view.layers() {
         let live = view.len(l);
         pv.head_sum_into(l, b, live, score_buf);
         view.accumulate_scores(l, gamma, score_buf);
         seq.sparsity.observe(l, score_buf);
     }
-    // Sample + bookkeeping.
-    let logits = &out.logits.data[b * vocab..(b + 1) * vocab];
-    let token = argmax(logits);
-    seq.note_token(token);
     // Multi-round pruning.
-    let (prune_events, pruned_tokens) = policy_pass(&mut view, seq, cmax)?;
-    Ok(SlotOutcome { token, prune_events, pruned_tokens })
+    policy_pass(&mut view, seq, cmax)
 }
 
 /// Retention plans for every layer of one slot; returns (prune events,

@@ -127,6 +127,16 @@ impl FaultPlan {
         self.rng.below(n as u64) as usize
     }
 
+    /// Raw (unreduced) victim draw for a stashed fault. The engine's
+    /// pre-draw protocol stamps next step's whole fault triple at the
+    /// end of the current step, when the next step's batch size is not
+    /// known yet; the consumer reduces this modulo the then-live batch
+    /// size. One fixed-width draw regardless of `n` keeps the RNG
+    /// stream identical between the serial and pipelined decode paths.
+    pub fn pick_raw(&mut self) -> u64 {
+        self.rng.next_u64()
+    }
+
     /// Stall duration for [`FaultSite::TickStall`] injections.
     pub fn stall_ms(&self) -> u64 {
         self.stall_ms

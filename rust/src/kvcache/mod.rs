@@ -305,6 +305,37 @@ impl GroupCache {
         (0..self.dims.batch).map(|b| self.max_len_slot(b)).max().unwrap_or(0)
     }
 
+    /// FNV-1a digest of the physical cache layout: per-(layer, slot)
+    /// epoch state + live length, the per-layer formats, and the cache
+    /// identity. Any mutation the delta-pack protocol would care about —
+    /// append, retention, swap, reset, migration, import — changes the
+    /// digest (every such path bumps the pair's epoch). The pipelined
+    /// engine stamps this at decode-submit time and compares at wait
+    /// time; a mismatch means the uploaded image no longer matches the
+    /// live cache, so the in-flight result is discarded and the step
+    /// reruns serially.
+    pub fn layout_fingerprint(&self) -> u64 {
+        const FNV_OFFSET: u64 = 0xcbf2_9ce4_8422_2325;
+        const FNV_PRIME: u64 = 0x0000_0100_0000_01b3;
+        let mut h = FNV_OFFSET;
+        let mut eat = |h: &mut u64, bytes: &[u8]| {
+            for &b in bytes {
+                *h ^= b as u64;
+                *h = h.wrapping_mul(FNV_PRIME);
+            }
+        };
+        eat(&mut h, &self.id.to_le_bytes());
+        for l in 0..self.dims.layers {
+            eat(&mut h, &[self.formats.get(l) as u8]);
+        }
+        for (e, len) in self.epochs.iter().zip(&self.lens) {
+            eat(&mut h, &e.epoch.to_le_bytes());
+            eat(&mut h, &e.rewrite.to_le_bytes());
+            eat(&mut h, &(*len as u64).to_le_bytes());
+        }
+        h
+    }
+
     /// Total live KV bytes as actually stored — the Table 2 metric.
     /// Summed per (layer, slot) at the **owning layer's** per-row cost
     /// ([`KvStore::layer_row_bytes`]), so mixed per-layer maps report

@@ -56,6 +56,8 @@ fn spec() -> ArgSpec {
     .opt("fault-rate", "",
          "per-site fault probability in [0,1); 0 disables injection \
           (default: config/0)")
+    .flag("no-pipeline",
+          "disable pipelined decode (serial step: pack+execute+policy)")
     .flag("verbose", "debug logging")
 }
 
@@ -80,6 +82,9 @@ fn load_cfg(args: &lethe::util::argparse::Args) -> Result<ServingConfig> {
         let mb = args.get_f64("kv-budget-mb")?;
         anyhow::ensure!(mb >= 0.0, "--kv-budget-mb must be >= 0");
         cfg.scheduler.kv_budget_bytes = (mb * 1e6) as usize;
+    }
+    if args.has("no-pipeline") {
+        cfg.engine.pipeline_decode = false;
     }
     if !args.get("fault-seed").is_empty() {
         cfg.faults.seed = args.get_usize("fault-seed")? as u64;

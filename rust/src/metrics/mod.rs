@@ -6,7 +6,7 @@ use std::collections::BTreeMap;
 
 use crate::kvcache::KvFormat;
 use crate::util::json::Json;
-use crate::util::stats::{P2Quantile, Summary};
+use crate::util::stats::{P2Quantile, StreamStat, Summary};
 
 /// Streaming per-tenant-class SLO accounting. One track per distinct
 /// [`crate::scheduler::Completion::class`] label (empty labels fold
@@ -118,10 +118,31 @@ impl ClassTrack {
 
 #[derive(Default)]
 pub struct EngineMetrics {
-    pub prefill_seconds: Vec<f64>,
-    pub pack_seconds: Vec<f64>,
-    pub exec_seconds: Vec<f64>,
-    pub policy_seconds: Vec<f64>,
+    /// Per-phase step timings as bounded streaming accumulators
+    /// (count/sum/moments + P² percentiles). These used to be
+    /// `Vec<f64>` pushed every step forever — an unbounded-memory leak
+    /// on any long soak; the [`StreamStat`] replacements keep the same
+    /// derived `stats` shape in O(1) memory.
+    pub prefill_seconds: StreamStat,
+    pub pack_seconds: StreamStat,
+    pub exec_seconds: StreamStat,
+    pub policy_seconds: StreamStat,
+    /// Wall-clock of each whole decode step (result wait + critical
+    /// lane + next-step pack/submit + deferred policy lane). Under
+    /// pipelining this is the honest per-step cost: the exec of step
+    /// t+1 overlaps the policy lane of step t, so `Σ step_seconds` can
+    /// be well below `Σ pack + Σ exec + Σ policy`.
+    pub step_seconds: StreamStat,
+    /// Decode steps whose execute was pre-submitted at the end of the
+    /// previous step and applied — i.e. the device ran concurrently
+    /// with the previous step's deferred policy lane.
+    pub pipeline_overlapped_steps: u64,
+    /// Pipeline drains by reason: decode steps that fell back to the
+    /// serial pack→execute→policy path, keyed by the boundary that
+    /// forced it (`"policy_due"`, `"finish"`, `"fault"`,
+    /// `"capacity_flip"`, `"variant_flip"`, `"composition"`,
+    /// `"exec_err"`, `"cold"`).
+    pub pipeline_drains: BTreeMap<&'static str, u64>,
     pub prefill_tokens: u64,
     pub decode_tokens: u64,
     pub decode_steps: u64,
@@ -216,27 +237,45 @@ impl EngineMetrics {
         *self = EngineMetrics::default();
     }
 
+    /// Seconds the engine actually spent per decode step: measured
+    /// step wall time when available, the per-phase sum otherwise
+    /// (the two agree on the serial path; under pipelining the phase
+    /// sum double-counts the overlapped exec/policy window).
+    fn step_total_seconds(&self) -> f64 {
+        if self.step_seconds.count() > 0 {
+            self.step_seconds.sum()
+        } else {
+            self.pack_seconds.sum()
+                + self.exec_seconds.sum()
+                + self.policy_seconds.sum()
+        }
+    }
+
     pub fn step_seconds_mean(&self) -> f64 {
-        if self.exec_seconds.is_empty() {
+        if self.step_seconds.count() > 0 {
+            return self.step_seconds.sum() / self.step_seconds.count() as f64;
+        }
+        if self.exec_seconds.count() == 0 {
             return 0.0;
         }
-        let total: f64 = self.pack_seconds.iter().sum::<f64>()
-            + self.exec_seconds.iter().sum::<f64>()
-            + self.policy_seconds.iter().sum::<f64>();
-        total / self.exec_seconds.len() as f64
+        self.step_total_seconds() / self.exec_seconds.count() as f64
     }
 
     /// Decode throughput over the measured window (tokens / second of
     /// engine step time).
     pub fn decode_tput(&self) -> f64 {
-        let secs: f64 = self.pack_seconds.iter().sum::<f64>()
-            + self.exec_seconds.iter().sum::<f64>()
-            + self.policy_seconds.iter().sum::<f64>();
+        let secs = self.step_total_seconds();
         if secs == 0.0 {
             0.0
         } else {
             self.decode_tokens as f64 / secs
         }
+    }
+
+    /// Count one pipeline drain under `reason` (a drain boundary label
+    /// from the [`EngineMetrics::pipeline_drains`] key set).
+    pub fn note_drain(&mut self, reason: &'static str) {
+        *self.pipeline_drains.entry(reason).or_insert(0) += 1;
     }
 
     /// Fold one terminal outcome into its tenant class's streaming SLO
@@ -255,25 +294,40 @@ impl EngineMetrics {
         track.record(c);
     }
 
+    /// Per-phase (pack, exec, policy) timing snapshots in the batch
+    /// [`Summary`] shape; `None` before the first decode step. The
+    /// percentiles are P² streaming estimates (exact below five steps).
     pub fn phase_summaries(&self) -> Option<(Summary, Summary, Summary)> {
-        if self.exec_seconds.is_empty() {
+        if self.exec_seconds.count() == 0 {
             return None;
         }
         Some((
-            Summary::of(&self.pack_seconds),
-            Summary::of(&self.exec_seconds),
-            Summary::of(&self.policy_seconds),
+            self.pack_seconds.summary(),
+            self.exec_seconds.summary(),
+            self.policy_seconds.summary(),
         ))
     }
 
     pub fn to_json(&self) -> Json {
         let mut caps = Vec::new();
+        // The histogram is pre-seeded with every compiled capacity
+        // bucket (so the hot path never allocates a map entry); only
+        // buckets that actually served a step are reported.
         for (c, n) in &self.capacity_hist {
+            if *n == 0 {
+                continue;
+            }
             caps.push(Json::obj(vec![
                 ("capacity", Json::from(*c)),
                 ("steps", Json::from(*n as usize)),
             ]));
         }
+        let drains = Json::obj(
+            self.pipeline_drains
+                .iter()
+                .map(|(k, v)| (*k, Json::from(*v as usize)))
+                .collect(),
+        );
         Json::obj(vec![
             ("decode_steps", Json::from(self.decode_steps as usize)),
             ("decode_tokens", Json::from(self.decode_tokens as usize)),
@@ -322,6 +376,11 @@ impl EngineMetrics {
             ),
             ("decode_tput_tok_s", Json::num(self.decode_tput())),
             ("step_seconds_mean", Json::num(self.step_seconds_mean())),
+            (
+                "pipeline_overlapped_steps",
+                Json::from(self.pipeline_overlapped_steps as usize),
+            ),
+            ("pipeline_drains", drains),
             ("capacity_hist", Json::Arr(caps)),
             (
                 "classes",
@@ -418,8 +477,55 @@ mod tests {
         m.pack_seconds.push(0.5);
         m.exec_seconds.push(1.0);
         m.policy_seconds.push(0.5);
+        // Serial fallback (no step wall time recorded): phase sums.
         assert!((m.decode_tput() - 50.0).abs() < 1e-9);
         assert!((m.step_seconds_mean() - 2.0).abs() < 1e-9);
+        // With measured step wall time, throughput reflects the
+        // overlap: exec hidden under policy makes the step cheaper
+        // than the phase sum.
+        m.step_seconds.push(1.0);
+        assert!((m.decode_tput() - 100.0).abs() < 1e-9);
+        assert!((m.step_seconds_mean() - 1.0).abs() < 1e-9);
+        // Accumulators are bounded but keep exact counts and sums.
+        for _ in 0..10_000 {
+            m.exec_seconds.push(0.001);
+        }
+        assert_eq!(m.exec_seconds.count(), 10_001);
+        let (_, exec, _) = m.phase_summaries().unwrap();
+        assert_eq!(exec.n, 10_001);
+    }
+
+    #[test]
+    fn pipeline_counters_serialize() {
+        let mut m = EngineMetrics::default();
+        m.pipeline_overlapped_steps = 42;
+        m.note_drain("composition");
+        m.note_drain("composition");
+        m.note_drain("policy_due");
+        let parsed =
+            crate::util::json::parse(&m.to_json().to_string()).unwrap();
+        assert_eq!(
+            parsed
+                .get("pipeline_overlapped_steps")
+                .unwrap()
+                .as_usize()
+                .unwrap(),
+            42
+        );
+        let d = parsed.get("pipeline_drains").unwrap();
+        assert_eq!(d.get("composition").unwrap().as_usize().unwrap(), 2);
+        assert_eq!(d.get("policy_due").unwrap().as_usize().unwrap(), 1);
+        // Pre-seeded zero-count capacity buckets stay out of the JSON.
+        m.capacity_hist.insert(128, 0);
+        m.capacity_hist.insert(256, 3);
+        let parsed =
+            crate::util::json::parse(&m.to_json().to_string()).unwrap();
+        let caps = parsed.get("capacity_hist").unwrap().as_arr().unwrap();
+        assert_eq!(caps.len(), 1);
+        assert_eq!(
+            caps[0].get("capacity").unwrap().as_usize().unwrap(),
+            256
+        );
     }
 
     #[test]

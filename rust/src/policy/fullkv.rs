@@ -15,6 +15,12 @@ impl EvictionPolicy for FullKv {
         None
     }
 
+    /// `plan` is unconditionally a stateless no-op — FullKV steps never
+    /// drain the decode pipeline.
+    fn may_prune(&self, _layer: usize, _len: usize, _capacity: usize) -> bool {
+        false
+    }
+
     fn capabilities(&self) -> Capabilities {
         Capabilities {
             recency_aware: false,

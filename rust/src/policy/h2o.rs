@@ -47,6 +47,12 @@ impl EvictionPolicy for H2o {
         Some(keep)
     }
 
+    /// Stateless policy: `plan` is a pure no-op exactly while the live
+    /// length stays within the fixed budget.
+    fn may_prune(&self, _layer: usize, len: usize, _capacity: usize) -> bool {
+        len > self.params.budget
+    }
+
     fn capabilities(&self) -> Capabilities {
         Capabilities {
             recency_aware: true,

@@ -168,6 +168,16 @@ impl EvictionPolicy for LethePolicy {
         self.segmented_shrink(layer, st, eff)
     }
 
+    /// A `plan` call is a pure no-op only on the `len <= eff` early
+    /// return: the memory-pressure backstop always prunes, and the
+    /// segmented path mutates `l_evict` even when it returns `None`
+    /// (the no-breakpoint doubling). `eff >= l_evict[layer]` (scale
+    /// clamps at >= 1.0), so `len <= l_evict[layer]` guarantees the
+    /// early return for any sparsity.
+    fn may_prune(&self, layer: usize, len: usize, capacity: usize) -> bool {
+        len >= (capacity - capacity / 8).max(1) || len > self.l_evict[layer]
+    }
+
     fn capabilities(&self) -> Capabilities {
         Capabilities {
             recency_aware: true,

@@ -78,6 +78,22 @@ pub trait EvictionPolicy: Send {
     /// deduplicated downstream; relative order is preserved by the cache).
     fn plan(&mut self, layer: usize, st: &LayerState<'_>) -> Option<Vec<usize>>;
 
+    /// Conservative pre-pass for the pipelined engine: may a
+    /// [`EvictionPolicy::plan`] call for `layer` at live length `len`
+    /// (hard capacity `capacity`) prune **or mutate any adaptive
+    /// state**? `false` promises the upcoming `plan` is a pure no-op —
+    /// returns `None` without touching per-layer thresholds — so the
+    /// engine can pre-submit the next decode step against the current
+    /// cache layout while the policy lane runs concurrently. Policies
+    /// must err toward `true` (the default): a wrong `true` only costs
+    /// a pipeline drain; a wrong `false` would let a stale upload
+    /// image reach the device (the engine's layout fingerprint still
+    /// catches it, at the price of a wasted execute).
+    fn may_prune(&self, layer: usize, len: usize, capacity: usize) -> bool {
+        let _ = (layer, len, capacity);
+        true
+    }
+
     /// The policy's Table 4 capability row.
     fn capabilities(&self) -> Capabilities;
 }

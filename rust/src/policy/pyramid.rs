@@ -58,6 +58,12 @@ impl EvictionPolicy for PyramidKv {
         Some(keep)
     }
 
+    /// Static budgets: `plan` is a pure no-op exactly while the live
+    /// length stays within this layer's fixed budget.
+    fn may_prune(&self, layer: usize, len: usize, _capacity: usize) -> bool {
+        len > self.budgets[layer]
+    }
+
     fn capabilities(&self) -> Capabilities {
         Capabilities {
             recency_aware: true,

@@ -5,5 +5,5 @@
 pub mod registry;
 pub mod tensors;
 
-pub use registry::{DecodeOut, PrefillOut, Runtime};
+pub use registry::{DecodeHandle, DecodeOut, PrefillOut, Runtime};
 pub use tensors::{HostTensorF32, HostTensorI32};

@@ -6,6 +6,10 @@
 
 use std::cell::RefCell;
 use std::collections::HashMap;
+use std::sync::atomic::{AtomicBool, Ordering};
+use std::sync::mpsc::{channel, Receiver, Sender};
+use std::sync::Arc;
+use std::thread::JoinHandle;
 use std::time::Instant;
 
 use anyhow::{anyhow, Context, Result};
@@ -23,6 +27,54 @@ pub struct Runtime {
     exes: RefCell<HashMap<String, PjRtLoadedExecutable>>,
     /// (name, compile seconds) log for EXPERIMENTS.md.
     compile_log: RefCell<Vec<(String, f64)>>,
+    /// Lazily-spawned executor thread for the async decode seam
+    /// ([`Runtime::decode_submit`] / [`Runtime::decode_packed_submit`]).
+    executor: RefCell<Option<DecodeExecutor>>,
+    /// True between a `*_submit` and its [`DecodeHandle::wait`]. Every
+    /// synchronous entry point asserts this is clear: the executor job
+    /// touches `self` (the PJRT client and the executable cache are not
+    /// thread-safe) and holds raw pointers into the caller's scratch
+    /// tensors, so overlapping runtime use is undefined behaviour, not
+    /// merely a race.
+    inflight: Arc<AtomicBool>,
+}
+
+type ExecJob = Box<dyn FnOnce() + Send>;
+
+struct DecodeExecutor {
+    tx: Option<Sender<ExecJob>>,
+    join: Option<JoinHandle<()>>,
+}
+
+/// Raw-pointer wrapper that lets an executor job carry references across
+/// the thread boundary. Safety rests entirely on the `inflight` protocol:
+/// while the flag is set, the submitting thread must neither use the
+/// runtime nor move/mutate the pointed-at tensors (the engine's
+/// `sync_runtime` discipline — see `engine/mod.rs`).
+struct SendPtr<T>(*const T);
+unsafe impl<T> Send for SendPtr<T> {}
+
+/// In-flight async decode step. `wait` joins the result; dropping the
+/// handle without waiting leaves the runtime poisoned (the inflight
+/// assertion will abort the next call), which is deliberate — a lost
+/// execute means lost exclusivity guarantees.
+pub struct DecodeHandle {
+    rx: Receiver<(Result<DecodeOut>, f64)>,
+    inflight: Arc<AtomicBool>,
+}
+
+impl DecodeHandle {
+    /// Block until the submitted step finishes; returns the decode
+    /// result and the executor-side execute seconds. An executor-thread
+    /// death surfaces as a normal runtime-execute error so the engine's
+    /// typed failure path handles it like any other execute fault.
+    pub fn wait(self) -> (Result<DecodeOut>, f64) {
+        let out = self.rx.recv().unwrap_or_else(|_| {
+            (Err(anyhow!("decode executor thread died mid-step")), 0.0)
+        });
+        self.inflight.store(false, Ordering::Release);
+        out
+    }
 }
 
 /// Decode-step outputs (host side).
@@ -61,7 +113,38 @@ impl Runtime {
             weights,
             exes: RefCell::new(HashMap::new()),
             compile_log: RefCell::new(Vec::new()),
+            executor: RefCell::new(None),
+            inflight: Arc::new(AtomicBool::new(false)),
         })
+    }
+
+    /// Abort if an async decode is still in flight: using the runtime
+    /// (or the tensors the job points into) concurrently is UB. The
+    /// engine's `sync_runtime` guarantees this never fires in practice.
+    fn assert_idle(&self) {
+        assert!(
+            !self.inflight.load(Ordering::Acquire),
+            "runtime entered while an async decode is in flight — \
+             DecodeHandle::wait() must run first"
+        );
+    }
+
+    /// Sender to the (lazily spawned) executor thread.
+    fn executor_tx(&self) -> Sender<ExecJob> {
+        let mut slot = self.executor.borrow_mut();
+        if slot.is_none() {
+            let (tx, rx) = channel::<ExecJob>();
+            let join = std::thread::Builder::new()
+                .name("lethe-decode-exec".into())
+                .spawn(move || {
+                    while let Ok(job) = rx.recv() {
+                        job();
+                    }
+                })
+                .expect("spawning decode executor thread");
+            *slot = Some(DecodeExecutor { tx: Some(tx), join: Some(join) });
+        }
+        slot.as_ref().unwrap().tx.as_ref().unwrap().clone()
     }
 
     /// Compile (or fetch cached) an executable by manifest name.
@@ -135,6 +218,20 @@ impl Runtime {
         tokens: &[i32],
         positions: &[i32],
     ) -> Result<DecodeOut> {
+        self.assert_idle();
+        self.decode_inner(batch, capacity, kv_k, kv_v, lens, tokens, positions)
+    }
+
+    fn decode_inner(
+        &self,
+        batch: usize,
+        capacity: usize,
+        kv_k: &HostTensorF32,
+        kv_v: &HostTensorF32,
+        lens: &HostTensorI32,
+        tokens: &[i32],
+        positions: &[i32],
+    ) -> Result<DecodeOut> {
         let name = format!("decode_b{batch}_c{capacity}");
         let extra = vec![
             kv_k.upload(&self.client)?,
@@ -169,6 +266,18 @@ impl Runtime {
     /// executable dequantizes on-device, so the host never materializes
     /// the 4·D f32 image.
     pub fn decode_packed(
+        &self,
+        batch: usize,
+        capacity: usize,
+        scratch: &PackedScratch,
+        tokens: &[i32],
+        positions: &[i32],
+    ) -> Result<DecodeOut> {
+        self.assert_idle();
+        self.decode_packed_inner(batch, capacity, scratch, tokens, positions)
+    }
+
+    fn decode_packed_inner(
         &self,
         batch: usize,
         capacity: usize,
@@ -217,6 +326,78 @@ impl Runtime {
         Ok(DecodeOut { logits, k_new, v_new, probs })
     }
 
+    /// Submit a `decode_b{B}_c{C}` step to the executor thread and
+    /// return immediately. The caller owns the handoff protocol: until
+    /// [`DecodeHandle::wait`] returns, the runtime must not be entered
+    /// again and `kv_k`/`kv_v`/`lens` must not move or change (in the
+    /// engine they live in the upload-scratch double buffer whose other
+    /// half the next pack writes — that is the whole point).
+    #[allow(clippy::too_many_arguments)]
+    pub fn decode_submit(
+        &self,
+        batch: usize,
+        capacity: usize,
+        kv_k: &HostTensorF32,
+        kv_v: &HostTensorF32,
+        lens: &HostTensorI32,
+        tokens: Vec<i32>,
+        positions: Vec<i32>,
+    ) -> DecodeHandle {
+        self.assert_idle();
+        self.inflight.store(true, Ordering::Release);
+        let tx = self.executor_tx();
+        let (res_tx, res_rx) = channel();
+        let rt = SendPtr(self as *const Runtime);
+        let k = SendPtr(kv_k as *const HostTensorF32);
+        let v = SendPtr(kv_v as *const HostTensorF32);
+        let l = SendPtr(lens as *const HostTensorI32);
+        tx.send(Box::new(move || {
+            let t0 = Instant::now();
+            // SAFETY: the inflight flag serializes every runtime entry
+            // point against this job, and the engine pins the pointed-at
+            // tensors (no scratch-map mutation) until wait() returns.
+            let out = unsafe {
+                (*rt.0).decode_inner(
+                    batch, capacity, &*k.0, &*v.0, &*l.0, &tokens, &positions,
+                )
+            };
+            let _ = res_tx.send((out, t0.elapsed().as_secs_f64()));
+        }))
+        .expect("decode executor channel closed");
+        DecodeHandle { rx: res_rx, inflight: self.inflight.clone() }
+    }
+
+    /// Quantized-path twin of [`Runtime::decode_submit`], wrapping
+    /// [`Runtime::decode_packed`]. Same handoff protocol, with the
+    /// pinned operand being the whole [`PackedScratch`].
+    pub fn decode_packed_submit(
+        &self,
+        batch: usize,
+        capacity: usize,
+        scratch: &PackedScratch,
+        tokens: Vec<i32>,
+        positions: Vec<i32>,
+    ) -> DecodeHandle {
+        self.assert_idle();
+        self.inflight.store(true, Ordering::Release);
+        let tx = self.executor_tx();
+        let (res_tx, res_rx) = channel();
+        let rt = SendPtr(self as *const Runtime);
+        let s = SendPtr(scratch as *const PackedScratch);
+        tx.send(Box::new(move || {
+            let t0 = Instant::now();
+            // SAFETY: see decode_submit.
+            let out = unsafe {
+                (*rt.0).decode_packed_inner(
+                    batch, capacity, &*s.0, &tokens, &positions,
+                )
+            };
+            let _ = res_tx.send((out, t0.elapsed().as_secs_f64()));
+        }))
+        .expect("decode executor channel closed");
+        DecodeHandle { rx: res_rx, inflight: self.inflight.clone() }
+    }
+
     /// Run `prefill_t{T}_kv` — incremental prefill over a prior prefix.
     ///
     /// `prior_k`/`prior_v` are `[L, 1, Hkv, PREFILL_KV_CAP, D]` windows
@@ -233,6 +414,7 @@ impl Runtime {
         prior_len: i32,
         tokens: &[i32],
     ) -> Result<PrefillOut> {
+        self.assert_idle();
         anyhow::ensure!(
             tokens.len() <= bucket,
             "chunk of {} tokens exceeds bucket {bucket}",
@@ -260,6 +442,7 @@ impl Runtime {
 
     /// Run `prefill_t{T}`; tokens are padded to the bucket size.
     pub fn prefill(&self, bucket: usize, tokens: &[i32]) -> Result<PrefillOut> {
+        self.assert_idle();
         anyhow::ensure!(
             tokens.len() <= bucket,
             "prompt of {} tokens exceeds bucket {bucket}",
@@ -321,5 +504,19 @@ impl Runtime {
             .unwrap_or_default();
         b.sort_unstable();
         b
+    }
+}
+
+impl Drop for Runtime {
+    fn drop(&mut self) {
+        // Close the job channel and join the executor. A still-running
+        // job is safe here: `self`'s fields outlive this body, and the
+        // job's result send into a dropped handle is simply discarded.
+        if let Some(mut ex) = self.executor.borrow_mut().take() {
+            drop(ex.tx.take());
+            if let Some(j) = ex.join.take() {
+                let _ = j.join();
+            }
+        }
     }
 }

@@ -417,6 +417,15 @@ impl Scheduler {
         let tick_start = Instant::now();
         let mut report = TickReport::default();
 
+        // Land any decode execute still in flight from the previous
+        // tick before touching the runtime or the cache: migration,
+        // admission and prefill below all call into the runtime's
+        // executable registry (a RefCell) and mutate the cache layout,
+        // neither of which may race the executor thread. Pipelining
+        // therefore overlaps policy work *within* a step; cross-tick
+        // overlap is intentionally drained here.
+        engine.sync_runtime();
+
         // Deadlines first, at the tick boundary: a request past its
         // `deadline_ms` (or caught by a closing drain window) finishes
         // with DeadlineExceeded wherever it is — decoding (reaped

@@ -252,6 +252,90 @@ impl P2Quantile {
     }
 }
 
+/// Bounded streaming summary: Welford moments + min/max + a running
+/// sum, plus [`P2Quantile`] markers at p50/p90/p99 — everything a
+/// [`Summary`] reports, in O(1) memory. This is what lets
+/// [`crate::metrics`] keep per-phase step timings alive across an
+/// unbounded soak without retaining every sample (the former
+/// `Vec<f64>`-per-step logs grew forever).
+#[derive(Clone, Debug)]
+pub struct StreamStat {
+    w: Welford,
+    sum: f64,
+    min: f64,
+    max: f64,
+    p50: P2Quantile,
+    p90: P2Quantile,
+    p99: P2Quantile,
+}
+
+impl Default for StreamStat {
+    fn default() -> Self {
+        StreamStat {
+            w: Welford::default(),
+            sum: 0.0,
+            min: f64::INFINITY,
+            max: f64::NEG_INFINITY,
+            p50: P2Quantile::new(0.5),
+            p90: P2Quantile::new(0.9),
+            p99: P2Quantile::new(0.99),
+        }
+    }
+}
+
+impl StreamStat {
+    pub fn push(&mut self, x: f64) {
+        self.w.push(x);
+        self.sum += x;
+        self.min = self.min.min(x);
+        self.max = self.max.max(x);
+        self.p50.push(x);
+        self.p90.push(x);
+        self.p99.push(x);
+    }
+
+    pub fn count(&self) -> u64 {
+        self.w.count()
+    }
+
+    /// Running total of every observation (exact, not estimated).
+    pub fn sum(&self) -> f64 {
+        self.sum
+    }
+
+    pub fn mean(&self) -> f64 {
+        self.w.mean()
+    }
+
+    /// Snapshot in the batch-summary shape. Zeroed when empty (the
+    /// metrics layer reports `None` rather than a zero row; see
+    /// [`crate::metrics::EngineMetrics::phase_summaries`]).
+    pub fn summary(&self) -> Summary {
+        if self.count() == 0 {
+            return Summary {
+                n: 0,
+                mean: 0.0,
+                std: 0.0,
+                min: 0.0,
+                max: 0.0,
+                p50: 0.0,
+                p90: 0.0,
+                p99: 0.0,
+            };
+        }
+        Summary {
+            n: self.count() as usize,
+            mean: self.w.mean(),
+            std: self.w.std(),
+            min: self.min,
+            max: self.max,
+            p50: self.p50.value(),
+            p90: self.p90.value(),
+            p99: self.p99.value(),
+        }
+    }
+}
+
 /// Criterion-substitute measurement: `warmup` untimed runs, then time
 /// `iters` runs of `f`, returning per-iteration seconds.
 pub fn bench<F: FnMut()>(warmup: usize, iters: usize, mut f: F) -> Summary {
@@ -355,6 +439,68 @@ mod tests {
             }
             if got < xs[0] || got > xs[xs.len() - 1] {
                 return Err(format!("estimate {got} outside sample range"));
+            }
+            Ok(())
+        });
+    }
+
+    #[test]
+    fn stream_stat_matches_batch_summary_on_exact_prefix() {
+        // Below five samples every P² marker is exact, so the streaming
+        // summary must agree with the batch one bit-for-bit on the
+        // deterministic fields and exactly on the percentiles.
+        let xs = [0.5, 1.0, 0.5];
+        let mut st = StreamStat::default();
+        for &x in &xs {
+            st.push(x);
+        }
+        let batch = Summary::of(&xs);
+        let s = st.summary();
+        assert_eq!(s.n, 3);
+        assert!((st.sum() - 2.0).abs() < 1e-12);
+        assert!((s.mean - batch.mean).abs() < 1e-12);
+        assert!((s.std - batch.std).abs() < 1e-12);
+        assert_eq!(s.min, batch.min);
+        assert_eq!(s.max, batch.max);
+        assert_eq!(s.p50, batch.p50);
+        assert_eq!(s.p99, batch.p99);
+        // Empty accumulator reports a zero row, never panics.
+        let empty = StreamStat::default().summary();
+        assert_eq!(empty.n, 0);
+        assert_eq!(empty.min, 0.0);
+    }
+
+    #[test]
+    fn stream_stat_tracks_batch_summary_on_random_inputs() {
+        crate::util::proptest::check("streamstat-vs-sort", 20, |rng, size| {
+            let n = 100 + size % 500;
+            let mut st = StreamStat::default();
+            let mut xs = Vec::with_capacity(n);
+            for _ in 0..n {
+                let x = rng.f64() * if rng.bool(0.2) { 10.0 } else { 1.0 };
+                st.push(x);
+                xs.push(x);
+            }
+            let batch = Summary::of(&xs);
+            let s = st.summary();
+            if (s.mean - batch.mean).abs() > 1e-9 {
+                return Err(format!("mean {} vs {}", s.mean, batch.mean));
+            }
+            if s.min != batch.min || s.max != batch.max {
+                return Err("min/max drifted".into());
+            }
+            if (st.sum() - xs.iter().sum::<f64>()).abs() > 1e-9 {
+                return Err("sum drifted".into());
+            }
+            let span = (batch.max - batch.min).max(1e-12);
+            for (got, exact) in
+                [(s.p50, batch.p50), (s.p90, batch.p90), (s.p99, batch.p99)]
+            {
+                if (got - exact).abs() > 0.15 * span {
+                    return Err(format!(
+                        "percentile {got} vs exact {exact} (span {span})"
+                    ));
+                }
             }
             Ok(())
         });

@@ -1,0 +1,312 @@
+//! Pipelined-decode equivalence property (artifact-gated): for a
+//! covering matrix of policies × KV storage formats × prune cadences ×
+//! fault seeds, the pipelined engine (`engine.pipeline_decode = true`,
+//! the default) must be **bit-identical** to the fully serial step
+//! under greedy decode — the same per-step `(slot, token)` stream, the
+//! same generated text, the same `FinishReason`s (injected failures
+//! included), the same prune log, and the same final cache bookkeeping.
+//!
+//! The driver is a deterministic closed loop with rolling admission:
+//! finished slots are reaped and refilled mid-run, so the group's
+//! composition fingerprint churns and the pipeline's drain/discard
+//! paths (finish, composition, policy_due, fault) are all exercised —
+//! not just the steady overlapped state. Skips with a notice when AOT
+//! artifacts are not built.
+
+use std::path::Path;
+
+use lethe::config::{MixedKvRule, ServingConfig};
+use lethe::engine::{Engine, SeqState};
+use lethe::kvcache::KvFormat;
+use lethe::model::Tokenizer;
+use lethe::policy::{make_policy, PolicyKind};
+use lethe::runtime::Runtime;
+use lethe::util::prng::Rng;
+use lethe::workload::make_task;
+
+/// Everything one run produces that the equivalence property compares.
+#[derive(Debug, PartialEq)]
+struct RunTrace {
+    /// Per decode step, the `(slot, token)` pairs `Engine::step`
+    /// returned, in order.
+    steps: Vec<Vec<(usize, i32)>>,
+    /// Per sequence id (sorted): generated tokens, finish reason
+    /// (rendered), prune events as (layer, step, before, after).
+    done: Vec<(u64, Vec<i32>, String, Vec<(usize, usize, usize, usize)>)>,
+    /// Final per-(layer, slot) live lengths.
+    lens: Vec<usize>,
+    live_bytes: usize,
+    f32_equiv_bytes: usize,
+    prune_events: u64,
+    seq_failures: u64,
+    ooms: u64,
+    faults_injected: u64,
+    decode_steps: u64,
+}
+
+struct Scenario {
+    name: &'static str,
+    policy: PolicyKind,
+    format: KvFormat,
+    mixed: bool,
+    /// (evict_threshold, sparse_ratio) for Lethe; budget for baselines.
+    evict_threshold: usize,
+    sparse_ratio: f64,
+    budget: usize,
+    fault_seed: Option<u64>,
+    /// -1 ignores EOS (forces Length finishes at staggered max_new).
+    eos_mode: bool,
+    n_tasks: usize,
+    batch: usize,
+    max_new_base: usize,
+}
+
+fn run_mode(
+    dir: &Path,
+    sc: &Scenario,
+    prompts: &[Vec<i32>],
+    eos: i32,
+    pipeline: bool,
+) -> RunTrace {
+    let mut cfg = ServingConfig::default();
+    cfg.engine.pipeline_decode = pipeline;
+    cfg.kv.format = sc.format;
+    if sc.mixed {
+        cfg.kv.mixed = Some(MixedKvRule::default());
+    }
+    cfg.lethe.evict_threshold = sc.evict_threshold;
+    cfg.lethe.sparse_ratio = sc.sparse_ratio;
+    cfg.baseline.budget = sc.budget;
+    if let Some(seed) = sc.fault_seed {
+        cfg.faults.seed = seed;
+        cfg.faults.rate = 0.08;
+        cfg.faults.stall_ms = 1;
+    }
+    let rt = Runtime::load(dir).expect("runtime loads");
+    let mut engine = Engine::new(rt, cfg).unwrap();
+    let layers = engine.dims().n_layers;
+    let mut group = engine.new_group(sc.batch, sc.policy);
+
+    // Staggered generation lengths so slots finish on different steps:
+    // every finish is a drain boundary and every refill a composition
+    // change.
+    let mut next = 0usize;
+    let mut admit = |engine: &mut Engine,
+                     group: &mut lethe::engine::DecodeGroup,
+                     next: &mut usize| {
+        while *next < prompts.len() {
+            let Some(slot) = group.free_slot() else { break };
+            let max_new = sc.max_new_base + 3 * (*next % 4);
+            let seq = SeqState::new(
+                *next as u64,
+                make_policy(sc.policy, &engine.cfg, layers),
+                layers,
+                max_new,
+                eos,
+            );
+            engine.prefill(group, slot, seq, &prompts[*next]).unwrap();
+            *next += 1;
+        }
+    };
+    admit(&mut engine, &mut group, &mut next);
+
+    let mut steps = Vec::new();
+    while group.active() > 0 {
+        steps.push(engine.step(&mut group).unwrap());
+        group.reap();
+        admit(&mut engine, &mut group, &mut next);
+    }
+
+    let mut done: Vec<_> = group
+        .done
+        .iter()
+        .map(|s| {
+            (
+                s.id,
+                s.generated.clone(),
+                format!("{:?}", s.finished),
+                s.prune_log
+                    .iter()
+                    .map(|e| (e.layer, e.step, e.before, e.after))
+                    .collect::<Vec<_>>(),
+            )
+        })
+        .collect();
+    done.sort_by_key(|d| d.0);
+    let mut lens = Vec::new();
+    for l in 0..layers {
+        for b in 0..sc.batch {
+            lens.push(group.cache.len(l, b));
+        }
+    }
+    let m = &engine.metrics;
+
+    // The drain bookkeeping must balance in both modes: serial runs
+    // never overlap; pipelined runs carry one drain reason for every
+    // step that fell back to the serial body.
+    if pipeline {
+        let drains: u64 = m.pipeline_drains.values().sum();
+        assert!(
+            m.pipeline_overlapped_steps + drains >= m.decode_steps,
+            "{}: overlapped {} + drains {:?} < steps {}",
+            sc.name,
+            m.pipeline_overlapped_steps,
+            m.pipeline_drains,
+            m.decode_steps,
+        );
+    } else {
+        assert_eq!(
+            m.pipeline_overlapped_steps, 0,
+            "{}: serial mode must never overlap",
+            sc.name
+        );
+    }
+
+    RunTrace {
+        steps,
+        done,
+        lens,
+        live_bytes: group.cache.live_bytes(),
+        f32_equiv_bytes: group.cache.f32_equivalent_bytes(),
+        prune_events: m.prune_events,
+        seq_failures: m.seq_failures,
+        ooms: m.ooms,
+        faults_injected: m.faults_injected,
+        decode_steps: m.decode_steps,
+    }
+}
+
+#[test]
+fn pipelined_decode_is_token_identical_to_serial() {
+    let dir = Path::new("artifacts");
+    if !dir.join("model_meta.json").exists() {
+        eprintln!("[skip] run `make artifacts` first");
+        return;
+    }
+    let rt = Runtime::load(dir).expect("runtime loads");
+    let tok = Tokenizer::from_meta(&rt.meta).unwrap();
+    drop(rt);
+
+    // Covering matrix: every policy, every storage format (f32 / q8 /
+    // q4 / mixed), an aggressive and a default prune cadence, three
+    // fault seeds, EOS-respecting and length-forced generations.
+    let scenarios = [
+        Scenario {
+            name: "lethe-f32-aggressive-prune",
+            policy: PolicyKind::Lethe,
+            format: KvFormat::F32,
+            mixed: false,
+            evict_threshold: 40,
+            sparse_ratio: 10.0,
+            budget: 128,
+            fault_seed: None,
+            eos_mode: false,
+            n_tasks: 6,
+            batch: 4,
+            max_new_base: 56,
+        },
+        Scenario {
+            name: "lethe-q8-faults",
+            policy: PolicyKind::Lethe,
+            format: KvFormat::QuantI8,
+            mixed: false,
+            evict_threshold: 128,
+            sparse_ratio: 400.0,
+            budget: 128,
+            fault_seed: Some(1),
+            eos_mode: true,
+            n_tasks: 6,
+            batch: 4,
+            max_new_base: 32,
+        },
+        Scenario {
+            name: "h2o-q4-faults",
+            policy: PolicyKind::H2o,
+            format: KvFormat::QuantI4,
+            mixed: false,
+            evict_threshold: 128,
+            sparse_ratio: 400.0,
+            budget: 40,
+            fault_seed: Some(2),
+            eos_mode: false,
+            n_tasks: 5,
+            batch: 3,
+            max_new_base: 40,
+        },
+        Scenario {
+            name: "streaming-mixed",
+            policy: PolicyKind::StreamingLlm,
+            format: KvFormat::F32,
+            mixed: true,
+            evict_threshold: 128,
+            sparse_ratio: 400.0,
+            budget: 40,
+            fault_seed: None,
+            eos_mode: true,
+            n_tasks: 5,
+            batch: 3,
+            max_new_base: 36,
+        },
+        Scenario {
+            name: "pyramid-q8-faults",
+            policy: PolicyKind::PyramidKv,
+            format: KvFormat::QuantI8,
+            mixed: false,
+            evict_threshold: 128,
+            sparse_ratio: 400.0,
+            budget: 48,
+            fault_seed: Some(3),
+            eos_mode: true,
+            n_tasks: 4,
+            batch: 2,
+            max_new_base: 32,
+        },
+        Scenario {
+            name: "fullkv-f32-steady",
+            policy: PolicyKind::FullKv,
+            format: KvFormat::F32,
+            mixed: false,
+            evict_threshold: 128,
+            sparse_ratio: 400.0,
+            budget: 128,
+            fault_seed: None,
+            eos_mode: false,
+            n_tasks: 4,
+            batch: 4,
+            max_new_base: 28,
+        },
+    ];
+
+    for (i, sc) in scenarios.iter().enumerate() {
+        let mut rng = Rng::new(0xb0a + i as u64);
+        let prompts: Vec<Vec<i32>> = (0..sc.n_tasks)
+            .map(|j| {
+                let t = make_task(&mut rng, 4 + 2 * (j % 4), 1 + j % 3);
+                tok.encode_prompt(&t.prompt).unwrap()
+            })
+            .collect();
+        let eos = if sc.eos_mode { tok.eos } else { -1 };
+
+        let serial = run_mode(dir, sc, &prompts, eos, false);
+        let pipelined = run_mode(dir, sc, &prompts, eos, true);
+
+        assert_eq!(
+            serial.steps, pipelined.steps,
+            "{}: per-step token stream diverged",
+            sc.name
+        );
+        assert_eq!(
+            serial, pipelined,
+            "{}: serial and pipelined runs diverged",
+            sc.name
+        );
+        if let Some(seed) = sc.fault_seed {
+            assert!(
+                serial.faults_injected > 0,
+                "{}: fault seed {seed} never fired — the scenario isn't \
+                 exercising the fault drain path",
+                sc.name
+            );
+        }
+    }
+}

@@ -180,6 +180,13 @@ fn chaos_soak_fault_injection_yields_typed_completions() {
     cfg.faults.seed = seed;
     cfg.faults.rate = 0.05;
     cfg.faults.stall_ms = 1;
+    // CI runs this soak in two flavors: pipelined decode (the default)
+    // and LETHE_PIPELINE=0, which pins the fully serial step. The fault
+    // schedule is mode-independent (uniform end-of-step pre-draw), so
+    // both flavors replay the same injected faults per seed.
+    if std::env::var("LETHE_PIPELINE").as_deref() == Ok("0") {
+        cfg.engine.pipeline_decode = false;
+    }
     let rt = lethe::runtime::Runtime::load(dir).expect("runtime loads");
     let tok = lethe::model::Tokenizer::from_meta(&rt.meta).unwrap();
     let mut engine = lethe::engine::Engine::new(rt, cfg).unwrap();
@@ -598,4 +605,29 @@ fn pinned_trace_replays_through_real_scheduler_with_class_stats() {
             "class {}: completions disagree", s.class
         );
     }
+
+    // Pipelined decode (on by default) must actually overlap on the
+    // pinned trace: steady-state decode dominates, so the drains at
+    // prune rounds, finishes and composition changes leave well over
+    // 80% of steps on the pre-submitted fast path. The two counters are
+    // the satellite surface of `{"stats": true}`.
+    let m = &engine.metrics;
+    assert!(m.decode_steps > 0);
+    let drains: u64 = m.pipeline_drains.values().sum();
+    let frac = m.pipeline_overlapped_steps as f64 / m.decode_steps as f64;
+    assert!(
+        frac > 0.8,
+        "only {:.1}% of {} decode steps overlapped (drains: {:?})",
+        frac * 100.0,
+        m.decode_steps,
+        m.pipeline_drains,
+    );
+    assert!(
+        m.pipeline_overlapped_steps + drains >= m.decode_steps,
+        "every non-overlapped step must carry a drain reason \
+         (overlapped {} + drains {} < steps {})",
+        m.pipeline_overlapped_steps,
+        drains,
+        m.decode_steps,
+    );
 }
